@@ -1,0 +1,54 @@
+//! Block-size optimization sweep (paper §4 Eq. 5 + §5 enumeration).
+//!
+//! ```bash
+//! cargo run --release --offline --example blockopt_sweep
+//! ```
+//!
+//! For every weight shape in the paper's models, solve the Eq. 5 integer
+//! program for the parameter-minimal factorization, enumerate all legal
+//! block sizes, and print the param/FLOP landscape — the design-space view
+//! a user consults before picking a sparsity pattern.
+
+use blocksparse::blockopt::{enumerate_blocks, eq5_cost, optimal_block_r1};
+use blocksparse::flops::{dense_step_flops, kpd_step_flops, KpdDims};
+use blocksparse::util::human_count;
+
+fn main() {
+    let shapes: &[(&str, usize, usize)] = &[
+        ("paper Example-1", 8, 256),
+        ("linear fc (MNIST)", 10, 784),
+        ("LeNet fc1", 120, 400),
+        ("LeNet fc2", 84, 120),
+        ("LeNet fc3", 10, 84),
+        ("ViT-t qkv", 576, 192),
+        ("ViT-t mlp1", 768, 192),
+    ];
+    let nb = 128u64;
+    for (name, m, n) in shapes {
+        let opt = optimal_block_r1(*m, *n);
+        let blocks = enumerate_blocks(*m, *n);
+        println!("\n{name}: W {m}x{n} (dense params {})", human_count((m * n) as f64));
+        println!("  Eq.5 optimum: grid {}x{} block {}x{} -> {} params",
+                 opt.m1, opt.n1, opt.m2, opt.n2,
+                 eq5_cost(opt.m1, opt.n1, opt.m2, opt.n2));
+        println!("  legal non-trivial block sizes: {}", blocks.len());
+        // show the r=2 cost landscape over a few blocks
+        let mut samples: Vec<(usize, usize)> = blocks
+            .iter()
+            .copied()
+            .filter(|(a, b)| [1usize, 2, 4, 8, 16].contains(a) && *b <= 32)
+            .take(6)
+            .collect();
+        samples.dedup();
+        for (m2, n2) in samples {
+            let d = KpdDims::from_block(*m, *n, m2, n2, 2);
+            println!(
+                "    block {m2:>2}x{n2:<3} r=2: params {:>8}  step-flops {:>10} ({}x vs dense)",
+                d.train_params(),
+                human_count(kpd_step_flops(nb, d) as f64),
+                (dense_step_flops(nb, *m as u64, *n as u64) / kpd_step_flops(nb, d).max(1))
+            );
+        }
+    }
+    println!("\n(the coordinator's `blocksparse blockopt --m M --n N` gives the same answer)");
+}

@@ -1,0 +1,60 @@
+//! Quickstart: train a KPD-factorized linear classifier end to end.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --offline --example quickstart
+//! ```
+//!
+//! Walks the whole public API: open the runtime over the AOT artifacts,
+//! build a dataset, train with the paper's Eq. 4 objective, measure the
+//! block sparsity of the materialized W, and compare the training cost
+//! against the dense parameterization (Prop. 2).
+
+use blocksparse::config::{Config, TrainConfig};
+use blocksparse::coordinator::{self, experiment, probe, Trainer};
+use blocksparse::flops;
+use blocksparse::runtime::Runtime;
+use blocksparse::util::human_count;
+
+fn main() -> anyhow::Result<()> {
+    // 1. open the runtime over artifacts/ (compiled once, cached)
+    let rt = Runtime::new(blocksparse::artifact_dir())?;
+    let spec_key = "t1_kpd_b2x2";
+    let spec = rt.spec(spec_key)?.clone();
+    println!("spec {spec_key}: {} on {} (batch {})", spec.method, spec.model, spec.batch);
+
+    // 2. config + data (synthetic MNIST-like; drop IDX files in data/ to
+    //    use the real thing)
+    let mut cfg = TrainConfig::from_config(&Config::default(), spec_key);
+    cfg.steps = 600;
+    cfg.seeds = vec![0];
+    cfg.lambda = 0.008;
+    cfg.eval_every = 150;
+    let (train, test) = coordinator::dataset_for(&spec, cfg.data_seed, 8192, 2048)?;
+    println!("dataset: {} train / {} test examples", train.n, test.n);
+
+    // 3. train
+    let trainer = Trainer::new(&rt, &cfg);
+    let outcome = trainer.run(0, &train, &test)?;
+    println!("\nfinal test accuracy: {:.2}%  (loss {:.4})",
+             outcome.test_acc, outcome.test_loss);
+
+    // 4. inspect the learned block-wise sparse matrix
+    let sparsity = probe::measure_sparsity(&rt, &spec, &outcome.state)?;
+    let ws = rt.materialize(&outcome.state)?;
+    for (name, w) in &ws {
+        println!("slot {name}: W is {}x{}, block sparsity {:.1}%",
+                 w.shape()[0], w.shape()[1], sparsity);
+    }
+
+    // 5. cost accounting: the paper's headline (Prop. 2)
+    let (params, step_flops) = experiment::accounting(&spec);
+    let dense_flops = flops::dense_step_flops(spec.batch as u64, 10, 784);
+    println!("\ntraining params: {} (dense: 7.84K)", human_count(params as f64));
+    println!("training FLOPs/step: {} (dense: {})",
+             human_count(step_flops as f64), human_count(dense_flops as f64));
+    println!("\nloss curve (every 100 steps):");
+    for (step, v) in outcome.history.series("loss").iter().step_by(100) {
+        println!("  step {step:>4}: {v:.4}");
+    }
+    Ok(())
+}

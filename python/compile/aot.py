@@ -1,0 +1,253 @@
+"""AOT compiler: lower every experiment spec to HLO **text** + manifest.
+
+This is the only python entry point in the build (`make artifacts`); the
+rust coordinator never imports python. For each Spec we lower up to five
+executables:
+
+  init        (seed:u32)                        -> (params, opt)
+  train_step  (params, opt, x, y, *hyper:f32)   -> (params, opt, metrics)
+  eval_step   (params, x, y)                    -> metrics
+  materialize (params)                          -> per-slot W  [kpd only]
+  rigl_update (params, gnorm:f32[*], alpha:f32) -> params      [rigl only]
+  prune       (params, target:f32)              -> params      [iter_prune]
+
+Interchange is HLO *text*: the image's xla_extension 0.5.1 rejects jax>=0.5
+serialized HloModuleProtos (64-bit instruction ids); the text parser
+reassigns ids (see /opt/xla-example/README.md). Argument order is the
+pytree flatten order of the example arguments — dicts flatten in sorted-key
+order, which the manifest records explicitly so the rust runtime never has
+to re-derive it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .models import MODELS
+from .specs import Spec, build_specs
+
+DTYPE_NAMES = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32",
+               jnp.uint32.dtype: "u32"}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _leaf_meta(x) -> Dict:
+    shape = list(jnp.shape(x))
+    dtype = x.dtype if hasattr(x, "dtype") else jnp.asarray(x).dtype
+    return {"shape": shape, "dtype": DTYPE_NAMES[dtype]}
+
+
+def _abstract(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(
+            jnp.shape(x), x.dtype if hasattr(x, "dtype") else jnp.asarray(x).dtype),
+        tree)
+
+
+def _named_leaves(prefix: str, d: Dict) -> List[Tuple[str, object]]:
+    """Sorted-key order == jax dict flatten order; keep them in lockstep."""
+    return [(f"{prefix}:{k}", d[k]) for k in sorted(d)]
+
+
+class Emitter:
+    def __init__(self, out_dir: str, skip_existing: bool = False):
+        self.out_dir = out_dir
+        self.skip = skip_existing
+        self.entries: List[Dict] = []
+
+    def emit(self, spec_key: str, exec_name: str, fn, example_args,
+             input_names: List[Tuple[str, object]],
+             output_names: List[Tuple[str, object]], extra: Dict) -> None:
+        fname = f"{spec_key}.{exec_name}.hlo.txt"
+        path = os.path.join(self.out_dir, fname)
+        if not (self.skip and os.path.exists(path)):
+            t0 = time.time()
+            # keep_unused: the manifest promises the full argument list even
+            # for executables that ignore some leaves (e.g. materialize
+            # ignores biases) — argument order must stay stable.
+            lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+            text = to_hlo_text(lowered)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"  {fname}: {len(text) / 1e6:.2f} MB in {time.time() - t0:.1f}s",
+                  flush=True)
+        self.entries.append({
+            "spec": spec_key,
+            "exec": exec_name,
+            "file": fname,
+            "inputs": [{"name": n, **_leaf_meta(v)} for n, v in input_names],
+            "outputs": [{"name": n, **_leaf_meta(v)} for n, v in output_names],
+            **extra,
+        })
+
+
+def lower_spec(spec: Spec, em: Emitter) -> Dict:
+    model = MODELS[spec.model_name]()
+    bundle = spec.build(model)
+    key0 = jax.random.PRNGKey(0)
+    params, opt = bundle.init(key0)
+    n = spec.batch
+
+    if model.input_dtype == "i32":
+        x_ex = jnp.zeros((n,) + model.input_shape, jnp.int32)
+        y_ex = jnp.zeros((n,) + model.input_shape, jnp.int32)   # LM targets
+    else:
+        x_ex = jnp.zeros((n,) + model.input_shape, jnp.float32)
+        y_ex = jnp.zeros((n,), jnp.int32)
+    hyper_ex = [jnp.float32(0.0) for _ in bundle.train_hyper]
+
+    p_named = _named_leaves("param", params)
+    o_named = _named_leaves("opt", opt)
+
+    # ---- init ----
+    def init_from_seed(seed):
+        return bundle.init(jax.random.PRNGKey(seed))
+
+    em.emit(spec.key, "init", init_from_seed,
+            (jax.ShapeDtypeStruct((), jnp.uint32),),
+            [("seed", jnp.uint32(0))], p_named + o_named, {})
+
+    # ---- train_step ----
+    new_p, new_o, metrics = jax.eval_shape(
+        bundle.train_step, _abstract(params), _abstract(opt),
+        _abstract(x_ex), _abstract(y_ex), *hyper_ex)
+    em.emit(spec.key, "train_step", bundle.train_step,
+            (_abstract(params), _abstract(opt), _abstract(x_ex),
+             _abstract(y_ex)) + tuple(hyper_ex),
+            p_named + o_named + [("x", x_ex), ("y", y_ex)]
+            + [(h, jnp.float32(0.0)) for h in bundle.train_hyper],
+            _named_leaves("param", new_p) + _named_leaves("opt", new_o)
+            + [("metrics", metrics)],
+            {"hyper": list(bundle.train_hyper),
+             "metrics": list(bundle.metric_names)})
+
+    # ---- eval_step ----
+    ev = jax.eval_shape(bundle.eval_step, _abstract(params),
+                        _abstract(x_ex), _abstract(y_ex))
+    em.emit(spec.key, "eval_step", bundle.eval_step,
+            (_abstract(params), _abstract(x_ex), _abstract(y_ex)),
+            p_named + [("x", x_ex), ("y", y_ex)], [("metrics", ev)], {})
+
+    # ---- extras ----
+    for ename, efn in bundle.extras.items():
+        if ename == "materialize":
+            outs = jax.eval_shape(efn, _abstract(params))
+            em.emit(spec.key, ename, efn, (_abstract(params),), p_named,
+                    [(f"W:{s.name}", w) for s, w in zip(model.slots, outs)], {})
+        elif ename == "rigl_update":
+            gsizes = bundle.info["gnorm_sizes"]
+            gtot = sum(gsizes[s.name] for s in model.slots)
+            g_ex = jnp.zeros((gtot,), jnp.float32)
+            outp = jax.eval_shape(efn, _abstract(params), _abstract(g_ex),
+                                  jnp.float32(0.3))
+            em.emit(spec.key, ename, efn,
+                    (_abstract(params), _abstract(g_ex), jnp.float32(0.0)),
+                    p_named + [("gnorm", g_ex), ("alpha", jnp.float32(0.3))],
+                    _named_leaves("param", outp), {})
+        elif ename == "prune":
+            outp = jax.eval_shape(efn, _abstract(params), jnp.float32(0.5))
+            em.emit(spec.key, ename, efn,
+                    (_abstract(params), jnp.float32(0.0)),
+                    p_named + [("target", jnp.float32(0.5))],
+                    _named_leaves("param", outp), {})
+        else:
+            raise ValueError(f"unknown extra {ename}")
+
+    return {
+        "key": spec.key,
+        "model": spec.model_name,
+        "batch": spec.batch,
+        "tags": list(spec.tags),
+        "input_shape": list(model.input_shape),
+        "input_dtype": model.input_dtype,
+        "num_classes": model.num_classes,
+        "slots": [{"name": s.name, "m": s.m, "n": s.n} for s in model.slots],
+        "method": bundle.name,
+        "hyper": list(bundle.train_hyper),
+        "metrics": list(bundle.metric_names),
+        "info": bundle.info,
+        # trainable parameters only: masks (RigL) and emasks (pruning) are
+        # frozen bookkeeping, not trained — the paper's "Training Params"
+        # column counts what gradient descent updates.
+        "params_total": int(sum(
+            int(jnp.asarray(v).size) for k, v in params.items()
+            if not (k.endswith(".mask") or k.endswith(".emask")))),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output dir (a path ending in .txt means its dir)")
+    ap.add_argument("--out-dir", default=None)
+    ap.add_argument("--only", default=None, help="regex over spec keys")
+    ap.add_argument("--tag", default=None, help="only specs carrying this tag")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if out_dir is None:
+        out_dir = os.path.dirname(args.out) if args.out.endswith(".txt") else args.out
+    os.makedirs(out_dir, exist_ok=True)
+
+    specs = build_specs()
+    if args.only:
+        rx = re.compile(args.only)
+        specs = [s for s in specs if rx.search(s.key)]
+    if args.tag:
+        specs = [s for s in specs if args.tag in s.tags]
+    if args.list:
+        for s in specs:
+            print(f"{s.key:30s} model={s.model_name:12s} batch={s.batch} "
+                  f"tags={','.join(s.tags)}")
+        return
+
+    em = Emitter(out_dir, skip_existing=args.skip_existing)
+    spec_meta = []
+    t0 = time.time()
+    for s in specs:
+        print(f"[{s.key}] lowering (model={s.model_name}, batch={s.batch})",
+              flush=True)
+        spec_meta.append(lower_spec(s, em))
+
+    manifest = {
+        "version": 1,
+        "generated_by": "python/compile/aot.py",
+        "jax_version": jax.__version__,
+        "specs": spec_meta,
+        "executables": em.entries,
+    }
+    mpath = os.path.join(out_dir, "manifest.json")
+    # merge with an existing manifest when building a subset
+    if (args.only or args.tag) and os.path.exists(mpath):
+        with open(mpath) as f:
+            old = json.load(f)
+        keep = {s["key"] for s in spec_meta}
+        manifest["specs"] = [s for s in old.get("specs", [])
+                             if s["key"] not in keep] + spec_meta
+        manifest["executables"] = [e for e in old.get("executables", [])
+                                   if e["spec"] not in keep] + em.entries
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath}: {len(manifest['executables'])} executables "
+          f"({time.time() - t0:.0f}s total)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,153 @@
+"""L1 Pallas kernel: the KPD forward hot-spot.
+
+Computes, for a batch X ∈ R^{N×n} (n = n1·n2) and KPD factors
+S ∈ R^{m1×n1}, A ∈ R^{r×m1×n1}, B ∈ R^{r×m2×n2}:
+
+    Y = X @ W_rᵀ,   W_r = Σ_i (S ⊙ A_i) ⊗ B_i      (paper Eq. 3)
+
+WITHOUT materializing W_r — the two-matmul Van Loan schedule of the paper's
+Appendix A.1.3 (Eqs. 14–15):
+
+    for each rank term i:
+        T1 = reshape(X)ᵀ-view  @ B_iᵀ        # contract the n2 axis
+        Y += reshape(T1)       @ (S⊙A_i)ᵀ    # contract the n1 axis
+
+Hardware mapping (DESIGN.md §Hardware-Adaptation): the grid tiles the batch
+axis; each program keeps the *entire* factor set (S, A, B — a few KB) VMEM-
+resident and streams one (TILE_N, n) slab of X HBM→VMEM. The rank loop is
+unrolled inside the program so the accumulator never round-trips to HBM —
+on a real TPU this is the VMEM scratch accumulator + MXU contraction; under
+``interpret=True`` (mandatory on the CPU PJRT plugin) the same schedule runs
+as numpy ops, which is what we validate against ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch tile: multiple of 8 keeps the sublane dimension aligned on TPU;
+# small enough that TILE_N×n and TILE_N×m slabs fit VMEM for every layer
+# in this repo (worst case n=3072 → 128·3072·4B = 1.5 MiB per slab).
+DEFAULT_TILE_N = 128
+
+
+def _kpd_kernel(x_ref, s_ref, a_ref, b_ref, o_ref, *, r: int,
+                m1: int, n1: int, m2: int, n2: int, tile_n: int):
+    """One grid step: Y[tile] = Σ_i two-matmul(X[tile], S⊙A_i, B_i)."""
+    x = x_ref[...]                                  # (tile_n, n1*n2)
+    s = s_ref[...]                                  # (m1, n1)
+    # (tile_n*n1, n2) view: row (j, j1) holds x[j, j1*n2 : (j1+1)*n2]
+    xr = x.reshape(tile_n * n1, n2)
+    acc = jnp.zeros((tile_n, m1 * m2), jnp.float32)
+    for i in range(r):                              # fused rank loop (unrolled)
+        sa = s * a_ref[i]                           # (m1, n1) elementwise mask
+        bi = b_ref[i]                               # (m2, n2)
+        # contract n2: T1[(j,j1), i2] = Σ_j2 x[j, j1*n2+j2] · B_i[i2, j2]
+        t1 = jnp.dot(xr, bi.T, preferred_element_type=jnp.float32)
+        # re-tile so n1 is the contracting axis:
+        # T2[(j,i2), j1] = T1[(j,j1), i2]
+        t2 = t1.reshape(tile_n, n1, m2).transpose(0, 2, 1).reshape(tile_n * m2, n1)
+        # contract n1: T3[(j,i2), i1] = Σ_j1 T2 · (S⊙A_i)[i1, j1]
+        t3 = jnp.dot(t2, sa.T, preferred_element_type=jnp.float32)
+        # interleave back to y[j, i1*m2+i2]
+        y = t3.reshape(tile_n, m2, m1).transpose(0, 2, 1).reshape(tile_n, m1 * m2)
+        acc = acc + y
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n",))
+def kpd_forward(x: jnp.ndarray, s: jnp.ndarray, a: jnp.ndarray,
+                b: jnp.ndarray, tile_n: int = DEFAULT_TILE_N) -> jnp.ndarray:
+    """Pallas KPD forward. x: (N, n1·n2) → (N, m1·m2).
+
+    Pads the batch to a tile multiple, launches a 1-D grid over batch
+    tiles, and slices the padding back off. S/A/B are broadcast to every
+    grid step (index_map pins them to block (0, …)) so they stay resident.
+    """
+    n_batch, n = x.shape
+    r, m1, n1 = a.shape
+    _, m2, n2 = b.shape
+    assert n == n1 * n2, f"x feature dim {n} != n1*n2 = {n1 * n2}"
+    m = m1 * m2
+
+    tile = min(tile_n, max(8, n_batch))
+    padded = ((n_batch + tile - 1) // tile) * tile
+    if padded != n_batch:
+        x = jnp.pad(x, ((0, padded - n_batch), (0, 0)))
+
+    kernel = functools.partial(_kpd_kernel, r=r, m1=m1, n1=n1, m2=m2, n2=n2,
+                               tile_n=tile)
+    y = pl.pallas_call(
+        kernel,
+        grid=(padded // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, n), lambda i: (i, 0)),        # stream X
+            pl.BlockSpec((m1, n1), lambda i: (0, 0)),         # resident S
+            pl.BlockSpec((r, m1, n1), lambda i: (0, 0, 0)),   # resident A
+            pl.BlockSpec((r, m2, n2), lambda i: (0, 0, 0)),   # resident B
+        ],
+        out_specs=pl.BlockSpec((tile, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded, m), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, s, a, b)
+    return y[:n_batch]
+
+
+def kpd_forward_schedule(x: jnp.ndarray, s: jnp.ndarray, a: jnp.ndarray,
+                         b: jnp.ndarray) -> jnp.ndarray:
+    """The SAME two-matmul Van Loan schedule as `_kpd_kernel`, expressed as
+    plain jnp ops (one whole-batch tile, rank loop unrolled).
+
+    Why it exists (§Perf, EXPERIMENTS.md): `interpret=True` lowers
+    pallas_call to a grid while-loop with dynamic-update-slices. The
+    image's PJRT CPU backend (xla_extension 0.5.1, early-2023 XLA) does not
+    fuse through that structure and runs it ~3× slower than the identical
+    schedule written as straight-line HLO; modern jaxlib shows no such gap.
+    Artifacts are exported with this fast path by default
+    (BS_KPD_IMPL=pallas opts back in); the pallas kernel remains the TPU
+    lowering target and the correctness reference for both (pytest checks
+    kernel == schedule == oracle).
+    """
+    n_batch, n = x.shape
+    r, m1, n1 = a.shape
+    _, m2, n2 = b.shape
+    xr = x.reshape(n_batch * n1, n2)
+    acc = jnp.zeros((n_batch, m1 * m2), jnp.float32)
+    for i in range(r):
+        sa = s * a[i]
+        t1 = jnp.dot(xr, b[i].T, preferred_element_type=jnp.float32)
+        t2 = t1.reshape(n_batch, n1, m2).transpose(0, 2, 1).reshape(n_batch * m2, n1)
+        t3 = jnp.dot(t2, sa.T, preferred_element_type=jnp.float32)
+        acc = acc + t3.reshape(n_batch, m2, m1).transpose(0, 2, 1).reshape(
+            n_batch, m1 * m2)
+    return acc
+
+
+def kpd_forward_vmem_bytes(n_batch: int, r: int, m1: int, n1: int,
+                           m2: int, n2: int, tile_n: int = DEFAULT_TILE_N,
+                           bytes_per_el: int = 4) -> int:
+    """Static VMEM footprint estimate of one grid step (perf model, used by
+    DESIGN/EXPERIMENTS §Perf — interpret-mode wallclock is NOT a TPU proxy).
+
+    Slabs resident per step: X tile, S, A, B, the two matmul temporaries,
+    and the accumulator/output tile.
+    """
+    tile = min(tile_n, max(8, n_batch))
+    n, m = n1 * n2, m1 * m2
+    x_tile = tile * n
+    factors = m1 * n1 + r * (m1 * n1 + m2 * n2)
+    t1 = tile * n1 * m2
+    t2 = tile * m2 * n1
+    acc_out = 2 * tile * m
+    return (x_tile + factors + t1 + t2 + acc_out) * bytes_per_el
+
+
+def kpd_forward_mxu_flops(n_batch: int, r: int, m1: int, n1: int,
+                          m2: int, n2: int) -> int:
+    """MXU (matmul) flops of the schedule: 2·N·r·(n1·n2·m2 + m2·n1·m1).
+    Matches the paper's Eq. 16 leading terms."""
+    return 2 * n_batch * r * (n1 * n2 * m2 + m2 * n1 * m1)

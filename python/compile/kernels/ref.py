@@ -1,0 +1,88 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Everything here is written with the most literal einsum/kron formulation so
+that it can be audited against the paper's equations directly. The Pallas
+kernels in kpd_matmul.py / block_sparse.py must match these to float32
+tolerance (pytest + hypothesis sweeps in python/tests/test_kernel.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def kron(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Kronecker product of 2-D matrices: (m1,n1)⊗(m2,n2) → (m1·m2, n1·n2)."""
+    m1, n1 = a.shape
+    m2, n2 = b.shape
+    return (a[:, None, :, None] * b[None, :, None, :]).reshape(m1 * m2, n1 * n2)
+
+
+def kpd_reconstruct(s: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Materialize W_r = Σ_i (S ⊙ A_i) ⊗ B_i   (paper Eq. 3).
+
+    s: (m1, n1); a: (r, m1, n1); b: (r, m2, n2) → (m1·m2, n1·n2)
+    """
+    r = a.shape[0]
+    w = jnp.zeros((a.shape[1] * b.shape[1], a.shape[2] * b.shape[2]), a.dtype)
+    for i in range(r):
+        w = w + kron(s * a[i], b[i])
+    return w
+
+
+def kpd_forward_ref(x: jnp.ndarray, s: jnp.ndarray, a: jnp.ndarray,
+                    b: jnp.ndarray) -> jnp.ndarray:
+    """Reference KPD forward y = x @ W_rᵀ WITHOUT materializing W_r.
+
+    Implements the Van Loan identity the paper uses in Appendix A.1.3:
+        y_j = vec(Σ_i B_i · x̌_j · (S⊙A_i)ᵀ)
+    with x̌_j[j2, j1] = x_j[j1·n2 + j2].
+
+    x: (N, n1·n2) → (N, m1·m2).
+
+    The einsum below is index-identical to the two-matmul schedule:
+        y[N, i1·m2+i2] = Σ_i Σ_{j1 j2} (S⊙A_i)[i1,j1] · B_i[i2,j2] · x[N, j1·n2+j2]
+    """
+    r, m1, n1 = a.shape
+    _, m2, n2 = b.shape
+    xr = x.reshape(x.shape[0], n1, n2)
+    sa = s[None] * a                                     # (r, m1, n1)
+    y = jnp.einsum("rac,rbd,jcd->jab", sa, b, xr)        # (N, m1, m2)
+    return y.reshape(x.shape[0], m1 * m2)
+
+
+def kpd_forward_dense_ref(x: jnp.ndarray, s: jnp.ndarray, a: jnp.ndarray,
+                          b: jnp.ndarray) -> jnp.ndarray:
+    """Fully-materialized oracle-of-the-oracle: y = x @ W_rᵀ."""
+    w = kpd_reconstruct(s, a, b)
+    return x @ w.T
+
+
+def block_sparse_matmul_ref(x: jnp.ndarray, w: jnp.ndarray,
+                            mask: jnp.ndarray) -> jnp.ndarray:
+    """Inference-time block-sparse matmul oracle.
+
+    w: (m1·m2, n1·n2) dense storage; mask: (m1, n1) {0,1} block mask.
+    Zero blocks of w are masked out, then y = x @ (mask⊙W)ᵀ.
+    """
+    m1, n1 = mask.shape
+    m, n = w.shape
+    m2, n2 = m // m1, n // n1
+    wm = w.reshape(m1, m2, n1, n2) * mask[:, None, :, None]
+    return x @ wm.reshape(m, n).T
+
+
+def block_l1_norms(w: jnp.ndarray, m2: int, n2: int) -> jnp.ndarray:
+    """Per-block L1 norms of a dense matrix: (m1, n1) grid of Σ|w_block|.
+    Used by the blockwise-RigL baseline's drop/grow criterion."""
+    m, n = w.shape
+    m1, n1 = m // m2, n // n2
+    return jnp.abs(w.reshape(m1, m2, n1, n2)).sum(axis=(1, 3))
+
+
+def block_fro_norms(w: jnp.ndarray, m2: int, n2: int) -> jnp.ndarray:
+    """Per-block Frobenius norms (group-LASSO regularizer terms)."""
+    m, n = w.shape
+    m1, n1 = m // m2, n // n2
+    sq = (w * w).reshape(m1, m2, n1, n2).sum(axis=(1, 3))
+    return jnp.sqrt(sq)

@@ -1,0 +1,192 @@
+"""L2 layer library: KPD-factorized linear layers and dense companions.
+
+The KPD layer is the paper's Eq. 3 parameterization. Its forward runs the
+L1 Pallas kernel (kernels/kpd_matmul.py); its backward is a ``custom_vjp``
+implementing the paper's Appendix A.1.4 gradient schedule (Eqs. 19-24)
+explicitly — pallas_call has no reverse-mode rule, and writing the backward
+by hand keeps the lowered HLO's FLOP structure identical to the paper's
+Proposition 2 accounting.
+
+Parameter trees are flat ``dict[str, jnp.ndarray]`` with dotted names; the
+AOT manifest sorts keys to fix the PJRT argument order.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+import os
+
+from .kernels.kpd_matmul import kpd_forward as _pallas_kpd_forward
+from .kernels.kpd_matmul import kpd_forward_schedule as _schedule_kpd_forward
+from .kernels.ref import kpd_forward_ref
+from .shapes import KPDShape
+
+Params = Dict[str, jnp.ndarray]
+
+# Forward implementation selector (§Perf): "schedule" (default) exports the
+# kernel's exact two-matmul schedule as straight-line HLO — the interpret-
+# mode pallas while-loop compiles ~3× slower on the image's 2023-era PJRT
+# CPU backend. "pallas" opts into the pallas_call lowering (the TPU path).
+# Both are verified identical against ref.py by pytest.
+_KPD_IMPL = os.environ.get("BS_KPD_IMPL", "schedule")
+
+
+def _kpd_forward_impl(x, s, a, b):
+    if _KPD_IMPL == "pallas":
+        return _pallas_kpd_forward(x, s, a, b)
+    return _schedule_kpd_forward(x, s, a, b)
+
+
+# --------------------------------------------------------------------------
+# KPD forward/backward with custom VJP
+# --------------------------------------------------------------------------
+
+@jax.custom_vjp
+def kpd_apply(x: jnp.ndarray, s: jnp.ndarray, a: jnp.ndarray,
+              b: jnp.ndarray) -> jnp.ndarray:
+    """y = x @ W_rᵀ with W_r = Σ_i (S⊙A_i)⊗B_i, never materialized."""
+    return _kpd_forward_impl(x, s, a, b)
+
+
+def _kpd_fwd(x, s, a, b):
+    return _kpd_forward_impl(x, s, a, b), (x, s, a, b)
+
+
+def _kpd_bwd(res, g):
+    """Paper Appendix A.1.4: gradients w.r.t. S, A_i, B_i and the input.
+
+    With y[j, i1·m2+i2] = Σ_i (S⊙A_i)[i1,j1]·B_i[i2,j2]·x[j, j1·n2+j2]:
+      ∂J/∂(S⊙A_i)  = Eq. 20   (contract batch & block axes)
+      ∂J/∂S        = Σ_i Eq.20 ⊙ A_i              (Eq. 21)
+      ∂J/∂A_i      = Eq.20 ⊙ S                    (Eq. 22)
+      ∂J/∂B_i      = Eq. 24
+      ∂J/∂x        = transpose pass (needed for multi-layer chains, Eq. 51)
+    """
+    x, s, a, b = res
+    r, m1, n1 = a.shape
+    _, m2, n2 = b.shape
+    nb = x.shape[0]
+    gr = g.reshape(nb, m1, m2)
+    xr = x.reshape(nb, n1, n2)
+    sa = s[None] * a
+    # Eq. 20: dJ/d(S⊙A_i)[a,c] = Σ_{j,b,d} g[j,a,b]·B_i[b,d]·x̌[j,c,d]
+    d_sa = jnp.einsum("jab,ibd,jcd->iac", gr, b, xr)
+    d_s = (d_sa * a).sum(axis=0)                     # Eq. 21
+    d_a = d_sa * s[None]                             # Eq. 22
+    # Eq. 24: dJ/dB_i[b,d] = Σ_{j,a,c} g[j,a,b]·(S⊙A_i)[a,c]·x̌[j,c,d]
+    d_b = jnp.einsum("jab,iac,jcd->ibd", gr, sa, xr)
+    # Eq. 51 analogue: dJ/dx̌[j,c,d] = Σ_{i,a,b} g[j,a,b]·(S⊙A_i)[a,c]·B_i[b,d]
+    d_x = jnp.einsum("jab,iac,ibd->jcd", gr, sa, b).reshape(nb, n1 * n2)
+    return d_x, d_s, d_a, d_b
+
+
+kpd_apply.defvjp(_kpd_fwd, _kpd_bwd)
+
+
+def kpd_apply_ref(x, s, a, b):
+    """Pure-jnp twin of kpd_apply (autodiff-able end to end); used by the
+    parity tests to check the custom VJP against jax's own gradients."""
+    return kpd_forward_ref(x, s, a, b)
+
+
+# --------------------------------------------------------------------------
+# Initializers
+# --------------------------------------------------------------------------
+
+def glorot(key, shape, fan_in: int, fan_out: int) -> jnp.ndarray:
+    lim = jnp.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, jnp.float32, -lim, lim)
+
+
+def kpd_init(key, shape: KPDShape) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Init (S, A, B) so the *effective* W_r has dense-glorot-like scale.
+
+    Var(W) target = 2/(m+n). Each rank term is a product S·A·B of three
+    independent factors; with r terms summed, set each factor's std to
+    (target_var / r)^{1/6} … S starts at 1.0 (no sparsity prior) and A, B
+    split the scale evenly, matching the preliminary-code convention.
+    """
+    ka, kb = jax.random.split(key)
+    target_std = jnp.sqrt(2.0 / (shape.m + shape.n))
+    per_factor = (target_std / jnp.sqrt(shape.r)) ** 0.5
+    s = jnp.ones((shape.m1, shape.n1), jnp.float32)
+    a = jax.random.normal(ka, (shape.r, shape.m1, shape.n1), jnp.float32) * per_factor
+    b = jax.random.normal(kb, (shape.r, shape.m2, shape.n2), jnp.float32) * per_factor
+    return s, a, b
+
+
+# --------------------------------------------------------------------------
+# Layer constructors: each returns (params: dict, apply closure metadata)
+# --------------------------------------------------------------------------
+
+def kpd_linear_init(key, name: str, shape: KPDShape, bias: bool = True) -> Params:
+    s, a, b = kpd_init(key, shape)
+    p = {f"{name}.S": s, f"{name}.A": a, f"{name}.B": b}
+    if bias:
+        p[f"{name}.bias"] = jnp.zeros((shape.m,), jnp.float32)
+    return p
+
+
+def kpd_linear_apply(params: Params, name: str, x: jnp.ndarray) -> jnp.ndarray:
+    y = kpd_apply(x, params[f"{name}.S"], params[f"{name}.A"], params[f"{name}.B"])
+    bkey = f"{name}.bias"
+    if bkey in params:
+        y = y + params[bkey][None, :]
+    return y
+
+
+def dense_linear_init(key, name: str, m: int, n: int, bias: bool = True) -> Params:
+    p = {f"{name}.W": glorot(key, (m, n), n, m)}
+    if bias:
+        p[f"{name}.bias"] = jnp.zeros((m,), jnp.float32)
+    return p
+
+
+def dense_linear_apply(params: Params, name: str, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ params[f"{name}.W"].T
+    bkey = f"{name}.bias"
+    if bkey in params:
+        y = y + params[bkey][None, :]
+    return y
+
+
+def masked_linear_init(key, name: str, m: int, n: int, m2: int, n2: int,
+                       density: float, bias: bool = True) -> Params:
+    """Dense weight + frozen block mask — the blockwise-RigL baseline's
+    parameterization. The mask is a parameter (so it rides through the AOT
+    signature) but is updated only by the rigl_update executable."""
+    kw, km = jax.random.split(key)
+    m1, n1 = m // m2, n // n2
+    p = {f"{name}.W": glorot(kw, (m, n), n, m)}
+    nnz = max(1, int(round(density * m1 * n1)))
+    flat = jnp.zeros((m1 * n1,), jnp.float32).at[
+        jax.random.permutation(km, m1 * n1)[:nnz]].set(1.0)
+    p[f"{name}.mask"] = flat.reshape(m1, n1)
+    if bias:
+        p[f"{name}.bias"] = jnp.zeros((m,), jnp.float32)
+    return p
+
+
+def masked_linear_apply(params: Params, name: str, x: jnp.ndarray,
+                        m2: int, n2: int) -> jnp.ndarray:
+    w = params[f"{name}.W"]
+    mask = jax.lax.stop_gradient(params[f"{name}.mask"])
+    m, n = w.shape
+    m1, n1 = m // m2, n // n2
+    wm = (w.reshape(m1, m2, n1, n2) * mask[:, None, :, None]).reshape(m, n)
+    y = x @ wm.T
+    bkey = f"{name}.bias"
+    if bkey in params:
+        y = y + params[bkey][None, :]
+    return y
+
+
+def layer_norm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
+               eps: float = 1e-6) -> jnp.ndarray:
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta

@@ -1,0 +1,100 @@
+"""Loss functions and the paper's regularizers.
+
+* cross_entropy          — softmax CE with integer labels (all experiments)
+* kpd_l1                 — λ Σ_l ‖S^[l]‖₁                     (paper Eq. 4)
+* group_lasso            — λ Σ_l Σ_g ‖W_g^[l]‖_F              (paper Eq. 1)
+* elastic_group_lasso    — group lasso + ℓ2 term (Oyedotun et al. 2020)
+* pattern_penalty        — λ1 Σ_k sqrt(Σ_l ‖S^{(k)}‖_F²) + λ2 Σ_{k,l} ‖S^{(k)}‖₁
+                                                               (paper Eq. 7)
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jnp.ndarray]
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax cross-entropy; labels are int32 class ids."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[:, None].astype(jnp.int32),
+                                 axis=-1)[:, 0]
+    return (logz - picked).mean()
+
+
+def accuracy_count(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Number of correct predictions (f32 so it flows through PJRT easily)."""
+    return (jnp.argmax(logits, axis=-1) == labels.astype(jnp.int32)).sum().astype(jnp.float32)
+
+
+def kpd_l1(params: Params, lam: jnp.ndarray) -> jnp.ndarray:
+    """λ Σ ‖S‖₁ over every KPD layer (keys ending in '.S')."""
+    total = jnp.float32(0.0)
+    for k in sorted(params):
+        if k.endswith(".S"):
+            total = total + jnp.abs(params[k]).sum()
+    return lam * total
+
+
+def _block_fro_sum(w: jnp.ndarray, m2: int, n2: int) -> jnp.ndarray:
+    m, n = w.shape
+    m1, n1 = m // m2, n // n2
+    sq = (w * w).reshape(m1, m2, n1, n2).sum(axis=(1, 3))
+    # smooth sqrt at 0: the subgradient of ‖·‖_F at 0 is handled by +eps,
+    # standard practice for group-lasso SGD training.
+    return jnp.sqrt(sq + 1e-12).sum()
+
+
+def group_lasso(params: Params, blocks: Dict[str, Tuple[int, int]],
+                lam: jnp.ndarray) -> jnp.ndarray:
+    """λ Σ_l Σ_g ‖W_g‖_F with per-layer block sizes (Eq. 1)."""
+    total = jnp.float32(0.0)
+    for name, (m2, n2) in sorted(blocks.items()):
+        total = total + _block_fro_sum(params[f"{name}.W"], m2, n2)
+    return lam * total
+
+
+def elastic_group_lasso(params: Params, blocks: Dict[str, Tuple[int, int]],
+                        lam1: jnp.ndarray, lam2: jnp.ndarray) -> jnp.ndarray:
+    """Elastic variant: group term + ridge term on the grouped weights."""
+    total = group_lasso(params, blocks, lam1)
+    for name in sorted(blocks):
+        w = params[f"{name}.W"]
+        total = total + lam2 * (w * w).sum()
+    return total
+
+
+def pattern_s_l1(params: Params, k: int) -> jnp.ndarray:
+    """Σ_l ‖S^{(k),[l]}‖₁ — the Figure-3 diagnostic series."""
+    total = jnp.float32(0.0)
+    prefix = f"p{k}."
+    for key in sorted(params):
+        if key.startswith(prefix) and key.endswith(".S"):
+            total = total + jnp.abs(params[key]).sum()
+    return total
+
+
+def pattern_penalty(params: Params, num_patterns: int,
+                    lam1: jnp.ndarray, lam2: jnp.ndarray) -> jnp.ndarray:
+    """Paper Eq. 7 regularizer over K pattern candidates.
+
+    Pattern k's parameters carry the name prefix ``p{k}.``. The sqrt-of-
+    Frobenius term acts as group lasso *across patterns*: losing patterns
+    are driven to exactly zero as λ1 ramps.
+    """
+    total = jnp.float32(0.0)
+    for k in range(num_patterns):
+        prefix = f"p{k}."
+        fro = jnp.float32(0.0)
+        l1 = jnp.float32(0.0)
+        for key in sorted(params):
+            if key.startswith(prefix) and key.endswith(".S"):
+                s = params[key]
+                fro = fro + (s * s).sum()
+                l1 = l1 + jnp.abs(s).sum()
+        total = total + lam1 * jnp.sqrt(fro + 1e-12) + lam2 * l1
+    return total

@@ -1,0 +1,478 @@
+"""L2 training methods: ours (KPD) + every baseline in the paper's tables.
+
+A *method* fixes the parameterization of a model's linear slots and the
+training objective:
+
+  kpd          — ours: Eq. 3 factorization, CE + λ‖S‖₁       (paper Eq. 4)
+  dense        — original uncompressed model (Table 3 "Original Model")
+  group_lasso  — dense W + λ Σ_g ‖W_g‖_F                     (paper Eq. 1)
+  elastic_gl   — group lasso + ℓ2 (elastic group LASSO baseline)
+  rigl_block   — blockwise RigL: frozen block mask, dense-gradient grow
+                 signal; mask updates run in a separate executable driven
+                 by the rust coordinator every ΔT steps
+  iter_prune   — unstructured iterative magnitude pruning (Han et al. '15):
+                 train → prune → fine-tune rounds, prune as an executable
+  pattern      — pattern selection over K block-size candidates (Eq. 7)
+
+Every method exposes pure functions (no python state) so the whole train
+step AOT-lowers to one HLO module:
+
+  train_step(params, opt, x, y, *hyper) -> (params', opt', metrics)
+  eval_step(params, x, y)               -> metrics
+  plus method-specific executables (rigl_update, prune, materialize).
+
+``metrics`` is a flat f32 vector; names are recorded in the manifest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, losses, optim
+from .models import ModelDef, Slot
+from .shapes import KPDShape, from_block
+
+Params = Dict[str, jnp.ndarray]
+
+
+@dataclasses.dataclass
+class MethodBundle:
+    """Everything the AOT pipeline needs to lower one (model, method) pair."""
+    name: str
+    model: ModelDef
+    init: Callable[[jax.Array], Tuple[Params, Params]]   # -> (params, opt)
+    train_step: Callable[..., Tuple[Params, Params, jnp.ndarray]]
+    eval_step: Callable[[Params, jnp.ndarray, jnp.ndarray], jnp.ndarray]
+    train_hyper: Tuple[str, ...]          # scalar f32 inputs after (x, y)
+    metric_names: Tuple[str, ...]
+    # optional extra executables: name -> (fn, input spec builder)
+    extras: Dict[str, Callable] = dataclasses.field(default_factory=dict)
+    # static description merged into the manifest (block sizes, rank, …)
+    info: Dict[str, object] = dataclasses.field(default_factory=dict)
+
+
+def _ce_and_count(model: ModelDef, lin, params, x, y):
+    logits = model.apply(params, x, lin)
+    if logits.ndim == 3:          # LM: (N, T, V) with per-position targets
+        logits = logits.reshape(-1, logits.shape[-1])
+        y = y.reshape(-1)
+    return losses.cross_entropy(logits, y), losses.accuracy_count(logits, y)
+
+
+def _make_eval(model: ModelDef, lin):
+    def eval_step(params: Params, x, y) -> jnp.ndarray:
+        ce, acc = _ce_and_count(model, lin, params, x, y)
+        return jnp.stack([ce, acc])
+    return eval_step
+
+
+def _opt(optname: str):
+    return optim.OPTIMIZERS[optname]
+
+
+# =========================================================== ours: KPD
+
+def kpd_method(model: ModelDef, block_map: Dict[str, Tuple[int, int]],
+               rank: int, optimizer: str = "sgd") -> MethodBundle:
+    """The paper's method. ``block_map`` gives the (m2, n2) block size per
+    slot; the factorization grid follows from the slot's (m, n)."""
+    shapes: Dict[str, KPDShape] = {
+        s.name: from_block(s.m, s.n, block_map[s.name], rank)
+        for s in model.slots
+    }
+    oinit, oupd = _opt(optimizer)
+
+    lin = layers.kpd_linear_apply
+
+    def init(key):
+        keys = jax.random.split(key, len(model.slots) + 1)
+        params = dict(model.init_extra(keys[0]))
+        for i, s in enumerate(model.slots):
+            params.update(layers.kpd_linear_init(keys[i + 1], s.name, shapes[s.name]))
+        return params, oinit(params)
+
+    def loss_fn(params, x, y, lam):
+        ce, acc = _ce_and_count(model, lin, params, x, y)
+        reg = losses.kpd_l1(params, lam)
+        return ce + reg, (ce, acc, reg)
+
+    def train_step(params, opt, x, y, lam, lr):
+        (total, (ce, acc, reg)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, x, y, lam)
+        params, opt = oupd(params, grads, opt, lr)
+        s_l1 = losses.kpd_l1(params, jnp.float32(1.0))
+        return params, opt, jnp.stack([total, ce, acc, reg, s_l1])
+
+    def materialize(params):
+        """Reconstruct the block-wise sparse W per slot (inference path /
+        sparsity measurement in the coordinator)."""
+        from .kernels.ref import kpd_reconstruct
+        return tuple(kpd_reconstruct(params[f"{s.name}.S"],
+                                     params[f"{s.name}.A"],
+                                     params[f"{s.name}.B"])
+                     for s in model.slots)
+
+    info = {
+        "method": "kpd", "rank": rank,
+        "blocks": {k: list(v) for k, v in block_map.items()},
+        "shapes": {k: dataclasses.asdict(v) for k, v in shapes.items()},
+    }
+    return MethodBundle(
+        name="kpd", model=model, init=init, train_step=train_step,
+        eval_step=_make_eval(model, lin),
+        train_hyper=("lambda", "lr"),
+        metric_names=("loss", "ce", "acc_count", "reg", "s_l1"),
+        extras={"materialize": materialize}, info=info)
+
+
+# ======================================================== dense baseline
+
+def _dense_init(model: ModelDef, key, oinit):
+    keys = jax.random.split(key, len(model.slots) + 1)
+    params = dict(model.init_extra(keys[0]))
+    for i, s in enumerate(model.slots):
+        params.update(layers.dense_linear_init(keys[i + 1], s.name, s.m, s.n))
+    return params, oinit(params)
+
+
+def dense_method(model: ModelDef, optimizer: str = "sgd") -> MethodBundle:
+    """Original uncompressed model (the Table-3 reference rows)."""
+    oinit, oupd = _opt(optimizer)
+    lin = layers.dense_linear_apply
+
+    def init(key):
+        return _dense_init(model, key, oinit)
+
+    def loss_fn(params, x, y):
+        ce, acc = _ce_and_count(model, lin, params, x, y)
+        return ce, (ce, acc)
+
+    def train_step(params, opt, x, y, lr):
+        (total, (ce, acc)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, x, y)
+        params, opt = oupd(params, grads, opt, lr)
+        return params, opt, jnp.stack([total, ce, acc])
+
+    return MethodBundle(
+        name="dense", model=model, init=init, train_step=train_step,
+        eval_step=_make_eval(model, lin), train_hyper=("lr",),
+        metric_names=("loss", "ce", "acc_count"), info={"method": "dense"})
+
+
+# ==================================================== (elastic) group LASSO
+
+def group_lasso_method(model: ModelDef, block_map: Dict[str, Tuple[int, int]],
+                       elastic: bool = False, optimizer: str = "sgd"
+                       ) -> MethodBundle:
+    """(Elastic) group LASSO via **proximal** gradient descent: the CE
+    gradient step is followed by the exact prox of λ1 Σ_g ‖W_g‖_F — the
+    block-wise soft threshold W_g ← W_g · max(0, 1 − lr·λ1/‖W_g‖) — so
+    losing blocks reach *exact* zeros (plain subgradient descent never
+    does, which is why group-lasso implementations use prox or iterative
+    thresholding; cf. Ida et al. 2019). The elastic variant adds the ℓ2
+    prox W ← W / (1 + 2·lr·λ2)."""
+    oinit, oupd = _opt(optimizer)
+    lin = layers.dense_linear_apply
+    blocks = {s.name: block_map[s.name] for s in model.slots}
+
+    def init(key):
+        return _dense_init(model, key, oinit)
+
+    def loss_fn(params, x, y):
+        ce, acc = _ce_and_count(model, lin, params, x, y)
+        return ce, (ce, acc)
+
+    def prox(params, lam1, lam2, lr):
+        new = dict(params)
+        for s in model.slots:
+            m2, n2 = blocks[s.name]
+            w = params[f"{s.name}.W"]
+            m1, n1 = s.m // m2, s.n // n2
+            wb = w.reshape(m1, m2, n1, n2)
+            norms = jnp.sqrt((wb * wb).sum(axis=(1, 3), keepdims=True) + 1e-12)
+            # canonical group-lasso weighting (Yuan & Lin): threshold scales
+            # with sqrt(group size) so sparsity pressure is block-size-free
+            thr = lr * lam1 * jnp.sqrt(jnp.float32(m2 * n2))
+            scale = jnp.maximum(0.0, 1.0 - thr / norms)
+            wb = wb * scale
+            if elastic:
+                wb = wb / (1.0 + 2.0 * lr * lam2)
+            new[f"{s.name}.W"] = wb.reshape(s.m, s.n)
+        return new
+
+    def train_step(params, opt, x, y, lam1, lam2, lr):
+        (total, (ce, acc)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, x, y)
+        params, opt = oupd(params, grads, opt, lr)
+        params = prox(params, lam1, lam2, lr)
+        reg = losses.group_lasso(params, blocks, lam1) if not elastic else \
+            losses.elastic_group_lasso(params, blocks, lam1, lam2)
+        return params, opt, jnp.stack([total, ce, acc, reg])
+
+    name = "elastic_gl" if elastic else "group_lasso"
+    return MethodBundle(
+        name=name, model=model, init=init, train_step=train_step,
+        eval_step=_make_eval(model, lin),
+        train_hyper=("lambda1", "lambda2", "lr"),
+        metric_names=("loss", "ce", "acc_count", "reg"),
+        info={"method": name, "blocks": {k: list(v) for k, v in blocks.items()}})
+
+
+# ======================================================== blockwise RigL
+
+def rigl_method(model: ModelDef, block_map: Dict[str, Tuple[int, int]],
+                density: float = 0.5, optimizer: str = "sgd") -> MethodBundle:
+    """Blockwise RigL (paper §6.1's modification of Evci et al. 2020):
+    drop by block-L1 of W, grow by block-L1 of the *dense* gradient.
+
+    The train step consumes masked weights but differentiates w.r.t. the
+    effective weights, so the metrics vector carries the dense-gradient
+    block norms the coordinator feeds back into ``rigl_update``.
+    """
+    oinit, oupd = _opt(optimizer)
+    blocks = {s.name: block_map[s.name] for s in model.slots}
+
+    def lin(params, name, x):
+        m2, n2 = blocks[name]
+        return layers.masked_linear_apply(params, name, x, m2, n2)
+
+    def init(key):
+        keys = jax.random.split(key, len(model.slots) + 1)
+        params = dict(model.init_extra(keys[0]))
+        for i, s in enumerate(model.slots):
+            m2, n2 = blocks[s.name]
+            params.update(layers.masked_linear_init(
+                keys[i + 1], s.name, s.m, s.n, m2, n2, density))
+        return params, oinit(params)
+
+    def split_eff(params):
+        """Replace each slot's W with the effective (masked) weight, kept as
+        a separate leaf so grad w.r.t. it is the DENSE RigL grow signal."""
+        eff = {}
+        rest = dict(params)
+        for s in model.slots:
+            w = rest.pop(f"{s.name}.W")
+            mask = rest[f"{s.name}.mask"]
+            m2, n2 = blocks[s.name]
+            m1, n1 = s.m // m2, s.n // n2
+            eff[f"{s.name}.W"] = (w.reshape(m1, m2, n1, n2)
+                                  * mask[:, None, :, None]).reshape(s.m, s.n)
+        return eff, rest
+
+    def loss_fn(eff, rest, x, y):
+        merged = dict(rest)
+        merged.update(eff)
+        ce, acc = _ce_and_count(model, layers.dense_linear_apply, merged, x, y)
+        return ce, (ce, acc)
+
+    def train_step(params, opt, x, y, lr):
+        eff, rest = split_eff(params)
+        (total, (ce, acc)), (g_eff, g_rest) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True)(eff, rest, x, y)
+        # masked param update + dense-gradient block norms for grow
+        grads = dict(g_rest)
+        gnorms = []
+        for s in model.slots:
+            m2, n2 = blocks[s.name]
+            m1, n1 = s.m // m2, s.n // n2
+            ge = g_eff[f"{s.name}.W"]
+            mask = params[f"{s.name}.mask"]
+            grads[f"{s.name}.W"] = (ge.reshape(m1, m2, n1, n2)
+                                    * mask[:, None, :, None]).reshape(s.m, s.n)
+            gnorms.append(jnp.abs(ge.reshape(m1, m2, n1, n2)).sum(axis=(1, 3)).reshape(-1))
+        params, opt = oupd(params, grads, opt, lr)
+        metrics = jnp.concatenate([jnp.stack([total, ce, acc])] + gnorms)
+        return params, opt, metrics
+
+    def rigl_update(params, gnorm_flat, alpha):
+        """Drop α of active blocks (smallest block-L1 of W), grow the same
+        count by largest dense-grad block-L1 among inactive; grown blocks
+        restart at 0 (RigL convention). nnz per slot is preserved."""
+        new = dict(params)
+        off = 0
+        for s in model.slots:
+            m2, n2 = blocks[s.name]
+            m1, n1 = s.m // m2, s.n // n2
+            nb = m1 * n1
+            w = params[f"{s.name}.W"]
+            mask = params[f"{s.name}.mask"].reshape(-1)
+            gn = jax.lax.dynamic_slice(gnorm_flat, (off,), (nb,))
+            off += nb
+            mag = jnp.abs(w.reshape(m1, m2, n1, n2)).sum(axis=(1, 3)).reshape(-1)
+            nnz = jnp.round(mask.sum()).astype(jnp.int32)
+            k_drop = jnp.maximum(1, (alpha * nnz.astype(jnp.float32))).astype(jnp.int32)
+            keep_n = nnz - k_drop
+            neg_inf = jnp.float32(-1e30)
+            mag_act = jnp.where(mask > 0, mag, neg_inf)
+            # threshold for the blocks we keep
+            sorted_mag = jnp.sort(mag_act)[::-1]
+            keep_thr = sorted_mag[jnp.maximum(keep_n - 1, 0)]
+            keep = (mag_act >= keep_thr) & (mask > 0)
+            g_inact = jnp.where(mask > 0, neg_inf, gn)
+            sorted_g = jnp.sort(g_inact)[::-1]
+            grow_thr = sorted_g[jnp.maximum(k_drop - 1, 0)]
+            grow = (g_inact >= grow_thr) & (mask <= 0)
+            new_mask = (keep | grow).astype(jnp.float32).reshape(m1, n1)
+            # zero-init grown blocks
+            grown = grow.astype(jnp.float32).reshape(m1, n1)
+            wz = w.reshape(m1, m2, n1, n2) * (1.0 - grown[:, None, :, None])
+            new[f"{s.name}.W"] = wz.reshape(s.m, s.n)
+            new[f"{s.name}.mask"] = new_mask
+        return new
+
+    gnorm_names = tuple(
+        f"gnorm.{s.name}" for s in model.slots)
+    return MethodBundle(
+        name="rigl_block", model=model, init=init, train_step=train_step,
+        eval_step=_make_eval(model, lin), train_hyper=("lr",),
+        metric_names=("loss", "ce", "acc_count") + gnorm_names,
+        extras={"rigl_update": rigl_update},
+        info={"method": "rigl_block", "density": density,
+              "blocks": {k: list(v) for k, v in blocks.items()},
+              "gnorm_sizes": {s.name: (s.m // blocks[s.name][0])
+                              * (s.n // blocks[s.name][1])
+                              for s in model.slots}})
+
+
+# =================================================== iterative pruning
+
+def iter_prune_method(model: ModelDef, optimizer: str = "sgd") -> MethodBundle:
+    """Unstructured iterative magnitude pruning (Han et al. 2015): dense
+    training with an elementwise mask; the ``prune`` executable raises the
+    sparsity to a target by zeroing the smallest-magnitude surviving
+    weights; the coordinator alternates train and prune rounds."""
+    oinit, oupd = _opt(optimizer)
+
+    def lin(params, name, x):
+        w = params[f"{name}.W"] * jax.lax.stop_gradient(params[f"{name}.emask"])
+        y = x @ w.T
+        b = params.get(f"{name}.bias")
+        return y if b is None else y + b[None, :]
+
+    def init(key):
+        keys = jax.random.split(key, len(model.slots) + 1)
+        params = dict(model.init_extra(keys[0]))
+        for i, s in enumerate(model.slots):
+            params.update(layers.dense_linear_init(keys[i + 1], s.name, s.m, s.n))
+            params[f"{s.name}.emask"] = jnp.ones((s.m, s.n), jnp.float32)
+        return params, oinit(params)
+
+    def loss_fn(params, x, y):
+        ce, acc = _ce_and_count(model, lin, params, x, y)
+        return ce, (ce, acc)
+
+    def train_step(params, opt, x, y, lr):
+        (total, (ce, acc)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, x, y)
+        # mask the W grads so pruned weights stay dead
+        for s in model.slots:
+            grads[f"{s.name}.W"] = grads[f"{s.name}.W"] * params[f"{s.name}.emask"]
+            grads[f"{s.name}.emask"] = jnp.zeros_like(params[f"{s.name}.emask"])
+        params, opt = oupd(params, grads, opt, lr)
+        return params, opt, jnp.stack([total, ce, acc])
+
+    def prune(params, target_sparsity):
+        """Zero the smallest |W| among surviving weights until the GLOBAL
+        sparsity over all slots reaches the target."""
+        new = dict(params)
+        mags = []
+        for s in model.slots:
+            w = params[f"{s.name}.W"] * params[f"{s.name}.emask"]
+            mags.append(jnp.abs(w).reshape(-1))
+        allmag = jnp.concatenate(mags)
+        n_total = allmag.shape[0]
+        k_zero = (target_sparsity * n_total).astype(jnp.int32)
+        thr = jnp.sort(allmag)[jnp.maximum(k_zero - 1, 0)]
+        for s in model.slots:
+            w = params[f"{s.name}.W"]
+            keep = (jnp.abs(w * params[f"{s.name}.emask"]) > thr).astype(jnp.float32)
+            new[f"{s.name}.emask"] = keep
+            new[f"{s.name}.W"] = w * keep
+        return new
+
+    return MethodBundle(
+        name="iter_prune", model=model, init=init, train_step=train_step,
+        eval_step=_make_eval(model, lin), train_hyper=("lr",),
+        metric_names=("loss", "ce", "acc_count"),
+        extras={"prune": prune}, info={"method": "iter_prune"})
+
+
+# ==================================================== pattern selection
+
+def pattern_method(model: ModelDef,
+                   patterns: Sequence[Dict[str, Tuple[int, int]]],
+                   rank: int, optimizer: str = "sgd") -> MethodBundle:
+    """Paper §5 / Eq. 7: K KPD candidates trained jointly; the backbone
+    (convs/embeddings/norms/head) is shared across patterns, each pattern
+    owns its slot factors under the ``p{k}.`` prefix. λ1 ramping drives the
+    losing patterns' S to zero (Figure 3)."""
+    oinit, oupd = _opt(optimizer)
+    K = len(patterns)
+    shapes: List[Dict[str, KPDShape]] = [
+        {s.name: from_block(s.m, s.n, pat[s.name], rank) for s in model.slots}
+        for pat in patterns
+    ]
+
+    def init(key):
+        keys = jax.random.split(key, K * len(model.slots) + 1)
+        params = dict(model.init_extra(keys[0]))
+        idx = 1
+        for k in range(K):
+            for s in model.slots:
+                params.update(layers.kpd_linear_init(
+                    keys[idx], f"p{k}.{s.name}", shapes[k][s.name]))
+                idx += 1
+        return params, oinit(params)
+
+    def lin_for(k):
+        def lin(params, name, x):
+            return layers.kpd_linear_apply(params, f"p{k}.{name}", x)
+        return lin
+
+    def loss_fn(params, x, y, lam1, lam2):
+        total_ce = jnp.float32(0.0)
+        accs = []
+        for k in range(K):
+            ce, acc = _ce_and_count(model, lin_for(k), params, x, y)
+            total_ce = total_ce + ce
+            accs.append(acc)
+        reg = losses.pattern_penalty(params, K, lam1, lam2)
+        return total_ce + reg, (total_ce, reg, accs)
+
+    def train_step(params, opt, x, y, lam1, lam2, lr):
+        (total, (ce, reg, accs)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, x, y, lam1, lam2)
+        params, opt = oupd(params, grads, opt, lr)
+        snorms = [losses.pattern_s_l1(params, k) for k in range(K)]
+        metrics = jnp.stack([total, ce, reg] + accs + snorms)
+        return params, opt, metrics
+
+    def eval_step(params, x, y):
+        """Per-pattern eval: [ce_k..., acc_k...]."""
+        ces, accs = [], []
+        for k in range(K):
+            ce, acc = _ce_and_count(model, lin_for(k), params, x, y)
+            ces.append(ce)
+            accs.append(acc)
+        return jnp.stack(ces + accs)
+
+    metric_names = (("loss", "ce", "reg")
+                    + tuple(f"acc_count_p{k}" for k in range(K))
+                    + tuple(f"s_l1_p{k}" for k in range(K)))
+    return MethodBundle(
+        name=f"pattern{K}", model=model, init=init, train_step=train_step,
+        eval_step=eval_step, train_hyper=("lambda1", "lambda2", "lr"),
+        metric_names=metric_names,
+        info={"method": "pattern", "rank": rank, "num_patterns": K,
+              "patterns": [{k: list(v) for k, v in pat.items()}
+                           for pat in patterns]})
+
+
+def uniform_blocks(model: ModelDef, block: Tuple[int, int]) -> Dict[str, Tuple[int, int]]:
+    """Same block size for every slot (the §6.3 transformer convention)."""
+    return {s.name: block for s in model.slots}

@@ -1,0 +1,290 @@
+"""L2 model zoo: every architecture in the paper's evaluation.
+
+Each model is a ``ModelDef`` that separates the *backbone* from the
+*factorizable linear slots*. The backbone (convs, embeddings, layer norms,
+heads) is always dense; the slots are the layers the paper factorizes /
+sparsifies (the 1 linear layer of §6.1, the 3 FC layers of LeNet-5 §6.2,
+every transformer linear in §6.3). methods.py plugs in the per-method
+parameterization (KPD / dense+group-lasso / masked-RigL) via the
+``linear_apply`` callback, so one backbone serves all five methods.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+Params = Dict[str, jnp.ndarray]
+# (params, slot_name, x) -> y ; shape of the slot is fixed at init time.
+LinearApply = Callable[[Params, str, jnp.ndarray], jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class Slot:
+    """A factorizable linear layer: y = x W^T (+bias), W ∈ R^{m×n}."""
+    name: str
+    m: int
+    n: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDef:
+    name: str
+    input_shape: Tuple[int, ...]          # per-example, e.g. (784,) or (3,32,32)
+    num_classes: int
+    slots: Tuple[Slot, ...]
+    init_extra: Callable[[jax.Array], Params]
+    apply: Callable[[Params, jnp.ndarray, LinearApply], jnp.ndarray]
+    input_dtype: str = "f32"              # "f32" images | "i32" tokens
+
+
+# ---------------------------------------------------------------- linear
+
+def linear_model(in_dim: int = 784, classes: int = 10) -> ModelDef:
+    """§6.1: one linear layer + softmax on (synthetic) MNIST."""
+    slot = Slot("fc", classes, in_dim)
+
+    def init_extra(key) -> Params:
+        return {}
+
+    def apply(params: Params, x: jnp.ndarray, lin: LinearApply) -> jnp.ndarray:
+        return lin(params, "fc", x.reshape(x.shape[0], -1))
+
+    return ModelDef("linear", (in_dim,), classes, (slot,), init_extra, apply)
+
+
+# ---------------------------------------------------------------- LeNet-5
+
+def _conv(x, w, b, padding):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding=padding,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    return y + b[None, :, None, None]
+
+
+def _avgpool2(x):
+    return jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, 1, 2, 2), (1, 1, 2, 2), "VALID") * 0.25
+
+
+def lenet5(classes: int = 10) -> ModelDef:
+    """§6.2: LeNet-5 on 28×28; only the three FC layers (400→120→84→10)
+    are factorized, matching the paper ("the column block size indicated
+    the block sizes for these [three fully connected] layers")."""
+    slots = (Slot("fc1", 120, 400), Slot("fc2", 84, 120), Slot("fc3", classes, 84))
+
+    def init_extra(key) -> Params:
+        k1, k2 = jax.random.split(key)
+        return {
+            "conv1.W": layers.glorot(k1, (6, 1, 5, 5), 25, 150),
+            "conv1.bias": jnp.zeros((6,), jnp.float32),
+            "conv2.W": layers.glorot(k2, (16, 6, 5, 5), 150, 400),
+            "conv2.bias": jnp.zeros((16,), jnp.float32),
+        }
+
+    def apply(params: Params, x: jnp.ndarray, lin: LinearApply) -> jnp.ndarray:
+        h = x.reshape(x.shape[0], 1, 28, 28)
+        h = jax.nn.relu(_conv(h, params["conv1.W"], params["conv1.bias"], "SAME"))
+        h = _avgpool2(h)                                   # (N, 6, 14, 14)
+        h = jax.nn.relu(_conv(h, params["conv2.W"], params["conv2.bias"], "VALID"))
+        h = _avgpool2(h)                                   # (N, 16, 5, 5)
+        h = h.reshape(h.shape[0], 400)
+        h = jax.nn.relu(lin(params, "fc1", h))
+        h = jax.nn.relu(lin(params, "fc2", h))
+        return lin(params, "fc3", h)
+
+    return ModelDef("lenet5", (784,), classes, slots, init_extra, apply)
+
+
+# ---------------------------------------------------------------- ViT
+
+@dataclasses.dataclass(frozen=True)
+class ViTConfig:
+    """Width/depth-scaled ViT. The paper trains ViT-tiny (dim 192, depth 12)
+    / ViT-base on CIFAR-100; this CPU testbed uses the same architecture at
+    reduced dim/depth (DESIGN.md §5 substitution) — all linear slots keep
+    dimensions divisible by the 2/4/8 block sizes used in §6.3."""
+    dim: int = 64
+    depth: int = 2
+    heads: int = 4
+    mlp_ratio: int = 2
+    patch: int = 4
+    image: int = 32
+    chans: int = 3
+    classes: int = 100
+
+    @property
+    def seq(self) -> int:
+        return (self.image // self.patch) ** 2 + 1  # +1 cls token
+
+    @property
+    def patch_dim(self) -> int:
+        return self.chans * self.patch * self.patch
+
+
+def _attention(q, k, v, heads: int) -> jnp.ndarray:
+    n, t, d = q.shape
+    hd = d // heads
+    def split(x):
+        return x.reshape(n, t, heads, hd).transpose(0, 2, 1, 3)
+    qh, kh, vh = split(q), split(k), split(v)
+    att = jnp.einsum("nhtd,nhsd->nhts", qh, kh) / jnp.sqrt(jnp.float32(hd))
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("nhts,nhsd->nhtd", att, vh)
+    return out.transpose(0, 2, 1, 3).reshape(n, t, d)
+
+
+def vit(cfg: ViTConfig) -> ModelDef:
+    """§6.3: ViT with every block linear (qkv / proj / mlp1 / mlp2)
+    factorizable. Patch embed + head stay dense (head rows = 100 classes,
+    not divisible by the 8×8 pattern-selection candidate)."""
+    d, mlp = cfg.dim, cfg.dim * cfg.mlp_ratio
+    slots: List[Slot] = []
+    for i in range(cfg.depth):
+        slots += [Slot(f"blk{i}.qkv", 3 * d, d), Slot(f"blk{i}.proj", d, d),
+                  Slot(f"blk{i}.mlp1", mlp, d), Slot(f"blk{i}.mlp2", d, mlp)]
+
+    def init_extra(key) -> Params:
+        keys = jax.random.split(key, 3 + cfg.depth)
+        p: Params = {
+            "embed.W": layers.glorot(keys[0], (d, cfg.patch_dim), cfg.patch_dim, d),
+            "embed.bias": jnp.zeros((d,), jnp.float32),
+            "cls": jax.random.normal(keys[1], (1, 1, d), jnp.float32) * 0.02,
+            "pos": jax.random.normal(keys[2], (1, cfg.seq, d), jnp.float32) * 0.02,
+            "head.W": layers.glorot(keys[3], (cfg.classes, d), d, cfg.classes),
+            "head.bias": jnp.zeros((cfg.classes,), jnp.float32),
+        }
+        for i in range(cfg.depth):
+            p[f"blk{i}.ln1.g"] = jnp.ones((d,), jnp.float32)
+            p[f"blk{i}.ln1.b"] = jnp.zeros((d,), jnp.float32)
+            p[f"blk{i}.ln2.g"] = jnp.ones((d,), jnp.float32)
+            p[f"blk{i}.ln2.b"] = jnp.zeros((d,), jnp.float32)
+        p["ln_f.g"] = jnp.ones((d,), jnp.float32)
+        p["ln_f.b"] = jnp.zeros((d,), jnp.float32)
+        return p
+
+    def apply(params: Params, x: jnp.ndarray, lin: LinearApply) -> jnp.ndarray:
+        n = x.shape[0]
+        img = x.reshape(n, cfg.chans, cfg.image, cfg.image)
+        g = cfg.image // cfg.patch
+        patches = img.reshape(n, cfg.chans, g, cfg.patch, g, cfg.patch)
+        patches = patches.transpose(0, 2, 4, 1, 3, 5).reshape(n, g * g, cfg.patch_dim)
+        h = patches @ params["embed.W"].T + params["embed.bias"]
+        h = jnp.concatenate([jnp.tile(params["cls"], (n, 1, 1)), h], axis=1)
+        h = h + params["pos"]
+        t = h.shape[1]
+
+        def lin2d(pp, name, z):          # slots see (N·T, d) matrices
+            return lin(pp, name, z.reshape(n * t, -1)).reshape(n, t, -1)
+
+        for i in range(cfg.depth):
+            z = layers.layer_norm(h, params[f"blk{i}.ln1.g"], params[f"blk{i}.ln1.b"])
+            qkv = lin2d(params, f"blk{i}.qkv", z)
+            q, k, v = jnp.split(qkv, 3, axis=-1)
+            att = _attention(q, k, v, cfg.heads)
+            h = h + lin2d(params, f"blk{i}.proj", att)
+            z = layers.layer_norm(h, params[f"blk{i}.ln2.g"], params[f"blk{i}.ln2.b"])
+            z = jax.nn.gelu(lin2d(params, f"blk{i}.mlp1", z))
+            h = h + lin2d(params, f"blk{i}.mlp2", z)
+
+        h = layers.layer_norm(h, params["ln_f.g"], params["ln_f.b"])
+        cls = h[:, 0]
+        return cls @ params["head.W"].T + params["head.bias"]
+
+    flat = cfg.chans * cfg.image * cfg.image
+    return ModelDef(f"vit_d{cfg.dim}x{cfg.depth}", (flat,), cfg.classes,
+                    tuple(slots), init_extra, apply)
+
+
+# ---------------------------------------------------------------- LM (E2E)
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    """Decoder-only LM for the end-to-end training example. vocab 64
+    keeps the bigram/trigram structure learnable within a CPU-budget run
+    (a 256-way softmax needs far more steps to beat the uniform bound)."""
+    vocab: int = 64
+    dim: int = 192
+    depth: int = 4
+    heads: int = 4
+    mlp_ratio: int = 4
+    seq: int = 128
+
+
+def _causal_attention(q, k, v, heads: int) -> jnp.ndarray:
+    n, t, d = q.shape
+    hd = d // heads
+    def split(x):
+        return x.reshape(n, t, heads, hd).transpose(0, 2, 1, 3)
+    qh, kh, vh = split(q), split(k), split(v)
+    att = jnp.einsum("nhtd,nhsd->nhts", qh, kh) / jnp.sqrt(jnp.float32(hd))
+    causal = jnp.tril(jnp.ones((t, t), jnp.float32))
+    att = jnp.where(causal[None, None] > 0, att, jnp.float32(-1e9))
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("nhts,nhsd->nhtd", att, vh)
+    return out.transpose(0, 2, 1, 3).reshape(n, t, d)
+
+
+def transformer_lm(cfg: LMConfig) -> ModelDef:
+    """Next-token LM; all block linears factorizable, embeddings dense.
+    "num_classes" is the vocab (logits are per-position; the train step
+    flattens (N,T,V) before the CE)."""
+    d, mlp = cfg.dim, cfg.dim * cfg.mlp_ratio
+    slots: List[Slot] = []
+    for i in range(cfg.depth):
+        slots += [Slot(f"blk{i}.qkv", 3 * d, d), Slot(f"blk{i}.proj", d, d),
+                  Slot(f"blk{i}.mlp1", mlp, d), Slot(f"blk{i}.mlp2", d, mlp)]
+
+    def init_extra(key) -> Params:
+        k1, k2, k3 = jax.random.split(key, 3)
+        p: Params = {
+            "tok": jax.random.normal(k1, (cfg.vocab, d), jnp.float32) * 0.02,
+            "pos": jax.random.normal(k2, (1, cfg.seq, d), jnp.float32) * 0.02,
+            "head.W": layers.glorot(k3, (cfg.vocab, d), d, cfg.vocab),
+            "head.bias": jnp.zeros((cfg.vocab,), jnp.float32),
+        }
+        for i in range(cfg.depth):
+            p[f"blk{i}.ln1.g"] = jnp.ones((d,), jnp.float32)
+            p[f"blk{i}.ln1.b"] = jnp.zeros((d,), jnp.float32)
+            p[f"blk{i}.ln2.g"] = jnp.ones((d,), jnp.float32)
+            p[f"blk{i}.ln2.b"] = jnp.zeros((d,), jnp.float32)
+        p["ln_f.g"] = jnp.ones((d,), jnp.float32)
+        p["ln_f.b"] = jnp.zeros((d,), jnp.float32)
+        return p
+
+    def apply(params: Params, tokens: jnp.ndarray, lin: LinearApply) -> jnp.ndarray:
+        n, t = tokens.shape
+        h = params["tok"][tokens.astype(jnp.int32)] + params["pos"][:, :t]
+
+        def lin2d(pp, name, z):
+            return lin(pp, name, z.reshape(n * t, -1)).reshape(n, t, -1)
+
+        for i in range(cfg.depth):
+            z = layers.layer_norm(h, params[f"blk{i}.ln1.g"], params[f"blk{i}.ln1.b"])
+            qkv = lin2d(params, f"blk{i}.qkv", z)
+            q, k, v = jnp.split(qkv, 3, axis=-1)
+            h = h + lin2d(params, f"blk{i}.proj", _causal_attention(q, k, v, cfg.heads))
+            z = layers.layer_norm(h, params[f"blk{i}.ln2.g"], params[f"blk{i}.ln2.b"])
+            h = h + lin2d(params, f"blk{i}.mlp2", jax.nn.gelu(lin2d(params, f"blk{i}.mlp1", z)))
+
+        h = layers.layer_norm(h, params["ln_f.g"], params["ln_f.b"])
+        return h @ params["head.W"].T + params["head.bias"]
+
+    return ModelDef(f"lm_d{cfg.dim}x{cfg.depth}", (cfg.seq,), cfg.vocab,
+                    tuple(slots), init_extra, apply, input_dtype="i32")
+
+
+MODELS = {
+    "linear": lambda: linear_model(),
+    "lenet5": lambda: lenet5(),
+    "vit_micro": lambda: vit(ViTConfig(dim=64, depth=2, heads=4)),
+    "vit_small": lambda: vit(ViTConfig(dim=128, depth=4, heads=4)),
+    "swin_proxy": lambda: vit(ViTConfig(dim=96, depth=3, heads=3, mlp_ratio=4)),
+    "lm_micro": lambda: transformer_lm(LMConfig(dim=96, depth=2, seq=64)),
+    "lm_e2e": lambda: transformer_lm(LMConfig(dim=192, depth=4, seq=128)),
+}

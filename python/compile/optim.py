@@ -1,0 +1,84 @@
+"""Minimal optimizers for the AOT train steps.
+
+Implemented from scratch (no optax in the image) over flat name→array
+parameter dicts. Optimizer state is itself a flat dict so the whole
+(params, state) bundle flattens into a deterministic PJRT argument list.
+
+Frozen parameters: any key whose leaf name is in FROZEN_LEAVES (e.g. RigL
+masks) receives no update and carries no state.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+
+Params = Dict[str, jnp.ndarray]
+
+FROZEN_LEAVES = ("mask",)
+
+
+def is_frozen(key: str) -> bool:
+    return key.rsplit(".", 1)[-1] in FROZEN_LEAVES
+
+
+# ---------------------------------------------------------------- SGD(+mom)
+
+def sgd_init(params: Params) -> Params:
+    return {f"mom.{k}": jnp.zeros_like(v) for k, v in params.items()
+            if not is_frozen(k)}
+
+
+def sgd_update(params: Params, grads: Params, state: Params,
+               lr: jnp.ndarray, momentum: float = 0.9
+               ) -> Tuple[Params, Params]:
+    new_p, new_s = {}, {}
+    for k in sorted(params):
+        if is_frozen(k):
+            new_p[k] = params[k]
+            continue
+        m = momentum * state[f"mom.{k}"] + grads[k]
+        new_s[f"mom.{k}"] = m
+        new_p[k] = params[k] - lr * m
+    return new_p, new_s
+
+
+# -------------------------------------------------------------------- Adam
+
+def adam_init(params: Params) -> Params:
+    state: Params = {"t": jnp.zeros((), jnp.float32)}
+    for k, v in params.items():
+        if is_frozen(k):
+            continue
+        state[f"m.{k}"] = jnp.zeros_like(v)
+        state[f"v.{k}"] = jnp.zeros_like(v)
+    return state
+
+
+def adam_update(params: Params, grads: Params, state: Params,
+                lr: jnp.ndarray, b1: float = 0.9, b2: float = 0.999,
+                eps: float = 1e-8) -> Tuple[Params, Params]:
+    t = state["t"] + 1.0
+    new_p, new_s = {}, {"t": t}
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+    for k in sorted(params):
+        if is_frozen(k):
+            new_p[k] = params[k]
+            continue
+        g = grads[k]
+        m = b1 * state[f"m.{k}"] + (1.0 - b1) * g
+        v = b2 * state[f"v.{k}"] + (1.0 - b2) * (g * g)
+        new_s[f"m.{k}"] = m
+        new_s[f"v.{k}"] = v
+        mh = m / bc1
+        vh = v / bc2
+        new_p[k] = params[k] - lr * mh / (jnp.sqrt(vh) + eps)
+    return new_p, new_s
+
+
+OPTIMIZERS = {
+    "sgd": (sgd_init, sgd_update),
+    "adam": (adam_init, adam_update),
+}

@@ -1,0 +1,145 @@
+"""Shape algebra for the KPD (Kronecker-product-decomposition) factorization.
+
+The paper (Eq. 3) estimates a weight matrix ``W ∈ R^{m×n}`` by
+
+    W_r = sum_{i=1..r} (S ⊙ A_i) ⊗ B_i
+
+with ``S, A_i ∈ R^{m1×n1}``, ``B_i ∈ R^{m2×n2}``, ``m = m1·m2``, ``n = n1·n2``.
+The *block size* of the resulting block-wise sparse matrix is ``(m2, n2)``
+and the number of blocks is ``m1 × n1`` (one entry of ``S`` per block).
+
+This module is the single source of truth for:
+  * legal factorizations of a given (m, n),
+  * parameter counts (paper §4, Example 1),
+  * the Eq. 5 "minimum parameters" block-size optimizer
+    (mirrored in rust/src/blockopt for the runtime side).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class KPDShape:
+    """A concrete factorization of an (m, n) weight matrix.
+
+    ``(m1, n1)`` is the grid of blocks (and the shape of S and every A_i);
+    ``(m2, n2)`` is the block size (and the shape of every B_i);
+    ``r`` is the rank of the Kronecker decomposition.
+    """
+
+    m1: int
+    n1: int
+    m2: int
+    n2: int
+    r: int
+
+    @property
+    def m(self) -> int:
+        return self.m1 * self.m2
+
+    @property
+    def n(self) -> int:
+        return self.n1 * self.n2
+
+    @property
+    def block(self) -> Tuple[int, int]:
+        return (self.m2, self.n2)
+
+    @property
+    def grid(self) -> Tuple[int, int]:
+        return (self.m1, self.n1)
+
+    def train_params(self) -> int:
+        """Trainable parameter count of the factorized layer (no bias):
+        S (m1·n1) + r·(A: m1·n1 + B: m2·n2)."""
+        return self.m1 * self.n1 + self.r * (self.m1 * self.n1 + self.m2 * self.n2)
+
+    def dense_params(self) -> int:
+        return self.m * self.n
+
+    def validate(self) -> None:
+        if self.m1 <= 0 or self.n1 <= 0 or self.m2 <= 0 or self.n2 <= 0:
+            raise ValueError(f"non-positive factor in {self}")
+        if self.r <= 0:
+            raise ValueError(f"rank must be positive, got {self.r}")
+        rmax = min(self.m1 * self.n1, self.m2 * self.n2)
+        if self.r > rmax:
+            raise ValueError(f"rank {self.r} exceeds max {rmax} for {self}")
+
+
+def divisors(x: int) -> List[int]:
+    """All positive divisors of x, ascending."""
+    if x <= 0:
+        raise ValueError("divisors of non-positive integer")
+    small, large = [], []
+    d = 1
+    while d * d <= x:
+        if x % d == 0:
+            small.append(d)
+            if d != x // d:
+                large.append(x // d)
+        d += 1
+    return small + large[::-1]
+
+
+def from_block(m: int, n: int, block: Tuple[int, int], r: int,
+               clamp_rank: bool = True) -> KPDShape:
+    """Build the KPDShape for a given weight shape and block size (m2, n2).
+
+    With ``clamp_rank`` (default), r is capped at min(m1·n1, m2·n2) — the
+    exact-decomposition rank bound of Eq. 2; any larger r is redundant
+    (Proposition 1 needs at most the number of non-zero blocks)."""
+    m2, n2 = block
+    if m % m2 != 0 or n % n2 != 0:
+        raise ValueError(f"block {block} does not tile ({m}, {n})")
+    m1, n1 = m // m2, n // n2
+    if clamp_rank:
+        r = min(r, m1 * n1, m2 * n2)
+    s = KPDShape(m1=m1, n1=n1, m2=m2, n2=n2, r=r)
+    s.validate()
+    return s
+
+
+def enumerate_blocks(m: int, n: int, include_trivial: bool = False) -> List[Tuple[int, int]]:
+    """All legal block sizes (m2, n2) for an m×n matrix.
+
+    Matches the paper's §5 counting: for a 10×10 matrix there are 14
+    non-trivial block sizes (excluding 1×1 and 10×10 and ... exactly the
+    divisor-pair grid minus the trivial ones).
+    """
+    blocks = []
+    for m2 in divisors(m):
+        for n2 in divisors(n):
+            if not include_trivial and (m2, n2) in ((1, 1), (m, n)):
+                continue
+            blocks.append((m2, n2))
+    return blocks
+
+
+def optimal_block_r1(m: int, n: int) -> KPDShape:
+    """Eq. 5: minimize 2·m1·n1 + m2·n2 s.t. m1·m2 = m, n1·n2 = n, r = 1.
+
+    Continuous optimum is m1·n1 = sqrt(mn/2); we branch-and-bound over the
+    (finite) divisor grid, which is exact.
+    """
+    best = None
+    best_cost = math.inf
+    for m1 in divisors(m):
+        for n1 in divisors(n):
+            cost = 2 * m1 * n1 + (m // m1) * (n // n1)
+            if cost < best_cost:
+                best_cost = cost
+                best = KPDShape(m1=m1, n1=n1, m2=m // m1, n2=n // n1, r=1)
+    assert best is not None
+    return best
+
+
+def reconstruction_rank(m1: int, n1: int) -> int:
+    """Rank sufficient to represent ANY block-wise sparse matrix exactly
+    (Proposition 1): one (A_i, B_i) pair per non-zero block, worst case
+    all m1·n1 blocks non-zero."""
+    return m1 * n1

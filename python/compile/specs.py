@@ -1,0 +1,156 @@
+"""Experiment spec registry: every (model × method × hyper) pair the tables
+and figures need, mapped to AOT artifact names.
+
+Block-size label convention: the paper writes linear-model blocks as
+"(16, 2)" etc. For the 10×784 linear layer a 16-row block cannot tile 10
+rows, so (as in the authors' released configs) the label "(a, b)" denotes a
+block of **b output rows × a input columns**, i.e. (m2, n2) = (b, a). The
+same reading makes every LeNet combo tile exactly: e.g. (16,8) on the
+120×400 fc1 is (m2, n2) = (8, 16) → grid 15×25. Transformer blocks are
+square so the convention is invisible there.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from . import methods as M
+from .models import MODELS, ModelDef
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    """One AOT bundle: a (model, method) pair at a fixed batch size."""
+    key: str                       # artifact base name, e.g. t1_kpd_b2x2
+    model_name: str
+    batch: int
+    build: Callable[[ModelDef], M.MethodBundle]
+    tags: Tuple[str, ...] = ()     # table/figure ids this spec serves
+
+
+def paper_block(label: Tuple[int, int]) -> Tuple[int, int]:
+    """(a, b) paper label → (m2, n2) = (b, a)."""
+    a, b = label
+    return (b, a)
+
+
+def _lenet_blocks(l1, l2, l3) -> Dict[str, Tuple[int, int]]:
+    return {"fc1": paper_block(l1), "fc2": paper_block(l2), "fc3": paper_block(l3)}
+
+
+LENET_COMBOS: List[Tuple[str, Dict[str, Tuple[int, int]]]] = [
+    ("16x8_8x4_4x2", _lenet_blocks((16, 8), (8, 4), (4, 2))),
+    ("8x4_4x4_2x2", _lenet_blocks((8, 4), (4, 4), (2, 2))),
+    ("4x4_4x4_2x2", _lenet_blocks((4, 4), (4, 4), (2, 2))),
+    ("4x4_2x2_2x2", _lenet_blocks((4, 4), (2, 2), (2, 2))),
+    ("2x2_2x2_2x2", _lenet_blocks((2, 2), (2, 2), (2, 2))),
+]
+
+LINEAR_BLOCK_LABELS: List[Tuple[int, int]] = [(2, 2), (4, 2), (8, 2), (16, 2)]
+
+T1_BATCH = 128
+T2_BATCH = 64
+T3_BATCH = 32
+LM_BATCH = 8
+
+
+def build_specs() -> List[Spec]:
+    specs: List[Spec] = []
+
+    def add(key, model_name, batch, build, tags):
+        specs.append(Spec(key, model_name, batch, build, tuple(tags)))
+
+    # ---------------- Table 1: linear on MNIST-like ----------------
+    for (a, b) in LINEAR_BLOCK_LABELS:
+        blk = paper_block((a, b))
+        bk = f"b{a}x{b}"
+        add(f"t1_kpd_{bk}", "linear", T1_BATCH,
+            lambda m, blk=blk: M.kpd_method(m, M.uniform_blocks(m, blk), rank=2),
+            ["table1"])
+        add(f"t1_gl_{bk}", "linear", T1_BATCH,
+            lambda m, blk=blk: M.group_lasso_method(m, M.uniform_blocks(m, blk)),
+            ["table1"])
+        add(f"t1_egl_{bk}", "linear", T1_BATCH,
+            lambda m, blk=blk: M.group_lasso_method(m, M.uniform_blocks(m, blk), elastic=True),
+            ["table1"])
+        add(f"t1_rigl_{bk}", "linear", T1_BATCH,
+            lambda m, blk=blk: M.rigl_method(m, M.uniform_blocks(m, blk), density=0.5),
+            ["table1"])
+    add("t1_dense", "linear", T1_BATCH, lambda m: M.dense_method(m), ["table1"])
+    add("t1_prune", "linear", T1_BATCH, lambda m: M.iter_prune_method(m), ["table1"])
+    # Figure 3a: pattern selection over the four Table-1 blocks + (2,4)
+    lin_patterns = [M.uniform_blocks(MODELS["linear"](), paper_block(lbl))
+                    for lbl in LINEAR_BLOCK_LABELS]
+    add("f3a_pattern", "linear", T1_BATCH,
+        lambda m, pats=lin_patterns: M.pattern_method(m, pats, rank=2), ["fig3a"])
+
+    # ---------------- Table 2: LeNet-5 ----------------
+    for name, blocks in LENET_COMBOS:
+        add(f"t2_kpd_{name}", "lenet5", T2_BATCH,
+            lambda m, bl=blocks: M.kpd_method(m, bl, rank=5), ["table2"])
+        add(f"t2_gl_{name}", "lenet5", T2_BATCH,
+            lambda m, bl=blocks: M.group_lasso_method(m, bl), ["table2"])
+        add(f"t2_egl_{name}", "lenet5", T2_BATCH,
+            lambda m, bl=blocks: M.group_lasso_method(m, bl, elastic=True), ["table2"])
+        add(f"t2_rigl_{name}", "lenet5", T2_BATCH,
+            lambda m, bl=blocks: M.rigl_method(m, bl, density=0.5), ["table2"])
+    add("t2_dense", "lenet5", T2_BATCH, lambda m: M.dense_method(m), ["table2"])
+    add("t2_prune", "lenet5", T2_BATCH, lambda m: M.iter_prune_method(m), ["table2"])
+    lenet_patterns = [bl for _, bl in LENET_COMBOS]
+    add("f3b_pattern", "lenet5", T2_BATCH,
+        lambda m, pats=lenet_patterns: M.pattern_method(m, pats, rank=5), ["fig3b"])
+
+    # ---------------- Table 3: transformers (scaled, see DESIGN §5) -----
+    for mname, tag in (("vit_micro", "vit_t"), ("vit_small", "vit_b"),
+                       ("swin_proxy", "swin_t")):
+        add(f"t3_{tag}_dense", mname, T3_BATCH, lambda m: M.dense_method(m), ["table3"])
+        add(f"t3_{tag}_gl", mname, T3_BATCH,
+            lambda m: M.group_lasso_method(m, M.uniform_blocks(m, (4, 4))), ["table3"])
+        add(f"t3_{tag}_egl", mname, T3_BATCH,
+            lambda m: M.group_lasso_method(m, M.uniform_blocks(m, (4, 4)), elastic=True),
+            ["table3"])
+        add(f"t3_{tag}_rigl", mname, T3_BATCH,
+            lambda m: M.rigl_method(m, M.uniform_blocks(m, (4, 4)), density=0.5),
+            ["table3"])
+        add(f"t3_{tag}_kpd", mname, T3_BATCH,
+            lambda m: M.kpd_method(m, M.uniform_blocks(m, (4, 4)), rank=4), ["table3"])
+    # Figure 3c: ViT pattern selection over 2×2 / 4×4 / 8×8
+    vit_patterns = [M.uniform_blocks(MODELS["vit_micro"](), (bs, bs)) for bs in (2, 4, 8)]
+    add("f3c_pattern", "vit_micro", T3_BATCH,
+        lambda m, pats=vit_patterns: M.pattern_method(m, pats, rank=4), ["fig3c"])
+
+    # ---------------- Table 4: rank ablation ----------------
+    for r in (1, 2, 4, 6):
+        add(f"t4_linear_r{r}", "linear", T1_BATCH,
+            lambda m, r=r: M.kpd_method(m, M.uniform_blocks(m, paper_block((4, 2))), rank=r),
+            ["table4"])
+    for mname, tag in (("vit_micro", "vit_t"), ("swin_proxy", "swin_t")):
+        for r in (1, 2, 4):
+            add(f"t4_{tag}_r{r}", mname, T3_BATCH,
+                lambda m, r=r: M.kpd_method(m, M.uniform_blocks(m, (4, 4)), rank=r),
+                ["table4"])
+
+    # ---------------- E2E transformer-LM driver ----------------
+    add("e2e_lm_kpd", "lm_e2e", LM_BATCH,
+        lambda m: M.kpd_method(m, M.uniform_blocks(m, (4, 4)), rank=4, optimizer="adam"),
+        ["e2e"])
+    add("e2e_lm_dense", "lm_e2e", LM_BATCH,
+        lambda m: M.dense_method(m, optimizer="adam"), ["e2e"])
+    # small LM used by the integration tests
+    add("it_lm_kpd", "lm_micro", 4,
+        lambda m: M.kpd_method(m, M.uniform_blocks(m, (4, 4)), rank=2, optimizer="adam"),
+        ["itest"])
+
+    # quickstart example artifacts (tiny, compile fast)
+    add("qs_kpd", "linear", 32,
+        lambda m: M.kpd_method(m, M.uniform_blocks(m, (2, 4)), rank=2), ["quickstart"])
+
+    return specs
+
+
+def spec_by_key(key: str) -> Spec:
+    for s in build_specs():
+        if s.key == key:
+            return s
+    raise KeyError(key)

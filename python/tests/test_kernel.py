@@ -1,0 +1,148 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles.
+
+Hypothesis sweeps shapes/ranks/batch sizes; the kernel must match ref.py
+to f32 tolerance everywhere, including non-tile-aligned batches.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.block_sparse import block_sparse_matmul
+from compile.kernels.kpd_matmul import (kpd_forward, kpd_forward_mxu_flops,
+                                        kpd_forward_schedule,
+                                        kpd_forward_vmem_bytes)
+
+RNG = np.random.default_rng(0)
+
+
+def rand(*shape):
+    return RNG.standard_normal(shape).astype(np.float32)
+
+
+def assert_close(a, b, tol=2e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=tol, atol=tol)
+
+
+# -------------------------------------------------------------- fixed cases
+
+def test_kpd_kernel_matches_ref_basic():
+    x, s = rand(32, 64), rand(4, 8)
+    a, b = rand(3, 4, 8), rand(3, 2, 8)
+    assert_close(kpd_forward(x, s, a, b, tile_n=16), ref.kpd_forward_ref(x, s, a, b))
+
+
+def test_kpd_ref_matches_dense_reconstruction():
+    x, s = rand(8, 64), rand(4, 8)
+    a, b = rand(2, 4, 8), rand(2, 2, 8)
+    assert_close(ref.kpd_forward_ref(x, s, a, b),
+                 ref.kpd_forward_dense_ref(x, s, a, b))
+
+
+def test_kpd_kernel_rank_one_is_pure_kron():
+    x, s = rand(16, 12), np.ones((2, 3), np.float32)
+    a, b = rand(1, 2, 3), rand(1, 2, 4)
+    w = np.kron(s * a[0], b[0])
+    assert_close(kpd_forward(x, s, a, b, tile_n=8), x @ w.T)
+
+
+def test_kpd_zero_s_gives_zero_output():
+    x = rand(8, 16)
+    s = np.zeros((2, 2), np.float32)
+    a, b = rand(2, 2, 2), rand(2, 4, 8)
+    out = np.asarray(kpd_forward(x, s, a, b, tile_n=8))
+    assert np.abs(out).max() == 0.0
+
+
+def test_kpd_unaligned_batch_padding():
+    # batch 13 with tile 8 exercises the pad+slice path
+    x, s = rand(13, 32), rand(2, 4)
+    a, b = rand(2, 2, 4), rand(2, 4, 8)
+    assert_close(kpd_forward(x, s, a, b, tile_n=8), ref.kpd_forward_ref(x, s, a, b))
+
+
+def test_block_sparse_matches_ref():
+    w = rand(8, 16)
+    mask = (RNG.random((4, 4)) > 0.4).astype(np.float32)
+    x = rand(20, 16)
+    assert_close(block_sparse_matmul(x, w, mask, m1=4, tile_n=8),
+                 ref.block_sparse_matmul_ref(x, w, mask))
+
+
+def test_block_sparse_full_mask_is_dense():
+    w, x = rand(6, 9), rand(10, 9)
+    mask = np.ones((2, 3), np.float32)
+    assert_close(block_sparse_matmul(x, w, mask, m1=2, tile_n=8), x @ w.T)
+
+
+def test_block_sparse_empty_mask_is_zero():
+    w, x = rand(4, 8), rand(5, 8)
+    mask = np.zeros((2, 2), np.float32)
+    out = np.asarray(block_sparse_matmul(x, w, mask, m1=2, tile_n=8))
+    assert np.abs(out).max() == 0.0
+
+
+def test_schedule_impl_matches_pallas_and_ref():
+    """The straight-line export schedule (BS_KPD_IMPL=schedule, the §Perf
+    fast path for the 0.5.1 CPU PJRT) must be bit-for-bit the same math as
+    the pallas kernel and the oracle."""
+    x, s = rand(21, 48), rand(3, 4)
+    a, b = rand(4, 3, 4), rand(4, 2, 12)
+    want = ref.kpd_forward_ref(x, s, a, b)
+    assert_close(kpd_forward_schedule(x, s, a, b), want)
+    assert_close(kpd_forward(x, s, a, b, tile_n=8), want)
+
+
+# -------------------------------------------------------------- hypothesis
+
+@st.composite
+def kpd_shapes(draw):
+    m1 = draw(st.sampled_from([1, 2, 4, 5]))
+    n1 = draw(st.sampled_from([1, 2, 4, 7]))
+    m2 = draw(st.sampled_from([1, 2, 3, 4]))
+    n2 = draw(st.sampled_from([1, 2, 4, 8]))
+    r = draw(st.integers(1, min(m1 * n1, m2 * n2)))
+    n_batch = draw(st.integers(1, 33))
+    return n_batch, m1, n1, m2, n2, r
+
+
+@settings(max_examples=25, deadline=None)
+@given(kpd_shapes(), st.integers(0, 2**31 - 1))
+def test_kpd_kernel_matches_ref_sweep(shape, seed):
+    n_batch, m1, n1, m2, n2, r = shape
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n_batch, n1 * n2)).astype(np.float32)
+    s = rng.standard_normal((m1, n1)).astype(np.float32)
+    a = rng.standard_normal((r, m1, n1)).astype(np.float32)
+    b = rng.standard_normal((r, m2, n2)).astype(np.float32)
+    assert_close(kpd_forward(x, s, a, b, tile_n=16), ref.kpd_forward_ref(x, s, a, b),
+                 tol=5e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from([1, 2, 4]), st.sampled_from([1, 2, 4]),
+       st.integers(1, 25), st.integers(0, 2**31 - 1))
+def test_block_sparse_sweep(m1, n1, n_batch, seed):
+    rng = np.random.default_rng(seed)
+    m2, n2 = 3, 5
+    w = rng.standard_normal((m1 * m2, n1 * n2)).astype(np.float32)
+    mask = (rng.random((m1, n1)) > 0.5).astype(np.float32)
+    x = rng.standard_normal((n_batch, n1 * n2)).astype(np.float32)
+    assert_close(block_sparse_matmul(x, w, mask, m1=m1, tile_n=8),
+                 ref.block_sparse_matmul_ref(x, w, mask), tol=5e-4)
+
+
+# ----------------------------------------------------------- perf estimators
+
+def test_vmem_estimate_positive_and_monotone():
+    small = kpd_forward_vmem_bytes(128, 2, 4, 8, 2, 16)
+    big = kpd_forward_vmem_bytes(128, 8, 4, 8, 2, 16)
+    assert 0 < small < big
+
+
+def test_mxu_flops_match_manual():
+    # 2·N·r·(n1·n2·m2 + m2·n1·m1)
+    got = kpd_forward_mxu_flops(4, 2, 3, 5, 7, 11)
+    want = 2 * 4 * 2 * (5 * 11 * 7 + 7 * 5 * 3)
+    assert got == want

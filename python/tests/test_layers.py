@@ -1,0 +1,99 @@
+"""L2 layer correctness: custom VJP vs jax autodiff, Proposition 1, inits."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layers
+from compile.kernels import ref
+from compile.shapes import KPDShape, from_block, optimal_block_r1
+
+RNG = np.random.default_rng(1)
+
+
+def rand(*shape):
+    return jnp.asarray(RNG.standard_normal(shape).astype(np.float32))
+
+
+def test_custom_vjp_matches_autodiff_of_ref():
+    """The hand-written backward (paper Eqs. 19-24) must equal jax's
+    autodiff of the einsum reference for every input."""
+    x, s = rand(16, 24), rand(3, 4)
+    a, b = rand(2, 3, 4), rand(2, 2, 6)
+    g = rand(16, 6)
+
+    def loss_kernel(x, s, a, b):
+        return (layers.kpd_apply(x, s, a, b) * g).sum()
+
+    def loss_ref(x, s, a, b):
+        return (ref.kpd_forward_ref(x, s, a, b) * g).sum()
+
+    got = jax.grad(loss_kernel, argnums=(0, 1, 2, 3))(x, s, a, b)
+    want = jax.grad(loss_ref, argnums=(0, 1, 2, 3))(x, s, a, b)
+    for gg, ww in zip(got, want):
+        np.testing.assert_allclose(np.asarray(gg), np.asarray(ww),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_proposition1_exact_reconstruction():
+    """Prop. 1: every block-wise sparse matrix is representable by Eq. 3
+    with r = #nonzero blocks — build the construction and verify."""
+    m1, n1, m2, n2 = 3, 4, 2, 5
+    rng = np.random.default_rng(7)
+    # random block-sparse W with 5 non-zero blocks
+    w = np.zeros((m1 * m2, n1 * n2), np.float32)
+    nz = [(0, 0), (1, 2), (2, 3), (0, 3), (2, 0)]
+    for (i1, j1) in nz:
+        w[i1 * m2:(i1 + 1) * m2, j1 * n2:(j1 + 1) * n2] = \
+            rng.standard_normal((m2, n2)).astype(np.float32)
+    # paper's construction: S binary, A_i one-hot, B_i = block
+    r = len(nz)
+    s = np.zeros((m1, n1), np.float32)
+    a = np.zeros((r, m1, n1), np.float32)
+    b = np.zeros((r, m2, n2), np.float32)
+    for k, (i1, j1) in enumerate(nz):
+        s[i1, j1] = 1.0
+        a[k, i1, j1] = 1.0
+        b[k] = w[i1 * m2:(i1 + 1) * m2, j1 * n2:(j1 + 1) * n2]
+    w_hat = ref.kpd_reconstruct(jnp.asarray(s), jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(w_hat), w, rtol=1e-6, atol=1e-6)
+
+
+def test_kpd_init_scale():
+    """Effective W_r std should be within ~3x of glorot target."""
+    shape = from_block(64, 128, (4, 4), 4)
+    s, a, b = layers.kpd_init(jax.random.PRNGKey(0), shape)
+    w = np.asarray(ref.kpd_reconstruct(s, a, b))
+    target = np.sqrt(2.0 / (64 + 128))
+    assert target / 4 < w.std() < target * 4, (w.std(), target)
+
+
+def test_masked_linear_freezes_masked_blocks():
+    p = layers.masked_linear_init(jax.random.PRNGKey(0), "l", 4, 8, 2, 2, 0.5)
+    mask = np.asarray(p["l.mask"])
+    assert mask.shape == (2, 4)
+    assert mask.sum() == 4  # density 0.5 of 8 blocks
+    x = rand(3, 8)
+    y = layers.masked_linear_apply(p, "l", x, 2, 2)
+    # zeroed blocks contribute nothing: zero those W blocks manually -> same
+    w = np.asarray(p["l.W"]).reshape(2, 2, 4, 2) * mask[:, None, :, None]
+    np.testing.assert_allclose(
+        np.asarray(y) - np.asarray(p["l.bias"]),
+        np.asarray(x) @ w.reshape(4, 8).T, rtol=1e-5, atol=1e-5)
+
+
+def test_shapes_module():
+    s = from_block(10, 784, (2, 16), 2)
+    assert (s.m, s.n) == (10, 784)
+    assert s.train_params() == 5 * 49 + 2 * (5 * 49 + 32)
+    with pytest.raises(ValueError):
+        from_block(10, 784, (3, 16), 1)
+    # Example 1 optimum
+    opt = optimal_block_r1(8, 256)
+    assert opt.m1 * opt.n1 == 32
+
+
+def test_rank_clamp():
+    s = from_block(10, 84, (2, 2), 5)
+    assert s.r == 4  # min(5*42, 2*2)

@@ -1,0 +1,188 @@
+"""L2 method semantics: every train step runs, optimizes, and respects its
+method's invariants (mask freezing, regularizer monotonicity, RigL nnz
+preservation, pruning targets, pattern penalty)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import methods as M
+from compile import optim
+from compile.models import MODELS, linear_model
+from compile.kernels import ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def fake_batch(model, batch, seed=0):
+    rng = np.random.default_rng(seed)
+    if model.input_dtype == "i32":
+        x = rng.integers(0, model.num_classes, (batch,) + model.input_shape,
+                         dtype=np.int32)
+        y = rng.integers(0, model.num_classes, (batch,) + model.input_shape,
+                         dtype=np.int32)
+    else:
+        x = rng.standard_normal((batch,) + model.input_shape).astype(np.float32)
+        y = rng.integers(0, model.num_classes, (batch,), dtype=np.int32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+def run_steps(bundle, model, hyper, steps=12, batch=16):
+    params, opt = bundle.init(KEY)
+    x, y = fake_batch(model, batch)
+    first = None
+    for _ in range(steps):
+        params, opt, metrics = bundle.train_step(params, opt, x, y, *hyper)
+        if first is None:
+            first = float(metrics[0])
+    return params, opt, float(metrics[0]), first
+
+
+def test_kpd_loss_decreases():
+    model = linear_model()
+    b = M.kpd_method(model, M.uniform_blocks(model, (2, 4)), rank=2)
+    _, _, last, first = run_steps(b, model, (0.001, 0.1), steps=25)
+    assert last < first, (first, last)
+
+
+def test_dense_loss_decreases():
+    model = linear_model()
+    b = M.dense_method(model)
+    _, _, last, first = run_steps(b, model, (0.1,), steps=25)
+    assert last < first
+
+
+def test_group_lasso_reg_positive_and_shrinks_blocks():
+    model = linear_model()
+    b = M.group_lasso_method(model, M.uniform_blocks(model, (2, 4)))
+    params, opt = b.init(KEY)
+    x, y = fake_batch(model, 16)
+    norm0 = float(jnp.abs(params["fc.W"]).sum())
+    for _ in range(30):
+        params, opt, m = b.train_step(params, opt, x, y,
+                                      jnp.float32(0.05), jnp.float32(0.0),
+                                      jnp.float32(0.1))
+    assert float(m[3]) > 0.0  # reg metric
+    assert float(jnp.abs(params["fc.W"]).sum()) < norm0
+
+
+def test_rigl_mask_frozen_during_steps():
+    model = linear_model()
+    b = M.rigl_method(model, M.uniform_blocks(model, (2, 4)), density=0.5)
+    params, opt = b.init(KEY)
+    mask0 = np.asarray(params["fc.mask"]).copy()
+    x, y = fake_batch(model, 16)
+    for _ in range(5):
+        params, opt, m = b.train_step(params, opt, x, y, jnp.float32(0.1))
+    np.testing.assert_array_equal(np.asarray(params["fc.mask"]), mask0)
+    # masked blocks receive no weight update
+    w = np.asarray(params["fc.W"]).reshape(5, 2, 196, 4)
+    dead = w * (1 - mask0[:, None, :, None])
+    p0, _ = b.init(KEY)
+    w0 = np.asarray(p0["fc.W"]).reshape(5, 2, 196, 4)
+    dead0 = w0 * (1 - mask0[:, None, :, None])
+    np.testing.assert_allclose(dead, dead0, rtol=1e-6, atol=1e-6)
+
+
+def test_rigl_update_preserves_nnz_and_zeroes_grown():
+    model = linear_model()
+    b = M.rigl_method(model, M.uniform_blocks(model, (2, 4)), density=0.5)
+    params, _ = b.init(KEY)
+    nb = 5 * 196
+    gnorm = jnp.asarray(np.random.default_rng(3).random(nb).astype(np.float32))
+    new = b.extras["rigl_update"](params, gnorm, jnp.float32(0.3))
+    m0 = np.asarray(params["fc.mask"])
+    m1 = np.asarray(new["fc.mask"])
+    assert abs(m1.sum() - m0.sum()) <= 1  # nnz preserved (ties ±1)
+    grown = (m1 > 0) & (m0 == 0)
+    w1 = np.asarray(new["fc.W"]).reshape(5, 2, 196, 4)
+    assert np.abs(w1[grown.nonzero()[0], :, grown.nonzero()[1], :]).max() == 0.0
+
+
+def test_prune_hits_global_target():
+    model = linear_model()
+    b = M.iter_prune_method(model)
+    params, _ = b.init(KEY)
+    new = b.extras["prune"](params, jnp.float32(0.7))
+    mask = np.asarray(new["fc.emask"])
+    sparsity = 1.0 - mask.mean()
+    assert abs(sparsity - 0.7) < 0.02, sparsity
+    # pruned entries are exactly the smallest-|w| ones
+    w = np.abs(np.asarray(params["fc.W"])).ravel()
+    thr = np.sort(w)[int(0.7 * w.size) - 1]
+    assert np.abs(np.asarray(new["fc.W"])).ravel()[w <= thr].max() == 0.0
+
+
+def test_pattern_penalty_drives_losers_to_zero():
+    model = linear_model()
+    pats = [M.uniform_blocks(model, (2, 2)), M.uniform_blocks(model, (2, 8))]
+    b = M.pattern_method(model, pats, rank=2)
+    params, opt = b.init(KEY)
+    x, y = fake_batch(model, 32)
+    # huge lambda1: everything should shrink towards zero fast
+    for _ in range(40):
+        params, opt, m = b.train_step(params, opt, x, y,
+                                      jnp.float32(0.5), jnp.float32(0.01),
+                                      jnp.float32(0.1))
+    k = b.info["num_patterns"]
+    snorms = [float(m[3 + k + p]) for p in range(k)]
+    p0, _ = b.init(KEY)
+    s0 = [float(jnp.abs(p0[f"p{i}.fc.S"]).sum()) for i in range(k)]
+    assert all(sn < s * 0.8 for sn, s in zip(snorms, s0)), (snorms, s0)
+
+
+def test_pattern_metrics_layout():
+    model = linear_model()
+    pats = [M.uniform_blocks(model, (2, 2)), M.uniform_blocks(model, (2, 4)),
+            M.uniform_blocks(model, (2, 8))]
+    b = M.pattern_method(model, pats, rank=1)
+    assert b.metric_names[:3] == ("loss", "ce", "reg")
+    assert b.metric_names[3:6] == ("acc_count_p0", "acc_count_p1", "acc_count_p2")
+    assert b.metric_names[6:] == ("s_l1_p0", "s_l1_p1", "s_l1_p2")
+
+
+def test_eval_step_counts_correct():
+    model = linear_model()
+    b = M.dense_method(model)
+    params, _ = b.init(KEY)
+    x, y = fake_batch(model, 64)
+    m = b.eval_step(params, x, y)
+    assert m.shape == (2,)
+    assert 0 <= float(m[1]) <= 64
+
+
+@pytest.mark.parametrize("name", ["lenet5", "vit_micro", "lm_micro"])
+def test_kpd_on_all_models_runs(name):
+    model = MODELS[name]()
+    b = M.kpd_method(model, M.uniform_blocks(model, (4, 4) if name != "lenet5"
+                                             else (2, 4)), rank=2,
+                     optimizer="adam" if name == "lm_micro" else "sgd")
+    params, opt = b.init(KEY)
+    x, y = fake_batch(model, 4)
+    params, opt, m = b.train_step(params, opt, x, y, jnp.float32(1e-3),
+                                  jnp.float32(0.01))
+    assert np.isfinite(float(m[0]))
+    ev = b.eval_step(params, x, y)
+    assert np.isfinite(float(ev[0]))
+
+
+def test_optimizer_frozen_leaves():
+    assert optim.is_frozen("fc.mask")
+    assert not optim.is_frozen("fc.W")
+    params = {"a.W": jnp.ones((2, 2)), "a.mask": jnp.ones((1, 1))}
+    state = optim.sgd_init(params)
+    assert "mom.a.W" in state and "mom.a.mask" not in state
+    grads = {"a.W": jnp.ones((2, 2)), "a.mask": jnp.zeros((1, 1))}
+    new_p, _ = optim.sgd_update(params, grads, state, jnp.float32(0.1))
+    np.testing.assert_array_equal(np.asarray(new_p["a.mask"]), np.ones((1, 1)))
+
+
+def test_adam_bias_correction_first_step():
+    params = {"w": jnp.ones((3,))}
+    state = optim.adam_init(params)
+    grads = {"w": jnp.full((3,), 0.5)}
+    new_p, new_s = optim.adam_update(params, grads, state, jnp.float32(0.1))
+    # first Adam step ≈ -lr * sign(g)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), 1.0 - 0.1, rtol=1e-3)
+    assert float(new_s["t"]) == 1.0

@@ -1,0 +1,105 @@
+"""L2 model zoo: shapes, slot divisibility, determinism, causality."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layers
+from compile import methods as M
+from compile.models import (LMConfig, MODELS, ViTConfig, lenet5, linear_model,
+                            transformer_lm, vit)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def dense_params_and_apply(model):
+    b = M.dense_method(model)
+    params, _ = b.init(KEY)
+    return params, lambda p, x: model.apply(p, x, layers.dense_linear_apply)
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_all_models_forward_shapes(name):
+    model = MODELS[name]()
+    params, apply = dense_params_and_apply(model)
+    n = 2
+    if model.input_dtype == "i32":
+        x = jnp.zeros((n,) + model.input_shape, jnp.int32)
+        logits = apply(params, x)
+        assert logits.shape == (n, model.input_shape[0], model.num_classes)
+    else:
+        x = jnp.zeros((n,) + model.input_shape, jnp.float32)
+        logits = apply(params, x)
+        assert logits.shape == (n, model.num_classes)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("name,block", [
+    ("linear", (2, 2)), ("linear", (2, 16)),
+    ("lenet5", (2, 2)),
+    ("vit_micro", (2, 2)), ("vit_micro", (4, 4)), ("vit_micro", (8, 8)),
+    ("vit_small", (4, 4)), ("swin_proxy", (4, 4)), ("swin_proxy", (8, 8)),
+    ("lm_e2e", (4, 4)),
+])
+def test_slots_divisible_by_blocks(name, block):
+    """Every experiment block size must tile every slot of its model."""
+    model = MODELS[name]()
+    for s in model.slots:
+        assert s.m % block[0] == 0, (name, s.name, s.m, block)
+        assert s.n % block[1] == 0, (name, s.name, s.n, block)
+
+
+def test_lenet_paper_block_combos_tile():
+    from compile.specs import LENET_COMBOS
+    model = lenet5()
+    dims = {s.name: (s.m, s.n) for s in model.slots}
+    for _, combo in LENET_COMBOS:
+        for slot, (m2, n2) in combo.items():
+            m, n = dims[slot]
+            assert m % m2 == 0 and n % n2 == 0, (slot, (m2, n2), (m, n))
+
+
+def test_lenet_fc_dims_match_paper():
+    model = lenet5()
+    got = {(s.name): (s.m, s.n) for s in model.slots}
+    assert got == {"fc1": (120, 400), "fc2": (84, 120), "fc3": (10, 84)}
+
+
+def test_vit_seq_and_patch_dims():
+    cfg = ViTConfig(dim=64, depth=2, heads=4)
+    assert cfg.seq == 65
+    assert cfg.patch_dim == 48
+    model = vit(cfg)
+    assert len(model.slots) == 8  # 4 per block × 2
+
+
+def test_lm_causality():
+    """Changing a future token must not affect earlier logits."""
+    cfg = LMConfig(vocab=32, dim=32, depth=1, heads=2, seq=8)
+    model = transformer_lm(cfg)
+    params, apply = dense_params_and_apply(model)
+    rng = np.random.default_rng(0)
+    t1 = rng.integers(0, 32, (1, 8), dtype=np.int32)
+    t2 = t1.copy()
+    t2[0, 6] = (t2[0, 6] + 1) % 32
+    l1 = np.asarray(apply(params, jnp.asarray(t1)))
+    l2 = np.asarray(apply(params, jnp.asarray(t2)))
+    np.testing.assert_allclose(l1[0, :6], l2[0, :6], rtol=1e-4, atol=1e-5)
+    assert np.abs(l1[0, 6:] - l2[0, 6:]).max() > 1e-6
+
+
+def test_model_apply_deterministic():
+    model = MODELS["vit_micro"]()
+    params, apply = dense_params_and_apply(model)
+    x = jnp.asarray(np.random.default_rng(1)
+                    .standard_normal((2, 3072)).astype(np.float32))
+    a = np.asarray(apply(params, x))
+    b = np.asarray(apply(params, x))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_linear_model_is_one_slot():
+    model = linear_model()
+    assert len(model.slots) == 1
+    assert (model.slots[0].m, model.slots[0].n) == (10, 784)

@@ -1,0 +1,86 @@
+//! Regenerates **Figure 3** (a/b/c): pattern selection via Eq. 7.
+//!
+//! For each model we jointly train K block-size candidates with the
+//! staircase λ ramp (the paper's +0.002 every 5 epochs) and print the
+//! per-pattern Σ‖S^{(k)}‖₁ series — the quantity Figure 3 plots. The
+//! figure's claim: exactly one pattern survives the ramp, and it matches
+//! the individually-best-accuracy pattern.
+//!
+//! Run one panel: `cargo bench --bench fig3_pattern_selection -- linear`
+
+use blocksparse::bench::driver::BenchEnv;
+use blocksparse::config::TrainConfig;
+use blocksparse::coordinator::{self, probe, Trainer};
+use blocksparse::runtime::Runtime;
+
+fn run_panel(rt: &Runtime, spec_key: &str, steps: usize) -> anyhow::Result<()> {
+    let env = BenchEnv::from_env(steps, 1, 6144, 1024);
+    let spec = rt.spec(spec_key)?.clone();
+    let k = spec.num_patterns().unwrap();
+    let mut cfg: TrainConfig = env.config(rt, spec_key)?;
+    cfg.lambda = 0.01;       // paper: λ1 = λ2 = 0.01
+    cfg.lambda2 = 0.01;
+    cfg.lambda_ramp = 0.002; // +0.002 per ramp period
+    cfg.eval_every = 0;
+
+    let (train, test) = coordinator::dataset_for(&spec, cfg.data_seed,
+                                                 cfg.train_examples, cfg.test_examples)?;
+    let trainer = Trainer::new(rt, &cfg);
+    let outcome = trainer.run(0, &train, &test)?;
+
+    println!("\n== Figure 3 panel: {spec_key} ({k} patterns, {} steps) ==", cfg.steps);
+    let series: Vec<Vec<(u64, f64)>> =
+        (0..k).map(|p| outcome.history.series(&format!("s_l1_p{p}"))).collect();
+    println!("{:<8} {}", "step",
+             (0..k).map(|p| format!("{:>10}", format!("S^({p})"))).collect::<String>());
+    let stride = (cfg.steps / 25).max(1);
+    for i in (0..series[0].len()).step_by(stride) {
+        print!("{:<8}", series[0][i].0);
+        for s in &series {
+            print!("{:>10.3}", s[i].1);
+        }
+        println!();
+    }
+    let finals = probe::pattern_s_norms(&spec, &outcome.state)?;
+    // patterns have different S sizes, so survival is measured by norm
+    // RETENTION (final / initial) — the paper's Figure-3 curves read the
+    // same way once normalized per pattern
+    let retention: Vec<f64> = series
+        .iter()
+        .zip(&finals)
+        .map(|(s, f)| f / s.first().map(|(_, v)| *v).unwrap_or(1.0).max(1e-9))
+        .collect();
+    let survivor = retention
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    println!("final ‖S^(k)‖₁: {:?}",
+             finals.iter().map(|v| (v * 100.0).round() / 100.0).collect::<Vec<_>>());
+    println!("retention (final/initial): {:?}",
+             retention.iter().map(|v| (v * 1000.0).round() / 1000.0).collect::<Vec<_>>());
+    println!("per-pattern accuracy: {:?}",
+             outcome.pattern_accs.iter().map(|v| (v * 100.0).round() / 100.0)
+                 .collect::<Vec<_>>());
+    println!("surviving pattern (max retention): k={survivor} (paper: the \
+              surviving pattern matches the best individually-trained one)");
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    blocksparse::util::log::set_level(blocksparse::util::log::Level::Warn);
+    let rt = Runtime::new(blocksparse::artifact_dir())?;
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    let which = args.first().map(|s| s.as_str()).unwrap_or("all");
+    if which == "linear" || which == "all" {
+        run_panel(&rt, "f3a_pattern", 1200)?; // Fig 3a
+    }
+    if which == "lenet" || which == "all" {
+        run_panel(&rt, "f3b_pattern", 400)?; // Fig 3b
+    }
+    if which == "vit" || which == "all" {
+        run_panel(&rt, "f3c_pattern", 250)?; // Fig 3c
+    }
+    Ok(())
+}

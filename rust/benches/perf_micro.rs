@@ -1,0 +1,120 @@
+//! Performance microbenches for the §Perf pass: per-layer hot paths.
+//!
+//!  - runtime.step.*      PJRT execute latency per model family (L3 view)
+//!  - runtime.overhead    no-op-sized executable round-trip (framework tax)
+//!  - data.batch.*        batch assembly throughput (host pipeline)
+//!  - tensor.*            host-side measurement ops (sparsity probes)
+//!  - infer.block_sparse  materialized block-sparse inference vs dense
+//!    (the §4 inference claim, via the flops model + host matmul)
+
+use blocksparse::bench::{quick_bench, TableWriter};
+use blocksparse::coordinator::dataset_for;
+use blocksparse::data::{assemble_batch, Batcher};
+use blocksparse::runtime::Runtime;
+use blocksparse::tensor::Tensor;
+use blocksparse::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    blocksparse::util::log::set_level(blocksparse::util::log::Level::Warn);
+    let rt = Runtime::new(blocksparse::artifact_dir())?;
+    let mut stats = Vec::new();
+
+    // ---- L3 runtime: one train step per model family --------------------
+    for spec_key in ["t1_kpd_b2x2", "t1_gl_b2x2", "t2_kpd_16x8_8x4_4x2",
+                     "t3_vit_t_kpd", "it_lm_kpd"] {
+        let spec = rt.spec(spec_key)?.clone();
+        let (train, _) = dataset_for(&spec, 7, spec.batch * 2, spec.batch)?;
+        let idx: Vec<usize> = (0..spec.batch).collect();
+        let batch = assemble_batch(&train, &idx)?;
+        let mut state = rt.init_state(spec_key, 0)?;
+        let hyper: Vec<f32> = spec.hyper.iter().map(|h| match h.as_str() {
+            "lr" => 0.05,
+            _ => 0.01,
+        }).collect();
+        stats.push(quick_bench(&format!("runtime.step.{spec_key}"), || {
+            rt.train_step(&mut state, &batch.x, &batch.y, &hyper).expect("step");
+        }));
+    }
+
+    // ---- framework overhead: smallest executable we have ----------------
+    {
+        let spec = rt.spec("qs_kpd")?.clone();
+        let (train, _) = dataset_for(&spec, 7, spec.batch * 2, spec.batch)?;
+        let idx: Vec<usize> = (0..spec.batch).collect();
+        let batch = assemble_batch(&train, &idx)?;
+        let state = rt.init_state("qs_kpd", 0)?;
+        stats.push(quick_bench("runtime.overhead.eval_qs", || {
+            rt.eval_step(&state, &batch.x, &batch.y).expect("eval");
+        }));
+    }
+
+    // ---- data pipeline ---------------------------------------------------
+    {
+        let spec = rt.spec("t1_kpd_b2x2")?.clone();
+        let (train, _) = dataset_for(&spec, 7, 8192, 128)?;
+        let mut b = Batcher::new(&train, 128, 1, true);
+        stats.push(quick_bench("data.batch.mnist128", || {
+            let _ = b.next_batch().expect("batch");
+        }));
+    }
+
+    // ---- host tensor probes ----------------------------------------------
+    {
+        let mut rng = Rng::new(3);
+        let w = Tensor::from_fn(&[120, 400], |_| rng.normal());
+        stats.push(quick_bench("tensor.block_fro_120x400", || {
+            std::hint::black_box(w.block_fro_norms(8, 16).unwrap());
+        }));
+        let s = Tensor::from_fn(&[15, 25], |_| rng.normal());
+        let a = Tensor::from_fn(&[5, 15, 25], |_| rng.normal());
+        let bt = Tensor::from_fn(&[5, 8, 16], |_| rng.normal());
+        stats.push(quick_bench("tensor.kpd_reconstruct_120x400_r5", || {
+            std::hint::black_box(Tensor::kpd_reconstruct(&s, &a, &bt).unwrap());
+        }));
+    }
+
+    // ---- inference: block-sparse vs dense host matmul ---------------------
+    {
+        let mut rng = Rng::new(4);
+        let m = 120;
+        let n = 400;
+        let dense = Tensor::from_fn(&[m, n], |_| rng.normal());
+        // 50% block-sparse copy (8x16 blocks)
+        let mut sp = dense.clone();
+        for bi in 0..(m / 8) {
+            for bj in 0..(n / 16) {
+                if (bi + bj) % 2 == 0 {
+                    for i in 0..8 {
+                        for j in 0..16 {
+                            sp.set2(bi * 8 + i, bj * 16 + j, 0.0);
+                        }
+                    }
+                }
+            }
+        }
+        let x = Tensor::from_fn(&[n, 64], |_| rng.normal());
+        let d = quick_bench("infer.dense_120x400x64", || {
+            std::hint::black_box(dense.matmul(&x).unwrap());
+        });
+        let s = quick_bench("infer.block_sparse50_120x400x64", || {
+            std::hint::black_box(sp.matmul(&x).unwrap());
+        });
+        println!("block-sparse/dense inference speedup: {:.2}x (flops model predicts ~2x at 50%)",
+                 d.mean_ns / s.mean_ns);
+        stats.push(d);
+        stats.push(s);
+    }
+
+    let mut t = TableWriter::new("perf microbenches", &["bench", "mean ms", "p50 ms", "p95 ms", "/s"]);
+    for s in &stats {
+        t.row(vec![
+            s.name.clone(),
+            format!("{:.3}", s.mean_ns / 1e6),
+            format!("{:.3}", s.p50_ns / 1e6),
+            format!("{:.3}", s.p95_ns / 1e6),
+            format!("{:.1}", s.throughput_per_sec()),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

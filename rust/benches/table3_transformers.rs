@@ -1,0 +1,70 @@
+//! Regenerates **Table 3**: transformers on (synthetic) CIFAR-100 with
+//! 4×4 blocks.
+//!
+//! Model substitution (DESIGN.md §5): paper-scale ViT-t/ViT-b/Swin-t do
+//! not train on this CPU testbed; we use width/depth-scaled encoders
+//! (vit_micro / vit_small / swin_proxy) with the same architecture family
+//! and verify the paper's *shape*: Ours cuts training params/FLOPs by a
+//! large factor (97% for ViT-t in the paper) at accuracy ≥ the group-LASSO
+//! baselines, while blockwise RigL loses accuracy on transformers.
+//!
+//! Per-model step budgets keep the full bench within a CPU budget; raise
+//! BS_STEPS for the committed EXPERIMENTS.md numbers.
+
+use blocksparse::bench::driver::{self, BenchEnv, ROW_HEADERS};
+use blocksparse::bench::TableWriter;
+use blocksparse::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    blocksparse::util::log::set_level(blocksparse::util::log::Level::Warn);
+    let rt = Runtime::new(blocksparse::artifact_dir())?;
+    let mut table = TableWriter::new(
+        "Table 3 — transformers on synthetic-CIFAR-100, 4×4 blocks (paper: Table 3)",
+        &ROW_HEADERS,
+    );
+
+    // (tag, label, default steps, seeds): vit_b-proxy steps are costly
+    let models: &[(&str, &str, usize, usize)] = &[
+        ("vit_t", "ViT-t (scaled)", 200, 1),
+        ("vit_b", "ViT-b (scaled)", 60, 1),
+        ("swin_t", "Swin-t (scaled)", 100, 1),
+    ];
+    let paper: &[(&str, &str, &str)] = &[
+        ("vit_t", "dense", "64.32 ± 1.92"),
+        ("vit_t", "group_lasso", "60.41 ± 4.24"),
+        ("vit_t", "elastic_gl", "61.92 ± 3.01"),
+        ("vit_t", "rigl_block", "49.56 ± 0.48"),
+        ("vit_t", "kpd", "62.99 ± 0.73"),
+        ("vit_b", "dense", "71.34 ± 0.42"),
+        ("vit_b", "group_lasso", "68.41 ± 1.24"),
+        ("vit_b", "elastic_gl", "66.95 ± 2.17"),
+        ("vit_b", "kpd", "69.82 ± 0.22"),
+        ("swin_t", "dense", "81.44 ± 0.05"),
+        ("swin_t", "group_lasso", "75.87 ± 2.17"),
+        ("swin_t", "elastic_gl", "76.34 ± 0.82"),
+        ("swin_t", "rigl_block", "60.30 ± 0.22"),
+        ("swin_t", "kpd", "77.54 ± 0.42"),
+    ];
+
+    for (tag, label, steps, seeds) in models {
+        let env = BenchEnv::from_env(*steps, *seeds, 4096, 1024);
+        for method in ["dense", "gl", "egl", "rigl", "kpd"] {
+            let spec = format!("t3_{tag}_{method}");
+            if rt.spec(&spec).is_err() {
+                continue; // vit_b has no rigl row in the paper either
+            }
+            let res = driver::run_row(&rt, &env, &spec)?;
+            driver::record_row("table3", label, &res)?;
+            let pref = paper
+                .iter()
+                .find(|(t, m, _)| t == tag && *m == res.method)
+                .map(|(_, _, v)| *v);
+            table.row(driver::cells(label, &res.method, &res, pref));
+        }
+    }
+    table.print();
+    println!("shape checks:");
+    println!("  - Ours train-params ≪ dense for every model (paper: 97% cut, ViT-t)");
+    println!("  - RigL accuracy collapses on transformers (paper: 49.6 vs 64.3)");
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Regenerates **Table 4**: the rank ablation. Accuracy must rise
+//! monotonically (modulo noise) with the decomposition rank while the
+//! sparsity rate stays roughly flat; params/FLOPs grow linearly in r.
+
+use blocksparse::bench::driver::{self, BenchEnv, ROW_HEADERS};
+use blocksparse::bench::TableWriter;
+use blocksparse::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    blocksparse::util::log::set_level(blocksparse::util::log::Level::Warn);
+    let rt = Runtime::new(blocksparse::artifact_dir())?;
+    let mut table = TableWriter::new(
+        "Table 4 — impact of decomposition rank (paper: Table 4)",
+        &ROW_HEADERS,
+    );
+    let paper_linear = ["48.40 ± 0.40", "66.79 ± 0.91", "84.58 ± 3.55", "88.19 ± 0.32"];
+    let paper_vit = ["36.86 ± 2.41", "59.71 ± 2.63", "62.99 ± 0.73"];
+    let paper_swin = ["58.46 ± 0.16", "68.22 ± 0.04", "77.54 ± 0.42"];
+
+    let env_lin = BenchEnv::from_env(600, 2, 8192, 2048);
+    let mut accs = Vec::new();
+    for (i, r) in [1usize, 2, 4, 6].iter().enumerate() {
+        let res = driver::run_row(&rt, &env_lin, &format!("t4_linear_r{r}"))?;
+        driver::record_row("table4", &format!("linear r={r}"), &res)?;
+        accs.push(res.acc_mean);
+        table.row(driver::cells(&format!("linear r={r}"), "kpd", &res,
+                                Some(paper_linear[i])));
+    }
+    let env_vit = BenchEnv::from_env(150, 1, 4096, 1024);
+    for (tag, paper, steps) in [("vit_t", &paper_vit, 150usize),
+                                ("swin_t", &paper_swin, 100)] {
+        let env = BenchEnv { steps, ..BenchEnv::from_env(steps, 1, 4096, 1024) };
+        let _ = &env_vit;
+        for (i, r) in [1usize, 2, 4].iter().enumerate() {
+            let res = driver::run_row(&rt, &env, &format!("t4_{tag}_r{r}"))?;
+            driver::record_row("table4", &format!("{tag} r={r}"), &res)?;
+            table.row(driver::cells(&format!("{tag} r={r}"), "kpd", &res,
+                                    Some(paper[i])));
+        }
+    }
+    table.print();
+    let monotone = accs.windows(2).filter(|w| w[1] >= w[0] - 1.0).count();
+    println!("shape checks:");
+    println!("  - linear accuracy rises with rank: {accs:?} ({monotone}/3 steps non-decreasing)");
+    println!("  - params grow ~linearly in r (col 5)");
+    Ok(())
+}

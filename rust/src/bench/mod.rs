@@ -1,0 +1,181 @@
+//! Micro-benchmark harness substrate (no criterion in the offline cache).
+//!
+//! `cargo bench` targets are `harness = false` binaries that use this
+//! module: warmup, fixed-duration or fixed-iteration sampling, and a
+//! summary with mean / p50 / p95 / throughput. Also hosts `TableWriter`,
+//! the paper-style row printer used by the table1..table4 benches.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchStats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    pub fn throughput_per_sec(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:40} {:>8} iters  mean {:>10.3} ms  p50 {:>10.3} ms  p95 {:>10.3} ms  ({:>8.1}/s)",
+            self.name,
+            self.iters,
+            self.mean_ns / 1e6,
+            self.p50_ns / 1e6,
+            self.p95_ns / 1e6,
+            self.throughput_per_sec()
+        )
+    }
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx]
+}
+
+/// Run `f` for `warmup` iterations, then sample until `min_iters` AND
+/// `min_time` are both satisfied.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, min_iters: usize,
+                         min_time: Duration, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(min_iters.max(16));
+    let start = Instant::now();
+    loop {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+        if samples.len() >= min_iters && start.elapsed() >= min_time {
+            break;
+        }
+        if samples.len() >= 1_000_000 {
+            break; // safety valve
+        }
+    }
+    let mut sorted = samples.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchStats {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_ns: samples.iter().sum::<f64>() / samples.len() as f64,
+        p50_ns: percentile(&sorted, 0.50),
+        p95_ns: percentile(&sorted, 0.95),
+        min_ns: sorted[0],
+        max_ns: *sorted.last().unwrap(),
+    }
+}
+
+/// Convenience wrapper with repo-standard settings.
+pub fn quick_bench<F: FnMut()>(name: &str, f: F) -> BenchStats {
+    bench(name, 2, 10, Duration::from_millis(300), f)
+}
+
+// --------------------------------------------------------------- tables
+
+/// Fixed-width table printer for paper-style rows.
+pub struct TableWriter {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub title: String,
+}
+
+impl TableWriter {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("\n== {} ==\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect::<Vec<_>>()
+                .join(" | ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 3 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Format "mean ± std" like the paper's table cells.
+pub fn pm(mean: f64, std: f64) -> String {
+    format!("{mean:.2} ± {std:.2}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let s = bench("spin", 1, 5, Duration::from_millis(1), || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.iters >= 5);
+        assert!(s.mean_ns > 0.0);
+        assert!(s.p50_ns <= s.p95_ns);
+        assert!(s.min_ns <= s.max_ns);
+    }
+
+    #[test]
+    fn table_render() {
+        let mut t = TableWriter::new("T", &["a", "bb"]);
+        t.row(vec!["x".into(), "y".into()]);
+        let r = t.render();
+        assert!(r.contains("== T =="));
+        assert!(r.contains("a"));
+        assert!(r.contains("x"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_arity_checked() {
+        let mut t = TableWriter::new("T", &["a"]);
+        t.row(vec!["x".into(), "y".into()]);
+    }
+}
+pub mod driver;

@@ -1,0 +1,139 @@
+//! Block-size optimization — the paper's Eq. 5 integer program.
+//!
+//!   min_{m1,n1,m2,n2}  2·m1·n1 + m2·n2   s.t.  m1·m2 = m, n1·n2 = n
+//!
+//! The continuous optimum is m1·n1 = sqrt(mn/2); because the feasible set
+//! is the (finite) divisor grid we solve it exactly with branch-and-bound
+//! over divisor pairs (with the sqrt bound used for pruning), and also
+//! expose the §5 pattern enumeration (the "14 block sizes for a 10×10
+//! matrix" counting).
+
+use crate::flops::KpdDims;
+
+/// All positive divisors, ascending.
+pub fn divisors(x: usize) -> Vec<usize> {
+    assert!(x > 0);
+    let mut small = Vec::new();
+    let mut large = Vec::new();
+    let mut d = 1;
+    while d * d <= x {
+        if x % d == 0 {
+            small.push(d);
+            if d != x / d {
+                large.push(x / d);
+            }
+        }
+        d += 1;
+    }
+    large.reverse();
+    small.extend(large);
+    small
+}
+
+/// Eq. 5 objective for r = 1.
+pub fn eq5_cost(m1: usize, n1: usize, m2: usize, n2: usize) -> u64 {
+    2 * (m1 * n1) as u64 + (m2 * n2) as u64
+}
+
+/// Exact minimizer of Eq. 5 via branch-and-bound over the divisor grid.
+///
+/// Branching: fix m1 (divisor of m); bound: for fixed m1 the inner problem
+/// over n1 has cost ≥ 2·sqrt(2·m1·(n·m/m1)) ... we use the simpler valid
+/// bound cost ≥ m2·n2 ≥ m/m1 (n2 ≥ 1) plus 2·m1 (n1 ≥ 1) to prune branches
+/// that cannot beat the incumbent.
+pub fn optimal_block_r1(m: usize, n: usize) -> KpdDims {
+    let mut best: Option<KpdDims> = None;
+    let mut best_cost = u64::MAX;
+    for &m1 in &divisors(m) {
+        let m2 = m / m1;
+        // lower bound over all n1 for this m1: 2·m1·1 + m2·1
+        let lb = 2 * m1 as u64 + m2 as u64;
+        if lb >= best_cost {
+            continue;
+        }
+        for &n1 in &divisors(n) {
+            let n2 = n / n1;
+            let c = eq5_cost(m1, n1, m2, n2);
+            if c < best_cost {
+                best_cost = c;
+                best = Some(KpdDims { m1, n1, m2, n2, r: 1 });
+            }
+        }
+    }
+    best.expect("non-empty divisor grid")
+}
+
+/// Brute-force reference (used by the property tests to validate pruning).
+pub fn optimal_block_r1_brute(m: usize, n: usize) -> u64 {
+    let mut best = u64::MAX;
+    for &m1 in &divisors(m) {
+        for &n1 in &divisors(n) {
+            best = best.min(eq5_cost(m1, n1, m / m1, n / n1));
+        }
+    }
+    best
+}
+
+/// §5 pattern enumeration: all (m2, n2) block sizes for an m×n matrix,
+/// excluding the trivial 1×1 and m×n entries (matches the paper's count of
+/// 14 for a 10×10 matrix).
+pub fn enumerate_blocks(m: usize, n: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    for &m2 in &divisors(m) {
+        for &n2 in &divisors(n) {
+            if (m2, n2) == (1, 1) || (m2, n2) == (m, n) {
+                continue;
+            }
+            out.push((m2, n2));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn divisor_basics() {
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(13), vec![1, 13]);
+    }
+
+    #[test]
+    fn example1_optimum() {
+        // Paper Example 1: m=8, n=256 → m1·n1 = sqrt(0.5·2048) = 32,
+        // cost = 2·32 + 64 = 128.
+        let d = optimal_block_r1(8, 256);
+        assert_eq!(d.m1 * d.n1, 32);
+        assert_eq!(eq5_cost(d.m1, d.n1, d.m2, d.n2), 128);
+    }
+
+    #[test]
+    fn bnb_matches_brute_force() {
+        for &(m, n) in &[(10, 784), (120, 400), (84, 120), (7, 13), (64, 64), (1, 100)] {
+            let d = optimal_block_r1(m, n);
+            assert_eq!(
+                eq5_cost(d.m1, d.n1, d.m2, d.n2),
+                optimal_block_r1_brute(m, n),
+                "mismatch at ({m},{n})"
+            );
+            assert_eq!(d.m1 * d.m2, m);
+            assert_eq!(d.n1 * d.n2, n);
+        }
+    }
+
+    #[test]
+    fn paper_pattern_count_10x10() {
+        // §5: "if the size of W is 10 by 10, then there are 14 possible
+        // block sizes" — divisor grid 4×4 = 16 minus the two trivial ones.
+        assert_eq!(enumerate_blocks(10, 10).len(), 14);
+    }
+
+    #[test]
+    fn optimum_beats_dense() {
+        let d = optimal_block_r1(10, 784);
+        assert!(eq5_cost(d.m1, d.n1, d.m2, d.n2) < 7840);
+    }
+}

@@ -1,0 +1,179 @@
+//! Checkpoint substrate: a small versioned binary container for named f32
+//! tensors (parameters and optimizer state), with a CRC32 integrity check.
+//!
+//! Format (little-endian):
+//!   magic "BSCK" | u32 version | u32 count
+//!   per entry: u32 name_len | name utf8 | u32 ndim | u64 dims[] | f32 data[]
+//!   trailing u32 crc32 over everything after the magic
+//!
+//! Deliberately simple: no mmap, no compression — checkpoints here are at
+//! most a few tens of MB and are written at eval boundaries only.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 4] = b"BSCK";
+const VERSION: u32 = 1;
+
+pub struct Checkpoint {
+    pub entries: Vec<(String, Tensor)>,
+}
+
+impl Checkpoint {
+    pub fn new(entries: Vec<(String, Tensor)>) -> Self {
+        Self { entries }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.entries.iter().find(|(n, _)| n == name).map(|(_, t)| t)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut body = Vec::new();
+        body.extend_from_slice(&VERSION.to_le_bytes());
+        body.extend_from_slice(&(self.entries.len() as u32).to_le_bytes());
+        for (name, t) in &self.entries {
+            let nb = name.as_bytes();
+            body.extend_from_slice(&(nb.len() as u32).to_le_bytes());
+            body.extend_from_slice(nb);
+            body.extend_from_slice(&(t.shape().len() as u32).to_le_bytes());
+            for &d in t.shape() {
+                body.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+            for &v in t.data() {
+                body.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let crc = crc32(&body);
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating checkpoint {path:?}"))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&body)?;
+        f.write_all(&crc.to_le_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening checkpoint {path:?}"))?;
+        let mut all = Vec::new();
+        f.read_to_end(&mut all)?;
+        if all.len() < 12 || &all[..4] != MAGIC {
+            bail!("not a BSCK checkpoint");
+        }
+        let body = &all[4..all.len() - 4];
+        let stored_crc = u32::from_le_bytes(all[all.len() - 4..].try_into().unwrap());
+        if crc32(body) != stored_crc {
+            bail!("checkpoint CRC mismatch (corrupt file)");
+        }
+        let mut off = 0usize;
+        let rd_u32 = |b: &[u8], o: &mut usize| -> Result<u32> {
+            if *o + 4 > b.len() {
+                bail!("truncated checkpoint");
+            }
+            let v = u32::from_le_bytes(b[*o..*o + 4].try_into().unwrap());
+            *o += 4;
+            Ok(v)
+        };
+        let version = rd_u32(body, &mut off)?;
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let count = rd_u32(body, &mut off)? as usize;
+        let mut entries = Vec::with_capacity(count);
+        for _ in 0..count {
+            let nlen = rd_u32(body, &mut off)? as usize;
+            if off + nlen > body.len() {
+                bail!("truncated checkpoint (name)");
+            }
+            let name = String::from_utf8(body[off..off + nlen].to_vec())
+                .context("checkpoint name utf8")?;
+            off += nlen;
+            let ndim = rd_u32(body, &mut off)? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                if off + 8 > body.len() {
+                    bail!("truncated checkpoint (dims)");
+                }
+                dims.push(u64::from_le_bytes(body[off..off + 8].try_into().unwrap()) as usize);
+                off += 8;
+            }
+            let n: usize = dims.iter().product();
+            if off + 4 * n > body.len() {
+                bail!("truncated checkpoint (data)");
+            }
+            let mut data = Vec::with_capacity(n);
+            for i in 0..n {
+                data.push(f32::from_le_bytes(
+                    body[off + 4 * i..off + 4 * i + 4].try_into().unwrap(),
+                ));
+            }
+            off += 4 * n;
+            entries.push((name, Tensor::new(&dims, data)?));
+        }
+        Ok(Self { entries })
+    }
+}
+
+/// CRC-32 (IEEE), table-less bitwise variant — integrity only, not perf.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("bs_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.bsck");
+        let ck = Checkpoint::new(vec![
+            ("w".into(), Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap()),
+            ("b".into(), Tensor::new(&[], vec![7.0]).unwrap()),
+        ]);
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.entries.len(), 2);
+        assert_eq!(back.get("w").unwrap().shape(), &[2, 3]);
+        assert_eq!(back.get("b").unwrap().data(), &[7.0]);
+        assert!(back.get("nope").is_none());
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let dir = std::env::temp_dir().join("bs_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.bsck");
+        Checkpoint::new(vec![("w".into(), Tensor::full(&[4], 1.0))])
+            .save(&path)
+            .unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn crc_known_vector() {
+        // CRC32("123456789") = 0xCBF43926
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+}

@@ -1,0 +1,166 @@
+//! CLI argument parser substrate (no clap in the offline cache).
+//!
+//! Grammar: `prog <subcommand> [--flag] [--key value] [positional...]`
+//! with `--key=value` also accepted. Unknown flags error with usage help.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+/// Declarative spec for parsing + help text.
+pub struct ArgSpec {
+    /// (name, takes_value, help)
+    pub options: Vec<(&'static str, bool, &'static str)>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String], spec: &ArgSpec, expect_subcommand: bool) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        if expect_subcommand {
+            if argv.is_empty() || argv[0].starts_with('-') {
+                bail!("expected a subcommand");
+            }
+            out.subcommand = Some(argv[0].clone());
+            i = 1;
+        }
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let (name, inline_val) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let known = spec
+                    .options
+                    .iter()
+                    .find(|(n, _, _)| *n == name)
+                    .ok_or_else(|| anyhow!("unknown option --{name}"))?;
+                if known.1 {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow!("--{name} needs a value"))?
+                        }
+                    };
+                    out.options.insert(name.to_string(), val);
+                } else {
+                    if inline_val.is_some() {
+                        bail!("--{name} takes no value");
+                    }
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} wants an integer, got '{v}'")),
+        }
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} wants a number, got '{v}'")),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Collect repeated `--set k=v` style overrides.
+    pub fn overrides(&self) -> Vec<String> {
+        // single-occurrence map suffices here; callers pass --set once per
+        // key or use comma separation
+        self.opt("set")
+            .map(|s| s.split(',').map(|x| x.trim().to_string()).collect())
+            .unwrap_or_default()
+    }
+}
+
+pub fn render_usage(prog: &str, sub: &str, spec: &ArgSpec) -> String {
+    let mut s = format!("usage: {prog} {sub} [options]\n\noptions:\n");
+    for (name, takes, help) in &spec.options {
+        let arg = if *takes { format!("--{name} <v>") } else { format!("--{name}") };
+        s.push_str(&format!("  {arg:24} {help}\n"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec {
+            options: vec![
+                ("spec", true, "spec key"),
+                ("steps", true, "steps"),
+                ("verbose", false, "verbose"),
+                ("set", true, "overrides"),
+            ],
+        }
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn basic() {
+        let a = Args::parse(
+            &sv(&["train", "--spec", "t1", "--steps=5", "--verbose", "extra"]),
+            &spec(),
+            true,
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.opt("spec"), Some("t1"));
+        assert_eq!(a.opt_usize("steps", 0).unwrap(), 5);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Args::parse(&sv(&["--spec", "x"]), &spec(), true).is_err());
+        assert!(Args::parse(&sv(&["t", "--nope"]), &spec(), true).is_err());
+        assert!(Args::parse(&sv(&["t", "--spec"]), &spec(), true).is_err());
+        assert!(Args::parse(&sv(&["t", "--verbose=1"]), &spec(), true).is_err());
+        let a = Args::parse(&sv(&["t", "--steps", "abc"]), &spec(), true).unwrap();
+        assert!(a.opt_usize("steps", 0).is_err());
+    }
+
+    #[test]
+    fn override_list() {
+        let a = Args::parse(&sv(&["t", "--set", "a=1,b=2"]), &spec(), true).unwrap();
+        assert_eq!(a.overrides(), vec!["a=1", "b=2"]);
+    }
+}

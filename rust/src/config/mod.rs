@@ -1,0 +1,332 @@
+//! Config substrate: a TOML-subset parser + typed experiment config.
+//!
+//! Supported grammar (everything the repo's configs use):
+//!   [section] / [section.sub] headers, key = value pairs, where value is
+//!   string "..." | integer | float | bool | array of scalars. Comments
+//!   with '#'. No multi-line strings, no inline tables, no dates.
+//!
+//! `TrainConfig` is the typed view the coordinator consumes; defaults are
+//! chosen to match the paper's §6 settings scaled to this CPU testbed.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Flat map with dotted keys: `[train] lr = 0.1` → "train.lr".
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    pub values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: unterminated section header", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                if section.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let val = parse_value(line[eq + 1..].trim())
+                .with_context(|| format!("line {}", lineno + 1))?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            values.insert(full, val);
+        }
+        Ok(Self { values })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(Value::as_i64).map(|v| v as usize).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    /// Override entries from `k=v` CLI pairs (dotted keys).
+    pub fn apply_overrides(&mut self, overrides: &[String]) -> Result<()> {
+        for ov in overrides {
+            let eq = ov
+                .find('=')
+                .ok_or_else(|| anyhow!("override '{ov}' is not key=value"))?;
+            let key = ov[..eq].trim().to_string();
+            let val = parse_value(ov[eq + 1..].trim())?;
+            self.values.insert(key, val);
+        }
+        Ok(())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if s.starts_with('"') {
+        if !s.ends_with('"') || s.len() < 2 {
+            bail!("unterminated string: {s}");
+        }
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            bail!("unterminated array: {s}");
+        }
+        let inner = &s[1..s.len() - 1];
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in split_top_level(inner) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value: {s}")
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+// ------------------------------------------------------------- typed view
+
+/// Training-run configuration consumed by the coordinator.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub spec: String,
+    pub seeds: Vec<u64>,
+    pub steps: usize,
+    pub eval_every: usize,
+    pub lr: f64,
+    pub lambda: f64,
+    pub lambda2: f64,
+    /// λ ramp per `ramp_every` steps (pattern selection / Fig. 3 schedule)
+    pub lambda_ramp: f64,
+    pub ramp_every: usize,
+    pub train_examples: usize,
+    pub test_examples: usize,
+    /// RigL mask-update cadence and drop fraction
+    pub rigl_every: usize,
+    pub rigl_alpha: f64,
+    pub rigl_alpha_decay: f64,
+    /// iterative-pruning rounds and final sparsity target
+    pub prune_rounds: usize,
+    pub prune_target: f64,
+    pub data_seed: u64,
+    pub out_dir: String,
+}
+
+impl TrainConfig {
+    pub fn from_config(cfg: &Config, spec: &str) -> Self {
+        let seeds = cfg
+            .get("run.seeds")
+            .and_then(|v| match v {
+                Value::Arr(a) => {
+                    Some(a.iter().filter_map(|x| x.as_i64().map(|i| i as u64)).collect())
+                }
+                _ => None,
+            })
+            .unwrap_or_else(|| vec![0, 1, 2]);
+        TrainConfig {
+            spec: spec.to_string(),
+            seeds,
+            steps: cfg.usize_or("train.steps", 800),
+            eval_every: cfg.usize_or("train.eval_every", 200),
+            lr: cfg.f64_or("train.lr", 0.05),
+            lambda: cfg.f64_or("train.lambda", 0.01),
+            lambda2: cfg.f64_or("train.lambda2", 1e-4),
+            lambda_ramp: cfg.f64_or("train.lambda_ramp", 0.002),
+            ramp_every: cfg.usize_or("train.ramp_every", 0),
+            train_examples: cfg.usize_or("data.train_examples", 8192),
+            test_examples: cfg.usize_or("data.test_examples", 2048),
+            rigl_every: cfg.usize_or("rigl.every", 100),
+            rigl_alpha: cfg.f64_or("rigl.alpha", 0.3),
+            rigl_alpha_decay: cfg.f64_or("rigl.alpha_decay", 0.75),
+            prune_rounds: cfg.usize_or("prune.rounds", 4),
+            prune_target: cfg.f64_or("prune.target", 0.5),
+            data_seed: cfg.usize_or("data.seed", 42) as u64,
+            out_dir: cfg.str_or("run.out_dir", "runs").to_string(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let cfg = Config::parse(
+            r#"
+            # top comment
+            name = "exp"            # trailing comment
+            [train]
+            lr = 0.05
+            steps = 800
+            shuffle = true
+            [run]
+            seeds = [0, 1, 2]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.str_or("name", ""), "exp");
+        assert_eq!(cfg.f64_or("train.lr", 0.0), 0.05);
+        assert_eq!(cfg.usize_or("train.steps", 0), 800);
+        assert!(cfg.bool_or("train.shuffle", false));
+        match cfg.get("run.seeds").unwrap() {
+            Value::Arr(a) => assert_eq!(a.len(), 3),
+            _ => panic!("not array"),
+        }
+    }
+
+    #[test]
+    fn overrides() {
+        let mut cfg = Config::parse("[train]\nlr = 0.1\n").unwrap();
+        cfg.apply_overrides(&["train.lr=0.2".into(), "train.steps=5".into()]).unwrap();
+        assert_eq!(cfg.f64_or("train.lr", 0.0), 0.2);
+        assert_eq!(cfg.usize_or("train.steps", 0), 5);
+        assert!(cfg.apply_overrides(&["nonsense".into()]).is_err());
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Config::parse("[unterminated\n").is_err());
+        assert!(Config::parse("key\n").is_err());
+        assert!(Config::parse("k = \"open\n").is_err());
+        assert!(Config::parse("k = [1, 2\n").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string() {
+        let cfg = Config::parse("k = \"a#b\"\n").unwrap();
+        assert_eq!(cfg.str_or("k", ""), "a#b");
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let cfg = Config::parse("").unwrap();
+        let tc = TrainConfig::from_config(&cfg, "t1_kpd_b2x2");
+        assert_eq!(tc.seeds, vec![0, 1, 2]);
+        assert_eq!(tc.steps, 800);
+        assert_eq!(tc.spec, "t1_kpd_b2x2");
+    }
+}

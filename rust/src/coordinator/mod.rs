@@ -1,0 +1,50 @@
+//! The L3 coordinator: owns the training loop and every control decision
+//! the paper's method needs at run time.
+//!
+//! * `schedule`   — λ ramping (the Eq. 7 / Figure 3 schedule) and LR plans
+//! * `trainer`    — one (spec, seed) training run: batches → train_step →
+//!   method controllers (RigL mask updates, pruning rounds) → eval
+//! * `probe`      — sparsity measurement per method (materialize / masks)
+//! * `experiment` — multi-seed sweeps, mean±std aggregation, and the
+//!   params/FLOPs columns every paper table reports
+
+pub mod experiment;
+pub mod probe;
+pub mod schedule;
+pub mod trainer;
+
+pub use experiment::{run_spec, SpecResult};
+pub use schedule::LambdaSchedule;
+pub use trainer::{RunOutcome, Trainer};
+
+use anyhow::Result;
+
+use crate::data::{corpus, synth, Dataset};
+use crate::manifest::SpecEntry;
+
+/// Build the dataset a spec trains on. Model families map to the paper's
+/// datasets (MNIST → `synth::mnist_like`, CIFAR-100 → `synth::cifar_like`,
+/// LM → Markov corpus); real IDX files under `data/` take precedence for
+/// the MNIST-shaped models.
+pub fn dataset_for(spec: &SpecEntry, data_seed: u64, train_n: usize,
+                   test_n: usize) -> Result<(Dataset, Dataset)> {
+    let total = train_n + test_n;
+    let full = if spec.model.starts_with("lm_") {
+        let seq = spec.input_shape[0];
+        corpus::lm_dataset(data_seed, spec.num_classes, seq, total)
+    } else if spec.model == "linear" || spec.model == "lenet5" {
+        if let Some(loaded) = crate::data::idx::load_mnist_dir(std::path::Path::new("data")) {
+            let d = loaded?;
+            crate::info!("using real MNIST from data/ ({} examples)", d.n);
+            d
+        } else {
+            synth::mnist_like(data_seed, total, spec.num_classes)
+        }
+    } else {
+        // vit_* / swin_proxy: CIFAR-100-shaped
+        synth::cifar_like(data_seed, total, spec.num_classes)
+    };
+    let total = full.n.min(total);
+    let test_n = test_n.min(total / 4);
+    Ok(full.split(test_n))
+}

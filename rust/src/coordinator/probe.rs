@@ -1,0 +1,89 @@
+//! Sparsity probing: the "Sparsity Rate" column, method by method.
+//!
+//! * kpd          — materialize W_r per slot, measure block-level sparsity
+//!                  at the spec's block size (zero blocks come from S ≈ 0)
+//! * group_lasso / elastic_gl — measure block sparsity of the dense W
+//! * rigl_block   — read the explicit block masks
+//! * iter_prune   — read the elementwise masks
+//! * dense        — trivially 0 (reported as "-" by the tables)
+//!
+//! All rates are aggregated over slots weighted by element count, like the
+//! paper's whole-model sparsity numbers.
+
+use anyhow::Result;
+
+use crate::manifest::SpecEntry;
+use crate::runtime::{Runtime, TrainState};
+use crate::sparsity::{self, DEFAULT_EPS_REL};
+
+/// Whole-model sparsity rate in percent for a trained state.
+pub fn measure_sparsity(rt: &Runtime, spec: &SpecEntry, state: &TrainState) -> Result<f64> {
+    let mut parts: Vec<(f64, usize)> = Vec::new();
+    match spec.method.as_str() {
+        "kpd" => {
+            for (slot_name, w) in rt.materialize(state)? {
+                let (m2, n2) = spec
+                    .block_of(&slot_name)
+                    .unwrap_or((1, 1));
+                let rate = sparsity::block_sparsity(&w, m2, n2, DEFAULT_EPS_REL)?;
+                parts.push((rate, w.len()));
+            }
+        }
+        "group_lasso" | "elastic_gl" => {
+            for slot in &spec.slots {
+                let w = state.param_tensor(&format!("{}.W", slot.name))?;
+                let (m2, n2) = spec.block_of(&slot.name).unwrap_or((1, 1));
+                let rate = sparsity::block_sparsity(&w, m2, n2, DEFAULT_EPS_REL)?;
+                parts.push((rate, w.len()));
+            }
+        }
+        "rigl_block" => {
+            for slot in &spec.slots {
+                let mask = state.param_tensor(&format!("{}.mask", slot.name))?;
+                let rate = sparsity::mask_sparsity(&mask);
+                parts.push((rate, slot.m * slot.n));
+            }
+        }
+        "iter_prune" => {
+            for slot in &spec.slots {
+                let mask = state.param_tensor(&format!("{}.emask", slot.name))?;
+                let rate = sparsity::mask_sparsity(&mask);
+                parts.push((rate, slot.m * slot.n));
+            }
+        }
+        "dense" => return Ok(0.0),
+        m if m.starts_with("pattern") => {
+            // per-pattern S sparsity of the surviving pattern is what
+            // matters; report the max-sparsity pattern's S rate
+            let k = spec.num_patterns().unwrap_or(1);
+            let mut best = 0.0f64;
+            for p in 0..k {
+                let mut pp: Vec<(f64, usize)> = Vec::new();
+                for slot in &spec.slots {
+                    let s = state.param_tensor(&format!("p{p}.{}.S", slot.name))?;
+                    pp.push((sparsity::element_sparsity(&s, DEFAULT_EPS_REL), s.len()));
+                }
+                best = best.max(sparsity::aggregate(&pp));
+            }
+            return Ok(100.0 * best);
+        }
+        other => anyhow::bail!("sparsity probe: unknown method '{other}'"),
+    }
+    Ok(100.0 * sparsity::aggregate(&parts))
+}
+
+/// Per-pattern Σ‖S‖₁ read directly from parameters (end-of-run snapshot of
+/// the Figure-3 series; the in-training series comes from train metrics).
+pub fn pattern_s_norms(spec: &SpecEntry, state: &TrainState) -> Result<Vec<f64>> {
+    let k = spec.num_patterns().unwrap_or(0);
+    let mut out = Vec::with_capacity(k);
+    for p in 0..k {
+        let mut total = 0.0f64;
+        for slot in &spec.slots {
+            let s = state.param_tensor(&format!("p{p}.{}.S", slot.name))?;
+            total += s.abs_sum() as f64;
+        }
+        out.push(total);
+    }
+    Ok(out)
+}

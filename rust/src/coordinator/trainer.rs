@@ -1,0 +1,245 @@
+//! One training run: spec + seed + config → trained state + metrics.
+//!
+//! The trainer is method-aware through the manifest only: hyper-parameter
+//! names select the λ/lr wiring, and the method string enables the RigL
+//! and iterative-pruning controllers (which call their dedicated AOT
+//! executables between train steps — exactly the role the rust layer has
+//! in this architecture: *all* control flow lives here, *all* math lives
+//! in the HLO).
+
+use anyhow::{bail, Result};
+
+use crate::config::TrainConfig;
+use crate::coordinator::schedule::{LambdaSchedule, LrSchedule, RiglSchedule};
+use crate::data::{Batcher, Dataset};
+use crate::metrics::{History, Record};
+use crate::runtime::{Runtime, TrainState};
+
+/// Outcome of one (spec, seed) run.
+pub struct RunOutcome {
+    pub state: TrainState,
+    pub history: History,
+    /// test accuracy in percent
+    pub test_acc: f64,
+    /// per-pattern test accuracy (pattern-selection specs only)
+    pub pattern_accs: Vec<f64>,
+    pub test_loss: f64,
+    pub steps_done: usize,
+    pub wall_secs: f64,
+}
+
+pub struct Trainer<'a> {
+    pub rt: &'a Runtime,
+    pub cfg: &'a TrainConfig,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(rt: &'a Runtime, cfg: &'a TrainConfig) -> Self {
+        Self { rt, cfg }
+    }
+
+    /// Train `spec` from `seed`, evaluating on `test` at the end (and every
+    /// `eval_every` steps into the history).
+    pub fn run(&self, seed: u64, train: &Dataset, test: &Dataset) -> Result<RunOutcome> {
+        let cfg = self.cfg;
+        let spec = self.rt.spec(&cfg.spec)?.clone();
+        let mut state = self.rt.init_state(&cfg.spec, seed as u32)?;
+        let mut batcher = Batcher::new(train, spec.batch, seed ^ 0xBA7C4, true);
+        let steps_per_epoch = batcher.batches_per_epoch().max(1);
+
+        // schedules: ramp unit is epochs when ramp_every==0 was not set
+        let ramp_every_steps = if cfg.ramp_every > 0 {
+            cfg.ramp_every
+        } else {
+            5 * steps_per_epoch // the paper's "+ramp every 5 epochs"
+        };
+        let lam = if spec.method.starts_with("pattern") {
+            LambdaSchedule::staircase(cfg.lambda, cfg.lambda_ramp, ramp_every_steps)
+        } else {
+            LambdaSchedule::constant(cfg.lambda)
+        };
+        let lr = if spec.model.starts_with("vit") || spec.model.starts_with("lm")
+            || spec.model.starts_with("swin")
+        {
+            LrSchedule::cosine(cfg.lr, cfg.steps / 20, cfg.steps)
+        } else {
+            LrSchedule::constant(cfg.lr)
+        };
+        let rigl = RiglSchedule {
+            alpha0: cfg.rigl_alpha,
+            decay: cfg.rigl_alpha_decay,
+            every: cfg.rigl_every,
+        };
+
+        // pruning rounds: prune after each segment boundary (gradual target)
+        let prune_at: Vec<(usize, f32)> = if spec.method == "iter_prune"
+            && cfg.prune_rounds > 0
+        {
+            (1..=cfg.prune_rounds)
+                .map(|k| {
+                    let step = cfg.steps * k / (cfg.prune_rounds + 1);
+                    let target = cfg.prune_target * k as f64 / cfg.prune_rounds as f64;
+                    (step, target as f32)
+                })
+                .collect()
+        } else {
+            vec![]
+        };
+
+        let mut history = History::new();
+        let is_rigl = spec.method == "rigl_block";
+        let gnorm_len: usize = if is_rigl {
+            // metrics = [loss, ce, acc] ++ gnorm blocks
+            let e = self.rt.manifest.exec(&cfg.spec, "train_step")?;
+            let total: usize = e.outputs.last().map(|o| o.elements()).unwrap_or(3);
+            total.saturating_sub(3)
+        } else {
+            0
+        };
+        let mut gnorm_acc: Vec<f32> = vec![0.0; gnorm_len];
+
+        let sw = crate::util::Stopwatch::start();
+        for step in 0..cfg.steps {
+            let batch = batcher.next_batch()?;
+            let hyper = build_hyper(&spec.hyper, lam.at(step), cfg.lambda2, lr.at(step))?;
+            let metrics = self.rt.train_step(&mut state, &batch.x, &batch.y, &hyper)?;
+
+            if is_rigl && metrics.len() >= 3 + gnorm_len {
+                // exponential moving average of the dense-grad block norms
+                for (a, m) in gnorm_acc.iter_mut().zip(&metrics[3..3 + gnorm_len]) {
+                    *a = 0.7 * *a + 0.3 * m;
+                }
+                if rigl.is_update_step(step) {
+                    self.rt.rigl_update(&mut state, &gnorm_acc, rigl.alpha(step) as f32)?;
+                }
+            }
+            for &(pstep, ptarget) in &prune_at {
+                if step == pstep {
+                    self.rt.prune(&mut state, ptarget)?;
+                    crate::debug!("pruned to target {ptarget} at step {step}");
+                }
+            }
+
+            let mut rec = Record::new(step as u64).with("loss", metrics[0] as f64);
+            if let Some(i) = spec.metric_index("ce") {
+                if i < metrics.len() {
+                    rec = rec.with("ce", metrics[i] as f64);
+                }
+            }
+            if let Some(i) = spec.metric_index("s_l1") {
+                if i < metrics.len() {
+                    rec = rec.with("s_l1", metrics[i] as f64);
+                }
+            }
+            // pattern-selection series: the Figure-3 diagnostic
+            if let Some(k) = spec.num_patterns() {
+                for p in 0..k {
+                    if let Some(i) = spec.metric_index(&format!("s_l1_p{p}")) {
+                        if i < metrics.len() {
+                            rec = rec.with(&format!("s_l1_p{p}"), metrics[i] as f64);
+                        }
+                    }
+                }
+            }
+            history.push(rec)?;
+
+            if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
+                let (acc, loss, _) = self.evaluate(&state, &spec, test)?;
+                history.push(
+                    Record::new(step as u64).with("test_acc", acc).with("test_loss", loss),
+                )?;
+                crate::info!(
+                    "[{}] seed {seed} step {}/{}: loss {:.4} test_acc {:.2}%",
+                    cfg.spec, step + 1, cfg.steps, metrics[0], acc
+                );
+            }
+        }
+
+        let (test_acc, test_loss, pattern_accs) = self.evaluate(&state, &spec, test)?;
+        Ok(RunOutcome {
+            state,
+            history,
+            test_acc,
+            test_loss,
+            pattern_accs,
+            steps_done: cfg.steps,
+            wall_secs: sw.elapsed_secs(),
+        })
+    }
+
+    /// Full-test-set evaluation. Returns (accuracy %, mean loss, per-pattern
+    /// accuracies % for pattern specs).
+    pub fn evaluate(
+        &self,
+        state: &TrainState,
+        spec: &crate::manifest::SpecEntry,
+        test: &Dataset,
+    ) -> Result<(f64, f64, Vec<f64>)> {
+        let batches = crate::data::eval_batches(test, spec.batch);
+        if batches.is_empty() {
+            bail!("test set smaller than one batch ({} < {})", test.n, spec.batch);
+        }
+        let k = spec.num_patterns().unwrap_or(0);
+        let mut total = 0usize;
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut pat_correct = vec![0.0f64; k];
+        for idx in &batches {
+            let b = crate::data::assemble_batch(test, idx)?;
+            let m = self.rt.eval_step(state, &b.x, &b.y)?;
+            if k > 0 {
+                // pattern eval layout: [ce_0..ce_{k-1}, acc_0..acc_{k-1}]
+                for p in 0..k {
+                    loss_sum += m[p] as f64 / k as f64;
+                    pat_correct[p] += m[k + p] as f64;
+                }
+            } else {
+                loss_sum += m[0] as f64;
+                correct += m[1] as f64;
+            }
+            total += b.size;
+        }
+        // LMs count per-token accuracy
+        let denom = if spec.input_dtype == crate::tensor::DType::I32 {
+            (total * spec.input_shape[0]) as f64
+        } else {
+            total as f64
+        };
+        let loss = loss_sum / batches.len() as f64;
+        if k > 0 {
+            let accs: Vec<f64> =
+                pat_correct.iter().map(|c| 100.0 * c / denom).collect();
+            let best = accs.iter().cloned().fold(f64::MIN, f64::max);
+            Ok((best, loss, accs))
+        } else {
+            Ok((100.0 * correct / denom, loss, vec![]))
+        }
+    }
+}
+
+/// Map manifest hyper names to config values.
+fn build_hyper(names: &[String], lam: f64, lam2: f64, lr: f64) -> Result<Vec<f32>> {
+    names
+        .iter()
+        .map(|n| match n.as_str() {
+            "lambda" | "lambda1" => Ok(lam as f32),
+            "lambda2" => Ok(lam2 as f32),
+            "lr" => Ok(lr as f32),
+            other => bail!("unknown hyper-parameter '{other}' in manifest"),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hyper_mapping() {
+        let names: Vec<String> =
+            ["lambda1", "lambda2", "lr"].iter().map(|s| s.to_string()).collect();
+        let h = build_hyper(&names, 0.01, 0.001, 0.1).unwrap();
+        assert_eq!(h, vec![0.01, 0.001, 0.1]);
+        assert!(build_hyper(&["bogus".to_string()], 0.0, 0.0, 0.0).is_err());
+    }
+}

@@ -1,0 +1,138 @@
+//! IDX (MNIST) file-format loader. If the user places the real MNIST files
+//! (`train-images-idx3-ubyte`, `train-labels-idx1-ubyte`, optionally
+//! gzipped) under a directory, the coordinator uses them instead of the
+//! synthetic generator — same code path downstream.
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::Dataset;
+
+fn read_file(path: &Path) -> Result<Vec<u8>> {
+    let raw = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    if path.extension().map(|e| e == "gz").unwrap_or(false)
+        || raw.starts_with(&[0x1f, 0x8b])
+    {
+        let mut out = Vec::new();
+        flate2::read::GzDecoder::new(&raw[..])
+            .read_to_end(&mut out)
+            .context("gunzip idx file")?;
+        Ok(out)
+    } else {
+        Ok(raw)
+    }
+}
+
+fn be_u32(b: &[u8], off: usize) -> u32 {
+    u32::from_be_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
+}
+
+/// Parse an IDX3 image file -> (n, rows, cols, pixels normalized to [0,1]).
+pub fn parse_idx3(bytes: &[u8]) -> Result<(usize, usize, usize, Vec<f32>)> {
+    if bytes.len() < 16 || be_u32(bytes, 0) != 0x0000_0803 {
+        bail!("not an idx3 image file");
+    }
+    let n = be_u32(bytes, 4) as usize;
+    let rows = be_u32(bytes, 8) as usize;
+    let cols = be_u32(bytes, 12) as usize;
+    let want = 16 + n * rows * cols;
+    if bytes.len() < want {
+        bail!("idx3 truncated: {} < {}", bytes.len(), want);
+    }
+    let pixels = bytes[16..want].iter().map(|&b| b as f32 / 255.0).collect();
+    Ok((n, rows, cols, pixels))
+}
+
+/// Parse an IDX1 label file -> labels.
+pub fn parse_idx1(bytes: &[u8]) -> Result<Vec<i32>> {
+    if bytes.len() < 8 || be_u32(bytes, 0) != 0x0000_0801 {
+        bail!("not an idx1 label file");
+    }
+    let n = be_u32(bytes, 4) as usize;
+    if bytes.len() < 8 + n {
+        bail!("idx1 truncated");
+    }
+    Ok(bytes[8..8 + n].iter().map(|&b| b as i32).collect())
+}
+
+/// Load `<dir>/{images},{labels}` (with optional .gz) into a Dataset.
+pub fn load_mnist(images: &Path, labels: &Path, classes: usize) -> Result<Dataset> {
+    let (n, rows, cols, x) = parse_idx3(&read_file(images)?)?;
+    let y = parse_idx1(&read_file(labels)?)?;
+    if y.len() != n {
+        bail!("image/label count mismatch: {} vs {}", n, y.len());
+    }
+    Dataset::from_images(rows * cols, classes, x, y)
+}
+
+/// Probe a directory for the standard MNIST file names.
+pub fn load_mnist_dir(dir: &Path) -> Option<Result<Dataset>> {
+    for (img, lbl) in [
+        ("train-images-idx3-ubyte", "train-labels-idx1-ubyte"),
+        ("train-images-idx3-ubyte.gz", "train-labels-idx1-ubyte.gz"),
+    ] {
+        let ip = dir.join(img);
+        let lp = dir.join(lbl);
+        if ip.exists() && lp.exists() {
+            return Some(load_mnist(&ip, &lp, 10));
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_idx3(n: usize, rows: usize, cols: usize) -> Vec<u8> {
+        let mut b = vec![];
+        b.extend_from_slice(&0x0000_0803u32.to_be_bytes());
+        b.extend_from_slice(&(n as u32).to_be_bytes());
+        b.extend_from_slice(&(rows as u32).to_be_bytes());
+        b.extend_from_slice(&(cols as u32).to_be_bytes());
+        b.extend((0..n * rows * cols).map(|i| (i % 256) as u8));
+        b
+    }
+
+    fn fake_idx1(n: usize) -> Vec<u8> {
+        let mut b = vec![];
+        b.extend_from_slice(&0x0000_0801u32.to_be_bytes());
+        b.extend_from_slice(&(n as u32).to_be_bytes());
+        b.extend((0..n).map(|i| (i % 10) as u8));
+        b
+    }
+
+    #[test]
+    fn roundtrip() {
+        let (n, r, c, x) = parse_idx3(&fake_idx3(5, 4, 4)).unwrap();
+        assert_eq!((n, r, c), (5, 4, 4));
+        assert_eq!(x.len(), 80);
+        assert!((x[255.min(x.len() - 1)] - (255 % 256) as f32 / 255.0).abs() < 1.0);
+        let y = parse_idx1(&fake_idx1(5)).unwrap();
+        assert_eq!(y, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn bad_magic() {
+        assert!(parse_idx3(&[0, 0, 8, 1, 0, 0, 0, 0]).is_err());
+        assert!(parse_idx1(&[0, 0, 8, 3, 0, 0, 0, 0]).is_err());
+    }
+
+    #[test]
+    fn gzip_roundtrip() {
+        use std::io::Write;
+        let raw = fake_idx1(7);
+        let mut enc =
+            flate2::write::GzEncoder::new(Vec::new(), flate2::Compression::fast());
+        enc.write_all(&raw).unwrap();
+        let gz = enc.finish().unwrap();
+        let dir = std::env::temp_dir().join("bs_idx_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("labels.gz");
+        std::fs::write(&p, &gz).unwrap();
+        let bytes = read_file(&p).unwrap();
+        assert_eq!(parse_idx1(&bytes).unwrap().len(), 7);
+    }
+}

@@ -1,0 +1,234 @@
+//! Data pipeline substrate: in-memory datasets, shuffled batch iteration,
+//! and conversion straight into `xla::Literal` batches for the runtime.
+//!
+//! No torchvision / no network in this environment: `synth` generates
+//! MNIST-like and CIFAR-like classification data with class structure
+//! (DESIGN.md §5 substitution), `idx` reads real MNIST IDX files when the
+//! user drops them under `data/`, and `corpus` synthesizes a Markov byte
+//! stream for the LM end-to-end example.
+
+pub mod corpus;
+pub mod idx;
+pub mod synth;
+
+use anyhow::{bail, Result};
+
+use crate::tensor::{HostValue, Tensor};
+use crate::util::rng::Rng;
+
+/// A supervised dataset held in host memory.
+///
+/// `x` is row-major (n × features) f32 for images, or (n × seq) i32 token
+/// ids for LMs (stored in `tokens`). `y` is the per-example class id, or
+/// per-position targets for LMs (stored in `targets`).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub features: usize,
+    pub classes: usize,
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub n: usize,
+    pub is_tokens: bool,
+}
+
+impl Dataset {
+    pub fn from_images(features: usize, classes: usize, x: Vec<f32>, y: Vec<i32>) -> Result<Self> {
+        if x.len() % features != 0 || x.len() / features != y.len() {
+            bail!("inconsistent dataset dims");
+        }
+        let n = y.len();
+        Ok(Self { features, classes, x, y, tokens: vec![], targets: vec![], n, is_tokens: false })
+    }
+
+    pub fn from_tokens(seq: usize, vocab: usize, tokens: Vec<i32>, targets: Vec<i32>) -> Result<Self> {
+        if tokens.len() != targets.len() || tokens.len() % seq != 0 {
+            bail!("inconsistent token dataset dims");
+        }
+        let n = tokens.len() / seq;
+        Ok(Self {
+            features: seq,
+            classes: vocab,
+            x: vec![],
+            y: vec![],
+            tokens,
+            targets,
+            n,
+            is_tokens: true,
+        })
+    }
+
+    /// Split off the last `k` examples as a held-out set.
+    pub fn split(mut self, k: usize) -> (Dataset, Dataset) {
+        assert!(k < self.n);
+        let train_n = self.n - k;
+        let test = if self.is_tokens {
+            let seq = self.features;
+            Dataset {
+                features: seq,
+                classes: self.classes,
+                x: vec![],
+                y: vec![],
+                tokens: self.tokens.split_off(train_n * seq),
+                targets: self.targets.split_off(train_n * seq),
+                n: k,
+                is_tokens: true,
+            }
+        } else {
+            Dataset {
+                features: self.features,
+                classes: self.classes,
+                x: self.x.split_off(train_n * self.features),
+                y: self.y.split_off(train_n),
+                tokens: vec![],
+                targets: vec![],
+                n: k,
+                is_tokens: false,
+            }
+        };
+        self.n = train_n;
+        (self, test)
+    }
+}
+
+/// A materialized batch ready for PJRT.
+pub struct Batch {
+    pub x: xla::Literal,
+    pub y: xla::Literal,
+    pub size: usize,
+}
+
+/// Shuffling batch iterator. Batch size is static (baked into the AOT
+/// executables), so the trailing remainder of each epoch is dropped —
+/// standard drop_last=True semantics.
+pub struct Batcher<'a> {
+    data: &'a Dataset,
+    batch: usize,
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Rng,
+    shuffle: bool,
+}
+
+impl<'a> Batcher<'a> {
+    pub fn new(data: &'a Dataset, batch: usize, seed: u64, shuffle: bool) -> Self {
+        assert!(batch <= data.n, "batch {} > dataset {}", batch, data.n);
+        let mut order: Vec<usize> = (0..data.n).collect();
+        let mut rng = Rng::new(seed);
+        if shuffle {
+            rng.shuffle(&mut order);
+        }
+        Self { data, batch, order, cursor: 0, rng, shuffle }
+    }
+
+    pub fn batches_per_epoch(&self) -> usize {
+        self.data.n / self.batch
+    }
+
+    /// Next batch, re-shuffling at epoch boundaries.
+    pub fn next_batch(&mut self) -> Result<Batch> {
+        if self.cursor + self.batch > self.order.len() {
+            self.cursor = 0;
+            if self.shuffle {
+                self.rng.shuffle(&mut self.order);
+            }
+        }
+        let idx = &self.order[self.cursor..self.cursor + self.batch];
+        self.cursor += self.batch;
+        assemble_batch(self.data, idx)
+    }
+}
+
+/// Gather rows `idx` into one literal batch.
+pub fn assemble_batch(data: &Dataset, idx: &[usize]) -> Result<Batch> {
+    let b = idx.len();
+    if data.is_tokens {
+        let seq = data.features;
+        let mut xs = Vec::with_capacity(b * seq);
+        let mut ys = Vec::with_capacity(b * seq);
+        for &i in idx {
+            xs.extend_from_slice(&data.tokens[i * seq..(i + 1) * seq]);
+            ys.extend_from_slice(&data.targets[i * seq..(i + 1) * seq]);
+        }
+        let x = HostValue::I32 { shape: vec![b, seq], data: xs }.to_literal()?;
+        let y = HostValue::I32 { shape: vec![b, seq], data: ys }.to_literal()?;
+        Ok(Batch { x, y, size: b })
+    } else {
+        let f = data.features;
+        let mut xs = Vec::with_capacity(b * f);
+        let mut ys = Vec::with_capacity(b);
+        for &i in idx {
+            xs.extend_from_slice(&data.x[i * f..(i + 1) * f]);
+            ys.push(data.y[i]);
+        }
+        let x = HostValue::F32(Tensor::new(&[b, f], xs)?).to_literal()?;
+        let y = HostValue::I32 { shape: vec![b], data: ys }.to_literal()?;
+        Ok(Batch { x, y, size: b })
+    }
+}
+
+/// Sequential (non-shuffled) full sweep for evaluation.
+pub fn eval_batches(data: &Dataset, batch: usize) -> Vec<Vec<usize>> {
+    (0..data.n / batch)
+        .map(|b| (b * batch..(b + 1) * batch).collect())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        let x: Vec<f32> = (0..40).map(|i| i as f32).collect();
+        let y: Vec<i32> = (0..10).map(|i| i % 3).collect();
+        Dataset::from_images(4, 3, x, y).unwrap()
+    }
+
+    #[test]
+    fn batcher_covers_epoch_without_repeats() {
+        let d = tiny();
+        let mut b = Batcher::new(&d, 2, 1, true);
+        assert_eq!(b.batches_per_epoch(), 5);
+        // one epoch = 5 batches of 2: each index exactly once
+        let mut seen = vec![0usize; 10];
+        for _ in 0..5 {
+            let batch = b.next_batch().unwrap();
+            let ys = batch.y.to_vec::<i32>().unwrap();
+            assert_eq!(ys.len(), 2);
+            let xs = batch.x.to_vec::<f32>().unwrap();
+            for chunk in xs.chunks(4) {
+                seen[(chunk[0] / 4.0) as usize] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "{seen:?}");
+    }
+
+    #[test]
+    fn split_sizes() {
+        let d = tiny();
+        let (tr, te) = d.split(3);
+        assert_eq!(tr.n, 7);
+        assert_eq!(te.n, 3);
+        assert_eq!(te.y.len(), 3);
+    }
+
+    #[test]
+    fn token_batches() {
+        let tokens: Vec<i32> = (0..24).collect();
+        let targets: Vec<i32> = (1..25).collect();
+        let d = Dataset::from_tokens(6, 32, tokens, targets).unwrap();
+        assert_eq!(d.n, 4);
+        let b = assemble_batch(&d, &[1, 3]).unwrap();
+        assert_eq!(b.x.to_vec::<i32>().unwrap()[0], 6);
+        assert_eq!(b.y.to_vec::<i32>().unwrap()[0], 7);
+    }
+
+    #[test]
+    fn eval_batch_indices() {
+        let d = tiny();
+        let bs = eval_batches(&d, 4);
+        assert_eq!(bs.len(), 2);
+        assert_eq!(bs[1], vec![4, 5, 6, 7]);
+    }
+}

@@ -1,0 +1,255 @@
+//! FLOPs & parameter accounting — the paper's Propositions 2 & 3 in code.
+//!
+//! Every table reports "Training Params" and "Training FLOPs" columns;
+//! the paper computed them with `ptflops`, we compute them exactly from
+//! the closed forms derived in Appendix A.1/A.2. Dense layers use the
+//! full-matrix counts; KPD layers use the factorized counts; per-model
+//! totals sum over slots (other backbone ops are identical across methods
+//! within a table row, so they cancel in the comparisons — we still add
+//! them for absolute numbers via `backbone_flops`).
+
+/// KPD factorization dimensions of one layer (paper Eq. 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KpdDims {
+    pub m1: usize,
+    pub n1: usize,
+    pub m2: usize,
+    pub n2: usize,
+    pub r: usize,
+}
+
+impl KpdDims {
+    pub fn m(&self) -> usize {
+        self.m1 * self.m2
+    }
+
+    pub fn n(&self) -> usize {
+        self.n1 * self.n2
+    }
+
+    /// From a weight shape and block size, clamping rank like the L2 side.
+    pub fn from_block(m: usize, n: usize, m2: usize, n2: usize, r: usize) -> Self {
+        assert!(m % m2 == 0 && n % n2 == 0, "block ({m2},{n2}) !| ({m},{n})");
+        let (m1, n1) = (m / m2, n / n2);
+        Self { m1, n1, m2, n2, r: r.min(m1 * n1).min(m2 * n2) }
+    }
+
+    /// Trainable parameters: S + r·(A + B)   (paper §4, Example 1).
+    pub fn train_params(&self) -> u64 {
+        let g = (self.m1 * self.n1) as u64;
+        g + self.r as u64 * (g + (self.m2 * self.n2) as u64)
+    }
+}
+
+// ----------------------------------------------------------------------
+// Proposition 2 (linear layer, batch N) — exact counts from Appendix A.1
+// ----------------------------------------------------------------------
+
+/// Forward FLOPs of the dense linear loss  J(W; D):
+/// N·m·(2n−1) + (3·N·m − 1)          (Eqs. 8–10)
+pub fn dense_forward_flops(n_batch: u64, m: u64, n: u64) -> u64 {
+    n_batch * m * (2 * n - 1) + 3 * n_batch * m - 1
+}
+
+/// Backward FLOPs of the dense linear loss: N·m + m·n·(2N−1)   (Eq. 13)
+pub fn dense_backward_flops(n_batch: u64, m: u64, n: u64) -> u64 {
+    n_batch * m + m * n * (2 * n_batch - 1)
+}
+
+/// Forward FLOPs of the factorized loss (Eq. 18, exact pre-O() form):
+/// r·(N·n1·m2·(2n2−1) + m1·n1 + N·m1·m2·(2n1−1)) + (r−1)·N·m + 3·N·m − 1
+pub fn kpd_forward_flops(n_batch: u64, d: KpdDims) -> u64 {
+    let (m1, n1, m2, n2, r) =
+        (d.m1 as u64, d.n1 as u64, d.m2 as u64, d.n2 as u64, d.r as u64);
+    let m = m1 * m2;
+    let per_rank = n_batch * n1 * m2 * (2 * n2 - 1)
+        + m1 * n1
+        + n_batch * m1 * m2 * (2 * n1 - 1);
+    r * per_rank + (r - 1) * n_batch * m + 3 * n_batch * m - 1
+}
+
+/// Backward FLOPs of the factorized loss (Eq. 25, exact pre-O() form):
+/// N·m + r·m1·n1·(2N·m2−1) + r·m1·n1 + (r−1)·m1·n1 + r·m1·n1
+///  + r·N·m2·n1·(2m1−1) + r·m2·n2·(2N·n1−1)
+pub fn kpd_backward_flops(n_batch: u64, d: KpdDims) -> u64 {
+    let (m1, n1, m2, n2, r) =
+        (d.m1 as u64, d.n1 as u64, d.m2 as u64, d.n2 as u64, d.r as u64);
+    let m = m1 * m2;
+    n_batch * m
+        + r * m1 * n1 * (2 * n_batch * m2 - 1)
+        + r * m1 * n1
+        + (r - 1) * m1 * n1
+        + r * m1 * n1
+        + r * n_batch * m2 * n1 * (2 * m1 - 1)
+        + r * m2 * n2 * (2 * n_batch * n1 - 1)
+}
+
+/// Parameter-update FLOPs per step (the §4 discussion after Prop. 2):
+/// dense: O(m·n); KPD: O(r·(m1·n1 + m2·n2)) + S.
+pub fn dense_update_flops(m: u64, n: u64) -> u64 {
+    m * n
+}
+
+pub fn kpd_update_flops(d: KpdDims) -> u64 {
+    d.train_params()
+}
+
+/// One full training step (fwd + bwd + update) for a dense linear slot.
+pub fn dense_step_flops(n_batch: u64, m: u64, n: u64) -> u64 {
+    dense_forward_flops(n_batch, m, n)
+        + dense_backward_flops(n_batch, m, n)
+        + dense_update_flops(m, n)
+}
+
+/// One full training step for a KPD slot.
+pub fn kpd_step_flops(n_batch: u64, d: KpdDims) -> u64 {
+    kpd_forward_flops(n_batch, d) + kpd_backward_flops(n_batch, d) + kpd_update_flops(d)
+}
+
+// ----------------------------------------------------------------------
+// Model-level accounting
+// ----------------------------------------------------------------------
+
+/// One factorizable slot of a model, with the method-dependent counts.
+#[derive(Clone, Debug)]
+pub struct SlotCost {
+    pub name: String,
+    pub train_params: u64,
+    pub step_flops: u64,
+}
+
+/// Sum training params + per-step FLOPs across a model's slots under the
+/// dense parameterization (group LASSO / elastic GL / RigL / pruning all
+/// train the dense W — the paper's Tables 1–3 show identical columns for
+/// those baselines).
+pub fn dense_model_cost(n_batch: u64, slots: &[(String, usize, usize)]) -> Vec<SlotCost> {
+    slots
+        .iter()
+        .map(|(name, m, n)| SlotCost {
+            name: name.clone(),
+            train_params: (*m as u64) * (*n as u64),
+            step_flops: dense_step_flops(n_batch, *m as u64, *n as u64),
+        })
+        .collect()
+}
+
+/// KPD parameterization cost per slot.
+pub fn kpd_model_cost(n_batch: u64, slots: &[(String, KpdDims)]) -> Vec<SlotCost> {
+    slots
+        .iter()
+        .map(|(name, d)| SlotCost {
+            name: name.clone(),
+            train_params: d.train_params(),
+            step_flops: kpd_step_flops(n_batch, *d),
+        })
+        .collect()
+}
+
+pub fn total_params(costs: &[SlotCost]) -> u64 {
+    costs.iter().map(|c| c.train_params).sum()
+}
+
+pub fn total_flops(costs: &[SlotCost]) -> u64 {
+    costs.iter().map(|c| c.step_flops).sum()
+}
+
+// ----------------------------------------------------------------------
+// Proposition 3 (two-layer network) — used by the property tests to
+// cross-check the slot-summing approach against the paper's closed form.
+// ----------------------------------------------------------------------
+
+/// Dense two-layer forward: 2N·m1·m2 + 2N·m2·m3 + 2N·m3 − 1   (Eq. 29)
+pub fn dense2_forward_flops(n_batch: u64, m1: u64, m2: u64, m3: u64) -> u64 {
+    2 * n_batch * m1 * m2 + 2 * n_batch * m2 * m3 + 2 * n_batch * m3 - 1
+}
+
+/// Dense two-layer backward (Eq. 35):
+/// 2N·m1·m2 + 4N·m2·m3 + N·m3 − m1·m2 − m2·m3
+pub fn dense2_backward_flops(n_batch: u64, m1: u64, m2: u64, m3: u64) -> u64 {
+    2 * n_batch * m1 * m2 + 4 * n_batch * m2 * m3 + n_batch * m3 - m1 * m2 - m2 * m3
+}
+
+/// Inference FLOPs of a block-sparse matmul with `nnz` surviving blocks —
+/// the §4 claim that inference cost scales with the sparsity rate.
+pub fn block_sparse_infer_flops(n_batch: u64, m2: u64, n2: u64, nnz_blocks: u64) -> u64 {
+    2 * n_batch * m2 * n2 * nnz_blocks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn example1_param_counts() {
+        // Paper Example 1: m=2^3, n=2^8, m1=4, n1=8, m2=2, n2=32, r=1
+        // → 128 trainable params (vs 2048 dense). Paper counts 2·m1·n1+m2·n2
+        // (S shares A's grid); our count includes S explicitly: 32+32+64=128.
+        let d = KpdDims { m1: 4, n1: 8, m2: 2, n2: 32, r: 1 };
+        assert_eq!(d.train_params(), 128);
+        assert_eq!(d.m() as u64 * d.n() as u64, 2048);
+    }
+
+    #[test]
+    fn table1_dense_params() {
+        // 10×784 linear layer = 7840 ≈ the paper's "7.84K" column
+        let costs = dense_model_cost(128, &[("fc".into(), 10, 784)]);
+        assert_eq!(total_params(&costs), 7840);
+    }
+
+    #[test]
+    fn kpd_beats_dense_at_paper_shapes() {
+        // Table 1 block (16,2) → (m2,n2)=(2,16), rank 2 on 10×784: params
+        // fall below 1K (paper: 0.80K) and step FLOPs beat dense. At the
+        // finest (2,2) block the factorized forward is NOT cheaper (n1=392
+        // dominates) — the paper's Table 1 shows the same: (2,2) FLOPs ≈
+        // dense, the win grows with block size.
+        let d = KpdDims::from_block(10, 784, 2, 16, 2);
+        assert!(d.train_params() < 1000, "{}", d.train_params());
+        let nb = 128;
+        assert!(kpd_step_flops(nb, d) < dense_step_flops(nb, 10, 784));
+        // and the win is monotone in block width here
+        let d8 = KpdDims::from_block(10, 784, 2, 8, 2);
+        assert!(kpd_step_flops(nb, d) < kpd_step_flops(nb, d8));
+    }
+
+    #[test]
+    fn forward_flops_match_big_o_scaling() {
+        // doubling N should ~double both counts (leading terms linear in N)
+        let d = KpdDims::from_block(120, 400, 8, 16, 5);
+        let f1 = kpd_forward_flops(64, d) as f64;
+        let f2 = kpd_forward_flops(128, d) as f64;
+        assert!((f2 / f1 - 2.0).abs() < 0.05);
+        let b1 = kpd_backward_flops(64, d) as f64;
+        let b2 = kpd_backward_flops(128, d) as f64;
+        assert!((b2 / b1 - 2.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn rank_clamped() {
+        let d = KpdDims::from_block(10, 84, 2, 2, 5);
+        assert_eq!(d.r, 4); // min(m1·n1=210, m2·n2=4)
+    }
+
+    #[test]
+    fn prop3_consistency() {
+        // slot-sum dense fwd ≈ Prop-3 closed form (within the activation
+        // and loss bookkeeping terms, which are O(N·m))
+        let (nb, m1, m2, m3) = (64u64, 784u64, 120u64, 10u64);
+        let slots = vec![("l1".to_string(), m2 as usize, m1 as usize),
+                         ("l2".to_string(), m3 as usize, m2 as usize)];
+        let sum: u64 = slots
+            .iter()
+            .map(|(_, m, n)| dense_forward_flops(nb, *m as u64, *n as u64))
+            .sum();
+        let closed = dense2_forward_flops(nb, m1, m2, m3);
+        let rel = (sum as f64 - closed as f64).abs() / closed as f64;
+        assert!(rel < 0.02, "rel={rel}");
+    }
+
+    #[test]
+    fn block_sparse_inference_scales_with_nnz() {
+        let full = block_sparse_infer_flops(32, 4, 4, 100);
+        let half = block_sparse_infer_flops(32, 4, 4, 50);
+        assert_eq!(full, 2 * half);
+    }
+}

@@ -1,0 +1,42 @@
+//! `blocksparse` — an efficient training framework for block-wise sparse
+//! models via Kronecker product decomposition (KPD).
+//!
+//! Reproduction of *"An Efficient Training Algorithm for Models with
+//! Block-wise Sparsity"* (Zhu, Zuo, Khalili; 2025) as a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * **L1** (`python/compile/kernels/`): Pallas KPD-forward and block-
+//!   sparse-matmul kernels, interpret-mode for the CPU PJRT plugin.
+//! * **L2** (`python/compile/`): JAX models (linear / LeNet-5 / ViT /
+//!   transformer-LM), the paper's method + all baselines as pure train-step
+//!   functions, AOT-lowered to HLO text once at build time.
+//! * **L3** (this crate): the coordinator that owns the training loop —
+//!   data pipeline, PJRT execution, regularization schedules, RigL/pruning
+//!   controllers, pattern selection, sparsity/FLOPs accounting, metrics.
+//!
+//! Python never runs at training time: `make artifacts` lowers everything
+//! to `artifacts/*.hlo.txt` + `manifest.json`, and the rust binary is then
+//! self-contained.
+
+pub mod bench;
+pub mod blockopt;
+pub mod checkpoint;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod flops;
+pub mod manifest;
+pub mod metrics;
+pub mod runtime;
+pub mod sparsity;
+pub mod tensor;
+pub mod testutil;
+pub mod util;
+
+/// Default artifact directory, overridable via `BLOCKSPARSE_ARTIFACTS`.
+pub fn artifact_dir() -> std::path::PathBuf {
+    std::env::var("BLOCKSPARSE_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,319 @@
+//! `blocksparse` CLI — the L3 launcher.
+//!
+//! Subcommands:
+//!   list                              show every spec in the manifest
+//!   train    --spec KEY [...]         multi-seed training run + summary row
+//!   pattern  --spec KEY [...]         pattern-selection run (Figure 3):
+//!                                     prints the per-pattern ‖S‖₁ series
+//!   flops    --spec KEY | --m --n..   Prop. 2/3 accounting
+//!   blockopt --m M --n N              Eq. 5 optimal block size
+//!   bench-step --spec KEY             one-step latency microbench
+//!
+//! Examples:
+//!   blocksparse train --spec t1_kpd_b2x2 --steps 600 --seeds 0,1,2
+//!   blocksparse pattern --spec f3a_pattern --steps 1500
+//!   blocksparse blockopt --m 8 --n 256
+
+use anyhow::{anyhow, bail, Result};
+
+use blocksparse::cli::{render_usage, ArgSpec, Args};
+use blocksparse::config::{Config, TrainConfig};
+use blocksparse::coordinator::{self, probe, run_spec};
+use blocksparse::runtime::Runtime;
+use blocksparse::util::human_count;
+use blocksparse::{bench, flops, info};
+
+fn arg_spec() -> ArgSpec {
+    ArgSpec {
+        options: vec![
+            ("spec", true, "spec key from artifacts/manifest.json"),
+            ("config", true, "TOML config file"),
+            ("set", true, "comma-separated key=value config overrides"),
+            ("steps", true, "training steps"),
+            ("seeds", true, "comma-separated seeds (default 0,1,2)"),
+            ("lr", true, "learning rate"),
+            ("lambda", true, "l1/group regularizer weight"),
+            ("lambda2", true, "secondary regularizer weight"),
+            ("train-examples", true, "training set size"),
+            ("test-examples", true, "held-out set size"),
+            ("eval-every", true, "eval cadence in steps"),
+            ("artifacts", true, "artifact directory (default: artifacts)"),
+            ("m", true, "matrix rows (flops/blockopt)"),
+            ("n", true, "matrix cols (flops/blockopt)"),
+            ("block", true, "block size m2xn2, e.g. 2x16"),
+            ("rank", true, "KPD rank"),
+            ("batch", true, "batch size for flops accounting"),
+            ("csv", true, "write per-step series to this CSV file"),
+            ("quiet", false, "warnings and errors only"),
+            ("verbose", false, "debug logging"),
+        ],
+    }
+}
+
+fn build_cfg(args: &Args) -> Result<TrainConfig> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => Config::load(std::path::Path::new(path))?,
+        None => Config::default(),
+    };
+    cfg.apply_overrides(&args.overrides())?;
+    let spec = args
+        .opt("spec")
+        .ok_or_else(|| anyhow!("--spec is required (see `blocksparse list`)"))?;
+    let mut tc = TrainConfig::from_config(&cfg, spec);
+    if let Some(s) = args.opt("steps") {
+        tc.steps = s.parse()?;
+    }
+    if let Some(s) = args.opt("seeds") {
+        tc.seeds = s
+            .split(',')
+            .map(|x| x.trim().parse::<u64>())
+            .collect::<Result<Vec<_>, _>>()?;
+    }
+    tc.lr = args.opt_f64("lr", tc.lr)?;
+    tc.lambda = args.opt_f64("lambda", tc.lambda)?;
+    tc.lambda2 = args.opt_f64("lambda2", tc.lambda2)?;
+    tc.train_examples = args.opt_usize("train-examples", tc.train_examples)?;
+    tc.test_examples = args.opt_usize("test-examples", tc.test_examples)?;
+    tc.eval_every = args.opt_usize("eval-every", tc.eval_every)?;
+    Ok(tc)
+}
+
+fn open_runtime(args: &Args) -> Result<Runtime> {
+    let dir = args
+        .opt("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(blocksparse::artifact_dir);
+    let rt = Runtime::new(&dir)?;
+    info!("PJRT platform: {} ({} specs)", rt.platform(), rt.manifest.specs.len());
+    Ok(rt)
+}
+
+fn cmd_list(args: &Args) -> Result<()> {
+    let rt = open_runtime(args)?;
+    println!("{:<28} {:<12} {:>6} {:<12} tags", "spec", "model", "batch", "method");
+    for s in rt.manifest.specs.values() {
+        println!(
+            "{:<28} {:<12} {:>6} {:<12} {}",
+            s.key,
+            s.model,
+            s.batch,
+            s.method,
+            s.tags.join(",")
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let rt = open_runtime(args)?;
+    let cfg = build_cfg(args)?;
+    let res = run_spec(&rt, &cfg)?;
+    println!("\nspec            : {}", res.spec);
+    println!("method          : {}", res.method);
+    println!("accuracy        : {:.2} ± {:.2} %", res.acc_mean, res.acc_std);
+    println!("sparsity rate   : {:.2} ± {:.2} %", res.sparsity_mean, res.sparsity_std);
+    println!("training params : {}", human_count(res.train_params as f64));
+    println!("training flops  : {}/step", human_count(res.step_flops as f64));
+    println!("wall time       : {:.1}s over {} seeds", res.wall_secs, cfg.seeds.len());
+    if let Some(csv) = args.opt("csv") {
+        write_history_csv(csv, &res.histories[0])?;
+        info!("wrote {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_pattern(args: &Args) -> Result<()> {
+    let rt = open_runtime(args)?;
+    let mut cfg = build_cfg(args)?;
+    if cfg.seeds.len() > 1 {
+        cfg.seeds.truncate(1); // Figure 3 is a single-run diagnostic
+    }
+    let spec = rt.spec(&cfg.spec)?.clone();
+    let k = spec
+        .num_patterns()
+        .ok_or_else(|| anyhow!("{} is not a pattern-selection spec", cfg.spec))?;
+    let (train, test) =
+        coordinator::dataset_for(&spec, cfg.data_seed, cfg.train_examples, cfg.test_examples)?;
+    let trainer = coordinator::Trainer::new(&rt, &cfg);
+    let outcome = trainer.run(cfg.seeds[0], &train, &test)?;
+    let final_norms = probe::pattern_s_norms(&spec, &outcome.state)?;
+
+    println!("\npattern selection for {} ({} patterns)", cfg.spec, k);
+    println!("{:<8} {}", "step", (0..k).map(|p| format!("‖S^({p})‖₁")).collect::<Vec<_>>().join("  "));
+    let series: Vec<Vec<(u64, f64)>> =
+        (0..k).map(|p| outcome.history.series(&format!("s_l1_p{p}"))).collect();
+    let stride = (cfg.steps / 20).max(1);
+    for i in (0..series[0].len()).step_by(stride) {
+        let step = series[0][i].0;
+        let row: Vec<String> =
+            series.iter().map(|s| format!("{:>9.3}", s[i].1)).collect();
+        println!("{:<8} {}", step, row.join("  "));
+    }
+    println!("\nfinal ‖S^(k)‖₁ : {:?}", final_norms.iter().map(|v| (v * 1000.0).round() / 1000.0).collect::<Vec<_>>());
+    println!("per-pattern acc: {:?}", outcome.pattern_accs.iter().map(|v| (v * 100.0).round() / 100.0).collect::<Vec<_>>());
+    let survivor = final_norms
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    println!("surviving pattern: k={survivor}");
+    Ok(())
+}
+
+fn cmd_flops(args: &Args) -> Result<()> {
+    if let Some(_spec_key) = args.opt("spec") {
+        let rt = open_runtime(args)?;
+        let spec = rt.spec(args.opt("spec").unwrap())?;
+        let (params, step) = coordinator::experiment::accounting(spec);
+        println!("spec {}: train_params={} step_flops={}", spec.key,
+                 human_count(params as f64), human_count(step as f64));
+        for (name, d) in coordinator::experiment::kpd_dims(spec) {
+            println!(
+                "  slot {name}: grid {}x{} block {}x{} r={} -> params {} fwd {} bwd {}",
+                d.m1, d.n1, d.m2, d.n2, d.r,
+                d.train_params(),
+                human_count(flops::kpd_forward_flops(spec.batch as u64, d) as f64),
+                human_count(flops::kpd_backward_flops(spec.batch as u64, d) as f64),
+            );
+        }
+        return Ok(());
+    }
+    let m = args.opt_usize("m", 0)?;
+    let n = args.opt_usize("n", 0)?;
+    if m == 0 || n == 0 {
+        bail!("flops needs --spec or --m/--n");
+    }
+    let nb = args.opt_usize("batch", 128)? as u64;
+    let rank = args.opt_usize("rank", 1)?;
+    let block = args.opt_or("block", "");
+    println!("dense {m}x{n} @N={nb}: params {} fwd {} bwd {}",
+             human_count((m * n) as f64),
+             human_count(flops::dense_forward_flops(nb, m as u64, n as u64) as f64),
+             human_count(flops::dense_backward_flops(nb, m as u64, n as u64) as f64));
+    if !block.is_empty() {
+        let (m2, n2) = parse_block(block)?;
+        let d = flops::KpdDims::from_block(m, n, m2, n2, rank);
+        println!("kpd block {m2}x{n2} r={}: params {} fwd {} bwd {}",
+                 d.r,
+                 human_count(d.train_params() as f64),
+                 human_count(flops::kpd_forward_flops(nb, d) as f64),
+                 human_count(flops::kpd_backward_flops(nb, d) as f64));
+    }
+    Ok(())
+}
+
+fn cmd_blockopt(args: &Args) -> Result<()> {
+    let m = args.opt_usize("m", 0)?;
+    let n = args.opt_usize("n", 0)?;
+    if m == 0 || n == 0 {
+        bail!("blockopt needs --m and --n");
+    }
+    let d = blocksparse::blockopt::optimal_block_r1(m, n);
+    println!(
+        "Eq.5 optimum for {m}x{n}: grid {}x{} block {}x{} -> {} params (dense {})",
+        d.m1, d.n1, d.m2, d.n2,
+        blocksparse::blockopt::eq5_cost(d.m1, d.n1, d.m2, d.n2),
+        m * n
+    );
+    println!("legal blocks: {}", blocksparse::blockopt::enumerate_blocks(m, n).len());
+    Ok(())
+}
+
+fn cmd_bench_step(args: &Args) -> Result<()> {
+    let rt = open_runtime(args)?;
+    let cfg = build_cfg(args)?;
+    let spec = rt.spec(&cfg.spec)?.clone();
+    let (train, _test) =
+        coordinator::dataset_for(&spec, cfg.data_seed, spec.batch * 4, spec.batch)?;
+    let mut state = rt.init_state(&cfg.spec, 0)?;
+    let batch = crate::first_batch(&train, spec.batch)?;
+    let hyper: Vec<f32> = spec
+        .hyper
+        .iter()
+        .map(|h| match h.as_str() {
+            "lr" => cfg.lr as f32,
+            "lambda2" => cfg.lambda2 as f32,
+            _ => cfg.lambda as f32,
+        })
+        .collect();
+    let stats = bench::quick_bench(&format!("{} train_step", cfg.spec), || {
+        rt.train_step(&mut state, &batch.x, &batch.y, &hyper).expect("step");
+    });
+    println!("{}", stats.report());
+    println!(
+        "model flops/step {} -> {:.2} GFLOP/s effective",
+        human_count(coordinator::experiment::accounting(&spec).1 as f64),
+        coordinator::experiment::accounting(&spec).1 as f64 / stats.mean_ns
+    );
+    Ok(())
+}
+
+fn first_batch(data: &blocksparse::data::Dataset, batch: usize) -> Result<blocksparse::data::Batch> {
+    let idx: Vec<usize> = (0..batch).collect();
+    blocksparse::data::assemble_batch(data, &idx)
+}
+
+fn write_history_csv(path: &str, h: &blocksparse::metrics::History) -> Result<()> {
+    use std::io::Write;
+    let mut keys: Vec<String> = Vec::new();
+    for r in &h.records {
+        for k in r.values.keys() {
+            if !keys.contains(k) {
+                keys.push(k.clone());
+            }
+        }
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "step,{}", keys.join(","))?;
+    for r in &h.records {
+        let cells: Vec<String> = keys
+            .iter()
+            .map(|k| r.values.get(k).map(|v| v.to_string()).unwrap_or_default())
+            .collect();
+        writeln!(f, "{},{}", r.step, cells.join(","))?;
+    }
+    Ok(())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let spec = arg_spec();
+    let args = match Args::parse(&argv, &spec, true) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n");
+            eprintln!("{}", render_usage("blocksparse", "<list|train|pattern|flops|blockopt|bench-step>", &spec));
+            std::process::exit(2);
+        }
+    };
+    if args.has_flag("quiet") {
+        blocksparse::util::log::set_level(blocksparse::util::log::Level::Warn);
+    } else if args.has_flag("verbose") {
+        blocksparse::util::log::set_level(blocksparse::util::log::Level::Debug);
+    }
+    let result = match args.subcommand.as_deref() {
+        Some("list") => cmd_list(&args),
+        Some("train") => cmd_train(&args),
+        Some("pattern") => cmd_pattern(&args),
+        Some("flops") => cmd_flops(&args),
+        Some("blockopt") => cmd_blockopt(&args),
+        Some("bench-step") => cmd_bench_step(&args),
+        other => {
+            eprintln!("unknown subcommand {other:?}");
+            eprintln!("{}", render_usage("blocksparse", "<list|train|pattern|flops|blockopt|bench-step>", &spec));
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_block(s: &str) -> Result<(usize, usize)> {
+    let (a, b) = s
+        .split_once('x')
+        .ok_or_else(|| anyhow!("block must be m2xn2, e.g. 2x16"))?;
+    Ok((a.parse()?, b.parse()?))
+}

@@ -1,0 +1,241 @@
+//! Typed view over `artifacts/manifest.json` (written by python/compile/aot.py).
+//!
+//! The manifest is the single contract between the build-time python layer
+//! and the runtime: executable files, their exact argument order (pytree
+//! flatten order), shapes/dtypes, hyper-parameter names, metric names, and
+//! the per-spec method metadata (block sizes, rank, slot dimensions) that
+//! drives the FLOPs accounting.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::tensor::DType;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct IoSlot {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl IoSlot {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// "param:fc.S" -> Some("fc.S")
+    pub fn param_key(&self) -> Option<&str> {
+        self.name.strip_prefix("param:")
+    }
+
+    pub fn opt_key(&self) -> Option<&str> {
+        self.name.strip_prefix("opt:")
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ExecEntry {
+    pub spec: String,
+    pub exec: String,
+    pub file: String,
+    pub inputs: Vec<IoSlot>,
+    pub outputs: Vec<IoSlot>,
+    pub hyper: Vec<String>,
+    pub metrics: Vec<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct SlotInfo {
+    pub name: String,
+    pub m: usize,
+    pub n: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct SpecEntry {
+    pub key: String,
+    pub model: String,
+    pub batch: usize,
+    pub tags: Vec<String>,
+    pub input_shape: Vec<usize>,
+    pub input_dtype: DType,
+    pub num_classes: usize,
+    pub slots: Vec<SlotInfo>,
+    pub method: String,
+    pub hyper: Vec<String>,
+    pub metrics: Vec<String>,
+    pub params_total: usize,
+    /// raw "info" blob (block sizes, rank, patterns, …)
+    pub info: Json,
+}
+
+impl SpecEntry {
+    /// Per-slot (m2, n2) block size, when the method defines one.
+    pub fn block_of(&self, slot: &str) -> Option<(usize, usize)> {
+        let blocks = self.info.get("blocks")?;
+        let arr = blocks.get(slot)?.as_arr()?;
+        Some((arr[0].as_usize()?, arr[1].as_usize()?))
+    }
+
+    pub fn rank(&self) -> Option<usize> {
+        self.info.get("rank").and_then(Json::as_usize)
+    }
+
+    pub fn num_patterns(&self) -> Option<usize> {
+        self.info.get("num_patterns").and_then(Json::as_usize)
+    }
+
+    pub fn metric_index(&self, name: &str) -> Option<usize> {
+        self.metrics.iter().position(|m| m == name)
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub specs: BTreeMap<String, SpecEntry>,
+    pub executables: BTreeMap<(String, String), ExecEntry>,
+}
+
+fn parse_io(j: &Json) -> Result<IoSlot> {
+    Ok(IoSlot {
+        name: j.req_str("name")?.to_string(),
+        shape: j
+            .req_arr("shape")?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad shape")))
+            .collect::<Result<_>>()?,
+        dtype: DType::parse(j.req_str("dtype")?)?,
+    })
+}
+
+fn parse_strs(j: Option<&Json>) -> Vec<String> {
+    j.and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(|v| v.as_str().map(String::from)).collect())
+        .unwrap_or_default()
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut specs = BTreeMap::new();
+        for s in j.req_arr("specs")? {
+            let entry = SpecEntry {
+                key: s.req_str("key")?.to_string(),
+                model: s.req_str("model")?.to_string(),
+                batch: s.req_usize("batch")?,
+                tags: parse_strs(s.get("tags")),
+                input_shape: s
+                    .req_arr("input_shape")?
+                    .iter()
+                    .filter_map(Json::as_usize)
+                    .collect(),
+                input_dtype: DType::parse(s.req_str("input_dtype")?)?,
+                num_classes: s.req_usize("num_classes")?,
+                slots: s
+                    .req_arr("slots")?
+                    .iter()
+                    .map(|v| {
+                        Ok(SlotInfo {
+                            name: v.req_str("name")?.to_string(),
+                            m: v.req_usize("m")?,
+                            n: v.req_usize("n")?,
+                        })
+                    })
+                    .collect::<Result<_>>()?,
+                method: s.req_str("method")?.to_string(),
+                hyper: parse_strs(s.get("hyper")),
+                metrics: parse_strs(s.get("metrics")),
+                params_total: s.req_usize("params_total")?,
+                info: s.get("info").cloned().unwrap_or(Json::Null),
+            };
+            specs.insert(entry.key.clone(), entry);
+        }
+
+        let mut executables = BTreeMap::new();
+        for e in j.req_arr("executables")? {
+            let entry = ExecEntry {
+                spec: e.req_str("spec")?.to_string(),
+                exec: e.req_str("exec")?.to_string(),
+                file: e.req_str("file")?.to_string(),
+                inputs: e.req_arr("inputs")?.iter().map(parse_io).collect::<Result<_>>()?,
+                outputs: e.req_arr("outputs")?.iter().map(parse_io).collect::<Result<_>>()?,
+                hyper: parse_strs(e.get("hyper")),
+                metrics: parse_strs(e.get("metrics")),
+            };
+            executables.insert((entry.spec.clone(), entry.exec.clone()), entry);
+        }
+
+        Ok(Self { dir, specs, executables })
+    }
+
+    pub fn spec(&self, key: &str) -> Result<&SpecEntry> {
+        self.specs
+            .get(key)
+            .ok_or_else(|| anyhow!("spec '{key}' not in manifest (rebuild artifacts?)"))
+    }
+
+    pub fn exec(&self, spec: &str, exec: &str) -> Result<&ExecEntry> {
+        self.executables
+            .get(&(spec.to_string(), exec.to_string()))
+            .ok_or_else(|| anyhow!("executable '{spec}.{exec}' not in manifest"))
+    }
+
+    pub fn hlo_path(&self, entry: &ExecEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    pub fn specs_with_tag(&self, tag: &str) -> Vec<&SpecEntry> {
+        self.specs.values().filter(|s| s.tags.iter().any(|t| t == tag)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_manifest() -> &'static str {
+        r#"{
+          "version": 1,
+          "specs": [{
+            "key": "t", "model": "linear", "batch": 4, "tags": ["x"],
+            "input_shape": [8], "input_dtype": "f32", "num_classes": 2,
+            "slots": [{"name": "fc", "m": 2, "n": 8}],
+            "method": "kpd", "hyper": ["lambda", "lr"],
+            "metrics": ["loss"], "params_total": 10,
+            "info": {"rank": 2, "blocks": {"fc": [2, 4]}}
+          }],
+          "executables": [{
+            "spec": "t", "exec": "train_step", "file": "t.train_step.hlo.txt",
+            "inputs": [{"name": "param:fc.S", "shape": [1, 2], "dtype": "f32"}],
+            "outputs": [{"name": "metrics", "shape": [1], "dtype": "f32"}],
+            "hyper": ["lambda", "lr"], "metrics": ["loss"]
+          }]
+        }"#
+    }
+
+    #[test]
+    fn parse_mini() {
+        let dir = std::env::temp_dir().join("bs_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), mini_manifest()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let s = m.spec("t").unwrap();
+        assert_eq!(s.batch, 4);
+        assert_eq!(s.block_of("fc"), Some((2, 4)));
+        assert_eq!(s.rank(), Some(2));
+        let e = m.exec("t", "train_step").unwrap();
+        assert_eq!(e.inputs[0].param_key(), Some("fc.S"));
+        assert_eq!(e.inputs[0].elements(), 2);
+        assert!(m.exec("t", "nope").is_err());
+        assert_eq!(m.specs_with_tag("x").len(), 1);
+    }
+}

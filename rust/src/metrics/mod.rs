@@ -1,0 +1,160 @@
+//! Metrics substrate: step logging, loss curves, CSV/JSONL sinks.
+//!
+//! The coordinator streams a `Record` per step/eval; sinks write CSV (for
+//! plotting the Figure-3 series) and JSONL (for EXPERIMENTS.md extraction).
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One logged event: step index + named scalar values.
+#[derive(Clone, Debug)]
+pub struct Record {
+    pub step: u64,
+    pub values: BTreeMap<String, f64>,
+}
+
+impl Record {
+    pub fn new(step: u64) -> Self {
+        Self { step, values: BTreeMap::new() }
+    }
+
+    pub fn with(mut self, key: &str, v: f64) -> Self {
+        self.values.insert(key.to_string(), v);
+        self
+    }
+}
+
+/// In-memory history with optional CSV mirroring; the benches read series
+/// back out of it to print figure data.
+pub struct History {
+    pub records: Vec<Record>,
+    csv: Option<std::fs::File>,
+    csv_columns: Vec<String>,
+}
+
+impl History {
+    pub fn new() -> Self {
+        Self { records: Vec::new(), csv: None, csv_columns: Vec::new() }
+    }
+
+    /// Mirror every record to a CSV file with the given columns.
+    pub fn with_csv(path: &Path, columns: &[&str]) -> Result<Self> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {path:?}"))?;
+        writeln!(f, "step,{}", columns.join(","))?;
+        Ok(Self {
+            records: Vec::new(),
+            csv: Some(f),
+            csv_columns: columns.iter().map(|s| s.to_string()).collect(),
+        })
+    }
+
+    pub fn push(&mut self, rec: Record) -> Result<()> {
+        if let Some(f) = &mut self.csv {
+            let mut line = format!("{}", rec.step);
+            for c in &self.csv_columns {
+                line.push(',');
+                if let Some(v) = rec.values.get(c) {
+                    line.push_str(&format!("{v}"));
+                }
+            }
+            writeln!(f, "{line}")?;
+        }
+        self.records.push(rec);
+        Ok(())
+    }
+
+    /// Extract one named series as (step, value) pairs.
+    pub fn series(&self, key: &str) -> Vec<(u64, f64)> {
+        self.records
+            .iter()
+            .filter_map(|r| r.values.get(key).map(|v| (r.step, *v)))
+            .collect()
+    }
+
+    pub fn last(&self, key: &str) -> Option<f64> {
+        self.records.iter().rev().find_map(|r| r.values.get(key).copied())
+    }
+
+    /// Mean of the last `k` values of a series (smoothed loss reporting).
+    pub fn tail_mean(&self, key: &str, k: usize) -> Option<f64> {
+        let s = self.series(key);
+        if s.is_empty() {
+            return None;
+        }
+        let tail = &s[s.len().saturating_sub(k)..];
+        Some(tail.iter().map(|(_, v)| v).sum::<f64>() / tail.len() as f64)
+    }
+}
+
+impl Default for History {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Append one JSON object per line (experiment results log).
+pub struct JsonlWriter {
+    file: std::fs::File,
+}
+
+impl JsonlWriter {
+    pub fn append(path: &Path) -> Result<Self> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let file = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(Self { file })
+    }
+
+    pub fn write(&mut self, obj: &Json) -> Result<()> {
+        let mut s = obj.to_string_pretty();
+        s = s.replace('\n', " ");
+        writeln!(self.file, "{s}")?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn history_series() {
+        let mut h = History::new();
+        for i in 0..5 {
+            h.push(Record::new(i).with("loss", 10.0 - i as f64)).unwrap();
+        }
+        let s = h.series("loss");
+        assert_eq!(s.len(), 5);
+        assert_eq!(s[4], (4, 6.0));
+        assert_eq!(h.last("loss"), Some(6.0));
+        assert_eq!(h.tail_mean("loss", 2), Some(6.5));
+        assert_eq!(h.last("nope"), None);
+    }
+
+    #[test]
+    fn csv_mirror() {
+        let dir = std::env::temp_dir().join("bs_metrics_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("h.csv");
+        {
+            let mut h = History::with_csv(&path, &["a", "b"]).unwrap();
+            h.push(Record::new(0).with("a", 1.0)).unwrap();
+            h.push(Record::new(1).with("a", 2.0).with("b", 3.0)).unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "step,a,b");
+        assert_eq!(lines[1], "0,1,");
+        assert_eq!(lines[2], "1,2,3");
+    }
+}

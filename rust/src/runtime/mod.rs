@@ -1,0 +1,266 @@
+//! PJRT runtime: loads the AOT artifacts and executes them on the hot path.
+//!
+//! Wraps the `xla` crate (PJRT C API): HLO text -> `HloModuleProto` ->
+//! `XlaComputation` -> `PjRtLoadedExecutable`. Executables are compiled
+//! once and cached; training state lives as `xla::Literal`s in manifest
+//! argument order so a step is a single `execute` call with zero
+//! re-marshalling of parameters on the host.
+//!
+//! All computations are lowered with `return_tuple=True`, so every execute
+//! returns one tuple buffer; `run` decomposes it back into leaves.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::manifest::{ExecEntry, Manifest, SpecEntry};
+use crate::tensor::{HostValue, Tensor};
+
+/// A compiled executable plus its manifest signature.
+pub struct Executable {
+    pub entry: ExecEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with positional literal arguments; returns the decomposed
+    /// output leaves (manifest `outputs` order).
+    pub fn run(&self, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if args.len() != self.entry.inputs.len() {
+            bail!(
+                "{}.{}: expected {} args, got {}",
+                self.entry.spec,
+                self.entry.exec,
+                self.entry.inputs.len(),
+                args.len()
+            );
+        }
+        let res = self
+            .exe
+            .execute::<&xla::Literal>(args)
+            .with_context(|| format!("executing {}.{}", self.entry.spec, self.entry.exec))?;
+        let lit = res[0][0].to_literal_sync()?;
+        let leaves = lit.to_tuple()?;
+        if leaves.len() != self.entry.outputs.len() {
+            bail!(
+                "{}.{}: manifest promises {} outputs, PJRT returned {}",
+                self.entry.spec,
+                self.entry.exec,
+                self.entry.outputs.len(),
+                leaves.len()
+            );
+        }
+        Ok(leaves)
+    }
+}
+
+/// Mutable training state for one spec: parameter + optimizer literals in
+/// manifest order, threaded through consecutive train steps.
+pub struct TrainState {
+    pub spec: String,
+    pub param_names: Vec<String>,
+    pub opt_names: Vec<String>,
+    pub params: Vec<xla::Literal>,
+    pub opt: Vec<xla::Literal>,
+}
+
+impl TrainState {
+    pub fn param(&self, key: &str) -> Result<&xla::Literal> {
+        let i = self
+            .param_names
+            .iter()
+            .position(|n| n == key)
+            .ok_or_else(|| anyhow!("no param '{key}' in spec {}", self.spec))?;
+        Ok(&self.params[i])
+    }
+
+    pub fn param_tensor(&self, key: &str) -> Result<Tensor> {
+        match HostValue::from_literal(self.param(key)?)? {
+            HostValue::F32(t) => Ok(t),
+            _ => bail!("param '{key}' is not f32"),
+        }
+    }
+
+    pub fn set_param(&mut self, key: &str, value: &HostValue) -> Result<()> {
+        let i = self
+            .param_names
+            .iter()
+            .position(|n| n == key)
+            .ok_or_else(|| anyhow!("no param '{key}'"))?;
+        self.params[i] = value.to_literal()?;
+        Ok(())
+    }
+}
+
+/// The runtime: one PJRT client + a compile cache over the manifest.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: std::sync::Mutex<HashMap<(String, String), Arc<Executable>>>,
+}
+
+impl Runtime {
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { manifest, client, cache: std::sync::Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile (cached) one executable of a spec.
+    pub fn load(&self, spec: &str, exec: &str) -> Result<Arc<Executable>> {
+        let key = (spec.to_string(), exec.to_string());
+        if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+            return Ok(hit.clone());
+        }
+        let entry = self.manifest.exec(spec, exec)?.clone();
+        let path = self.manifest.hlo_path(&entry);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}.{}", spec, exec))?;
+        let arc = Arc::new(Executable { entry, exe });
+        self.cache.lock().unwrap().insert(key, arc.clone());
+        Ok(arc)
+    }
+
+    pub fn spec(&self, key: &str) -> Result<&SpecEntry> {
+        self.manifest.spec(key)
+    }
+
+    /// Run the spec's `init` executable -> fresh TrainState.
+    pub fn init_state(&self, spec: &str, seed: u32) -> Result<TrainState> {
+        let exe = self.load(spec, "init")?;
+        let seed_lit = HostValue::scalar_u32(seed).to_literal()?;
+        let leaves = exe.run(&[&seed_lit])?;
+        let mut params = Vec::new();
+        let mut opt = Vec::new();
+        let mut param_names = Vec::new();
+        let mut opt_names = Vec::new();
+        for (slot, lit) in exe.entry.outputs.iter().zip(leaves) {
+            if let Some(p) = slot.param_key() {
+                param_names.push(p.to_string());
+                params.push(lit);
+            } else if let Some(o) = slot.opt_key() {
+                opt_names.push(o.to_string());
+                opt.push(lit);
+            } else {
+                bail!("unexpected init output '{}'", slot.name);
+            }
+        }
+        Ok(TrainState { spec: spec.to_string(), param_names, opt_names, params, opt })
+    }
+
+    /// One training step: consumes/updates `state`, returns the metrics
+    /// vector (names in `spec.metrics`).
+    pub fn train_step(
+        &self,
+        state: &mut TrainState,
+        x: &xla::Literal,
+        y: &xla::Literal,
+        hyper: &[f32],
+    ) -> Result<Vec<f32>> {
+        let exe = self.load(&state.spec, "train_step")?;
+        if hyper.len() != exe.entry.hyper.len() {
+            bail!(
+                "{} train_step wants hyper {:?}, got {} values",
+                state.spec,
+                exe.entry.hyper,
+                hyper.len()
+            );
+        }
+        let hyper_lits: Vec<xla::Literal> =
+            hyper.iter().map(|&h| xla::Literal::scalar(h)).collect();
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(exe.entry.inputs.len());
+        args.extend(state.params.iter());
+        args.extend(state.opt.iter());
+        args.push(x);
+        args.push(y);
+        args.extend(hyper_lits.iter());
+        let mut leaves = exe.run(&args)?;
+        // outputs: params' ++ opt' ++ metrics
+        let np = state.params.len();
+        let no = state.opt.len();
+        let metrics_lit =
+            leaves.pop().ok_or_else(|| anyhow!("train_step returned no outputs"))?;
+        if leaves.len() != np + no {
+            bail!("train_step output arity mismatch: {} vs {}", leaves.len(), np + no);
+        }
+        let opt_new = leaves.split_off(np);
+        state.params = leaves;
+        state.opt = opt_new;
+        metrics_lit.to_vec::<f32>().map_err(Into::into)
+    }
+
+    /// Evaluation step on the current parameters.
+    pub fn eval_step(
+        &self,
+        state: &TrainState,
+        x: &xla::Literal,
+        y: &xla::Literal,
+    ) -> Result<Vec<f32>> {
+        let exe = self.load(&state.spec, "eval_step")?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(exe.entry.inputs.len());
+        args.extend(state.params.iter());
+        args.push(x);
+        args.push(y);
+        let leaves = exe.run(&args)?;
+        leaves[0].to_vec::<f32>().map_err(Into::into)
+    }
+
+    /// KPD only: reconstruct the block-wise sparse W of every slot.
+    pub fn materialize(&self, state: &TrainState) -> Result<Vec<(String, Tensor)>> {
+        let exe = self.load(&state.spec, "materialize")?;
+        let args: Vec<&xla::Literal> = state.params.iter().collect();
+        let leaves = exe.run(&args)?;
+        exe.entry
+            .outputs
+            .iter()
+            .zip(leaves)
+            .map(|(slot, lit)| {
+                let name =
+                    slot.name.strip_prefix("W:").unwrap_or(&slot.name).to_string();
+                match HostValue::from_literal(&lit)? {
+                    HostValue::F32(t) => Ok((name, t)),
+                    _ => bail!("materialize output not f32"),
+                }
+            })
+            .collect()
+    }
+
+    /// Blockwise-RigL mask update (paper §6.1 baseline).
+    pub fn rigl_update(
+        &self,
+        state: &mut TrainState,
+        gnorm: &[f32],
+        alpha: f32,
+    ) -> Result<()> {
+        let exe = self.load(&state.spec, "rigl_update")?;
+        let g = xla::Literal::vec1(gnorm);
+        let a = xla::Literal::scalar(alpha);
+        let mut args: Vec<&xla::Literal> = state.params.iter().collect();
+        args.push(&g);
+        args.push(&a);
+        let leaves = exe.run(&args)?;
+        state.params = leaves;
+        Ok(())
+    }
+
+    /// Iterative-pruning step to a global sparsity target.
+    pub fn prune(&self, state: &mut TrainState, target: f32) -> Result<()> {
+        let exe = self.load(&state.spec, "prune")?;
+        let t = xla::Literal::scalar(target);
+        let mut args: Vec<&xla::Literal> = state.params.iter().collect();
+        args.push(&t);
+        let leaves = exe.run(&args)?;
+        state.params = leaves;
+        Ok(())
+    }
+}

@@ -1,0 +1,104 @@
+//! Sparsity measurement — the "Sparsity Rate" column of every table.
+//!
+//! The paper reports the fraction of (effectively) zero weights of the
+//! trained matrices. For our method zeros come from S entries driven to
+//! ~0 by the ℓ1 penalty (whole blocks vanish); for group LASSO from block
+//! norms driven to ~0; for RigL/pruning from explicit masks. We threshold
+//! at `eps` relative to the matrix's RMS, so the measurement is scale-free.
+
+use crate::tensor::Tensor;
+
+/// Element-level sparsity: fraction of entries with |w| < eps_rel · rms(W).
+pub fn element_sparsity(w: &Tensor, eps_rel: f32) -> f64 {
+    let n = w.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let rms =
+        (w.data().iter().map(|x| (x * x) as f64).sum::<f64>() / n as f64).sqrt() as f32;
+    let thr = eps_rel * rms.max(1e-20);
+    let zeros = w.data().iter().filter(|x| x.abs() < thr).count();
+    zeros as f64 / n as f64
+}
+
+/// Block-level sparsity: fraction of (m2×n2) blocks whose Frobenius norm is
+/// below eps_rel · rms-block-norm. This is the rate that matters for the
+/// paper's hardware argument (whole blocks skippable).
+pub fn block_sparsity(w: &Tensor, m2: usize, n2: usize, eps_rel: f32) -> anyhow::Result<f64> {
+    let norms = w.block_fro_norms(m2, n2)?;
+    let nb = norms.len();
+    let rms = (norms.data().iter().map(|x| (x * x) as f64).sum::<f64>() / nb as f64)
+        .sqrt() as f32;
+    let thr = eps_rel * rms.max(1e-20);
+    let zeros = norms.data().iter().filter(|x| **x < thr).count();
+    Ok(zeros as f64 / nb as f64)
+}
+
+/// Sparsity of an explicit {0,1} mask (RigL / pruning baselines).
+pub fn mask_sparsity(mask: &Tensor) -> f64 {
+    let n = mask.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let zeros = mask.data().iter().filter(|x| **x == 0.0).count();
+    zeros as f64 / n as f64
+}
+
+/// Weighted aggregate over layers: Σ zeros / Σ entries.
+pub fn aggregate(parts: &[(f64, usize)]) -> f64 {
+    let total: usize = parts.iter().map(|(_, n)| n).sum();
+    if total == 0 {
+        return 0.0;
+    }
+    parts.iter().map(|(rate, n)| rate * *n as f64).sum::<f64>() / total as f64
+}
+
+/// Default relative threshold used by all experiment drivers. Chosen so a
+/// block whose S entry was ℓ1-shrunk to < 2% of the typical magnitude
+/// counts as pruned — matches how the preliminary code thresholds before
+/// reporting.
+pub const DEFAULT_EPS_REL: f32 = 0.02;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn element_sparsity_counts_zeros() {
+        let w = Tensor::new(&[2, 4], vec![0.0, 1.0, 0.0, 2.0, 0.0, 0.0, 3.0, 0.0]).unwrap();
+        let s = element_sparsity(&w, 0.01);
+        assert!((s - 5.0 / 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn block_sparsity_whole_blocks() {
+        // 4×4 matrix, 2×2 blocks: zero out one of the four blocks
+        let mut w = Tensor::full(&[4, 4], 1.0);
+        for i in 0..2 {
+            for j in 0..2 {
+                w.set2(i, j, 0.0);
+            }
+        }
+        let s = block_sparsity(&w, 2, 2, 0.01).unwrap();
+        assert!((s - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mask_sparsity_exact() {
+        let m = Tensor::new(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        assert_eq!(mask_sparsity(&m), 0.5);
+    }
+
+    #[test]
+    fn aggregate_weights_by_size() {
+        let agg = aggregate(&[(1.0, 10), (0.0, 30)]);
+        assert!((agg - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scale_free() {
+        let w = Tensor::new(&[1, 4], vec![0.0, 5.0, 0.0, 5.0]).unwrap();
+        let w_scaled = w.scale(1e-6);
+        assert_eq!(element_sparsity(&w, 0.02), element_sparsity(&w_scaled, 0.02));
+    }
+}

@@ -1,0 +1,363 @@
+//! Host tensor substrate: a row-major f32 NDArray with exactly the ops the
+//! coordinator needs (reshape, matmul, Kronecker product, block reductions)
+//! plus conversions to/from `xla::Literal`.
+//!
+//! This is deliberately *not* a general tensor library: it backs sparsity
+//! measurement, KPD reconstruction checks, dataset assembly and the
+//! property tests — the heavy math lives in the AOT-compiled HLO.
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Self { shape: shape.to_vec(), data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Self { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn from_fn(shape: &[usize], mut f: impl FnMut(usize) -> f32) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: (0..n).map(|i| f(i)).collect() }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("cannot reshape {:?} to {:?}", self.shape, shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// 2-D accessor.
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j] = v;
+    }
+
+    /// Dense matmul (naive ikj loop; used only in tests/measurement).
+    pub fn matmul(&self, rhs: &Tensor) -> Result<Tensor> {
+        if self.shape.len() != 2 || rhs.shape.len() != 2 || self.shape[1] != rhs.shape[0] {
+            bail!("matmul shape mismatch {:?} x {:?}", self.shape, rhs.shape);
+        }
+        let (m, k, n) = (self.shape[0], self.shape[1], rhs.shape[1]);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let a = self.data[i * k + kk];
+                if a == 0.0 {
+                    continue;
+                }
+                let row = &rhs.data[kk * n..(kk + 1) * n];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * row[j];
+                }
+            }
+        }
+        Tensor::new(&[m, n], out)
+    }
+
+    /// Kronecker product of two matrices (paper Eq. 2 building block).
+    pub fn kron(&self, rhs: &Tensor) -> Result<Tensor> {
+        if self.shape.len() != 2 || rhs.shape.len() != 2 {
+            bail!("kron needs 2-D operands");
+        }
+        let (m1, n1) = (self.shape[0], self.shape[1]);
+        let (m2, n2) = (rhs.shape[0], rhs.shape[1]);
+        let mut out = vec![0.0f32; m1 * m2 * n1 * n2];
+        let (rows, cols) = (m1 * m2, n1 * n2);
+        for i1 in 0..m1 {
+            for j1 in 0..n1 {
+                let a = self.at2(i1, j1);
+                if a == 0.0 {
+                    continue;
+                }
+                for i2 in 0..m2 {
+                    for j2 in 0..n2 {
+                        out[(i1 * m2 + i2) * cols + (j1 * n2 + j2)] = a * rhs.at2(i2, j2);
+                    }
+                }
+            }
+        }
+        Tensor::new(&[rows, cols], out)
+    }
+
+    /// Elementwise product.
+    pub fn hadamard(&self, rhs: &Tensor) -> Result<Tensor> {
+        if self.shape != rhs.shape {
+            bail!("hadamard shape mismatch {:?} vs {:?}", self.shape, rhs.shape);
+        }
+        let data = self.data.iter().zip(&rhs.data).map(|(a, b)| a * b).collect();
+        Tensor::new(&self.shape, data)
+    }
+
+    pub fn add(&self, rhs: &Tensor) -> Result<Tensor> {
+        if self.shape != rhs.shape {
+            bail!("add shape mismatch {:?} vs {:?}", self.shape, rhs.shape);
+        }
+        let data = self.data.iter().zip(&rhs.data).map(|(a, b)| a + b).collect();
+        Tensor::new(&self.shape, data)
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|x| x * s).collect() }
+    }
+
+    pub fn abs_sum(&self) -> f32 {
+        self.data.iter().map(|x| x.abs()).sum()
+    }
+
+    pub fn max_abs_diff(&self, rhs: &Tensor) -> f32 {
+        self.data
+            .iter()
+            .zip(&rhs.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// KPD reconstruction W_r = Σ_i (S ⊙ A_i) ⊗ B_i (paper Eq. 3).
+    /// s: (m1,n1); a: (r,m1,n1) flattened as r matrices; b: (r,m2,n2).
+    pub fn kpd_reconstruct(s: &Tensor, a: &Tensor, b: &Tensor) -> Result<Tensor> {
+        if a.shape.len() != 3 || b.shape.len() != 3 || s.shape.len() != 2 {
+            bail!("kpd_reconstruct wants s:2d a:3d b:3d");
+        }
+        let (r, m1, n1) = (a.shape[0], a.shape[1], a.shape[2]);
+        let (rb, m2, n2) = (b.shape[0], b.shape[1], b.shape[2]);
+        if rb != r || s.shape != [m1, n1] {
+            bail!("kpd_reconstruct rank/shape mismatch");
+        }
+        let mut acc = Tensor::zeros(&[m1 * m2, n1 * n2]);
+        for i in 0..r {
+            let ai = Tensor::new(&[m1, n1], a.data[i * m1 * n1..(i + 1) * m1 * n1].to_vec())?;
+            let bi = Tensor::new(&[m2, n2], b.data[i * m2 * n2..(i + 1) * m2 * n2].to_vec())?;
+            let sa = s.hadamard(&ai)?;
+            acc = acc.add(&sa.kron(&bi)?)?;
+        }
+        Ok(acc)
+    }
+
+    /// Per-block Frobenius norms of a 2-D matrix: (m1, n1) grid.
+    pub fn block_fro_norms(&self, m2: usize, n2: usize) -> Result<Tensor> {
+        if self.shape.len() != 2 {
+            bail!("block norms need 2-D input");
+        }
+        let (m, n) = (self.shape[0], self.shape[1]);
+        if m % m2 != 0 || n % n2 != 0 {
+            bail!("block ({m2},{n2}) does not tile ({m},{n})");
+        }
+        let (m1, n1) = (m / m2, n / n2);
+        let mut out = vec![0.0f32; m1 * n1];
+        for i in 0..m {
+            for j in 0..n {
+                let v = self.data[i * n + j];
+                out[(i / m2) * n1 + (j / n2)] += v * v;
+            }
+        }
+        for v in &mut out {
+            *v = v.sqrt();
+        }
+        Tensor::new(&[m1, n1], out)
+    }
+}
+
+// ----------------------------------------------------------- xla bridging
+
+/// Dtypes we exchange with PJRT (mirrors the manifest's dtype strings).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            "u32" => Ok(DType::U32),
+            other => Err(anyhow!("unsupported dtype '{other}'")),
+        }
+    }
+}
+
+/// Host value crossing the PJRT boundary: f32 tensor or i32/u32 raw data.
+#[derive(Clone, Debug)]
+pub enum HostValue {
+    F32(Tensor),
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+    U32 { shape: Vec<usize>, data: Vec<u32> },
+}
+
+impl HostValue {
+    pub fn scalar_f32(v: f32) -> Self {
+        HostValue::F32(Tensor::new(&[], vec![v]).unwrap())
+    }
+
+    pub fn scalar_u32(v: u32) -> Self {
+        HostValue::U32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostValue::F32(t) => t.shape(),
+            HostValue::I32 { shape, .. } => shape,
+            HostValue::U32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostValue::F32(_) => DType::F32,
+            HostValue::I32 { .. } => DType::I32,
+            HostValue::U32 { .. } => DType::U32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            HostValue::F32(t) => Ok(t),
+            other => Err(anyhow!("expected f32 value, got {:?}", other.dtype())),
+        }
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostValue::F32(t) => xla::Literal::vec1(t.data()).reshape(&dims)?,
+            HostValue::I32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+            HostValue::U32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+        };
+        Ok(lit)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                let v = lit.to_vec::<f32>()?;
+                Ok(HostValue::F32(Tensor::new(&dims, v)?))
+            }
+            xla::ElementType::S32 => {
+                Ok(HostValue::I32 { shape: dims, data: lit.to_vec::<i32>()? })
+            }
+            xla::ElementType::U32 => {
+                Ok(HostValue::U32 { shape: dims, data: lit.to_vec::<u32>()? })
+            }
+            other => Err(anyhow!("unsupported literal type {other:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::new(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Tensor::new(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn kron_known() {
+        // [[1,2]] ⊗ [[0,1],[1,0]] = [[0,1,0,2],[1,0,2,0]]
+        let a = Tensor::new(&[1, 2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::new(&[2, 2], vec![0.0, 1.0, 1.0, 0.0]).unwrap();
+        let k = a.kron(&b).unwrap();
+        assert_eq!(k.shape(), &[2, 4]);
+        assert_eq!(k.data(), &[0.0, 1.0, 0.0, 2.0, 1.0, 0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn kron_mixed_product_property() {
+        // (A⊗B)(C⊗D) = (AC)⊗(BD) — classic Kronecker identity
+        let a = Tensor::new(&[2, 2], vec![1.0, 2.0, 0.0, 1.0]).unwrap();
+        let b = Tensor::new(&[2, 2], vec![0.5, 0.0, 1.0, 2.0]).unwrap();
+        let c = Tensor::new(&[2, 2], vec![1.0, 1.0, 2.0, 0.0]).unwrap();
+        let d = Tensor::new(&[2, 2], vec![2.0, 1.0, 0.0, 1.0]).unwrap();
+        let lhs = a.kron(&b).unwrap().matmul(&c.kron(&d).unwrap()).unwrap();
+        let rhs = a.matmul(&c).unwrap().kron(&b.matmul(&d).unwrap()).unwrap();
+        assert!(lhs.max_abs_diff(&rhs) < 1e-5);
+    }
+
+    #[test]
+    fn kpd_reconstruct_single_block() {
+        // S selects exactly one block: W must equal that block placed there
+        let s = Tensor::new(&[2, 2], vec![0.0, 1.0, 0.0, 0.0]).unwrap();
+        let a = Tensor::new(&[1, 2, 2], vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        let b = Tensor::new(&[1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let w = Tensor::kpd_reconstruct(&s, &a, &b).unwrap();
+        assert_eq!(w.shape(), &[4, 4]);
+        assert_eq!(w.at2(0, 2), 1.0);
+        assert_eq!(w.at2(0, 3), 2.0);
+        assert_eq!(w.at2(1, 2), 3.0);
+        assert_eq!(w.at2(0, 0), 0.0);
+        assert_eq!(w.at2(2, 2), 0.0);
+    }
+
+    #[test]
+    fn block_fro() {
+        let w = Tensor::new(&[2, 4], vec![3.0, 4.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0]).unwrap();
+        let norms = w.block_fro_norms(2, 2).unwrap();
+        assert_eq!(norms.shape(), &[1, 2]);
+        assert!((norms.data()[0] - 5.0).abs() < 1e-6);
+        assert!((norms.data()[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn reshape_errors() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert!(t.clone().reshape(&[3, 2]).is_ok());
+        assert!(t.reshape(&[4, 2]).is_err());
+    }
+}

@@ -1,0 +1,147 @@
+//! Property-testing mini-framework (no proptest in the offline cache).
+//!
+//! Usage:
+//! ```ignore
+//! prop_check("kron reconstruction", 100, |g| {
+//!     let m1 = g.usize_in(1, 4);
+//!     ...
+//!     prop_assert!(cond, "message {x}");
+//!     Ok(())
+//! });
+//! ```
+//! Each case gets a deterministic seed derived from the property name and
+//! the case index, so failures print a reproducible case id. On failure we
+//! re-run with the same seed to confirm, then panic with the case id —
+//! simple deterministic replay instead of shrinking.
+
+use crate::util::rng::Rng;
+
+pub struct Gen {
+    pub rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.rng.normal()).collect()
+    }
+
+    pub fn uniform_vec(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.rng.range(lo, hi)).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Pick a divisor of x uniformly.
+    pub fn divisor_of(&mut self, x: usize) -> usize {
+        let ds = crate::blockopt::divisors(x);
+        ds[self.rng.below(ds.len())]
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+fn name_seed(name: &str) -> u64 {
+    // FNV-1a over the property name
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Run `cases` random cases of `prop`. `prop` returns Err(msg) on failure.
+pub fn prop_check<F>(name: &str, cases: usize, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    let base = name_seed(name);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen { rng: Rng::new(seed), case };
+        if let Err(msg) = prop(&mut g) {
+            // deterministic replay to rule out flaky environment effects
+            let mut g2 = Gen { rng: Rng::new(seed), case };
+            let second = prop(&mut g2);
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}): {msg}\
+                 \nreplay: {}",
+                match second {
+                    Err(m) => format!("reproduces ({m})"),
+                    Ok(()) => "DID NOT reproduce (nondeterministic property!)".into(),
+                }
+            );
+        }
+    }
+}
+
+/// assert! that returns Err instead of panicking (for use inside props).
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Approximate float comparison helper for properties.
+pub fn close(a: f32, b: f32, atol: f32, rtol: f32) -> bool {
+    (a - b).abs() <= atol + rtol * b.abs().max(a.abs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        // count via interior mutability through a cell
+        let counter = std::cell::Cell::new(0usize);
+        prop_check("always-true", 50, |g| {
+            counter.set(counter.get() + 1);
+            let x = g.usize_in(1, 10);
+            prop_assert!(x >= 1 && x <= 10, "range");
+            Ok(())
+        });
+        count += counter.get();
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn failing_property_panics_with_case() {
+        prop_check("always-false", 10, |_g| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn gen_divisor() {
+        prop_check("divisor divides", 100, |g| {
+            let x = g.usize_in(1, 500);
+            let d = g.divisor_of(x);
+            prop_assert!(x % d == 0, "{d} !| {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0 + 1e-6, 1e-5, 0.0));
+        assert!(!close(1.0, 1.1, 1e-5, 1e-5));
+    }
+}

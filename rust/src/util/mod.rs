@@ -1,0 +1,77 @@
+//! Shared substrates: PRNG, JSON, thread pool, logging, timing.
+
+pub mod json;
+pub mod log;
+pub mod pool;
+pub mod rng;
+
+/// Wall-clock stopwatch used by the coordinator and the bench harness.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: std::time::Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: std::time::Instant::now() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Mean and (sample) standard deviation — every table reports mean±std
+/// over seeds, mirroring the paper's 5-run convention.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (f64::NAN, f64::NAN);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    if xs.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0);
+    (mean, var.sqrt())
+}
+
+/// Human-readable counts: 7840 -> "7.84K", 2_160_000_000 -> "2.16G".
+pub fn human_count(x: f64) -> String {
+    let ax = x.abs();
+    if ax >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if ax >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if ax >= 1e3 {
+        format!("{:.2}K", x / 1e3)
+    } else {
+        format!("{x:.0}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basics() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - 1.0).abs() < 1e-12);
+        let (m1, s1) = mean_std(&[5.0]);
+        assert_eq!(m1, 5.0);
+        assert_eq!(s1, 0.0);
+    }
+
+    #[test]
+    fn human() {
+        assert_eq!(human_count(7840.0), "7.84K");
+        assert_eq!(human_count(2.16e9), "2.16G");
+        assert_eq!(human_count(12.0), "12");
+    }
+}

@@ -1,0 +1,157 @@
+//! Thread-pool substrate (no tokio/rayon in the offline cache).
+//!
+//! A fixed pool of std threads with a shared injector queue, plus a
+//! `scope_for` parallel-for used by the data pipeline (batch assembly) and
+//! the bench harness (multi-seed sweeps). Work items are boxed closures;
+//! results come back over a channel in submission order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<std::collections::VecDeque<Job>>,
+    cv: Condvar,
+    shutdown: Mutex<bool>,
+    active: AtomicUsize,
+}
+
+/// Fixed-size worker pool.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(std::collections::VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: Mutex::new(false),
+            active: AtomicUsize::new(0),
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let sh = shared.clone();
+                thread::Builder::new()
+                    .name(format!("pool-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { shared, workers }
+    }
+
+    /// Pool sized to the machine (leaving one core for the main thread).
+    pub fn default_size() -> Self {
+        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Self::new(n.saturating_sub(1).max(1))
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.push_back(Box::new(f));
+        self.shared.cv.notify_one();
+    }
+
+    /// Run `f(i)` for i in 0..n on the pool, returning results in order.
+    pub fn map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(usize) -> T + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let (tx, rx) = mpsc::channel::<(usize, T)>();
+        for i in 0..n {
+            let f = f.clone();
+            let tx = tx.clone();
+            self.submit(move || {
+                let out = f(i);
+                let _ = tx.send((i, out));
+            });
+        }
+        drop(tx);
+        let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for (i, v) in rx {
+            results[i] = Some(v);
+        }
+        results.into_iter().map(|v| v.expect("worker panicked")).collect()
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break Some(j);
+                }
+                if *sh.shutdown.lock().unwrap() {
+                    break None;
+                }
+                q = sh.cv.wait(q).unwrap();
+            }
+        };
+        match job {
+            Some(j) => {
+                sh.active.fetch_add(1, Ordering::SeqCst);
+                j();
+                sh.active.fetch_sub(1, Ordering::SeqCst);
+            }
+            None => return,
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        *self.shared.shutdown.lock().unwrap() = true;
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn map_in_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.map(100, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn all_jobs_run() {
+        let pool = ThreadPool::new(3);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..50 {
+            let c = counter.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join on drop
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn single_thread_pool() {
+        let pool = ThreadPool::new(1);
+        let out = pool.map(10, |i| i + 1);
+        assert_eq!(out[9], 10);
+    }
+}

@@ -1,0 +1,220 @@
+//! Integration tests: the full L3 stack against the real AOT artifacts.
+//!
+//! These need `make artifacts` to have run; they skip (with a message)
+//! when artifacts/ is missing so `cargo test` stays green in a fresh
+//! checkout. A single shared Runtime keeps PJRT client setup cost down.
+
+use blocksparse::config::{Config, TrainConfig};
+use blocksparse::coordinator::{self, experiment, probe, Trainer};
+use blocksparse::data::assemble_batch;
+use blocksparse::runtime::Runtime;
+
+/// PJRT clients are not Send/Sync (Rc inside the xla crate), so each test
+/// opens its own Runtime on its own thread; compile caches are per-test.
+fn runtime() -> Option<Runtime> {
+    let dir = blocksparse::artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new(dir).expect("runtime"))
+}
+
+macro_rules! rt_or_skip {
+    () => {
+        match runtime() {
+            Some(rt) => rt,
+            None => return,
+        }
+    };
+}
+
+fn quick_cfg(spec: &str, steps: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::from_config(&Config::default(), spec);
+    cfg.steps = steps;
+    cfg.seeds = vec![0];
+    cfg.eval_every = 0;
+    cfg.train_examples = 1024;
+    cfg.test_examples = 256;
+    cfg
+}
+
+#[test]
+fn init_is_seed_deterministic() {
+    let rt = rt_or_skip!();
+    let a = rt.init_state("qs_kpd", 7).unwrap();
+    let b = rt.init_state("qs_kpd", 7).unwrap();
+    let c = rt.init_state("qs_kpd", 8).unwrap();
+    let ta = a.param_tensor("fc.A").unwrap();
+    let tb = b.param_tensor("fc.A").unwrap();
+    let tc = c.param_tensor("fc.A").unwrap();
+    assert_eq!(ta.data(), tb.data());
+    assert_ne!(ta.data(), tc.data());
+    // S starts at ones, biases at zero
+    let s = a.param_tensor("fc.S").unwrap();
+    assert!(s.data().iter().all(|&v| v == 1.0));
+}
+
+#[test]
+fn train_step_updates_params_and_returns_finite_metrics() {
+    let rt = rt_or_skip!();
+    let spec = rt.spec("qs_kpd").unwrap().clone();
+    let (train, _) = coordinator::dataset_for(&spec, 1, 256, 64).unwrap();
+    let mut state = rt.init_state("qs_kpd", 0).unwrap();
+    let before = state.param_tensor("fc.A").unwrap();
+    let idx: Vec<usize> = (0..spec.batch).collect();
+    let b = assemble_batch(&train, &idx).unwrap();
+    let m = rt.train_step(&mut state, &b.x, &b.y, &[0.01, 0.1]).unwrap();
+    assert_eq!(m.len(), spec.metrics.len());
+    assert!(m.iter().all(|v| v.is_finite()), "{m:?}");
+    let after = state.param_tensor("fc.A").unwrap();
+    assert!(before.max_abs_diff(&after) > 0.0, "params did not move");
+}
+
+#[test]
+fn loss_decreases_over_training() {
+    let rt = rt_or_skip!();
+    let cfg = quick_cfg("qs_kpd", 120);
+    let spec = rt.spec("qs_kpd").unwrap().clone();
+    let (train, test) =
+        coordinator::dataset_for(&spec, cfg.data_seed, 1024, 256).unwrap();
+    let outcome = Trainer::new(&rt, &cfg).run(0, &train, &test).unwrap();
+    let series = outcome.history.series("loss");
+    let head: f64 = series[..10].iter().map(|(_, v)| v).sum::<f64>() / 10.0;
+    let tail: f64 =
+        series[series.len() - 10..].iter().map(|(_, v)| v).sum::<f64>() / 10.0;
+    assert!(tail < head, "loss did not decrease: {head} -> {tail}");
+    assert!(outcome.test_acc > 20.0, "acc {}% not above chance", outcome.test_acc);
+}
+
+#[test]
+fn materialize_matches_host_reconstruction() {
+    let rt = rt_or_skip!();
+    let state = rt.init_state("qs_kpd", 3).unwrap();
+    let ws = rt.materialize(&state).unwrap();
+    assert_eq!(ws.len(), 1);
+    let (name, w) = &ws[0];
+    assert_eq!(name, "fc");
+    assert_eq!(w.shape(), &[10, 784]);
+    // host-side Eq. 3 reconstruction must agree with the HLO one
+    let s = state.param_tensor("fc.S").unwrap();
+    let a = state.param_tensor("fc.A").unwrap();
+    let b = state.param_tensor("fc.B").unwrap();
+    let host = blocksparse::tensor::Tensor::kpd_reconstruct(&s, &a, &b).unwrap();
+    assert!(w.max_abs_diff(&host) < 1e-4, "diff {}", w.max_abs_diff(&host));
+}
+
+#[test]
+fn rigl_controller_preserves_block_count() {
+    let rt = rt_or_skip!();
+    let spec = rt.spec("t1_rigl_b2x2").unwrap().clone();
+    let mut state = rt.init_state("t1_rigl_b2x2", 0).unwrap();
+    let mask0 = state.param_tensor("fc.mask").unwrap();
+    let nnz0: f32 = mask0.data().iter().sum();
+    // feed fake gradient norms (distinct values so threshold ties are rare)
+    let gnorm: Vec<f32> = (0..mask0.len()).map(|i| i as f32 * 0.37 + 0.01).collect();
+    rt.rigl_update(&mut state, &gnorm, 0.3).unwrap();
+    let mask1 = state.param_tensor("fc.mask").unwrap();
+    let nnz1: f32 = mask1.data().iter().sum();
+    // drop/grow is threshold-based: magnitude ties may admit a few extra
+    // blocks — allow 1% drift
+    assert!(
+        (nnz0 - nnz1).abs() <= (0.01 * mask0.len() as f32).max(1.0),
+        "nnz changed {nnz0} -> {nnz1}"
+    );
+    assert!(mask0.max_abs_diff(&mask1) > 0.0, "mask did not change");
+}
+
+#[test]
+fn prune_executable_hits_target() {
+    let rt = rt_or_skip!();
+    let mut state = rt.init_state("t1_prune", 0).unwrap();
+    rt.prune(&mut state, 0.6).unwrap();
+    let mask = state.param_tensor("fc.emask").unwrap();
+    let sparsity = blocksparse::sparsity::mask_sparsity(&mask);
+    assert!((sparsity - 0.6).abs() < 0.02, "sparsity {sparsity}");
+}
+
+#[test]
+fn full_sweep_on_tiny_budget_all_methods() {
+    let rt = rt_or_skip!();
+    for spec in ["t1_kpd_b2x2", "t1_gl_b2x2", "t1_egl_b2x2", "t1_rigl_b2x2",
+                 "t1_prune", "t1_dense"] {
+        let mut cfg = quick_cfg(spec, 40);
+        cfg.lambda = 0.01;
+        let res = experiment::run_spec(&rt, &cfg).unwrap();
+        assert!(res.acc_mean.is_finite(), "{spec}");
+        assert!(res.train_params > 0, "{spec}");
+        assert!(res.step_flops > 0, "{spec}");
+    }
+}
+
+#[test]
+fn pattern_spec_reports_all_series() {
+    let rt = rt_or_skip!();
+    let cfg = quick_cfg("f3a_pattern", 30);
+    let spec = rt.spec("f3a_pattern").unwrap().clone();
+    let k = spec.num_patterns().unwrap();
+    assert_eq!(k, 4);
+    let (train, test) = coordinator::dataset_for(&spec, 1, 1024, 256).unwrap();
+    let outcome = Trainer::new(&rt, &cfg).run(0, &train, &test).unwrap();
+    for p in 0..k {
+        let s = outcome.history.series(&format!("s_l1_p{p}"));
+        assert_eq!(s.len(), 30, "pattern {p} series incomplete");
+        assert!(s.iter().all(|(_, v)| v.is_finite() && *v >= 0.0));
+    }
+    assert_eq!(outcome.pattern_accs.len(), k);
+    let norms = probe::pattern_s_norms(&spec, &outcome.state).unwrap();
+    assert_eq!(norms.len(), k);
+}
+
+#[test]
+fn lm_spec_trains_and_counts_token_accuracy() {
+    let rt = rt_or_skip!();
+    let mut cfg = quick_cfg("it_lm_kpd", 30);
+    cfg.lr = 3e-3;
+    cfg.lambda = 1e-4;
+    cfg.train_examples = 256;
+    cfg.test_examples = 64;
+    let res = experiment::run_spec(&rt, &cfg).unwrap();
+    assert!(res.acc_mean > 0.0 && res.acc_mean <= 100.0);
+}
+
+#[test]
+fn eval_accuracy_in_bounds_for_all_quick_specs() {
+    let rt = rt_or_skip!();
+    let spec = rt.spec("t1_dense").unwrap().clone();
+    let (_, test) = coordinator::dataset_for(&spec, 1, 1024, 512).unwrap();
+    let state = rt.init_state("t1_dense", 0).unwrap();
+    let cfg = quick_cfg("t1_dense", 1);
+    let tr = Trainer::new(&rt, &cfg);
+    let (acc, loss, _) = tr.evaluate(&state, &spec, &test).unwrap();
+    assert!((0.0..=100.0).contains(&acc));
+    assert!(loss.is_finite());
+}
+
+#[test]
+fn sparsity_probe_runs_for_every_method_family() {
+    let rt = rt_or_skip!();
+    for spec_key in ["t1_kpd_b2x2", "t1_gl_b2x2", "t1_rigl_b2x2", "t1_prune",
+                     "t1_dense"] {
+        let spec = rt.spec(spec_key).unwrap().clone();
+        let state = rt.init_state(spec_key, 0).unwrap();
+        let s = probe::measure_sparsity(&rt, &spec, &state).unwrap();
+        assert!((0.0..=100.0).contains(&s), "{spec_key}: {s}");
+    }
+}
+
+#[test]
+fn accounting_shapes_match_paper_directions() {
+    let rt = rt_or_skip!();
+    // Ours at (16,2) must be far below dense at the same shapes (Table 1)
+    let kpd = experiment::accounting(rt.spec("t1_kpd_b16x2").unwrap());
+    let gl = experiment::accounting(rt.spec("t1_gl_b16x2").unwrap());
+    assert!(kpd.0 < gl.0 / 4, "params {} vs {}", kpd.0, gl.0);
+    assert!(kpd.1 < gl.1, "flops {} vs {}", kpd.1, gl.1);
+    // transformer: the 97%-reduction headline direction (Table 3)
+    let kpd3 = experiment::accounting(rt.spec("t3_vit_t_kpd").unwrap());
+    let dense3 = experiment::accounting(rt.spec("t3_vit_t_dense").unwrap());
+    assert!(kpd3.0 < dense3.0 / 2, "{} vs {}", kpd3.0, dense3.0);
+}

@@ -1,0 +1,238 @@
+//! Property-based tests over the pure substrates (mini-prop framework).
+//!
+//! Invariants: Kronecker algebra, KPD reconstruction vs block structure,
+//! Eq. 5 optimality, FLOPs formula consistency, sparsity measurement,
+//! config/json round-trips, batcher coverage, checkpoint round-trip.
+
+use blocksparse::blockopt;
+use blocksparse::checkpoint::Checkpoint;
+use blocksparse::config::Config;
+use blocksparse::data::{Batcher, Dataset};
+use blocksparse::flops::{self, KpdDims};
+use blocksparse::prop_assert;
+use blocksparse::sparsity;
+use blocksparse::tensor::Tensor;
+use blocksparse::testutil::{close, prop_check};
+use blocksparse::util::json::Json;
+
+#[test]
+fn prop_kron_dimensions_and_values() {
+    prop_check("kron dims", 100, |g| {
+        let (m1, n1) = (g.usize_in(1, 5), g.usize_in(1, 5));
+        let (m2, n2) = (g.usize_in(1, 5), g.usize_in(1, 5));
+        let a = Tensor::new(&[m1, n1], g.normal_vec(m1 * n1)).unwrap();
+        let b = Tensor::new(&[m2, n2], g.normal_vec(m2 * n2)).unwrap();
+        let k = a.kron(&b).unwrap();
+        prop_assert!(k.shape() == [m1 * m2, n1 * n2], "shape {:?}", k.shape());
+        // spot-check a random entry
+        let (i1, j1) = (g.usize_in(0, m1 - 1), g.usize_in(0, n1 - 1));
+        let (i2, j2) = (g.usize_in(0, m2 - 1), g.usize_in(0, n2 - 1));
+        let want = a.at2(i1, j1) * b.at2(i2, j2);
+        let got = k.at2(i1 * m2 + i2, j1 * n2 + j2);
+        prop_assert!(close(got, want, 1e-6, 1e-5), "{got} != {want}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kpd_zero_s_entry_zeroes_whole_block() {
+    prop_check("kpd zero block", 60, |g| {
+        let (m1, n1) = (g.usize_in(1, 4), g.usize_in(1, 4));
+        let (m2, n2) = (g.usize_in(1, 4), g.usize_in(1, 4));
+        let r = g.usize_in(1, 3);
+        let mut s = Tensor::new(&[m1, n1], g.uniform_vec(m1 * n1, 0.5, 1.5)).unwrap();
+        let (zi, zj) = (g.usize_in(0, m1 - 1), g.usize_in(0, n1 - 1));
+        s.set2(zi, zj, 0.0);
+        let a = Tensor::new(&[r, m1, n1], g.normal_vec(r * m1 * n1)).unwrap();
+        let b = Tensor::new(&[r, m2, n2], g.normal_vec(r * m2 * n2)).unwrap();
+        let w = Tensor::kpd_reconstruct(&s, &a, &b).unwrap();
+        for i in 0..m2 {
+            for j in 0..n2 {
+                let v = w.at2(zi * m2 + i, zj * n2 + j);
+                prop_assert!(v == 0.0, "block ({zi},{zj}) leaked {v}");
+            }
+        }
+        // and block sparsity sees at least that one zero block
+        let rate = sparsity::block_sparsity(&w, m2, n2, 0.001).unwrap();
+        prop_assert!(rate >= 1.0 / (m1 * n1) as f64 - 1e-9, "rate {rate}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eq5_bnb_is_optimal() {
+    prop_check("eq5 optimal", 80, |g| {
+        let m = g.usize_in(1, 300);
+        let n = g.usize_in(1, 300);
+        let d = blockopt::optimal_block_r1(m, n);
+        let best = blockopt::optimal_block_r1_brute(m, n);
+        prop_assert!(
+            blockopt::eq5_cost(d.m1, d.n1, d.m2, d.n2) == best,
+            "bnb {} != brute {best} at ({m},{n})",
+            blockopt::eq5_cost(d.m1, d.n1, d.m2, d.n2)
+        );
+        prop_assert!(d.m1 * d.m2 == m && d.n1 * d.n2 == n, "factorization broken");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kpd_flops_below_dense_when_blocks_are_large() {
+    // Prop. 2's point: with n2 ≫ and small r, factorized training is
+    // cheaper; verify over random shapes with r=1 and n2 ≥ 8.
+    prop_check("kpd flops win", 60, |g| {
+        let m1 = g.usize_in(1, 8);
+        let m2 = g.usize_in(1, 4);
+        let n1 = g.usize_in(1, 8);
+        let n2 = 8 * g.usize_in(1, 8);
+        let d = KpdDims { m1, n1, m2, n2, r: 1 };
+        let nb = 64;
+        let dense = flops::dense_step_flops(nb, (m1 * m2) as u64, (n1 * n2) as u64);
+        let kpd = flops::kpd_step_flops(nb, d);
+        // win requires the (S⊙A) contraction not to dominate (n1 small)
+        // and the matrix large enough that constant terms don't (Prop. 2
+        // is an asymptotic statement)
+        if n1 <= 4 && m1 * n1 >= 2 && d.m() * d.n() >= 512 {
+            prop_assert!(kpd < dense, "kpd {kpd} !< dense {dense} at {d:?}");
+        }
+        prop_assert!(d.train_params() <= d.m() as u64 * d.n() as u64,
+                     "more params than dense");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_flops_linear_in_batch() {
+    prop_check("flops linear in N", 60, |g| {
+        let d = KpdDims {
+            m1: g.usize_in(1, 6), n1: g.usize_in(1, 6),
+            m2: g.usize_in(1, 6), n2: g.usize_in(1, 6),
+            r: g.usize_in(1, 4),
+        };
+        let f1 = flops::kpd_forward_flops(100, d) as f64;
+        let f2 = flops::kpd_forward_flops(200, d) as f64;
+        prop_assert!((f2 / f1) < 2.05 && (f2 / f1) > 1.8, "ratio {}", f2 / f1);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mask_sparsity_counts() {
+    prop_check("mask sparsity", 60, |g| {
+        let n = g.usize_in(1, 200);
+        let zeros = g.usize_in(0, n);
+        let mut data = vec![1.0f32; n];
+        for v in data.iter_mut().take(zeros) {
+            *v = 0.0;
+        }
+        let t = Tensor::new(&[n], data).unwrap();
+        let got = sparsity::mask_sparsity(&t);
+        prop_assert!(close(got as f32, zeros as f32 / n as f32, 1e-6, 0.0),
+                     "{got} vs {}/{}", zeros, n);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    prop_check("json roundtrip", 60, |g| {
+        // build a random nested value
+        let mut obj = std::collections::BTreeMap::new();
+        for i in 0..g.usize_in(0, 6) {
+            let v = match g.usize_in(0, 3) {
+                0 => Json::Num(g.f32_in(-1e6, 1e6) as f64),
+                1 => Json::Str(format!("s{}\"quote\n", g.usize_in(0, 99))),
+                2 => Json::Bool(g.bool()),
+                _ => Json::Arr(vec![Json::Num(i as f64), Json::Null]),
+            };
+            obj.insert(format!("k{i}"), v);
+        }
+        let j = Json::Obj(obj);
+        let text = j.to_string_pretty();
+        let back = Json::parse(&text).map_err(|e| e.to_string())?;
+        // numeric equality modulo f64 formatting
+        prop_assert!(format!("{back:?}") == format!("{j:?}"),
+                     "roundtrip mismatch:\n{j:?}\n{back:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_config_roundtrip_scalars() {
+    prop_check("config parse", 60, |g| {
+        let i = g.usize_in(0, 10_000) as i64;
+        let f = g.f32_in(-100.0, 100.0);
+        let text = format!("[a]\nx = {i}\ny = {f}\nz = \"v{i}\"\nw = [1, 2, 3]\n");
+        let cfg = Config::parse(&text).map_err(|e| e.to_string())?;
+        prop_assert!(cfg.usize_or("a.x", 9999) as i64 == i, "int");
+        prop_assert!(close(cfg.f64_or("a.y", 0.0) as f32, f, 1e-3, 1e-3), "float");
+        prop_assert!(cfg.str_or("a.z", "") == format!("v{i}"), "str");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batcher_epoch_is_permutation() {
+    prop_check("batcher coverage", 40, |g| {
+        let n = g.usize_in(4, 64);
+        let batch = g.usize_in(1, n);
+        let x: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let y: Vec<i32> = vec![0; n];
+        let d = Dataset::from_images(1, 2, x, y).unwrap();
+        let mut b = Batcher::new(&d, batch, g.usize_in(0, 1000) as u64, true);
+        let mut seen = vec![0usize; n];
+        for _ in 0..b.batches_per_epoch() {
+            let bt = b.next_batch().map_err(|e| e.to_string())?;
+            for v in bt.x.to_vec::<f32>().map_err(|e| e.to_string())? {
+                seen[v as usize] += 1;
+            }
+        }
+        prop_assert!(seen.iter().all(|&c| c <= 1), "repeat within epoch: {seen:?}");
+        let covered: usize = seen.iter().sum();
+        prop_assert!(covered == (n / batch) * batch, "covered {covered}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_checkpoint_roundtrip() {
+    prop_check("checkpoint roundtrip", 30, |g| {
+        let dir = std::env::temp_dir().join("bs_prop_ckpt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("c{}.bsck", g.case));
+        let k = g.usize_in(1, 5);
+        let entries: Vec<(String, Tensor)> = (0..k)
+            .map(|i| {
+                let rows = g.usize_in(1, 8);
+                let cols = g.usize_in(1, 8);
+                (format!("t{i}"),
+                 Tensor::new(&[rows, cols], g.normal_vec(rows * cols)).unwrap())
+            })
+            .collect();
+        Checkpoint::new(entries.clone()).save(&path).map_err(|e| e.to_string())?;
+        let back = Checkpoint::load(&path).map_err(|e| e.to_string())?;
+        prop_assert!(back.entries.len() == k, "count");
+        for (name, t) in &entries {
+            let bt = back.get(name).ok_or("missing entry")?;
+            prop_assert!(bt.shape() == t.shape(), "shape");
+            prop_assert!(bt.max_abs_diff(t) == 0.0, "data");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_block_fro_invariant_under_block_permutation() {
+    // permuting whole blocks permutes the norm grid (sum preserved)
+    prop_check("block fro permutation", 40, |g| {
+        let (m1, n1, m2, n2) = (g.usize_in(1, 3), g.usize_in(1, 3),
+                                g.usize_in(1, 3), g.usize_in(1, 3));
+        let w = Tensor::new(&[m1 * m2, n1 * n2],
+                            g.normal_vec(m1 * m2 * n1 * n2)).unwrap();
+        let norms = w.block_fro_norms(m2, n2).unwrap();
+        let total: f32 = norms.data().iter().map(|v| v * v).sum();
+        let frob: f32 = w.data().iter().map(|v| v * v).sum();
+        prop_assert!(close(total, frob, 1e-3, 1e-3), "{total} vs {frob}");
+        Ok(())
+    });
+}
