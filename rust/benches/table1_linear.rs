@@ -9,11 +9,12 @@
 //! size while every baseline stays at the dense 7.84K; Ours ≈ baselines'
 //! accuracy at (2,2) and trades accuracy at coarser blocks.
 //!
-//! Scale via env: BS_STEPS / BS_SEEDS / BS_TRAIN_N / BS_TEST_N.
+//! Scale via env: BS_STEPS / BS_SEEDS / BS_TRAIN_N / BS_TEST_N. Runs on
+//! whichever backend `backend::open_default` picks; specs the backend
+//! cannot run (e.g. missing HLO artifacts) are skipped, not failed.
 
 use blocksparse::bench::driver::{self, BenchEnv, ROW_HEADERS};
 use blocksparse::bench::TableWriter;
-use blocksparse::runtime::Runtime;
 
 // paper accuracy references per (block, method) for the inline comparison
 const PAPER: &[(&str, &str, &str)] = &[
@@ -43,7 +44,7 @@ fn paper_ref(block: &str, method: &str) -> Option<&'static str> {
 
 fn main() -> anyhow::Result<()> {
     blocksparse::util::log::set_level(blocksparse::util::log::Level::Warn);
-    let rt = Runtime::new(blocksparse::artifact_dir())?;
+    let be = blocksparse::backend::open_default()?;
     let env = BenchEnv::from_env(600, 3, 8192, 2048);
     let mut table = TableWriter::new(
         "Table 1 — linear model on synthetic-MNIST (paper: Table 1)",
@@ -55,14 +56,18 @@ fn main() -> anyhow::Result<()> {
     for (bk, label) in blocks.iter().zip(labels) {
         for method in ["gl", "egl", "rigl", "kpd"] {
             let spec = format!("t1_{method}_{bk}");
-            let res = driver::run_row(&rt, &env, &spec)?;
+            let Some(res) = driver::run_row_or_skip(be.as_ref(), &env, &spec)? else {
+                continue;
+            };
             driver::record_row("table1", label, &res)?;
             table.row(driver::cells(label, &res.method, &res,
                                     paper_ref(label, &res.method)));
         }
     }
     for spec in ["t1_prune", "t1_dense"] {
-        let res = driver::run_row(&rt, &env, spec)?;
+        let Some(res) = driver::run_row_or_skip(be.as_ref(), &env, spec)? else {
+            continue;
+        };
         driver::record_row("table1", "-", &res)?;
         table.row(driver::cells("-", &res.method, &res, paper_ref("-", &res.method)));
     }

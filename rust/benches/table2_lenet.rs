@@ -7,7 +7,6 @@
 
 use blocksparse::bench::driver::{self, BenchEnv, ROW_HEADERS};
 use blocksparse::bench::TableWriter;
-use blocksparse::runtime::Runtime;
 
 const COMBOS: &[(&str, &str)] = &[
     ("16x8_8x4_4x2", "(16,8)(8,4)(4,2)"),
@@ -24,7 +23,7 @@ const PAPER_GL: &[&str] = &["98.31 ± 0.54", "97.96 ± 0.51", "98.08 ± 0.60",
 
 fn main() -> anyhow::Result<()> {
     blocksparse::util::log::set_level(blocksparse::util::log::Level::Warn);
-    let rt = Runtime::new(blocksparse::artifact_dir())?;
+    let be = blocksparse::backend::open_default()?;
     // LeNet steps are ~30-70 ms: keep the default sweep moderate
     let env = BenchEnv::from_env(250, 2, 6144, 1024);
     let mut table = TableWriter::new(
@@ -35,7 +34,9 @@ fn main() -> anyhow::Result<()> {
     for (i, (key, label)) in COMBOS.iter().enumerate() {
         for method in ["gl", "egl", "rigl", "kpd"] {
             let spec = format!("t2_{method}_{key}");
-            let res = driver::run_row(&rt, &env, &spec)?;
+            let Some(res) = driver::run_row_or_skip(be.as_ref(), &env, &spec)? else {
+                continue; // LeNet specs need the AOT artifacts (pjrt build)
+            };
             driver::record_row("table2", label, &res)?;
             let paper = match method {
                 "kpd" => Some(PAPER_KPD[i]),
@@ -46,7 +47,9 @@ fn main() -> anyhow::Result<()> {
         }
     }
     for spec in ["t2_prune", "t2_dense"] {
-        let res = driver::run_row(&rt, &env, spec)?;
+        let Some(res) = driver::run_row_or_skip(be.as_ref(), &env, spec)? else {
+            continue;
+        };
         driver::record_row("table2", "-", &res)?;
         let paper = if res.method == "iter_prune" { Some("98.02 ± 0.82") } else { None };
         table.row(driver::cells("-", &res.method, &res, paper));

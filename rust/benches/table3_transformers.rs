@@ -13,11 +13,10 @@
 
 use blocksparse::bench::driver::{self, BenchEnv, ROW_HEADERS};
 use blocksparse::bench::TableWriter;
-use blocksparse::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
     blocksparse::util::log::set_level(blocksparse::util::log::Level::Warn);
-    let rt = Runtime::new(blocksparse::artifact_dir())?;
+    let be = blocksparse::backend::open_default()?;
     let mut table = TableWriter::new(
         "Table 3 — transformers on synthetic-CIFAR-100, 4×4 blocks (paper: Table 3)",
         &ROW_HEADERS,
@@ -50,10 +49,11 @@ fn main() -> anyhow::Result<()> {
         let env = BenchEnv::from_env(*steps, *seeds, 4096, 1024);
         for method in ["dense", "gl", "egl", "rigl", "kpd"] {
             let spec = format!("t3_{tag}_{method}");
-            if rt.spec(&spec).is_err() {
-                continue; // vit_b has no rigl row in the paper either
-            }
-            let res = driver::run_row(&rt, &env, &spec)?;
+            // vit_b has no rigl row in the paper; transformer specs as a
+            // whole need the AOT artifacts — skip whatever is unavailable
+            let Some(res) = driver::run_row_or_skip(be.as_ref(), &env, &spec)? else {
+                continue;
+            };
             driver::record_row("table3", label, &res)?;
             let pref = paper
                 .iter()

@@ -4,11 +4,10 @@
 
 use blocksparse::bench::driver::{self, BenchEnv, ROW_HEADERS};
 use blocksparse::bench::TableWriter;
-use blocksparse::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
     blocksparse::util::log::set_level(blocksparse::util::log::Level::Warn);
-    let rt = Runtime::new(blocksparse::artifact_dir())?;
+    let be = blocksparse::backend::open_default()?;
     let mut table = TableWriter::new(
         "Table 4 — impact of decomposition rank (paper: Table 4)",
         &ROW_HEADERS,
@@ -20,19 +19,23 @@ fn main() -> anyhow::Result<()> {
     let env_lin = BenchEnv::from_env(600, 2, 8192, 2048);
     let mut accs = Vec::new();
     for (i, r) in [1usize, 2, 4, 6].iter().enumerate() {
-        let res = driver::run_row(&rt, &env_lin, &format!("t4_linear_r{r}"))?;
+        let Some(res) = driver::run_row_or_skip(be.as_ref(), &env_lin,
+                                                &format!("t4_linear_r{r}"))? else {
+            continue;
+        };
         driver::record_row("table4", &format!("linear r={r}"), &res)?;
         accs.push(res.acc_mean);
         table.row(driver::cells(&format!("linear r={r}"), "kpd", &res,
                                 Some(paper_linear[i])));
     }
-    let env_vit = BenchEnv::from_env(150, 1, 4096, 1024);
     for (tag, paper, steps) in [("vit_t", &paper_vit, 150usize),
                                 ("swin_t", &paper_swin, 100)] {
-        let env = BenchEnv { steps, ..BenchEnv::from_env(steps, 1, 4096, 1024) };
-        let _ = &env_vit;
+        let env = BenchEnv::from_env(steps, 1, 4096, 1024);
         for (i, r) in [1usize, 2, 4].iter().enumerate() {
-            let res = driver::run_row(&rt, &env, &format!("t4_{tag}_r{r}"))?;
+            let Some(res) = driver::run_row_or_skip(be.as_ref(), &env,
+                                                    &format!("t4_{tag}_r{r}"))? else {
+                continue; // transformer rank specs need the AOT artifacts
+            };
             driver::record_row("table4", &format!("{tag} r={r}"), &res)?;
             table.row(driver::cells(&format!("{tag} r={r}"), "kpd", &res,
                                     Some(paper[i])));

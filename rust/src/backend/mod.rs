@@ -1,0 +1,174 @@
+//! Execution backends: the coordinator's only window onto "how a step runs".
+//!
+//! The `Backend` trait mirrors the execution surface the training loop
+//! needs — `init_state` / `train_step` / `eval_step` / `materialize` /
+//! `rigl_update` / `prune` — with two implementations:
+//!
+//! * [`native::NativeBackend`] (default): pure-Rust KPD-factorized
+//!   forward/backward, block-sparse baselines, SGD/momentum and the
+//!   ℓ1-on-S proximal update. Hermetic: no AOT artifacts, no PJRT.
+//! * `pjrt::PjrtBackend` (`--features pjrt`): the original AOT/HLO path,
+//!   wrapping `crate::runtime::Runtime`. All math lives in the lowered
+//!   executables; this adapter marshals `Tensor` state in and out of
+//!   `xla::Literal`s per call.
+//!
+//! State crossing the boundary is host-owned (`tensor::Tensor` /
+//! `HostValue`), so probes, checkpoints and tests are backend-agnostic.
+
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::manifest::SpecEntry;
+use crate::tensor::{HostValue, Tensor};
+
+/// Mutable training state for one spec: named parameter and optimizer
+/// tensors, threaded through consecutive train steps.
+pub struct TrainState {
+    pub spec: String,
+    pub param_names: Vec<String>,
+    pub opt_names: Vec<String>,
+    pub params: Vec<Tensor>,
+    pub opt: Vec<Tensor>,
+}
+
+impl TrainState {
+    pub fn param(&self, key: &str) -> Result<&Tensor> {
+        let i = self
+            .param_names
+            .iter()
+            .position(|n| n == key)
+            .ok_or_else(|| anyhow!("no param '{key}' in spec {}", self.spec))?;
+        Ok(&self.params[i])
+    }
+
+    /// Owned copy of a parameter (probe/test convenience).
+    pub fn param_tensor(&self, key: &str) -> Result<Tensor> {
+        self.param(key).cloned()
+    }
+
+    pub fn set_param(&mut self, key: &str, value: Tensor) -> Result<()> {
+        let i = self
+            .param_names
+            .iter()
+            .position(|n| n == key)
+            .ok_or_else(|| anyhow!("no param '{key}' in spec {}", self.spec))?;
+        if self.params[i].shape() != value.shape() {
+            bail!(
+                "set_param '{key}': shape {:?} != {:?}",
+                value.shape(),
+                self.params[i].shape()
+            );
+        }
+        self.params[i] = value;
+        Ok(())
+    }
+}
+
+/// An execution engine for training/eval steps. Object-safe: the
+/// coordinator, CLI and benches hold a `&dyn Backend` / `Box<dyn Backend>`.
+pub trait Backend {
+    /// Human-readable backend identity ("native-cpu", PJRT platform, ...).
+    fn name(&self) -> String;
+
+    /// All specs this backend can run, sorted by key.
+    fn specs(&self) -> Vec<&SpecEntry>;
+
+    fn spec(&self, key: &str) -> Result<&SpecEntry>;
+
+    /// Seed-deterministic fresh parameter + optimizer state.
+    fn init_state(&self, spec: &str, seed: u32) -> Result<TrainState>;
+
+    /// One training step: updates `state` in place, returns the metrics
+    /// vector (names in `spec.metrics`, `metrics[0]` is the loss).
+    fn train_step(
+        &self,
+        state: &mut TrainState,
+        x: &HostValue,
+        y: &HostValue,
+        hyper: &[f32],
+    ) -> Result<Vec<f32>>;
+
+    /// Evaluation on the current parameters: `[mean_ce, correct_count]`
+    /// (plus per-pattern extensions for pattern-selection specs).
+    fn eval_step(&self, state: &TrainState, x: &HostValue, y: &HostValue) -> Result<Vec<f32>>;
+
+    /// Reconstruct the (block-wise sparse) dense W of every slot.
+    fn materialize(&self, state: &TrainState) -> Result<Vec<(String, Tensor)>>;
+
+    /// Blockwise-RigL mask update (paper §6.1 baseline).
+    fn rigl_update(&self, state: &mut TrainState, gnorm: &[f32], alpha: f32) -> Result<()>;
+
+    /// Iterative-pruning step to a global sparsity target.
+    fn prune(&self, state: &mut TrainState, target: f32) -> Result<()>;
+
+    /// Number of per-block gradient-norm values appended to `train_step`
+    /// metrics for RigL specs (0 for every other method).
+    fn gnorm_len(&self, spec: &str) -> Result<usize>;
+}
+
+/// Open the backend for `artifact_dir`, honoring an explicit `--backend`
+/// override. Auto mode prefers PJRT when the build has it *and* AOT
+/// artifacts exist; otherwise the hermetic native backend.
+pub fn open(artifact_dir: &std::path::Path, force: Option<&str>) -> Result<Box<dyn Backend>> {
+    match force {
+        None => open_auto(artifact_dir),
+        Some("native") => Ok(Box::new(native::NativeBackend::with_default_specs())),
+        Some("pjrt") => open_pjrt(artifact_dir),
+        Some(other) => bail!("unknown backend '{other}' (expected 'native' or 'pjrt')"),
+    }
+}
+
+/// Default backend for benches/tests: auto mode on the default artifact dir.
+pub fn open_default() -> Result<Box<dyn Backend>> {
+    open(&crate::artifact_dir(), None)
+}
+
+fn open_auto(artifact_dir: &std::path::Path) -> Result<Box<dyn Backend>> {
+    #[cfg(feature = "pjrt")]
+    if artifact_dir.join("manifest.json").exists() {
+        return Ok(Box::new(pjrt::PjrtBackend::new(artifact_dir)?));
+    }
+    let _ = artifact_dir;
+    Ok(Box::new(native::NativeBackend::with_default_specs()))
+}
+
+#[cfg(feature = "pjrt")]
+fn open_pjrt(artifact_dir: &std::path::Path) -> Result<Box<dyn Backend>> {
+    Ok(Box::new(pjrt::PjrtBackend::new(artifact_dir)?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn open_pjrt(artifact_dir: &std::path::Path) -> Result<Box<dyn Backend>> {
+    let _ = artifact_dir;
+    bail!("this build has no PJRT support; rebuild with `--features pjrt` to run AOT artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_param_lookup_and_set() {
+        let mut st = TrainState {
+            spec: "t".into(),
+            param_names: vec!["fc.W".into()],
+            opt_names: vec![],
+            params: vec![Tensor::zeros(&[2, 3])],
+            opt: vec![],
+        };
+        assert!(st.param("fc.W").is_ok());
+        assert!(st.param("nope").is_err());
+        assert!(st.set_param("fc.W", Tensor::full(&[2, 3], 1.0)).is_ok());
+        assert_eq!(st.param("fc.W").unwrap().data()[0], 1.0);
+        assert!(st.set_param("fc.W", Tensor::zeros(&[3, 2])).is_err());
+    }
+
+    #[test]
+    fn open_unknown_backend_errors() {
+        let e = open(std::path::Path::new("."), Some("bogus"));
+        assert!(e.is_err());
+    }
+}

@@ -1,0 +1,245 @@
+//! Factorized KPD linear map: forward/backward without materializing W.
+//!
+//! W = Σ_r (S ⊙ A_r) ⊗ B_r   (paper Eq. 3), applied to a batch X (N × n)
+//! as Z = X·Wᵀ using the Kronecker identity
+//!     ((C ⊗ B) x)[i1·m2+i2] = Σ_{j1} C[i1,j1] · Σ_{j2} B[i2,j2] x[j1·n2+j2]
+//! so each rank costs two small matmuls (the paper's Eq. 18 operation
+//! count) instead of the dense N·m·n contraction:
+//!
+//!   T  = X′ · Bᵀ          X′ = X viewed as (N·n1, n2)      → (N·n1, m2)
+//!   Z += C · T′           T′ = T regrouped as (n1, N·m2)   → scatter (N, m)
+//!
+//! The backward pass reuses T′ per rank:
+//!   dC = dZ′ · T′ᵀ,   U′ = Cᵀ · dZ′,   dB = U″ᵀ · X′
+//! with dA = dC ⊙ S and dS = Σ_r dC_r ⊙ A_r.
+
+use crate::flops::KpdDims;
+
+use super::linalg;
+
+/// Regroup T (N·n1, m2) → T′ (n1, N·m2).
+fn regroup_t(t: &[f32], n_batch: usize, n1: usize, m2: usize) -> Vec<f32> {
+    let mut tp = vec![0.0f32; n1 * n_batch * m2];
+    for b in 0..n_batch {
+        for j1 in 0..n1 {
+            let src = &t[(b * n1 + j1) * m2..(b * n1 + j1 + 1) * m2];
+            let dst = &mut tp[j1 * n_batch * m2 + b * m2..j1 * n_batch * m2 + (b + 1) * m2];
+            dst.copy_from_slice(src);
+        }
+    }
+    tp
+}
+
+/// Hadamard product of two equal-length slices.
+fn had(a: &[f32], b: &[f32]) -> Vec<f32> {
+    a.iter().zip(b).map(|(x, y)| x * y).collect()
+}
+
+/// Factorized forward: logits Z (N, m1·m2) plus the per-rank T′ caches
+/// (n1, N·m2) that [`backward`] reuses.
+///
+/// Layouts: `x` (N, n1·n2), `s` (m1, n1), `a` (r, m1, n1), `b` (r, m2, n2),
+/// all row-major.
+pub fn forward(
+    x: &[f32],
+    n_batch: usize,
+    s: &[f32],
+    a: &[f32],
+    b: &[f32],
+    d: KpdDims,
+) -> (Vec<f32>, Vec<Vec<f32>>) {
+    let KpdDims { m1, n1, m2, n2, r } = d;
+    let (m, n) = (m1 * m2, n1 * n2);
+    debug_assert_eq!(x.len(), n_batch * n);
+    debug_assert_eq!(s.len(), m1 * n1);
+    debug_assert_eq!(a.len(), r * m1 * n1);
+    debug_assert_eq!(b.len(), r * m2 * n2);
+    let mut z = vec![0.0f32; n_batch * m];
+    let mut caches = Vec::with_capacity(r);
+    for i in 0..r {
+        let bi = &b[i * m2 * n2..(i + 1) * m2 * n2];
+        // X′ (N·n1, n2) is the same buffer as X — contiguous regrouping
+        let t = linalg::matmul_nt(x, bi, n_batch * n1, n2, m2);
+        let tp = regroup_t(&t, n_batch, n1, m2);
+        let c = had(s, &a[i * m1 * n1..(i + 1) * m1 * n1]);
+        let zc = linalg::matmul_nn(&c, &tp, m1, n1, n_batch * m2);
+        for bb in 0..n_batch {
+            for i1 in 0..m1 {
+                let src = &zc[i1 * n_batch * m2 + bb * m2..i1 * n_batch * m2 + (bb + 1) * m2];
+                let dst = &mut z[bb * m + i1 * m2..bb * m + (i1 + 1) * m2];
+                for (o, &v) in dst.iter_mut().zip(src) {
+                    *o += v;
+                }
+            }
+        }
+        caches.push(tp);
+    }
+    (z, caches)
+}
+
+/// Gradients of the factorized map wrt S, A and B.
+pub struct Grads {
+    /// (m1, n1)
+    pub gs: Vec<f32>,
+    /// (r, m1, n1)
+    pub ga: Vec<f32>,
+    /// (r, m2, n2)
+    pub gb: Vec<f32>,
+}
+
+/// Backward pass. `dz` is d(loss)/dZ (N, m1·m2); `tprime` is the cache
+/// returned by [`forward`] on the same inputs.
+pub fn backward(
+    x: &[f32],
+    n_batch: usize,
+    s: &[f32],
+    a: &[f32],
+    dz: &[f32],
+    tprime: &[Vec<f32>],
+    d: KpdDims,
+) -> Grads {
+    let KpdDims { m1, n1, m2, n2, r } = d;
+    let m = m1 * m2;
+    debug_assert_eq!(dz.len(), n_batch * m);
+    debug_assert_eq!(tprime.len(), r);
+    // dZ′ (m1, N·m2)
+    let mut dzp = vec![0.0f32; m1 * n_batch * m2];
+    for bb in 0..n_batch {
+        for i1 in 0..m1 {
+            let src = &dz[bb * m + i1 * m2..bb * m + (i1 + 1) * m2];
+            let dst = &mut dzp[i1 * n_batch * m2 + bb * m2..i1 * n_batch * m2 + (bb + 1) * m2];
+            dst.copy_from_slice(src);
+        }
+    }
+    let mut gs = vec![0.0f32; m1 * n1];
+    let mut ga = vec![0.0f32; r * m1 * n1];
+    let mut gb = vec![0.0f32; r * m2 * n2];
+    for i in 0..r {
+        let ai = &a[i * m1 * n1..(i + 1) * m1 * n1];
+        let c = had(s, ai);
+        // dC (m1, n1) = dZ′ · T′ᵀ
+        let dc = linalg::matmul_nt(&dzp, &tprime[i], m1, n_batch * m2, n1);
+        for j in 0..m1 * n1 {
+            ga[i * m1 * n1 + j] = dc[j] * s[j];
+            gs[j] += dc[j] * ai[j];
+        }
+        // U′ (n1, N·m2) = Cᵀ · dZ′
+        let up = linalg::matmul_tn(&c, &dzp, m1, n1, n_batch * m2);
+        // U″ (N·n1, m2)
+        let mut u2 = vec![0.0f32; n_batch * n1 * m2];
+        for bb in 0..n_batch {
+            for j1 in 0..n1 {
+                let src = &up[j1 * n_batch * m2 + bb * m2..j1 * n_batch * m2 + (bb + 1) * m2];
+                let dst = &mut u2[(bb * n1 + j1) * m2..(bb * n1 + j1 + 1) * m2];
+                dst.copy_from_slice(src);
+            }
+        }
+        // dB (m2, n2) = U″ᵀ · X′
+        let dbi = linalg::matmul_tn(&u2, x, n_batch * n1, m2, n2);
+        gb[i * m2 * n2..(i + 1) * m2 * n2].copy_from_slice(&dbi);
+    }
+    Grads { gs, ga, gb }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    /// Dense reference: Z = X · Wᵀ with W = Σ_r (S⊙A_r) ⊗ B_r.
+    fn dense_forward(
+        x: &[f32],
+        n_batch: usize,
+        s: &[f32],
+        a: &[f32],
+        b: &[f32],
+        d: KpdDims,
+    ) -> Vec<f32> {
+        let (m, n) = (d.m1 * d.m2, d.n1 * d.n2);
+        let st = Tensor::new(&[d.m1, d.n1], s.to_vec()).unwrap();
+        let at = Tensor::new(&[d.r, d.m1, d.n1], a.to_vec()).unwrap();
+        let bt = Tensor::new(&[d.r, d.m2, d.n2], b.to_vec()).unwrap();
+        let w = Tensor::kpd_reconstruct(&st, &at, &bt).unwrap();
+        let mut z = vec![0.0f32; n_batch * m];
+        for bb in 0..n_batch {
+            for i in 0..m {
+                let mut acc = 0.0f32;
+                for j in 0..n {
+                    acc += x[bb * n + j] * w.at2(i, j);
+                }
+                z[bb * m + i] = acc;
+            }
+        }
+        z
+    }
+
+    #[test]
+    fn forward_matches_materialized_kron() {
+        let mut rng = Rng::new(21);
+        for &(m1, n1, m2, n2, r, nb) in
+            &[(2, 3, 2, 2, 1, 4), (3, 2, 2, 4, 2, 5), (1, 4, 3, 3, 3, 2)]
+        {
+            let d = KpdDims { m1, n1, m2, n2, r };
+            let x = rand_vec(&mut rng, nb * n1 * n2);
+            let s = rand_vec(&mut rng, m1 * n1);
+            let a = rand_vec(&mut rng, r * m1 * n1);
+            let b = rand_vec(&mut rng, r * m2 * n2);
+            let (z, _) = forward(&x, nb, &s, &a, &b, d);
+            let want = dense_forward(&x, nb, &s, &a, &b, d);
+            let diff = z
+                .iter()
+                .zip(&want)
+                .map(|(p, q)| (p - q).abs())
+                .fold(0.0f32, f32::max);
+            assert!(diff < 1e-4, "{d:?}: max diff {diff}");
+        }
+    }
+
+    #[test]
+    fn backward_matches_finite_differences_on_sum_loss() {
+        // loss = Σ Z ⇒ dZ = 1; check dS, dA, dB against central differences
+        let mut rng = Rng::new(22);
+        let d = KpdDims { m1: 2, n1: 2, m2: 2, n2: 3, r: 2 };
+        let nb = 3;
+        let x = rand_vec(&mut rng, nb * d.n1 * d.n2);
+        let s = rand_vec(&mut rng, d.m1 * d.n1);
+        let a = rand_vec(&mut rng, d.r * d.m1 * d.n1);
+        let b = rand_vec(&mut rng, d.r * d.m2 * d.n2);
+        let loss = |s: &[f32], a: &[f32], b: &[f32]| -> f32 {
+            forward(&x, nb, s, a, b, d).0.iter().sum()
+        };
+        let (_, tp) = forward(&x, nb, &s, &a, &b, d);
+        let dz = vec![1.0f32; nb * d.m1 * d.m2];
+        let g = backward(&x, nb, &s, &a, &dz, &tp, d);
+        let h = 1e-2f32;
+        for idx in 0..s.len() {
+            let mut sp = s.clone();
+            sp[idx] += h;
+            let mut sm = s.clone();
+            sm[idx] -= h;
+            let fd = (loss(&sp, &a, &b) - loss(&sm, &a, &b)) / (2.0 * h);
+            assert!((fd - g.gs[idx]).abs() < 1e-2, "gs[{idx}]: {fd} vs {}", g.gs[idx]);
+        }
+        for idx in 0..a.len() {
+            let mut ap = a.clone();
+            ap[idx] += h;
+            let mut am = a.clone();
+            am[idx] -= h;
+            let fd = (loss(&s, &ap, &b) - loss(&s, &am, &b)) / (2.0 * h);
+            assert!((fd - g.ga[idx]).abs() < 1e-2, "ga[{idx}]: {fd} vs {}", g.ga[idx]);
+        }
+        for idx in 0..b.len() {
+            let mut bp = b.clone();
+            bp[idx] += h;
+            let mut bm = b.clone();
+            bm[idx] -= h;
+            let fd = (loss(&s, &a, &bp) - loss(&s, &a, &bm)) / (2.0 * h);
+            assert!((fd - g.gb[idx]).abs() < 1e-2, "gb[{idx}]: {fd} vs {}", g.gb[idx]);
+        }
+    }
+}

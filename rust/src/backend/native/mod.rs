@@ -1,0 +1,880 @@
+//! Pure-Rust execution backend: the default, hermetic way to train.
+//!
+//! Implements the paper's linear-spec methods directly on host tensors —
+//! no AOT artifacts, no PJRT:
+//!
+//! * `kpd`          — factorized forward/backward (module [`kpd`]) with the
+//!                    ℓ1-on-S proximal (soft-threshold) update;
+//! * `group_lasso` / `elastic_gl` — dense W with the block-group proximal
+//!                    shrink (and ridge term for elastic);
+//! * `rigl_block`   — block-masked W via the block-sparse matmul, dense
+//!                    gradient-norm metrics for the mask controller;
+//! * `iter_prune`   — elementwise-masked W, magnitude pruning to a target;
+//! * `dense`        — the unregularized baseline.
+//!
+//! Specs are registered from [`SpecConfig`]s (manifest-free), so tests and
+//! the CLI can construct and train models without any build-time python.
+//! Optimization is SGD with classical momentum; the regularized leaves
+//! (S, W-blocks) use plain SGD plus their proximal operator so exact
+//! zeros appear.
+
+pub mod kpd;
+pub mod linalg;
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::flops::KpdDims;
+use crate::manifest::{SlotInfo, SpecEntry};
+use crate::tensor::{DType, HostValue, Tensor};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::{Backend, TrainState};
+
+const METHODS: &[&str] =
+    &["kpd", "group_lasso", "elastic_gl", "rigl_block", "iter_prune", "dense"];
+
+/// Manifest-free description of one trainable linear spec.
+#[derive(Clone, Debug)]
+pub struct SpecConfig {
+    pub key: String,
+    /// one of `kpd | group_lasso | elastic_gl | rigl_block | iter_prune | dense`
+    pub method: String,
+    /// input features n (= n1·n2)
+    pub in_dim: usize,
+    /// classes m (= m1·m2)
+    pub out_dim: usize,
+    /// block rows m2
+    pub m2: usize,
+    /// block cols n2
+    pub n2: usize,
+    /// KPD decomposition rank r
+    pub rank: usize,
+    pub batch: usize,
+    /// classical momentum for the smooth parameters (0 = plain SGD)
+    pub momentum: f32,
+    /// initial fraction of active blocks for `rigl_block`
+    pub rigl_density: f64,
+    pub tags: Vec<String>,
+}
+
+impl SpecConfig {
+    /// A linear classifier spec with repo-standard defaults.
+    #[allow(clippy::too_many_arguments)]
+    pub fn linear(
+        key: &str,
+        method: &str,
+        in_dim: usize,
+        out_dim: usize,
+        m2: usize,
+        n2: usize,
+        rank: usize,
+        batch: usize,
+    ) -> Self {
+        SpecConfig {
+            key: key.to_string(),
+            method: method.to_string(),
+            in_dim,
+            out_dim,
+            m2,
+            n2,
+            rank,
+            batch,
+            momentum: 0.9,
+            rigl_density: 0.5,
+            tags: Vec::new(),
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !METHODS.contains(&self.method.as_str()) {
+            bail!("unknown method '{}' (native backend supports {METHODS:?})", self.method);
+        }
+        if self.m2 == 0 || self.out_dim % self.m2 != 0 {
+            bail!("block rows {} do not tile out_dim {}", self.m2, self.out_dim);
+        }
+        if self.n2 == 0 || self.in_dim % self.n2 != 0 {
+            bail!("block cols {} do not tile in_dim {}", self.n2, self.in_dim);
+        }
+        if self.batch == 0 {
+            bail!("batch must be positive");
+        }
+        if self.method == "kpd" && self.rank == 0 {
+            bail!("kpd rank must be ≥ 1");
+        }
+        if !(0.0..=1.0).contains(&self.rigl_density) {
+            bail!("rigl_density must be in [0, 1]");
+        }
+        Ok(())
+    }
+
+    pub fn dims(&self) -> KpdDims {
+        KpdDims::from_block(self.out_dim, self.in_dim, self.m2, self.n2, self.rank.max(1))
+    }
+
+    fn grid(&self) -> (usize, usize) {
+        (self.out_dim / self.m2, self.in_dim / self.n2)
+    }
+}
+
+struct NativeSpec {
+    cfg: SpecConfig,
+    entry: SpecEntry,
+}
+
+/// The native (pure-Rust, CPU) backend: a registry of [`SpecConfig`]s.
+pub struct NativeBackend {
+    specs: BTreeMap<String, NativeSpec>,
+}
+
+impl NativeBackend {
+    /// Empty registry; add specs with [`NativeBackend::add_spec`].
+    pub fn empty() -> Self {
+        NativeBackend { specs: BTreeMap::new() }
+    }
+
+    /// Single-spec backend (the manifest-free test constructor).
+    pub fn from_spec(cfg: SpecConfig) -> Result<Self> {
+        let mut be = NativeBackend::empty();
+        be.add_spec(cfg)?;
+        Ok(be)
+    }
+
+    pub fn add_spec(&mut self, cfg: SpecConfig) -> Result<()> {
+        let entry = build_entry(&cfg)?;
+        self.specs.insert(cfg.key.clone(), NativeSpec { cfg, entry });
+        Ok(())
+    }
+
+    /// The built-in linear-model registry mirroring the Table-1/Table-4
+    /// spec keys of the AOT manifest, so the CLI and benches run offline.
+    pub fn with_default_specs() -> Self {
+        let mut be = NativeBackend::empty();
+        let mut add = |mut cfg: SpecConfig, tag: &str| {
+            cfg.tags = vec![tag.to_string()];
+            be.add_spec(cfg).expect("default spec registry");
+        };
+        add(SpecConfig::linear("qs_kpd", "kpd", 784, 10, 2, 16, 2, 64), "quickstart");
+        for (bk, n2) in [("b2x2", 2usize), ("b4x2", 4), ("b8x2", 8), ("b16x2", 16)] {
+            add(
+                SpecConfig::linear(&format!("t1_kpd_{bk}"), "kpd", 784, 10, 2, n2, 2, 128),
+                "table1",
+            );
+            add(
+                SpecConfig::linear(&format!("t1_gl_{bk}"), "group_lasso", 784, 10, 2, n2, 1, 128),
+                "table1",
+            );
+            add(
+                SpecConfig::linear(&format!("t1_egl_{bk}"), "elastic_gl", 784, 10, 2, n2, 1, 128),
+                "table1",
+            );
+            add(
+                SpecConfig::linear(&format!("t1_rigl_{bk}"), "rigl_block", 784, 10, 2, n2, 1, 128),
+                "table1",
+            );
+        }
+        add(SpecConfig::linear("t1_prune", "iter_prune", 784, 10, 1, 1, 1, 128), "table1");
+        add(SpecConfig::linear("t1_dense", "dense", 784, 10, 1, 1, 1, 128), "table1");
+        for r in [1usize, 2, 4, 6] {
+            add(
+                SpecConfig::linear(&format!("t4_linear_r{r}"), "kpd", 784, 10, 2, 16, r, 128),
+                "table4",
+            );
+        }
+        be
+    }
+
+    fn get(&self, key: &str) -> Result<&NativeSpec> {
+        self.specs
+            .get(key)
+            .ok_or_else(|| anyhow!("spec '{key}' not registered with the native backend"))
+    }
+}
+
+// ------------------------------------------------------------ spec entry
+
+fn build_entry(cfg: &SpecConfig) -> Result<SpecEntry> {
+    cfg.validate()?;
+    let (m, n) = (cfg.out_dim, cfg.in_dim);
+    let (m1, n1) = cfg.grid();
+    let mut metrics: Vec<String> =
+        ["loss", "ce", "acc"].iter().map(|s| s.to_string()).collect();
+    let hyper: Vec<String> = match cfg.method.as_str() {
+        "kpd" => {
+            metrics.push("s_l1".to_string());
+            vec!["lambda".to_string(), "lr".to_string()]
+        }
+        "group_lasso" => vec!["lambda".to_string(), "lr".to_string()],
+        "elastic_gl" => {
+            vec!["lambda".to_string(), "lambda2".to_string(), "lr".to_string()]
+        }
+        "rigl_block" => {
+            metrics.extend((0..m1 * n1).map(|i| format!("gnorm{i}")));
+            vec!["lr".to_string()]
+        }
+        _ => vec!["lr".to_string()],
+    };
+    let params_total = if cfg.method == "kpd" {
+        cfg.dims().train_params() as usize
+    } else {
+        m * n
+    };
+    let mut info = BTreeMap::new();
+    let mut blocks = BTreeMap::new();
+    blocks.insert(
+        "fc".to_string(),
+        Json::Arr(vec![Json::Num(cfg.m2 as f64), Json::Num(cfg.n2 as f64)]),
+    );
+    info.insert("blocks".to_string(), Json::Obj(blocks));
+    if cfg.method == "kpd" {
+        let d = cfg.dims();
+        info.insert("rank".to_string(), Json::Num(d.r as f64));
+        let mut shape = BTreeMap::new();
+        shape.insert("m1".to_string(), Json::Num(d.m1 as f64));
+        shape.insert("n1".to_string(), Json::Num(d.n1 as f64));
+        shape.insert("m2".to_string(), Json::Num(d.m2 as f64));
+        shape.insert("n2".to_string(), Json::Num(d.n2 as f64));
+        shape.insert("r".to_string(), Json::Num(d.r as f64));
+        let mut shapes = BTreeMap::new();
+        shapes.insert("fc".to_string(), Json::Obj(shape));
+        info.insert("shapes".to_string(), Json::Obj(shapes));
+    }
+    Ok(SpecEntry {
+        key: cfg.key.clone(),
+        model: "linear".to_string(),
+        batch: cfg.batch,
+        tags: cfg.tags.clone(),
+        input_shape: vec![n],
+        input_dtype: DType::F32,
+        num_classes: m,
+        slots: vec![SlotInfo { name: "fc".to_string(), m, n }],
+        method: cfg.method.clone(),
+        hyper,
+        metrics,
+        params_total,
+        info: Json::Obj(info),
+    })
+}
+
+// ------------------------------------------------------------- helpers
+
+fn fnv(name: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn pidx(state: &TrainState, key: &str) -> Result<usize> {
+    state
+        .param_names
+        .iter()
+        .position(|k| k == key)
+        .ok_or_else(|| anyhow!("no param '{key}' in spec {}", state.spec))
+}
+
+fn oidx(state: &TrainState, key: &str) -> Result<usize> {
+    state
+        .opt_names
+        .iter()
+        .position(|k| k == key)
+        .ok_or_else(|| anyhow!("no optimizer slot '{key}' in spec {}", state.spec))
+}
+
+/// v ← μ·v + g;  p ← p − lr·v   (classical momentum; v=g on the first step).
+fn sgd_momentum(p: &mut [f32], v: &mut [f32], g: &[f32], lr: f32, mu: f32) {
+    for ((pi, vi), gi) in p.iter_mut().zip(v.iter_mut()).zip(g) {
+        *vi = mu * *vi + gi;
+        *pi -= lr * *vi;
+    }
+}
+
+/// Elementwise soft-threshold: the prox of t·‖·‖₁ (produces exact zeros).
+fn soft_threshold(xs: &mut [f32], t: f32) {
+    if t <= 0.0 {
+        return;
+    }
+    for v in xs.iter_mut() {
+        *v = v.signum() * (v.abs() - t).max(0.0);
+    }
+}
+
+/// Per-block Frobenius norms on an (m2×n2) grid — the shared tensor-layer
+/// kernel, re-exported under the short local name the step paths use.
+fn block_fro(w: &[f32], m: usize, n: usize, m2: usize, n2: usize) -> Vec<f32> {
+    crate::tensor::block_fro_norms_slice(w, m, n, m2, n2)
+}
+
+/// dw ⊙= expand(mask): zero gradient entries of inactive (m2×n2) blocks.
+fn mul_expand_mask(dw: &mut [f32], mask: &[f32], m: usize, n: usize, m2: usize, n2: usize) {
+    let n1 = n / n2;
+    for i in 0..m {
+        let mrow = &mask[(i / m2) * n1..(i / m2 + 1) * n1];
+        let row = &mut dw[i * n..(i + 1) * n];
+        for (j, v) in row.iter_mut().enumerate() {
+            *v *= mrow[j / n2];
+        }
+    }
+}
+
+/// Block-group prox: shrink every (m2×n2) block of `w` toward zero by
+/// `kappa` in Frobenius norm, zeroing blocks whose norm is below it.
+fn block_prox(w: &mut [f32], m: usize, n: usize, m2: usize, n2: usize, kappa: f32) {
+    if kappa <= 0.0 {
+        return;
+    }
+    let norms = block_fro(w, m, n, m2, n2);
+    let n1 = n / n2;
+    for i in 0..m {
+        let nrow = &norms[(i / m2) * n1..(i / m2 + 1) * n1];
+        let row = &mut w[i * n..(i + 1) * n];
+        for (j, v) in row.iter_mut().enumerate() {
+            let norm = nrow[j / n2];
+            if norm <= kappa {
+                *v = 0.0;
+            } else {
+                *v *= 1.0 - kappa / norm;
+            }
+        }
+    }
+}
+
+fn batch_xy<'a>(
+    x: &'a HostValue,
+    y: &'a HostValue,
+    in_dim: usize,
+) -> Result<(&'a [f32], usize, &'a [i32])> {
+    let xt = x.as_f32()?;
+    if xt.shape().len() != 2 || xt.shape()[1] != in_dim {
+        bail!("native backend wants x of shape [batch, {in_dim}], got {:?}", xt.shape());
+    }
+    let nb = xt.shape()[0];
+    if nb == 0 {
+        bail!("empty batch");
+    }
+    let ys = match y {
+        HostValue::I32 { shape, data } if shape.len() == 1 && shape[0] == nb => {
+            data.as_slice()
+        }
+        _ => bail!("native backend wants i32 class-id labels of shape [{nb}]"),
+    };
+    Ok((xt.data(), nb, ys))
+}
+
+struct Hyper {
+    lam: f32,
+    lam2: f32,
+    lr: f32,
+}
+
+fn parse_hyper(entry: &SpecEntry, hyper: &[f32]) -> Result<Hyper> {
+    if hyper.len() != entry.hyper.len() {
+        bail!(
+            "{} train_step wants hyper {:?}, got {} values",
+            entry.key,
+            entry.hyper,
+            hyper.len()
+        );
+    }
+    let mut out = Hyper { lam: 0.0, lam2: 0.0, lr: 0.0 };
+    for (name, &v) in entry.hyper.iter().zip(hyper) {
+        match name.as_str() {
+            "lambda" | "lambda1" => out.lam = v,
+            "lambda2" => out.lam2 = v,
+            "lr" => out.lr = v,
+            other => bail!("unknown hyper-parameter '{other}'"),
+        }
+    }
+    Ok(out)
+}
+
+// ------------------------------------------------------------- the impl
+
+impl NativeBackend {
+    /// Logits for the current parameters under the spec's method.
+    fn forward(&self, ns: &NativeSpec, state: &TrainState, x: &[f32], nb: usize) -> Result<Vec<f32>> {
+        let cfg = &ns.cfg;
+        let (m, n) = (cfg.out_dim, cfg.in_dim);
+        match cfg.method.as_str() {
+            "kpd" => {
+                let s = state.param("fc.S")?;
+                let a = state.param("fc.A")?;
+                let b = state.param("fc.B")?;
+                let (z, _) = kpd::forward(x, nb, s.data(), a.data(), b.data(), cfg.dims());
+                Ok(z)
+            }
+            "rigl_block" => {
+                let w = state.param("fc.W")?;
+                let mask = state.param("fc.mask")?;
+                Ok(linalg::block_sparse_matmul_nt(
+                    x,
+                    w.data(),
+                    mask.data(),
+                    nb,
+                    m,
+                    n,
+                    cfg.m2,
+                    cfg.n2,
+                ))
+            }
+            "iter_prune" => {
+                let w = state.param("fc.W")?;
+                let emask = state.param("fc.emask")?;
+                let weff: Vec<f32> =
+                    w.data().iter().zip(emask.data()).map(|(a, b)| a * b).collect();
+                Ok(linalg::matmul_nt(x, &weff, nb, n, m))
+            }
+            _ => {
+                let w = state.param("fc.W")?;
+                Ok(linalg::matmul_nt(x, w.data(), nb, n, m))
+            }
+        }
+    }
+
+    fn step_kpd(
+        &self,
+        ns: &NativeSpec,
+        state: &mut TrainState,
+        x: &[f32],
+        nb: usize,
+        y: &[i32],
+        h: &Hyper,
+    ) -> Result<Vec<f32>> {
+        let d = ns.cfg.dims();
+        let mu = ns.cfg.momentum;
+        let s = state.param("fc.S")?.data().to_vec();
+        let a = state.param("fc.A")?.data().to_vec();
+        let b = state.param("fc.B")?.data().to_vec();
+        let (z, tp) = kpd::forward(x, nb, &s, &a, &b, d);
+        let sm = linalg::softmax_ce(&z, y, nb, d.m())?;
+        let g = kpd::backward(x, nb, &s, &a, &sm.dz, &tp, d);
+        let s_l1: f32 = s.iter().map(|v| v.abs()).sum();
+
+        let (ai, avi) = (pidx(state, "fc.A")?, oidx(state, "fc.A.m")?);
+        sgd_momentum(
+            state.params[ai].data_mut(),
+            state.opt[avi].data_mut(),
+            &g.ga,
+            h.lr,
+            mu,
+        );
+        let (bi, bvi) = (pidx(state, "fc.B")?, oidx(state, "fc.B.m")?);
+        sgd_momentum(
+            state.params[bi].data_mut(),
+            state.opt[bvi].data_mut(),
+            &g.gb,
+            h.lr,
+            mu,
+        );
+        // S: plain SGD step + the ℓ1 prox (soft-threshold) → exact zeros
+        let si = pidx(state, "fc.S")?;
+        let sdata = state.params[si].data_mut();
+        for (p, gi) in sdata.iter_mut().zip(&g.gs) {
+            *p -= h.lr * gi;
+        }
+        soft_threshold(sdata, h.lr * h.lam);
+
+        let loss = sm.ce_mean + h.lam * s_l1;
+        Ok(vec![loss, sm.ce_mean, sm.acc_frac, s_l1])
+    }
+
+    fn step_dense_family(
+        &self,
+        ns: &NativeSpec,
+        state: &mut TrainState,
+        x: &[f32],
+        nb: usize,
+        y: &[i32],
+        h: &Hyper,
+    ) -> Result<Vec<f32>> {
+        let cfg = &ns.cfg;
+        let (m, n, m2, n2) = (cfg.out_dim, cfg.in_dim, cfg.m2, cfg.n2);
+        let method = cfg.method.as_str();
+        let z = self.forward(ns, state, x, nb)?;
+        let sm = linalg::softmax_ce(&z, y, nb, m)?;
+        let w = state.param("fc.W")?.data().to_vec();
+        let mut dw = linalg::matmul_tn(&sm.dz, x, nb, m, n);
+
+        let mut reg = 0.0f32;
+        let mut gnorm_tail: Vec<f32> = Vec::new();
+        match method {
+            "elastic_gl" => {
+                let wsq: f32 = w.iter().map(|v| v * v).sum();
+                reg += 0.5 * h.lam2 * wsq;
+                for (g, wv) in dw.iter_mut().zip(&w) {
+                    *g += h.lam2 * wv;
+                }
+            }
+            "rigl_block" => {
+                // dense-gradient block norms first (the growth signal),
+                // then mask the applied gradient to the active blocks
+                gnorm_tail = block_fro(&dw, m, n, m2, n2);
+                let mask = state.param("fc.mask")?.data().to_vec();
+                mul_expand_mask(&mut dw, &mask, m, n, m2, n2);
+            }
+            "iter_prune" => {
+                let emask = state.param("fc.emask")?.data().to_vec();
+                for (g, mv) in dw.iter_mut().zip(&emask) {
+                    *g *= mv;
+                }
+            }
+            _ => {}
+        }
+        if method == "group_lasso" || method == "elastic_gl" {
+            let weight = h.lam * ((m2 * n2) as f32).sqrt();
+            reg += weight * block_fro(&w, m, n, m2, n2).iter().sum::<f32>();
+        }
+
+        let (wi, wvi) = (pidx(state, "fc.W")?, oidx(state, "fc.W.m")?);
+        sgd_momentum(
+            state.params[wi].data_mut(),
+            state.opt[wvi].data_mut(),
+            &dw,
+            h.lr,
+            cfg.momentum,
+        );
+        if method == "group_lasso" || method == "elastic_gl" {
+            let kappa = h.lr * h.lam * ((m2 * n2) as f32).sqrt();
+            block_prox(state.params[wi].data_mut(), m, n, m2, n2, kappa);
+        }
+
+        let mut out = vec![sm.ce_mean + reg, sm.ce_mean, sm.acc_frac];
+        out.extend(gnorm_tail);
+        Ok(out)
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> String {
+        "native-cpu".to_string()
+    }
+
+    fn specs(&self) -> Vec<&SpecEntry> {
+        self.specs.values().map(|ns| &ns.entry).collect()
+    }
+
+    fn spec(&self, key: &str) -> Result<&SpecEntry> {
+        Ok(&self.get(key)?.entry)
+    }
+
+    fn init_state(&self, spec: &str, seed: u32) -> Result<TrainState> {
+        let ns = self.get(spec)?;
+        let cfg = &ns.cfg;
+        let mut rng = Rng::new((seed as u64) ^ fnv(&cfg.key));
+        let (m, n) = (cfg.out_dim, cfg.in_dim);
+        let mut param_names = Vec::new();
+        let mut params = Vec::new();
+        let mut opt_names = Vec::new();
+        let mut opt = Vec::new();
+        if cfg.method == "kpd" {
+            let d = cfg.dims();
+            // scaled so the reconstructed W has ≈ sqrt(1/n) entries
+            let a_std = (1.0 / (d.r * d.n1) as f32).sqrt();
+            let b_std = (1.0 / d.n2 as f32).sqrt();
+            param_names.push("fc.S".to_string());
+            params.push(Tensor::full(&[d.m1, d.n1], 1.0));
+            param_names.push("fc.A".to_string());
+            params.push(Tensor::from_fn(&[d.r, d.m1, d.n1], |_| rng.normal() * a_std));
+            param_names.push("fc.B".to_string());
+            params.push(Tensor::from_fn(&[d.r, d.m2, d.n2], |_| rng.normal() * b_std));
+            opt_names.push("fc.A.m".to_string());
+            opt.push(Tensor::zeros(&[d.r, d.m1, d.n1]));
+            opt_names.push("fc.B.m".to_string());
+            opt.push(Tensor::zeros(&[d.r, d.m2, d.n2]));
+        } else {
+            let w_std = (1.0 / n as f32).sqrt();
+            param_names.push("fc.W".to_string());
+            params.push(Tensor::from_fn(&[m, n], |_| rng.normal() * w_std));
+            if cfg.method == "rigl_block" {
+                let (m1, n1) = cfg.grid();
+                let total = m1 * n1;
+                let k = ((cfg.rigl_density * total as f64).round() as usize).clamp(1, total);
+                let chosen = rng.choose(total, k);
+                let mut mask = vec![0.0f32; total];
+                for i in chosen {
+                    mask[i] = 1.0;
+                }
+                // inactive blocks start (and later grow) from exactly zero:
+                // without this, the first grow step would resurrect the
+                // untrained random init of a never-active block
+                mul_expand_mask(params[0].data_mut(), &mask, m, n, cfg.m2, cfg.n2);
+                param_names.push("fc.mask".to_string());
+                params.push(Tensor::new(&[m1, n1], mask)?);
+            } else if cfg.method == "iter_prune" {
+                param_names.push("fc.emask".to_string());
+                params.push(Tensor::full(&[m, n], 1.0));
+            }
+            opt_names.push("fc.W.m".to_string());
+            opt.push(Tensor::zeros(&[m, n]));
+        }
+        Ok(TrainState { spec: spec.to_string(), param_names, opt_names, params, opt })
+    }
+
+    fn train_step(
+        &self,
+        state: &mut TrainState,
+        x: &HostValue,
+        y: &HostValue,
+        hyper: &[f32],
+    ) -> Result<Vec<f32>> {
+        let ns = self.get(&state.spec)?;
+        let h = parse_hyper(&ns.entry, hyper)?;
+        let (xs, nb, ys) = batch_xy(x, y, ns.cfg.in_dim)?;
+        if ns.cfg.method == "kpd" {
+            self.step_kpd(ns, state, xs, nb, ys, &h)
+        } else {
+            self.step_dense_family(ns, state, xs, nb, ys, &h)
+        }
+    }
+
+    fn eval_step(&self, state: &TrainState, x: &HostValue, y: &HostValue) -> Result<Vec<f32>> {
+        let ns = self.get(&state.spec)?;
+        let (xs, nb, ys) = batch_xy(x, y, ns.cfg.in_dim)?;
+        let z = self.forward(ns, state, xs, nb)?;
+        let sm = linalg::softmax_ce(&z, ys, nb, ns.cfg.out_dim)?;
+        Ok(vec![sm.ce_mean, sm.correct])
+    }
+
+    fn materialize(&self, state: &TrainState) -> Result<Vec<(String, Tensor)>> {
+        let ns = self.get(&state.spec)?;
+        let cfg = &ns.cfg;
+        let (m, n) = (cfg.out_dim, cfg.in_dim);
+        let w = match cfg.method.as_str() {
+            "kpd" => {
+                let s = state.param("fc.S")?;
+                let a = state.param("fc.A")?;
+                let b = state.param("fc.B")?;
+                Tensor::kpd_reconstruct(s, a, b)?
+            }
+            "rigl_block" => {
+                let mut w = state.param("fc.W")?.data().to_vec();
+                let mask = state.param("fc.mask")?;
+                mul_expand_mask(&mut w, mask.data(), m, n, cfg.m2, cfg.n2);
+                Tensor::new(&[m, n], w)?
+            }
+            "iter_prune" => {
+                let w = state.param("fc.W")?;
+                let emask = state.param("fc.emask")?;
+                w.hadamard(emask)?
+            }
+            _ => state.param("fc.W")?.clone(),
+        };
+        Ok(vec![("fc".to_string(), w)])
+    }
+
+    fn rigl_update(&self, state: &mut TrainState, gnorm: &[f32], alpha: f32) -> Result<()> {
+        let ns = self.get(&state.spec)?;
+        let cfg = &ns.cfg;
+        if cfg.method != "rigl_block" {
+            bail!("rigl_update on non-RigL spec '{}'", state.spec);
+        }
+        let (m, n, m2, n2) = (cfg.out_dim, cfg.in_dim, cfg.m2, cfg.n2);
+        let (m1, n1) = cfg.grid();
+        if gnorm.len() != m1 * n1 {
+            bail!("rigl_update wants {} block gradient norms, got {}", m1 * n1, gnorm.len());
+        }
+        let mi = pidx(state, "fc.mask")?;
+        let wi = pidx(state, "fc.W")?;
+        let vi = oidx(state, "fc.W.m")?;
+        let mask = state.params[mi].data().to_vec();
+        let active: Vec<usize> =
+            (0..mask.len()).filter(|&i| mask[i] != 0.0).collect();
+        let inactive: Vec<usize> =
+            (0..mask.len()).filter(|&i| mask[i] == 0.0).collect();
+        let k = ((alpha as f64 * active.len() as f64).floor() as usize).min(inactive.len());
+        if k == 0 {
+            return Ok(());
+        }
+        let wnorms = block_fro(state.params[wi].data(), m, n, m2, n2);
+        let mut drop = active;
+        drop.sort_by(|&a, &b| wnorms[a].total_cmp(&wnorms[b]));
+        drop.truncate(k);
+        let mut grow = inactive;
+        grow.sort_by(|&a, &b| gnorm[b].total_cmp(&gnorm[a]));
+        grow.truncate(k);
+
+        let mask_data = state.params[mi].data_mut();
+        for &blk in &drop {
+            mask_data[blk] = 0.0;
+        }
+        for &blk in &grow {
+            mask_data[blk] = 1.0;
+        }
+        // dropped weights and their velocity restart from zero (RigL grows
+        // new blocks at zero, so W need only be cleared on the drop set)
+        for &blk in &drop {
+            let (i1, j1) = (blk / n1, blk % n1);
+            for i2 in 0..m2 {
+                let row = (i1 * m2 + i2) * n;
+                for j2 in 0..n2 {
+                    state.params[wi].data_mut()[row + j1 * n2 + j2] = 0.0;
+                    state.opt[vi].data_mut()[row + j1 * n2 + j2] = 0.0;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn prune(&self, state: &mut TrainState, target: f32) -> Result<()> {
+        let ns = self.get(&state.spec)?;
+        let cfg = &ns.cfg;
+        if cfg.method != "iter_prune" {
+            bail!("prune on non-pruning spec '{}'", state.spec);
+        }
+        if !(0.0..1.0).contains(&target) {
+            bail!("prune target {target} outside [0, 1)");
+        }
+        let total = cfg.out_dim * cfg.in_dim;
+        let keep = total - ((target as f64) * total as f64).round() as usize;
+        let wi = pidx(state, "fc.W")?;
+        let vi = oidx(state, "fc.W.m")?;
+        let ei = pidx(state, "fc.emask")?;
+        let w = state.params[wi].data().to_vec();
+        let mut order: Vec<usize> = (0..total).collect();
+        order.sort_by(|&a, &b| w[b].abs().total_cmp(&w[a].abs()));
+        let mut emask = vec![0.0f32; total];
+        for &i in &order[..keep] {
+            emask[i] = 1.0;
+        }
+        for i in 0..total {
+            if emask[i] == 0.0 {
+                state.params[wi].data_mut()[i] = 0.0;
+                state.opt[vi].data_mut()[i] = 0.0;
+            }
+        }
+        state.params[ei] = Tensor::new(&[cfg.out_dim, cfg.in_dim], emask)?;
+        Ok(())
+    }
+
+    fn gnorm_len(&self, spec: &str) -> Result<usize> {
+        let ns = self.get(spec)?;
+        if ns.cfg.method == "rigl_block" {
+            let (m1, n1) = ns.cfg.grid();
+            Ok(m1 * n1)
+        } else {
+            Ok(0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batch(nb: usize, in_dim: usize, classes: usize, seed: u64) -> (HostValue, HostValue) {
+        let mut rng = Rng::new(seed);
+        let x = Tensor::from_fn(&[nb, in_dim], |_| rng.normal());
+        let y: Vec<i32> = (0..nb).map(|i| (i % classes) as i32).collect();
+        (HostValue::F32(x), HostValue::I32 { shape: vec![nb], data: y })
+    }
+
+    #[test]
+    fn default_registry_has_table1_specs() {
+        let be = NativeBackend::with_default_specs();
+        assert!(be.spec("qs_kpd").is_ok());
+        assert!(be.spec("t1_kpd_b16x2").is_ok());
+        assert!(be.spec("t1_rigl_b2x2").is_ok());
+        assert!(be.spec("t4_linear_r6").is_ok());
+        assert!(be.spec("nope").is_err());
+        let e = be.spec("t1_kpd_b16x2").unwrap();
+        assert_eq!(e.block_of("fc"), Some((2, 16)));
+        assert_eq!(e.rank(), Some(2));
+        assert!(e.params_total < 7840);
+    }
+
+    #[test]
+    fn init_is_seed_deterministic_and_s_starts_at_one() {
+        let be = NativeBackend::with_default_specs();
+        let a = be.init_state("qs_kpd", 7).unwrap();
+        let b = be.init_state("qs_kpd", 7).unwrap();
+        let c = be.init_state("qs_kpd", 8).unwrap();
+        assert_eq!(a.param("fc.A").unwrap().data(), b.param("fc.A").unwrap().data());
+        assert_ne!(a.param("fc.A").unwrap().data(), c.param("fc.A").unwrap().data());
+        assert!(a.param("fc.S").unwrap().data().iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn every_method_takes_a_finite_step() {
+        let be = NativeBackend::with_default_specs();
+        for spec in
+            ["t1_kpd_b2x2", "t1_gl_b2x2", "t1_egl_b2x2", "t1_rigl_b2x2", "t1_prune", "t1_dense"]
+        {
+            let entry = be.spec(spec).unwrap().clone();
+            let mut state = be.init_state(spec, 0).unwrap();
+            let (x, y) = batch(16, 784, 10, 3);
+            let hyper: Vec<f32> = entry
+                .hyper
+                .iter()
+                .map(|h| match h.as_str() {
+                    "lr" => 0.05,
+                    "lambda2" => 1e-4,
+                    _ => 0.01,
+                })
+                .collect();
+            let m = be.train_step(&mut state, &x, &y, &hyper).unwrap();
+            assert_eq!(m.len(), entry.metrics.len(), "{spec}");
+            assert!(m.iter().all(|v| v.is_finite()), "{spec}: {m:?}");
+            let e = be.eval_step(&state, &x, &y).unwrap();
+            assert!(e[0].is_finite());
+            assert!(e[1] >= 0.0 && e[1] <= 16.0);
+        }
+    }
+
+    #[test]
+    fn rigl_update_preserves_active_count() {
+        let be = NativeBackend::with_default_specs();
+        let mut state = be.init_state("t1_rigl_b2x2", 0).unwrap();
+        let mask0 = state.param("fc.mask").unwrap().clone();
+        let nnz0: f32 = mask0.data().iter().sum();
+        let gnorm: Vec<f32> = (0..mask0.len()).map(|i| (i as f32 * 0.37 + 0.01) % 5.0).collect();
+        be.rigl_update(&mut state, &gnorm, 0.3).unwrap();
+        let mask1 = state.param("fc.mask").unwrap().clone();
+        let nnz1: f32 = mask1.data().iter().sum();
+        assert_eq!(nnz0, nnz1, "active block count changed");
+        assert!(mask0.max_abs_diff(&mask1) > 0.0, "mask did not change");
+    }
+
+    #[test]
+    fn prune_hits_exact_target() {
+        let be = NativeBackend::with_default_specs();
+        let mut state = be.init_state("t1_prune", 0).unwrap();
+        be.prune(&mut state, 0.6).unwrap();
+        let emask = state.param("fc.emask").unwrap().clone();
+        let sparsity = crate::sparsity::mask_sparsity(&emask);
+        assert!((sparsity - 0.6).abs() < 0.001, "sparsity {sparsity}");
+        // pruned weights are zeroed
+        let w = state.param("fc.W").unwrap();
+        for (wv, mv) in w.data().iter().zip(emask.data()) {
+            if *mv == 0.0 {
+                assert_eq!(*wv, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn materialize_shapes_per_method() {
+        let be = NativeBackend::with_default_specs();
+        for spec in ["qs_kpd", "t1_gl_b2x2", "t1_rigl_b2x2", "t1_prune", "t1_dense"] {
+            let state = be.init_state(spec, 1).unwrap();
+            let ws = be.materialize(&state).unwrap();
+            assert_eq!(ws.len(), 1);
+            assert_eq!(ws[0].0, "fc");
+            assert_eq!(ws[0].1.shape(), &[10, 784], "{spec}");
+        }
+    }
+
+    #[test]
+    fn momentum_buffers_populate_after_one_step() {
+        let cfg = SpecConfig::linear("mom", "dense", 8, 4, 1, 1, 1, 4);
+        let be = NativeBackend::from_spec(cfg).unwrap();
+        let mut state = be.init_state("mom", 0).unwrap();
+        let (x, y) = batch(4, 8, 4, 11);
+        be.train_step(&mut state, &x, &y, &[0.1]).unwrap();
+        let v = &state.opt[0];
+        assert!(v.data().iter().any(|&g| g != 0.0), "velocity stayed zero");
+    }
+}

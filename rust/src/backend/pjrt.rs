@@ -1,0 +1,125 @@
+//! PJRT adapter: the AOT/HLO execution path behind the `Backend` trait.
+//!
+//! Wraps `crate::runtime::Runtime` (compile cache + manifest) and marshals
+//! the backend-agnostic `Tensor` state into `xla::Literal`s per call. This
+//! re-marshalling trades a little hot-path cost for a literal-free default
+//! build; the raw `Runtime` API remains available for zero-copy loops.
+
+use anyhow::{bail, Result};
+
+use crate::manifest::SpecEntry;
+use crate::runtime::{Runtime, TrainState as LitState};
+use crate::tensor::{HostValue, Tensor};
+
+use super::{Backend, TrainState};
+
+pub struct PjrtBackend {
+    rt: Runtime,
+}
+
+impl PjrtBackend {
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        Ok(PjrtBackend { rt: Runtime::new(artifact_dir)? })
+    }
+
+    /// Direct access to the underlying runtime (compile cache, manifest).
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    fn to_literals(ts: &[Tensor]) -> Result<Vec<xla::Literal>> {
+        ts.iter().map(|t| HostValue::F32(t.clone()).to_literal()).collect()
+    }
+
+    fn from_literals(lits: &[xla::Literal]) -> Result<Vec<Tensor>> {
+        lits.iter()
+            .map(|l| match HostValue::from_literal(l)? {
+                HostValue::F32(t) => Ok(t),
+                other => bail!("non-f32 state leaf ({:?})", other.dtype()),
+            })
+            .collect()
+    }
+
+    fn lit_state(&self, state: &TrainState) -> Result<LitState> {
+        Ok(LitState {
+            spec: state.spec.clone(),
+            param_names: state.param_names.clone(),
+            opt_names: state.opt_names.clone(),
+            params: Self::to_literals(&state.params)?,
+            opt: Self::to_literals(&state.opt)?,
+        })
+    }
+
+    fn write_back(state: &mut TrainState, ls: &LitState) -> Result<()> {
+        state.params = Self::from_literals(&ls.params)?;
+        state.opt = Self::from_literals(&ls.opt)?;
+        Ok(())
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> String {
+        format!("pjrt:{}", self.rt.platform())
+    }
+
+    fn specs(&self) -> Vec<&SpecEntry> {
+        self.rt.manifest.specs.values().collect()
+    }
+
+    fn spec(&self, key: &str) -> Result<&SpecEntry> {
+        self.rt.spec(key)
+    }
+
+    fn init_state(&self, spec: &str, seed: u32) -> Result<TrainState> {
+        let ls = self.rt.init_state(spec, seed)?;
+        Ok(TrainState {
+            spec: ls.spec.clone(),
+            param_names: ls.param_names.clone(),
+            opt_names: ls.opt_names.clone(),
+            params: Self::from_literals(&ls.params)?,
+            opt: Self::from_literals(&ls.opt)?,
+        })
+    }
+
+    fn train_step(
+        &self,
+        state: &mut TrainState,
+        x: &HostValue,
+        y: &HostValue,
+        hyper: &[f32],
+    ) -> Result<Vec<f32>> {
+        let mut ls = self.lit_state(state)?;
+        let metrics = self.rt.train_step(&mut ls, &x.to_literal()?, &y.to_literal()?, hyper)?;
+        Self::write_back(state, &ls)?;
+        Ok(metrics)
+    }
+
+    fn eval_step(&self, state: &TrainState, x: &HostValue, y: &HostValue) -> Result<Vec<f32>> {
+        let ls = self.lit_state(state)?;
+        self.rt.eval_step(&ls, &x.to_literal()?, &y.to_literal()?)
+    }
+
+    fn materialize(&self, state: &TrainState) -> Result<Vec<(String, Tensor)>> {
+        let ls = self.lit_state(state)?;
+        self.rt.materialize(&ls)
+    }
+
+    fn rigl_update(&self, state: &mut TrainState, gnorm: &[f32], alpha: f32) -> Result<()> {
+        let mut ls = self.lit_state(state)?;
+        self.rt.rigl_update(&mut ls, gnorm, alpha)?;
+        Self::write_back(state, &ls)
+    }
+
+    fn prune(&self, state: &mut TrainState, target: f32) -> Result<()> {
+        let mut ls = self.lit_state(state)?;
+        self.rt.prune(&mut ls, target)?;
+        Self::write_back(state, &ls)
+    }
+
+    fn gnorm_len(&self, spec: &str) -> Result<usize> {
+        // train_step metrics = [loss, ce, acc] ++ per-block gradient norms
+        let e = self.rt.manifest.exec(spec, "train_step")?;
+        let total: usize = e.outputs.last().map(|o| o.elements()).unwrap_or(3);
+        Ok(total.saturating_sub(3))
+    }
+}

@@ -13,9 +13,9 @@ use std::collections::BTreeMap;
 
 use anyhow::Result;
 
+use crate::backend::Backend;
 use crate::config::TrainConfig;
 use crate::coordinator::{run_spec, SpecResult};
-use crate::runtime::Runtime;
 use crate::util::human_count;
 use crate::util::json::Json;
 
@@ -56,8 +56,8 @@ impl BenchEnv {
         Self { steps, seeds: (0..nseeds as u64).collect(), train_n, test_n }
     }
 
-    pub fn config(&self, rt: &Runtime, spec_key: &str) -> Result<TrainConfig> {
-        let spec = rt.spec(spec_key)?;
+    pub fn config(&self, be: &dyn Backend, spec_key: &str) -> Result<TrainConfig> {
+        let spec = be.spec(spec_key)?;
         let (lam, lam2) = default_lambda(&spec.method);
         let cfg = crate::config::Config::default();
         let mut tc = TrainConfig::from_config(&cfg, spec_key);
@@ -73,9 +73,25 @@ impl BenchEnv {
 }
 
 /// Train one spec and return the aggregated row.
-pub fn run_row(rt: &Runtime, env: &BenchEnv, spec_key: &str) -> Result<SpecResult> {
-    let cfg = env.config(rt, spec_key)?;
-    run_spec(rt, &cfg)
+pub fn run_row(be: &dyn Backend, env: &BenchEnv, spec_key: &str) -> Result<SpecResult> {
+    let cfg = env.config(be, spec_key)?;
+    run_spec(be, &cfg)
+}
+
+/// Train one spec, or skip (with a printed note) when the spec is not
+/// available on this backend — e.g. a LeNet/ViT spec on the native
+/// backend, or any spec when HLO artifacts are absent. Benches must keep
+/// printing the rows they *can* produce instead of failing.
+pub fn run_row_or_skip(
+    be: &dyn Backend,
+    env: &BenchEnv,
+    spec_key: &str,
+) -> Result<Option<SpecResult>> {
+    if be.spec(spec_key).is_err() {
+        println!("SKIP {spec_key}: not available on backend '{}'", be.name());
+        return Ok(None);
+    }
+    run_row(be, env, spec_key).map(Some)
 }
 
 /// Append a measured row to bench_results/results.jsonl.

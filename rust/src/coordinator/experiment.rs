@@ -7,12 +7,12 @@
 
 use anyhow::Result;
 
+use crate::backend::Backend;
 use crate::config::TrainConfig;
 use crate::coordinator::{dataset_for, probe, trainer::Trainer};
 use crate::flops::{self, KpdDims};
 use crate::manifest::SpecEntry;
 use crate::metrics::History;
-use crate::runtime::Runtime;
 use crate::util::mean_std;
 
 /// Aggregated result of a spec sweep (one table row).
@@ -99,11 +99,11 @@ pub fn accounting(spec: &SpecEntry) -> (u64, u64) {
 }
 
 /// Train a spec over all seeds in the config; aggregate.
-pub fn run_spec(rt: &Runtime, cfg: &TrainConfig) -> Result<SpecResult> {
-    let spec = rt.spec(&cfg.spec)?.clone();
+pub fn run_spec(be: &dyn Backend, cfg: &TrainConfig) -> Result<SpecResult> {
+    let spec = be.spec(&cfg.spec)?.clone();
     let (train, test) = dataset_for(&spec, cfg.data_seed, cfg.train_examples,
                                     cfg.test_examples)?;
-    let trainer = Trainer::new(rt, cfg);
+    let trainer = Trainer::new(be, cfg);
     let mut accs = Vec::new();
     let mut spars = Vec::new();
     let mut histories = Vec::new();
@@ -111,7 +111,7 @@ pub fn run_spec(rt: &Runtime, cfg: &TrainConfig) -> Result<SpecResult> {
     let mut wall = 0.0;
     for &seed in &cfg.seeds {
         let outcome = trainer.run(seed, &train, &test)?;
-        let sp = probe::measure_sparsity(rt, &spec, &outcome.state)?;
+        let sp = probe::measure_sparsity(be, &spec, &outcome.state)?;
         crate::info!(
             "[{}] seed {seed}: acc {:.2}% sparsity {:.2}% ({:.1}s)",
             cfg.spec, outcome.test_acc, sp, outcome.wall_secs

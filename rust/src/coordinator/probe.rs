@@ -12,16 +12,16 @@
 
 use anyhow::Result;
 
+use crate::backend::{Backend, TrainState};
 use crate::manifest::SpecEntry;
-use crate::runtime::{Runtime, TrainState};
 use crate::sparsity::{self, DEFAULT_EPS_REL};
 
 /// Whole-model sparsity rate in percent for a trained state.
-pub fn measure_sparsity(rt: &Runtime, spec: &SpecEntry, state: &TrainState) -> Result<f64> {
+pub fn measure_sparsity(be: &dyn Backend, spec: &SpecEntry, state: &TrainState) -> Result<f64> {
     let mut parts: Vec<(f64, usize)> = Vec::new();
     match spec.method.as_str() {
         "kpd" => {
-            for (slot_name, w) in rt.materialize(state)? {
+            for (slot_name, w) in be.materialize(state)? {
                 let (m2, n2) = spec
                     .block_of(&slot_name)
                     .unwrap_or((1, 1));

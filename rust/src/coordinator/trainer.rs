@@ -1,19 +1,19 @@
 //! One training run: spec + seed + config → trained state + metrics.
 //!
-//! The trainer is method-aware through the manifest only: hyper-parameter
+//! The trainer is method-aware through the spec entry only: hyper-parameter
 //! names select the λ/lr wiring, and the method string enables the RigL
-//! and iterative-pruning controllers (which call their dedicated AOT
-//! executables between train steps — exactly the role the rust layer has
-//! in this architecture: *all* control flow lives here, *all* math lives
-//! in the HLO).
+//! and iterative-pruning controllers (which call the backend's dedicated
+//! entry points between train steps — exactly the role this layer has in
+//! the architecture: *all* control flow lives here, *all* math lives in
+//! the `Backend` implementation, HLO or native).
 
 use anyhow::{bail, Result};
 
+use crate::backend::{Backend, TrainState};
 use crate::config::TrainConfig;
 use crate::coordinator::schedule::{LambdaSchedule, LrSchedule, RiglSchedule};
 use crate::data::{Batcher, Dataset};
 use crate::metrics::{History, Record};
-use crate::runtime::{Runtime, TrainState};
 
 /// Outcome of one (spec, seed) run.
 pub struct RunOutcome {
@@ -29,21 +29,21 @@ pub struct RunOutcome {
 }
 
 pub struct Trainer<'a> {
-    pub rt: &'a Runtime,
+    pub be: &'a dyn Backend,
     pub cfg: &'a TrainConfig,
 }
 
 impl<'a> Trainer<'a> {
-    pub fn new(rt: &'a Runtime, cfg: &'a TrainConfig) -> Self {
-        Self { rt, cfg }
+    pub fn new(be: &'a dyn Backend, cfg: &'a TrainConfig) -> Self {
+        Self { be, cfg }
     }
 
     /// Train `spec` from `seed`, evaluating on `test` at the end (and every
     /// `eval_every` steps into the history).
     pub fn run(&self, seed: u64, train: &Dataset, test: &Dataset) -> Result<RunOutcome> {
         let cfg = self.cfg;
-        let spec = self.rt.spec(&cfg.spec)?.clone();
-        let mut state = self.rt.init_state(&cfg.spec, seed as u32)?;
+        let spec = self.be.spec(&cfg.spec)?.clone();
+        let mut state = self.be.init_state(&cfg.spec, seed as u32)?;
         let mut batcher = Batcher::new(train, spec.batch, seed ^ 0xBA7C4, true);
         let steps_per_epoch = batcher.batches_per_epoch().max(1);
 
@@ -88,21 +88,15 @@ impl<'a> Trainer<'a> {
 
         let mut history = History::new();
         let is_rigl = spec.method == "rigl_block";
-        let gnorm_len: usize = if is_rigl {
-            // metrics = [loss, ce, acc] ++ gnorm blocks
-            let e = self.rt.manifest.exec(&cfg.spec, "train_step")?;
-            let total: usize = e.outputs.last().map(|o| o.elements()).unwrap_or(3);
-            total.saturating_sub(3)
-        } else {
-            0
-        };
+        // metrics = [loss, ce, acc] ++ gnorm blocks (RigL specs only)
+        let gnorm_len: usize = if is_rigl { self.be.gnorm_len(&cfg.spec)? } else { 0 };
         let mut gnorm_acc: Vec<f32> = vec![0.0; gnorm_len];
 
         let sw = crate::util::Stopwatch::start();
         for step in 0..cfg.steps {
             let batch = batcher.next_batch()?;
             let hyper = build_hyper(&spec.hyper, lam.at(step), cfg.lambda2, lr.at(step))?;
-            let metrics = self.rt.train_step(&mut state, &batch.x, &batch.y, &hyper)?;
+            let metrics = self.be.train_step(&mut state, &batch.x, &batch.y, &hyper)?;
 
             if is_rigl && metrics.len() >= 3 + gnorm_len {
                 // exponential moving average of the dense-grad block norms
@@ -110,12 +104,12 @@ impl<'a> Trainer<'a> {
                     *a = 0.7 * *a + 0.3 * m;
                 }
                 if rigl.is_update_step(step) {
-                    self.rt.rigl_update(&mut state, &gnorm_acc, rigl.alpha(step) as f32)?;
+                    self.be.rigl_update(&mut state, &gnorm_acc, rigl.alpha(step) as f32)?;
                 }
             }
             for &(pstep, ptarget) in &prune_at {
                 if step == pstep {
-                    self.rt.prune(&mut state, ptarget)?;
+                    self.be.prune(&mut state, ptarget)?;
                     crate::debug!("pruned to target {ptarget} at step {step}");
                 }
             }
@@ -186,7 +180,7 @@ impl<'a> Trainer<'a> {
         let mut pat_correct = vec![0.0f64; k];
         for idx in &batches {
             let b = crate::data::assemble_batch(test, idx)?;
-            let m = self.rt.eval_step(state, &b.x, &b.y)?;
+            let m = self.be.eval_step(state, &b.x, &b.y)?;
             if k > 0 {
                 // pattern eval layout: [ce_0..ce_{k-1}, acc_0..acc_{k-1}]
                 for p in 0..k {

@@ -1,9 +1,12 @@
 //! IDX (MNIST) file-format loader. If the user places the real MNIST files
-//! (`train-images-idx3-ubyte`, `train-labels-idx1-ubyte`, optionally
-//! gzipped) under a directory, the coordinator uses them instead of the
-//! synthetic generator — same code path downstream.
+//! (`train-images-idx3-ubyte`, `train-labels-idx1-ubyte`) under a
+//! directory, the coordinator uses them instead of the synthetic
+//! generator — same code path downstream.
+//!
+//! Files must be uncompressed: the offline-hermetic build carries no
+//! gzip implementation, so `.gz` inputs are rejected with a clear error
+//! instead of silently mis-parsing.
 
-use std::io::Read;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
@@ -15,14 +18,9 @@ fn read_file(path: &Path) -> Result<Vec<u8>> {
     if path.extension().map(|e| e == "gz").unwrap_or(false)
         || raw.starts_with(&[0x1f, 0x8b])
     {
-        let mut out = Vec::new();
-        flate2::read::GzDecoder::new(&raw[..])
-            .read_to_end(&mut out)
-            .context("gunzip idx file")?;
-        Ok(out)
-    } else {
-        Ok(raw)
+        bail!("{path:?} is gzipped — gunzip it first (offline build has no flate2)");
     }
+    Ok(raw)
 }
 
 fn be_u32(b: &[u8], off: usize) -> u32 {
@@ -57,7 +55,7 @@ pub fn parse_idx1(bytes: &[u8]) -> Result<Vec<i32>> {
     Ok(bytes[8..8 + n].iter().map(|&b| b as i32).collect())
 }
 
-/// Load `<dir>/{images},{labels}` (with optional .gz) into a Dataset.
+/// Load `<dir>/{images},{labels}` into a Dataset.
 pub fn load_mnist(images: &Path, labels: &Path, classes: usize) -> Result<Dataset> {
     let (n, rows, cols, x) = parse_idx3(&read_file(images)?)?;
     let y = parse_idx1(&read_file(labels)?)?;
@@ -67,7 +65,10 @@ pub fn load_mnist(images: &Path, labels: &Path, classes: usize) -> Result<Datase
     Dataset::from_images(rows * cols, classes, x, y)
 }
 
-/// Probe a directory for the standard MNIST file names.
+/// Probe a directory for the standard MNIST file names. The `.gz` names
+/// are still probed so gzipped downloads surface `read_file`'s
+/// "gunzip it first" error instead of silently falling back to the
+/// synthetic dataset.
 pub fn load_mnist_dir(dir: &Path) -> Option<Result<Dataset>> {
     for (img, lbl) in [
         ("train-images-idx3-ubyte", "train-labels-idx1-ubyte"),
@@ -121,17 +122,22 @@ mod tests {
     }
 
     #[test]
-    fn gzip_roundtrip() {
-        use std::io::Write;
-        let raw = fake_idx1(7);
-        let mut enc =
-            flate2::write::GzEncoder::new(Vec::new(), flate2::Compression::fast());
-        enc.write_all(&raw).unwrap();
-        let gz = enc.finish().unwrap();
+    fn gzip_inputs_are_rejected_with_guidance() {
         let dir = std::env::temp_dir().join("bs_idx_test");
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("labels.gz");
-        std::fs::write(&p, &gz).unwrap();
+        // gzip magic header followed by junk
+        std::fs::write(&p, [0x1f, 0x8b, 0x08, 0x00]).unwrap();
+        let err = read_file(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("gunzip"), "{err:#}");
+    }
+
+    #[test]
+    fn raw_files_load() {
+        let dir = std::env::temp_dir().join("bs_idx_test_raw");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("labels");
+        std::fs::write(&p, fake_idx1(7)).unwrap();
         let bytes = read_file(&p).unwrap();
         assert_eq!(parse_idx1(&bytes).unwrap().len(), 7);
     }

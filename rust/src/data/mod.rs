@@ -1,5 +1,6 @@
 //! Data pipeline substrate: in-memory datasets, shuffled batch iteration,
-//! and conversion straight into `xla::Literal` batches for the runtime.
+//! and assembly into backend-agnostic `HostValue` batches (the PJRT
+//! backend converts them to literals at its own boundary).
 //!
 //! No torchvision / no network in this environment: `synth` generates
 //! MNIST-like and CIFAR-like classification data with class structure
@@ -92,10 +93,10 @@ impl Dataset {
     }
 }
 
-/// A materialized batch ready for PJRT.
+/// A materialized batch ready for any `backend::Backend`.
 pub struct Batch {
-    pub x: xla::Literal,
-    pub y: xla::Literal,
+    pub x: HostValue,
+    pub y: HostValue,
     pub size: usize,
 }
 
@@ -140,7 +141,7 @@ impl<'a> Batcher<'a> {
     }
 }
 
-/// Gather rows `idx` into one literal batch.
+/// Gather rows `idx` into one host-value batch.
 pub fn assemble_batch(data: &Dataset, idx: &[usize]) -> Result<Batch> {
     let b = idx.len();
     if data.is_tokens {
@@ -151,8 +152,8 @@ pub fn assemble_batch(data: &Dataset, idx: &[usize]) -> Result<Batch> {
             xs.extend_from_slice(&data.tokens[i * seq..(i + 1) * seq]);
             ys.extend_from_slice(&data.targets[i * seq..(i + 1) * seq]);
         }
-        let x = HostValue::I32 { shape: vec![b, seq], data: xs }.to_literal()?;
-        let y = HostValue::I32 { shape: vec![b, seq], data: ys }.to_literal()?;
+        let x = HostValue::I32 { shape: vec![b, seq], data: xs };
+        let y = HostValue::I32 { shape: vec![b, seq], data: ys };
         Ok(Batch { x, y, size: b })
     } else {
         let f = data.features;
@@ -162,8 +163,8 @@ pub fn assemble_batch(data: &Dataset, idx: &[usize]) -> Result<Batch> {
             xs.extend_from_slice(&data.x[i * f..(i + 1) * f]);
             ys.push(data.y[i]);
         }
-        let x = HostValue::F32(Tensor::new(&[b, f], xs)?).to_literal()?;
-        let y = HostValue::I32 { shape: vec![b], data: ys }.to_literal()?;
+        let x = HostValue::F32(Tensor::new(&[b, f], xs)?);
+        let y = HostValue::I32 { shape: vec![b], data: ys };
         Ok(Batch { x, y, size: b })
     }
 }
@@ -194,10 +195,11 @@ mod tests {
         let mut seen = vec![0usize; 10];
         for _ in 0..5 {
             let batch = b.next_batch().unwrap();
-            let ys = batch.y.to_vec::<i32>().unwrap();
+            let ys = batch.y.i32_data().unwrap();
             assert_eq!(ys.len(), 2);
-            let xs = batch.x.to_vec::<f32>().unwrap();
-            for chunk in xs.chunks(4) {
+            let xs = batch.x.as_f32().unwrap();
+            assert_eq!(xs.shape(), &[2, 4]);
+            for chunk in xs.data().chunks(4) {
                 seen[(chunk[0] / 4.0) as usize] += 1;
             }
         }
@@ -220,8 +222,9 @@ mod tests {
         let d = Dataset::from_tokens(6, 32, tokens, targets).unwrap();
         assert_eq!(d.n, 4);
         let b = assemble_batch(&d, &[1, 3]).unwrap();
-        assert_eq!(b.x.to_vec::<i32>().unwrap()[0], 6);
-        assert_eq!(b.y.to_vec::<i32>().unwrap()[0], 7);
+        assert_eq!(b.x.i32_data().unwrap()[0], 6);
+        assert_eq!(b.y.i32_data().unwrap()[0], 7);
+        assert_eq!(b.x.shape(), &[2, 6]);
     }
 
     #[test]

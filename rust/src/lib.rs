@@ -11,13 +11,29 @@
 //!   transformer-LM), the paper's method + all baselines as pure train-step
 //!   functions, AOT-lowered to HLO text once at build time.
 //! * **L3** (this crate): the coordinator that owns the training loop —
-//!   data pipeline, PJRT execution, regularization schedules, RigL/pruning
-//!   controllers, pattern selection, sparsity/FLOPs accounting, metrics.
+//!   data pipeline, execution *backends*, regularization schedules,
+//!   RigL/pruning controllers, pattern selection, sparsity/FLOPs
+//!   accounting, metrics.
 //!
-//! Python never runs at training time: `make artifacts` lowers everything
-//! to `artifacts/*.hlo.txt` + `manifest.json`, and the rust binary is then
-//! self-contained.
+//! Execution in L3 goes through the [`backend::Backend`] trait, which has
+//! two implementations:
+//!
+//! * [`backend::native::NativeBackend`] — the **default**: a pure-Rust,
+//!   multi-threaded engine implementing the paper's linear-spec methods
+//!   (factorized KPD forward/backward, ℓ1-on-S proximal update,
+//!   group-LASSO prox, blockwise RigL, magnitude pruning, SGD/momentum).
+//!   It is manifest-free and hermetic, so `cargo build && cargo test` and
+//!   the benches run offline with no python, artifacts, or PJRT plugin.
+//! * `backend::pjrt::PjrtBackend` — the AOT path (`--features pjrt`):
+//!   `make artifacts` lowers the L2 graphs to `artifacts/*.hlo.txt` +
+//!   `manifest.json`, and the `runtime` module executes them through
+//!   PJRT with zero re-marshalling on the hot path. The `xla` dependency
+//!   only enters the dependency graph when the feature is enabled.
+//!
+//! See `rust/README.md` for the backend/feature matrix and offline
+//! test/bench instructions.
 
+pub mod backend;
 pub mod bench;
 pub mod blockopt;
 pub mod checkpoint;
@@ -28,6 +44,7 @@ pub mod data;
 pub mod flops;
 pub mod manifest;
 pub mod metrics;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sparsity;
 pub mod tensor;

@@ -1,7 +1,7 @@
 //! `blocksparse` CLI — the L3 launcher.
 //!
 //! Subcommands:
-//!   list                              show every spec in the manifest
+//!   list                              show every spec the backend can run
 //!   train    --spec KEY [...]         multi-seed training run + summary row
 //!   pattern  --spec KEY [...]         pattern-selection run (Figure 3):
 //!                                     prints the per-pattern ‖S‖₁ series
@@ -9,24 +9,29 @@
 //!   blockopt --m M --n N              Eq. 5 optimal block size
 //!   bench-step --spec KEY             one-step latency microbench
 //!
+//! Backend selection: `--backend native|pjrt`, default auto (PJRT when the
+//! build has `--features pjrt` and artifacts exist, else the pure-Rust
+//! native backend).
+//!
 //! Examples:
 //!   blocksparse train --spec t1_kpd_b2x2 --steps 600 --seeds 0,1,2
-//!   blocksparse pattern --spec f3a_pattern --steps 1500
+//!   blocksparse train --spec qs_kpd --steps 300 --lambda 0.01
 //!   blocksparse blockopt --m 8 --n 256
 
 use anyhow::{anyhow, bail, Result};
 
+use blocksparse::backend::Backend;
 use blocksparse::cli::{render_usage, ArgSpec, Args};
 use blocksparse::config::{Config, TrainConfig};
 use blocksparse::coordinator::{self, probe, run_spec};
-use blocksparse::runtime::Runtime;
 use blocksparse::util::human_count;
 use blocksparse::{bench, flops, info};
 
 fn arg_spec() -> ArgSpec {
     ArgSpec {
         options: vec![
-            ("spec", true, "spec key from artifacts/manifest.json"),
+            ("spec", true, "spec key (see `blocksparse list`)"),
+            ("backend", true, "execution backend: native | pjrt (default: auto)"),
             ("config", true, "TOML config file"),
             ("set", true, "comma-separated key=value config overrides"),
             ("steps", true, "training steps"),
@@ -78,20 +83,20 @@ fn build_cfg(args: &Args) -> Result<TrainConfig> {
     Ok(tc)
 }
 
-fn open_runtime(args: &Args) -> Result<Runtime> {
+fn open_backend(args: &Args) -> Result<Box<dyn Backend>> {
     let dir = args
         .opt("artifacts")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(blocksparse::artifact_dir);
-    let rt = Runtime::new(&dir)?;
-    info!("PJRT platform: {} ({} specs)", rt.platform(), rt.manifest.specs.len());
-    Ok(rt)
+    let be = blocksparse::backend::open(&dir, args.opt("backend"))?;
+    info!("backend: {} ({} specs)", be.name(), be.specs().len());
+    Ok(be)
 }
 
 fn cmd_list(args: &Args) -> Result<()> {
-    let rt = open_runtime(args)?;
+    let be = open_backend(args)?;
     println!("{:<28} {:<12} {:>6} {:<12} tags", "spec", "model", "batch", "method");
-    for s in rt.manifest.specs.values() {
+    for s in be.specs() {
         println!(
             "{:<28} {:<12} {:>6} {:<12} {}",
             s.key,
@@ -105,9 +110,9 @@ fn cmd_list(args: &Args) -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let rt = open_runtime(args)?;
+    let be = open_backend(args)?;
     let cfg = build_cfg(args)?;
-    let res = run_spec(&rt, &cfg)?;
+    let res = run_spec(be.as_ref(), &cfg)?;
     println!("\nspec            : {}", res.spec);
     println!("method          : {}", res.method);
     println!("accuracy        : {:.2} ± {:.2} %", res.acc_mean, res.acc_std);
@@ -123,18 +128,18 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_pattern(args: &Args) -> Result<()> {
-    let rt = open_runtime(args)?;
+    let be = open_backend(args)?;
     let mut cfg = build_cfg(args)?;
     if cfg.seeds.len() > 1 {
         cfg.seeds.truncate(1); // Figure 3 is a single-run diagnostic
     }
-    let spec = rt.spec(&cfg.spec)?.clone();
+    let spec = be.spec(&cfg.spec)?.clone();
     let k = spec
         .num_patterns()
         .ok_or_else(|| anyhow!("{} is not a pattern-selection spec", cfg.spec))?;
     let (train, test) =
         coordinator::dataset_for(&spec, cfg.data_seed, cfg.train_examples, cfg.test_examples)?;
-    let trainer = coordinator::Trainer::new(&rt, &cfg);
+    let trainer = coordinator::Trainer::new(be.as_ref(), &cfg);
     let outcome = trainer.run(cfg.seeds[0], &train, &test)?;
     let final_norms = probe::pattern_s_norms(&spec, &outcome.state)?;
 
@@ -163,8 +168,8 @@ fn cmd_pattern(args: &Args) -> Result<()> {
 
 fn cmd_flops(args: &Args) -> Result<()> {
     if let Some(_spec_key) = args.opt("spec") {
-        let rt = open_runtime(args)?;
-        let spec = rt.spec(args.opt("spec").unwrap())?;
+        let be = open_backend(args)?;
+        let spec = be.spec(args.opt("spec").unwrap())?;
         let (params, step) = coordinator::experiment::accounting(spec);
         println!("spec {}: train_params={} step_flops={}", spec.key,
                  human_count(params as f64), human_count(step as f64));
@@ -221,12 +226,12 @@ fn cmd_blockopt(args: &Args) -> Result<()> {
 }
 
 fn cmd_bench_step(args: &Args) -> Result<()> {
-    let rt = open_runtime(args)?;
+    let be = open_backend(args)?;
     let cfg = build_cfg(args)?;
-    let spec = rt.spec(&cfg.spec)?.clone();
+    let spec = be.spec(&cfg.spec)?.clone();
     let (train, _test) =
         coordinator::dataset_for(&spec, cfg.data_seed, spec.batch * 4, spec.batch)?;
-    let mut state = rt.init_state(&cfg.spec, 0)?;
+    let mut state = be.init_state(&cfg.spec, 0)?;
     let batch = crate::first_batch(&train, spec.batch)?;
     let hyper: Vec<f32> = spec
         .hyper
@@ -238,7 +243,7 @@ fn cmd_bench_step(args: &Args) -> Result<()> {
         })
         .collect();
     let stats = bench::quick_bench(&format!("{} train_step", cfg.spec), || {
-        rt.train_step(&mut state, &batch.x, &batch.y, &hyper).expect("step");
+        be.train_step(&mut state, &batch.x, &batch.y, &hyper).expect("step");
     });
     println!("{}", stats.report());
     println!(

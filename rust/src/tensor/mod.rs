@@ -1,10 +1,11 @@
 //! Host tensor substrate: a row-major f32 NDArray with exactly the ops the
-//! coordinator needs (reshape, matmul, Kronecker product, block reductions)
-//! plus conversions to/from `xla::Literal`.
+//! coordinator needs (reshape, matmul, Kronecker product, block reductions).
 //!
 //! This is deliberately *not* a general tensor library: it backs sparsity
 //! measurement, KPD reconstruction checks, dataset assembly and the
-//! property tests — the heavy math lives in the AOT-compiled HLO.
+//! property tests. `Tensor`/`HostValue` are also the backend-agnostic
+//! state/batch types crossing the `backend::Backend` boundary; the
+//! `xla::Literal` conversions only exist under the `pjrt` feature.
 
 use anyhow::{anyhow, bail, Result};
 
@@ -191,24 +192,37 @@ impl Tensor {
         if m % m2 != 0 || n % n2 != 0 {
             bail!("block ({m2},{n2}) does not tile ({m},{n})");
         }
-        let (m1, n1) = (m / m2, n / n2);
-        let mut out = vec![0.0f32; m1 * n1];
-        for i in 0..m {
-            for j in 0..n {
-                let v = self.data[i * n + j];
-                out[(i / m2) * n1 + (j / n2)] += v * v;
-            }
-        }
-        for v in &mut out {
-            *v = v.sqrt();
-        }
-        Tensor::new(&[m1, n1], out)
+        Tensor::new(&[m / m2, n / n2], block_fro_norms_slice(&self.data, m, n, m2, n2))
     }
 }
 
-// ----------------------------------------------------------- xla bridging
+/// Slice-level per-block Frobenius norms of a row-major (m×n) matrix on an
+/// (m2×n2) grid, returned row-major (m1·n1). The single implementation
+/// behind [`Tensor::block_fro_norms`] and the native backend's
+/// gradient-norm / prox paths. Caller guarantees the block tiles the
+/// matrix.
+pub fn block_fro_norms_slice(w: &[f32], m: usize, n: usize, m2: usize, n2: usize) -> Vec<f32> {
+    debug_assert_eq!(w.len(), m * n);
+    debug_assert!(m % m2 == 0 && n % n2 == 0);
+    let n1 = n / n2;
+    let mut out = vec![0.0f32; (m / m2) * n1];
+    for i in 0..m {
+        let row = &w[i * n..(i + 1) * n];
+        let orow = &mut out[(i / m2) * n1..(i / m2 + 1) * n1];
+        for (j, &v) in row.iter().enumerate() {
+            orow[j / n2] += v * v;
+        }
+    }
+    for v in &mut out {
+        *v = v.sqrt();
+    }
+    out
+}
 
-/// Dtypes we exchange with PJRT (mirrors the manifest's dtype strings).
+// ------------------------------------------------------------ host values
+
+/// Dtypes crossing the backend boundary (mirrors the manifest's dtype
+/// strings).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DType {
     F32,
@@ -227,7 +241,8 @@ impl DType {
     }
 }
 
-/// Host value crossing the PJRT boundary: f32 tensor or i32/u32 raw data.
+/// Host value crossing the backend boundary: f32 tensor or i32/u32 raw
+/// data (class ids, token ids, seeds).
 #[derive(Clone, Debug)]
 pub enum HostValue {
     F32(Tensor),
@@ -267,6 +282,25 @@ impl HostValue {
         }
     }
 
+    pub fn i32_data(&self) -> Result<&[i32]> {
+        match self {
+            HostValue::I32 { data, .. } => Ok(data),
+            other => Err(anyhow!("expected i32 value, got {:?}", other.dtype())),
+        }
+    }
+
+    pub fn u32_data(&self) -> Result<&[u32]> {
+        match self {
+            HostValue::U32 { data, .. } => Ok(data),
+            other => Err(anyhow!("expected u32 value, got {:?}", other.dtype())),
+        }
+    }
+}
+
+// ----------------------------------------------------------- xla bridging
+
+#[cfg(feature = "pjrt")]
+impl HostValue {
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
         let lit = match self {
@@ -359,5 +393,19 @@ mod tests {
         let t = Tensor::zeros(&[2, 3]);
         assert!(t.clone().reshape(&[3, 2]).is_ok());
         assert!(t.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn host_value_typed_accessors() {
+        let f = HostValue::F32(Tensor::zeros(&[2]));
+        let i = HostValue::I32 { shape: vec![3], data: vec![1, 2, 3] };
+        let u = HostValue::U32 { shape: vec![1], data: vec![9] };
+        assert!(f.as_f32().is_ok());
+        assert!(f.i32_data().is_err());
+        assert_eq!(i.i32_data().unwrap(), &[1, 2, 3]);
+        assert_eq!(u.u32_data().unwrap(), &[9]);
+        assert_eq!(i.dtype(), DType::I32);
+        assert_eq!(HostValue::scalar_u32(5).shape(), &[] as &[usize]);
+        assert_eq!(HostValue::scalar_f32(1.5).as_f32().unwrap().data(), &[1.5]);
     }
 }

@@ -1,0 +1,31 @@
+//! Compile guard for the feature split: with default features the `xla`
+//! crate must be absent from the dependency graph and `blocksparse::runtime`
+//! must not exist. This whole file is compiled only without `pjrt`, so it
+//! doubles as a regression test that the default build stays native-only.
+#![cfg(not(feature = "pjrt"))]
+
+use blocksparse::backend::{self, Backend};
+
+#[test]
+fn default_features_exclude_pjrt() {
+    // cfg-level guard: this test file vanishes when the feature is on, so
+    // reaching this assertion means the default set really excludes it.
+    assert!(!cfg!(feature = "pjrt"));
+}
+
+#[test]
+fn default_backend_is_native() {
+    let be = backend::open_default().unwrap();
+    assert_eq!(be.name(), "native-cpu");
+    assert!(be.specs().len() >= 10, "default registry too small");
+    assert!(be.spec("t1_kpd_b2x2").is_ok());
+}
+
+#[test]
+fn forcing_pjrt_fails_with_guidance() {
+    let err = backend::open(std::path::Path::new("artifacts"), Some("pjrt"))
+        .err()
+        .expect("pjrt must be unavailable without the feature");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("pjrt"), "unhelpful error: {msg}");
+}

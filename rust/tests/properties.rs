@@ -183,7 +183,8 @@ fn prop_batcher_epoch_is_permutation() {
         let mut seen = vec![0usize; n];
         for _ in 0..b.batches_per_epoch() {
             let bt = b.next_batch().map_err(|e| e.to_string())?;
-            for v in bt.x.to_vec::<f32>().map_err(|e| e.to_string())? {
+            let xs = bt.x.as_f32().map_err(|e| e.to_string())?;
+            for &v in xs.data() {
                 seen[v as usize] += 1;
             }
         }

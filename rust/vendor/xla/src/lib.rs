@@ -1,0 +1,183 @@
+//! Stub of the `xla` (PJRT C API) crate type surface used by blocksparse's
+//! feature-gated `runtime` module.
+//!
+//! This container has no PJRT plugin and no registry access, so the real
+//! crate cannot be built here. This stub keeps `--features pjrt` compiling
+//! and type-checked; every operation fails at *runtime* with a clear
+//! "PJRT support is stubbed" error. To run the AOT/HLO path for real,
+//! replace this path dependency with the actual `xla` crate.
+
+use std::fmt;
+use std::path::Path;
+
+#[derive(Debug)]
+pub struct Error {
+    what: &'static str,
+}
+
+impl Error {
+    fn stubbed(what: &'static str) -> Self {
+        Error { what }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "xla::{}: PJRT support is stubbed in this build (vendor/xla); \
+             swap in the real xla crate to execute HLO artifacts",
+            self.what
+        )
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    U32,
+    U64,
+    F32,
+    F64,
+}
+
+/// Element types exchangeable with a `Literal`.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+}
+
+impl NativeType for f64 {
+    const TY: ElementType = ElementType::F64;
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+}
+
+impl NativeType for u32 {
+    const TY: ElementType = ElementType::U32;
+}
+
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Literal {}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal {}
+    }
+
+    pub fn scalar<T: NativeType>(_v: T) -> Literal {
+        Literal {}
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::stubbed("Literal::reshape"))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::stubbed("Literal::to_vec"))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::stubbed("Literal::to_tuple"))
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Err(Error::stubbed("Literal::array_shape"))
+    }
+}
+
+#[derive(Debug)]
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(Error::stubbed("HloModuleProto::from_text_file"))
+    }
+}
+
+#[derive(Debug)]
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {}
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::stubbed("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stubbed("PjRtLoadedExecutable::execute"))
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::stubbed("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::stubbed("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn everything_is_stubbed() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(Literal::vec1(&[1.0f32]).to_vec::<f32>().is_err());
+        let e = Literal::default().array_shape().unwrap_err();
+        assert!(e.to_string().contains("stubbed"));
+    }
+}
