@@ -2,9 +2,11 @@
 //! on a synthetic Markov byte corpus and log the loss curve — proving all
 //! three layers compose on a real training workload (EXPERIMENTS.md §E2E).
 //!
-//! ```bash
-//! cargo run --release --offline --example e2e_transformer -- --steps 300
-//! ```
+//! LEGACY REFERENCE: predates the `Backend` trait (PR 1) and still
+//! drives `runtime::Runtime` directly, which requires `--features pjrt`
+//! and real AOT artifacts; it is not a registered cargo example target,
+//! so there is no `cargo run --example e2e_transformer`. For a runnable
+//! equivalent use the `table3_transformers` bench.
 //!
 //! The model (lm_e2e: dim 192, depth 4, seq 128, ~5.6M dense-equivalent
 //! params) trains through the full stack: rust data pipeline → PJRT

@@ -1,8 +1,11 @@
 //! Quickstart: train a KPD-factorized linear classifier end to end.
 //!
-//! ```bash
-//! make artifacts && cargo run --release --offline --example quickstart
-//! ```
+//! LEGACY REFERENCE: predates the `Backend` trait (PR 1) and still
+//! drives `runtime::Runtime` directly, which requires `--features pjrt`
+//! and real AOT artifacts; it is not a registered cargo example target,
+//! so there is no `cargo run --example quickstart`. For a runnable
+//! equivalent use `cargo run --release -- train --spec qs_kpd`
+//! (see rust/README.md).
 //!
 //! Walks the whole public API: open the runtime over the AOT artifacts,
 //! build a dataset, train with the paper's Eq. 4 objective, measure the

@@ -17,11 +17,11 @@ fn run_panel(be: &dyn Backend, spec_key: &str, steps: usize) -> anyhow::Result<(
     let env = BenchEnv::from_env(steps, 1, 6144, 1024);
     let spec = be.spec(spec_key)?.clone();
     let k = spec.num_patterns().unwrap();
-    let mut cfg: TrainConfig = env.config(be, spec_key)?;
-    cfg.lambda = 0.01;       // paper: λ1 = λ2 = 0.01
-    cfg.lambda2 = 0.01;
-    cfg.lambda_ramp = 0.002; // +0.002 per ramp period
-    cfg.eval_every = 0;
+    // env.config picks the backend-appropriate λ schedule: the native
+    // gauge calibration (backend::native::pattern::LAMBDA_CALIBRATION)
+    // on the native backend, the paper's λ1 = λ2 = 0.01 (+0.002 per ramp
+    // period) for AOT/PJRT executables training the original objective.
+    let cfg: TrainConfig = env.config(be, spec_key)?;
 
     let (train, test) = coordinator::dataset_for(&spec, cfg.data_seed,
                                                  cfg.train_examples, cfg.test_examples)?;
@@ -43,19 +43,11 @@ fn run_panel(be: &dyn Backend, spec_key: &str, steps: usize) -> anyhow::Result<(
     }
     let finals = probe::pattern_s_norms(&spec, &outcome.state)?;
     // patterns have different S sizes, so survival is measured by norm
-    // RETENTION (final / initial) — the paper's Figure-3 curves read the
-    // same way once normalized per pattern
-    let retention: Vec<f64> = series
-        .iter()
-        .zip(&finals)
-        .map(|(s, f)| f / s.first().map(|(_, v)| *v).unwrap_or(1.0).max(1e-9))
-        .collect();
-    let survivor = retention
-        .iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(i, _)| i)
-        .unwrap();
+    // RETENTION (final / measured initial) — the paper's Figure-3 curves
+    // read the same way once normalized per pattern
+    let retention =
+        probe::pattern_retention_measured(&spec, &outcome.state, &outcome.history)?;
+    let survivor = probe::pattern_survivor(&retention);
     println!("final ‖S^(k)‖₁: {:?}",
              finals.iter().map(|v| (v * 100.0).round() / 100.0).collect::<Vec<_>>());
     println!("retention (final/initial): {:?}",

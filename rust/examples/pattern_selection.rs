@@ -2,17 +2,17 @@
 //! ONE round of training instead of one training run per candidate.
 //!
 //! ```bash
-//! cargo run --release --offline --example pattern_selection -- --steps 1200
+//! cargo run --release --example pattern_selection -- --steps 1200
 //! ```
 //!
 //! Trains the K=4 Table-1 block-size candidates jointly under the Eq. 7
 //! objective with the staircase λ ramp, prints the per-pattern Σ‖S^(k)‖₁
 //! trajectory, and verifies the surviving pattern is the one that wins an
-//! individual accuracy comparison.
+//! individual accuracy comparison. Runs on the default native backend —
+//! no AOT artifacts needed.
 
 use blocksparse::config::{Config, TrainConfig};
 use blocksparse::coordinator::{self, probe, Trainer};
-use blocksparse::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
@@ -23,21 +23,25 @@ fn main() -> anyhow::Result<()> {
         .and_then(|v| v.parse().ok())
         .unwrap_or(1200);
 
-    let rt = Runtime::new(blocksparse::artifact_dir())?;
-    let spec = rt.spec("f3a_pattern")?.clone();
+    let be = blocksparse::backend::open_default()?;
+    let spec = be.spec("f3a_pattern")?.clone();
     let k = spec.num_patterns().unwrap();
     println!("jointly training {k} block-size candidates (Eq. 7), {steps} steps");
-    println!("patterns: (2,2) (4,2) (8,2) (16,2)  [paper Table-1 grid]");
+    println!("patterns: (2,2) (2,4) (2,8) (2,16)  [paper Table-1 grid]");
 
     let mut cfg = TrainConfig::from_config(&Config::default(), "f3a_pattern");
     cfg.steps = steps;
-    cfg.lambda = 0.01;      // λ1 = λ2 = 0.01, ramp +0.002 / 5 epochs
+    // paper Eq. 7 schedule (λ1 = λ2 = 0.01, +0.002 per ramp period) for
+    // AOT/PJRT backends; the native gauge objective swaps in its own
+    // smaller calibration (see backend::native::pattern)
+    cfg.lambda = 0.01;
     cfg.lambda2 = 0.01;
     cfg.lambda_ramp = 0.002;
+    blocksparse::backend::native::pattern::calibrate_lambda(&mut cfg, &be.name());
     cfg.eval_every = 0;
     let (train, test) = coordinator::dataset_for(&spec, cfg.data_seed, 8192, 2048)?;
 
-    let trainer = Trainer::new(&rt, &cfg);
+    let trainer = Trainer::new(be.as_ref(), &cfg);
     let outcome = trainer.run(0, &train, &test)?;
 
     println!("\nΣ‖S^(k)‖₁ trajectory (Figure 3a):");
@@ -54,24 +58,10 @@ fn main() -> anyhow::Result<()> {
     let finals = probe::pattern_s_norms(&spec, &outcome.state)?;
     // normalize by each pattern's initial norm (patterns have different S
     // sizes): survival = max retention, matching the paper's normalized read
-    let retention: Vec<f64> = series
-        .iter()
-        .zip(&finals)
-        .map(|(s, f)| f / s.first().map(|(_, v)| *v).unwrap_or(1.0).max(1e-9))
-        .collect();
-    let survivor = retention
-        .iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(i, _)| i)
-        .unwrap();
-    let best_acc = outcome
-        .pattern_accs
-        .iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(i, _)| i)
-        .unwrap();
+    let retention =
+        probe::pattern_retention_measured(&spec, &outcome.state, &outcome.history)?;
+    let survivor = probe::pattern_survivor(&retention);
+    let best_acc = blocksparse::util::argmax(&outcome.pattern_accs);
     println!("\nfinal ‖S^(k)‖₁     : {finals:?}");
     println!("per-pattern accuracy: {:?}", outcome.pattern_accs);
     println!("survivor k={survivor}, accuracy-winner k={best_acc} -> {}",

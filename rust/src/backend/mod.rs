@@ -92,8 +92,16 @@ pub trait Backend {
     ) -> Result<Vec<f32>>;
 
     /// Evaluation on the current parameters: `[mean_ce, correct_count]`
-    /// (plus per-pattern extensions for pattern-selection specs).
+    /// (pattern-selection specs instead return the per-pattern layout
+    /// `[ce_0..ce_{K-1}, correct_0..correct_{K-1}]`).
     fn eval_step(&self, state: &TrainState, x: &HostValue, y: &HostValue) -> Result<Vec<f32>>;
+
+    /// Whether executables are compiled for one exact batch size (AOT/PJRT),
+    /// in which case evaluation must drop a trailing partial batch. The
+    /// native backend accepts any batch size and keeps the default `false`.
+    fn fixed_batch(&self) -> bool {
+        false
+    }
 
     /// Reconstruct the (block-wise sparse) dense W of every slot.
     fn materialize(&self, state: &TrainState) -> Result<Vec<(String, Tensor)>>;

@@ -5,6 +5,9 @@
 //!
 //! * `kpd`          — factorized forward/backward (module [`kpd`]) with the
 //!                    ℓ1-on-S proximal (soft-threshold) update;
+//! * `pattern_kpd`  — joint multi-pattern training (module [`pattern`]):
+//!                    K block-size candidates share the input, sum logits,
+//!                    and each takes the ℓ1-on-S prox — Eq. 7 / Figure 3;
 //! * `group_lasso` / `elastic_gl` — dense W with the block-group proximal
 //!                    shrink (and ridge term for elastic);
 //! * `rigl_block`   — block-masked W via the block-sparse matmul, dense
@@ -20,21 +23,29 @@
 
 pub mod kpd;
 pub mod linalg;
+pub mod pattern;
 
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::flops::KpdDims;
-use crate::manifest::{SlotInfo, SpecEntry};
+use crate::manifest::{HyperParam, SlotInfo, SpecEntry};
 use crate::tensor::{DType, HostValue, Tensor};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 use super::{Backend, TrainState};
 
-const METHODS: &[&str] =
-    &["kpd", "group_lasso", "elastic_gl", "rigl_block", "iter_prune", "dense"];
+const METHODS: &[&str] = &[
+    "kpd",
+    "pattern_kpd",
+    "group_lasso",
+    "elastic_gl",
+    "rigl_block",
+    "iter_prune",
+    "dense",
+];
 
 /// Manifest-free description of one trainable linear spec.
 #[derive(Clone, Debug)]
@@ -57,6 +68,8 @@ pub struct SpecConfig {
     pub momentum: f32,
     /// initial fraction of active blocks for `rigl_block`
     pub rigl_density: f64,
+    /// candidate `(m2, n2)` block sizes for `pattern_kpd` (empty otherwise)
+    pub patterns: Vec<(usize, usize)>,
     pub tags: Vec<String>,
 }
 
@@ -84,8 +97,24 @@ impl SpecConfig {
             batch,
             momentum: 0.9,
             rigl_density: 0.5,
+            patterns: Vec::new(),
             tags: Vec::new(),
         }
+    }
+
+    /// A joint pattern-selection spec (Eq. 7): K candidate block sizes of
+    /// one linear layer trained together with summed logits.
+    pub fn pattern(
+        key: &str,
+        in_dim: usize,
+        out_dim: usize,
+        patterns: &[(usize, usize)],
+        rank: usize,
+        batch: usize,
+    ) -> Self {
+        let mut cfg = SpecConfig::linear(key, "pattern_kpd", in_dim, out_dim, 1, 1, rank, batch);
+        cfg.patterns = patterns.to_vec();
+        cfg
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -101,8 +130,23 @@ impl SpecConfig {
         if self.batch == 0 {
             bail!("batch must be positive");
         }
-        if self.method == "kpd" && self.rank == 0 {
-            bail!("kpd rank must be ≥ 1");
+        if (self.method == "kpd" || self.method == "pattern_kpd") && self.rank == 0 {
+            bail!("{} rank must be ≥ 1", self.method);
+        }
+        if self.method == "pattern_kpd" {
+            if self.patterns.is_empty() {
+                bail!("pattern_kpd needs at least one (m2, n2) candidate");
+            }
+            for &(m2, n2) in &self.patterns {
+                if m2 == 0 || self.out_dim % m2 != 0 {
+                    bail!("pattern block rows {m2} do not tile out_dim {}", self.out_dim);
+                }
+                if n2 == 0 || self.in_dim % n2 != 0 {
+                    bail!("pattern block cols {n2} do not tile in_dim {}", self.in_dim);
+                }
+            }
+        } else if !self.patterns.is_empty() {
+            bail!("block-size candidates only apply to the pattern_kpd method");
         }
         if !(0.0..=1.0).contains(&self.rigl_density) {
             bail!("rigl_density must be in [0, 1]");
@@ -112,6 +156,16 @@ impl SpecConfig {
 
     pub fn dims(&self) -> KpdDims {
         KpdDims::from_block(self.out_dim, self.in_dim, self.m2, self.n2, self.rank.max(1))
+    }
+
+    /// KPD dims of every candidate pattern (`pattern_kpd` specs).
+    pub fn pattern_dims(&self) -> Vec<KpdDims> {
+        self.patterns
+            .iter()
+            .map(|&(m2, n2)| {
+                KpdDims::from_block(self.out_dim, self.in_dim, m2, n2, self.rank.max(1))
+            })
+            .collect()
     }
 
     fn grid(&self) -> (usize, usize) {
@@ -183,6 +237,22 @@ impl NativeBackend {
                 "table4",
             );
         }
+        // Figure 3a: the Table-1 block-size grid trained jointly (Eq. 7).
+        // Rank 1 gives the sharpest capacity cliff between candidates: a
+        // rank-1 coarse-block teacher is exactly representable at its own
+        // block size but only partially at any other, which is what makes
+        // block-size *selection* well-posed.
+        add(
+            SpecConfig::pattern(
+                "f3a_pattern",
+                784,
+                10,
+                &[(2, 2), (2, 4), (2, 8), (2, 16)],
+                1,
+                128,
+            ),
+            "fig3",
+        );
         be
     }
 
@@ -206,6 +276,11 @@ fn build_entry(cfg: &SpecConfig) -> Result<SpecEntry> {
             metrics.push("s_l1".to_string());
             vec!["lambda".to_string(), "lr".to_string()]
         }
+        "pattern_kpd" => {
+            // the Figure-3 series: one ‖S^(k)‖₁ metric per candidate
+            metrics.extend((0..cfg.patterns.len()).map(|p| format!("s_l1_p{p}")));
+            vec!["lambda".to_string(), "lr".to_string()]
+        }
         "group_lasso" => vec!["lambda".to_string(), "lr".to_string()],
         "elastic_gl" => {
             vec!["lambda".to_string(), "lambda2".to_string(), "lr".to_string()]
@@ -216,18 +291,46 @@ fn build_entry(cfg: &SpecConfig) -> Result<SpecEntry> {
         }
         _ => vec!["lr".to_string()],
     };
-    let params_total = if cfg.method == "kpd" {
-        cfg.dims().train_params() as usize
-    } else {
-        m * n
+    let params_total = match cfg.method.as_str() {
+        "kpd" => cfg.dims().train_params() as usize,
+        "pattern_kpd" => {
+            cfg.pattern_dims().iter().map(|d| d.train_params() as usize).sum()
+        }
+        _ => m * n,
     };
     let mut info = BTreeMap::new();
-    let mut blocks = BTreeMap::new();
-    blocks.insert(
-        "fc".to_string(),
-        Json::Arr(vec![Json::Num(cfg.m2 as f64), Json::Num(cfg.n2 as f64)]),
-    );
-    info.insert("blocks".to_string(), Json::Obj(blocks));
+    if cfg.method == "pattern_kpd" {
+        // layout consumed by `experiment::accounting` and `Trainer`:
+        // num_patterns + per-candidate {slot: [m2, n2]} entries
+        info.insert(
+            "num_patterns".to_string(),
+            Json::Num(cfg.patterns.len() as f64),
+        );
+        info.insert(
+            "patterns".to_string(),
+            Json::Arr(
+                cfg.patterns
+                    .iter()
+                    .map(|&(m2, n2)| {
+                        let mut pat = BTreeMap::new();
+                        pat.insert(
+                            "fc".to_string(),
+                            Json::Arr(vec![Json::Num(m2 as f64), Json::Num(n2 as f64)]),
+                        );
+                        Json::Obj(pat)
+                    })
+                    .collect(),
+            ),
+        );
+        info.insert("rank".to_string(), Json::Num(cfg.rank.max(1) as f64));
+    } else {
+        let mut blocks = BTreeMap::new();
+        blocks.insert(
+            "fc".to_string(),
+            Json::Arr(vec![Json::Num(cfg.m2 as f64), Json::Num(cfg.n2 as f64)]),
+        );
+        info.insert("blocks".to_string(), Json::Obj(blocks));
+    }
     if cfg.method == "kpd" {
         let d = cfg.dims();
         info.insert("rank".to_string(), Json::Num(d.r as f64));
@@ -381,12 +484,13 @@ fn parse_hyper(entry: &SpecEntry, hyper: &[f32]) -> Result<Hyper> {
         );
     }
     let mut out = Hyper { lam: 0.0, lam2: 0.0, lr: 0.0 };
+    // names resolve through the shared HyperParam vocabulary, so this stays
+    // in lockstep with the trainer's build_hyper on the other side
     for (name, &v) in entry.hyper.iter().zip(hyper) {
-        match name.as_str() {
-            "lambda" | "lambda1" => out.lam = v,
-            "lambda2" => out.lam2 = v,
-            "lr" => out.lr = v,
-            other => bail!("unknown hyper-parameter '{other}'"),
+        match HyperParam::parse(name)? {
+            HyperParam::Lambda1 => out.lam = v,
+            HyperParam::Lambda2 => out.lam2 = v,
+            HyperParam::Lr => out.lr = v,
         }
     }
     Ok(out)
@@ -565,6 +669,16 @@ impl Backend for NativeBackend {
         let ns = self.get(spec)?;
         let cfg = &ns.cfg;
         let mut rng = Rng::new((seed as u64) ^ fnv(&cfg.key));
+        if cfg.method == "pattern_kpd" {
+            let (pn, ps, on, os) = pattern::init_state_parts(&cfg.pattern_dims(), &mut rng);
+            return Ok(TrainState {
+                spec: spec.to_string(),
+                param_names: pn,
+                opt_names: on,
+                params: ps,
+                opt: os,
+            });
+        }
         let (m, n) = (cfg.out_dim, cfg.in_dim);
         let mut param_names = Vec::new();
         let mut params = Vec::new();
@@ -624,16 +738,29 @@ impl Backend for NativeBackend {
         let ns = self.get(&state.spec)?;
         let h = parse_hyper(&ns.entry, hyper)?;
         let (xs, nb, ys) = batch_xy(x, y, ns.cfg.in_dim)?;
-        if ns.cfg.method == "kpd" {
-            self.step_kpd(ns, state, xs, nb, ys, &h)
-        } else {
-            self.step_dense_family(ns, state, xs, nb, ys, &h)
+        match ns.cfg.method.as_str() {
+            "kpd" => self.step_kpd(ns, state, xs, nb, ys, &h),
+            "pattern_kpd" => pattern::train_step(
+                state,
+                xs,
+                nb,
+                ys,
+                &ns.cfg.pattern_dims(),
+                h.lam,
+                h.lr,
+                ns.cfg.momentum,
+            ),
+            _ => self.step_dense_family(ns, state, xs, nb, ys, &h),
         }
     }
 
     fn eval_step(&self, state: &TrainState, x: &HostValue, y: &HostValue) -> Result<Vec<f32>> {
         let ns = self.get(&state.spec)?;
         let (xs, nb, ys) = batch_xy(x, y, ns.cfg.in_dim)?;
+        if ns.cfg.method == "pattern_kpd" {
+            // per-pattern layout [ce_0..ce_{K-1}, correct_0..correct_{K-1}]
+            return pattern::eval_step(state, xs, nb, ys, &ns.cfg.pattern_dims());
+        }
         let z = self.forward(ns, state, xs, nb)?;
         let sm = linalg::softmax_ce(&z, ys, nb, ns.cfg.out_dim)?;
         Ok(vec![sm.ce_mean, sm.correct])
@@ -649,6 +776,12 @@ impl Backend for NativeBackend {
                 let a = state.param("fc.A")?;
                 let b = state.param("fc.B")?;
                 Tensor::kpd_reconstruct(s, a, b)?
+            }
+            "pattern_kpd" => {
+                // survivor extraction: the max-retention candidate's dense W
+                let (p, w) = pattern::materialize_survivor(state, &cfg.pattern_dims())?;
+                crate::debug!("{}: materializing surviving pattern k={p}", cfg.key);
+                w
             }
             "rigl_block" => {
                 let mut w = state.param("fc.W")?.data().to_vec();
@@ -865,6 +998,65 @@ mod tests {
             assert_eq!(ws[0].0, "fc");
             assert_eq!(ws[0].1.shape(), &[10, 784], "{spec}");
         }
+    }
+
+    #[test]
+    fn pattern_spec_registered_with_fig3_layout() {
+        let be = NativeBackend::with_default_specs();
+        let e = be.spec("f3a_pattern").unwrap().clone();
+        assert_eq!(e.method, "pattern_kpd");
+        assert_eq!(e.num_patterns(), Some(4));
+        // metrics: [loss, ce, acc, s_l1_p0..s_l1_p3]
+        assert_eq!(e.metrics.len(), 7);
+        assert_eq!(e.metric_index("s_l1_p3"), Some(6));
+        assert_eq!(e.hyper, vec!["lambda".to_string(), "lr".to_string()]);
+        // params_total = Σ_k candidate factorization params
+        let cfg = SpecConfig::pattern(
+            "x", 784, 10, &[(2, 2), (2, 4), (2, 8), (2, 16)], 1, 128,
+        );
+        let want: usize =
+            cfg.pattern_dims().iter().map(|d| d.train_params() as usize).sum();
+        assert_eq!(e.params_total, want);
+    }
+
+    #[test]
+    fn pattern_spec_trains_evals_and_materializes() {
+        let be = NativeBackend::with_default_specs();
+        let e = be.spec("f3a_pattern").unwrap().clone();
+        let mut state = be.init_state("f3a_pattern", 0).unwrap();
+        let (x, y) = batch(16, 784, 10, 3);
+        let m = be.train_step(&mut state, &x, &y, &[0.01, 0.05]).unwrap();
+        assert_eq!(m.len(), e.metrics.len());
+        assert!(m.iter().all(|v| v.is_finite()), "{m:?}");
+        // the per-pattern eval layout Trainer::evaluate expects: 2K values
+        let ev = be.eval_step(&state, &x, &y).unwrap();
+        assert_eq!(ev.len(), 8);
+        for p in 0..4 {
+            assert!(ev[p] > 0.0, "ce_{p} must be positive");
+            assert!((0.0..=16.0).contains(&ev[4 + p]), "correct_{p} out of range");
+        }
+        // survivor extraction: exactly one dense fc slot at the full shape
+        let ws = be.materialize(&state).unwrap();
+        assert_eq!(ws.len(), 1);
+        assert_eq!(ws[0].0, "fc");
+        assert_eq!(ws[0].1.shape(), &[10, 784]);
+        // pattern probes read the p{k}.fc.S layout
+        let norms = crate::coordinator::probe::pattern_s_norms(&e, &state).unwrap();
+        assert_eq!(norms.len(), 4);
+        assert!(norms.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn pattern_config_validation() {
+        assert!(SpecConfig::pattern("p", 784, 10, &[], 2, 64).validate().is_err());
+        assert!(SpecConfig::pattern("p", 784, 10, &[(3, 2)], 2, 64).validate().is_err());
+        assert!(SpecConfig::pattern("p", 784, 10, &[(2, 3)], 2, 64).validate().is_err());
+        assert!(SpecConfig::pattern("p", 784, 10, &[(2, 4)], 0, 64).validate().is_err());
+        assert!(SpecConfig::pattern("p", 784, 10, &[(2, 4)], 2, 64).validate().is_ok());
+        // candidates on a non-pattern method are rejected
+        let mut cfg = SpecConfig::linear("q", "kpd", 784, 10, 2, 4, 2, 64);
+        cfg.patterns = vec![(2, 4)];
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -99,6 +99,11 @@ impl Backend for PjrtBackend {
         self.rt.eval_step(&ls, &x.to_literal()?, &y.to_literal()?)
     }
 
+    fn fixed_batch(&self) -> bool {
+        // every AOT executable is lowered for the spec's exact batch shape
+        true
+    }
+
     fn materialize(&self, state: &TrainState) -> Result<Vec<(String, Tensor)>> {
         let ls = self.lit_state(state)?;
         self.rt.materialize(&ls)

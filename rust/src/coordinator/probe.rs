@@ -10,10 +10,11 @@
 //! All rates are aggregated over slots weighted by element count, like the
 //! paper's whole-model sparsity numbers.
 
-use anyhow::Result;
+use anyhow::{anyhow, bail, Result};
 
 use crate::backend::{Backend, TrainState};
 use crate::manifest::SpecEntry;
+use crate::metrics::History;
 use crate::sparsity::{self, DEFAULT_EPS_REL};
 
 /// Whole-model sparsity rate in percent for a trained state.
@@ -86,4 +87,102 @@ pub fn pattern_s_norms(spec: &SpecEntry, state: &TrainState) -> Result<Vec<f64>>
         out.push(total);
     }
     Ok(out)
+}
+
+/// Per-pattern normalized retention ‖S^(k)‖₁ / ‖S^(k)(0)‖₁. S^(k) is
+/// initialized to all-ones, so the initial norm is the candidate's S entry
+/// count, derived here from the spec's pattern grid. The survivor is read
+/// as max retention everywhere (CLI, Figure-3 bench, tests); the native
+/// backend's `materialize` applies the same criterion through its
+/// dims-based twin `backend::native::pattern::survivor` — the two must
+/// stay in agreement (count = Σ_slots (m/m2)·(n/n2) = m1·n1 per slot).
+pub fn pattern_retention(spec: &SpecEntry, state: &TrainState) -> Result<Vec<f64>> {
+    let norms = pattern_s_norms(spec, state)?;
+    let pats = spec
+        .info
+        .get("patterns")
+        .and_then(|j| j.as_arr())
+        .ok_or_else(|| anyhow!("spec {} has no pattern grid info", spec.key))?;
+    if pats.len() != norms.len() {
+        bail!(
+            "spec {}: {} pattern entries but num_patterns = {}",
+            spec.key,
+            pats.len(),
+            norms.len()
+        );
+    }
+    let mut out = Vec::with_capacity(norms.len());
+    for (p, pat) in pats.iter().enumerate() {
+        let mut count = 0usize;
+        for slot in &spec.slots {
+            let b = pat
+                .get(&slot.name)
+                .and_then(|j| j.as_arr())
+                .ok_or_else(|| {
+                    anyhow!("pattern {p} of spec {} lacks slot '{}'", spec.key, slot.name)
+                })?;
+            // manifest-sourced specs reach here too: validate the grid
+            // instead of panicking on a malformed artifact
+            let (m2, n2) = match (b.first().and_then(|v| v.as_usize()),
+                                  b.get(1).and_then(|v| v.as_usize())) {
+                (Some(m2), Some(n2)) if m2 > 0 && n2 > 0 => (m2, n2),
+                _ => bail!(
+                    "pattern {p} of spec {}: malformed block entry for slot '{}'",
+                    spec.key,
+                    slot.name
+                ),
+            };
+            if slot.m % m2 != 0 || slot.n % n2 != 0 {
+                bail!(
+                    "pattern {p} of spec {}: block ({m2},{n2}) does not tile \
+                     slot '{}' ({}x{})",
+                    spec.key,
+                    slot.name,
+                    slot.m,
+                    slot.n
+                );
+            }
+            count += (slot.m / m2) * (slot.n / n2);
+        }
+        out.push(norms[p] / count.max(1) as f64);
+    }
+    Ok(out)
+}
+
+/// Backend-agnostic retention: the initial ‖S^(k)‖₁ is *measured* from the
+/// first recorded `s_l1_p{k}` train metric (correct for any backend's S
+/// init, including manifest/PJRT executables that don't start S at ones),
+/// falling back to [`pattern_retention`]'s entry-count normalization when
+/// the series is absent.
+pub fn pattern_retention_measured(
+    spec: &SpecEntry,
+    state: &TrainState,
+    history: &History,
+) -> Result<Vec<f64>> {
+    let norms = pattern_s_norms(spec, state)?;
+    // the entry-count fallback needs grid info that manifest-sourced specs
+    // may lack: only derive it if some series is actually missing
+    let mut fallback: Option<Vec<f64>> = None;
+    let mut out = Vec::with_capacity(norms.len());
+    for (p, &norm) in norms.iter().enumerate() {
+        let series = history.series(&format!("s_l1_p{p}"));
+        match series.first() {
+            Some(&(_, init)) if init > 0.0 => out.push(norm / init),
+            _ => {
+                if fallback.is_none() {
+                    fallback = Some(pattern_retention(spec, state)?);
+                }
+                out.push(fallback.as_ref().unwrap()[p]);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// The survivor criterion: index of the max-retention pattern, via the
+/// shared [`crate::util::argmax`] that `materialize`'s survivor extraction
+/// also uses — the pattern the tools report and the pattern `materialize`
+/// extracts cannot diverge.
+pub fn pattern_survivor(retention: &[f64]) -> usize {
+    crate::util::argmax(retention)
 }

@@ -65,6 +65,33 @@ impl LrSchedule {
     }
 }
 
+/// Gradual iterative-pruning schedule: `rounds` prune events spread evenly
+/// over `steps`, ramping linearly to the final `target` sparsity.
+///
+/// On small step budgets the naive spacing `steps·k/(rounds+1)` maps
+/// several rounds onto the same step (which would prune twice to different
+/// targets within one step) and can land round 1 on step 0, before any
+/// training. Colliding rounds are deduplicated keeping only the *final*
+/// (largest-k) target per step, and the schedule is clamped into
+/// `[1, steps-1]` — the trainer's loop runs steps `0..steps`, so a prune
+/// scheduled at `steps` would silently never fire. With fewer than two
+/// steps there is no post-training step to prune at, so the schedule is
+/// empty.
+pub fn prune_schedule(steps: usize, rounds: usize, target: f64) -> Vec<(usize, f32)> {
+    if steps < 2 {
+        return vec![];
+    }
+    let mut by_step = std::collections::BTreeMap::new();
+    for k in 1..=rounds {
+        let step = (steps * k / (rounds + 1)).clamp(1, steps - 1);
+        let t = target * k as f64 / rounds as f64;
+        // ascending k: a later round landing on an occupied step overwrites
+        // it with the deeper target
+        by_step.insert(step, t as f32);
+    }
+    by_step.into_iter().collect()
+}
+
 /// RigL drop-fraction schedule: α · decay^(updates so far), mirroring the
 /// cosine-decayed α of Evci et al. with a simpler exponential.
 #[derive(Clone, Debug)]
@@ -116,6 +143,53 @@ mod tests {
         assert!((s.at(10) - 0.1).abs() < 1e-6);
         assert!(s.at(50) > s.at(90));
         assert!(s.at(99) >= 0.0);
+    }
+
+    #[test]
+    fn prune_schedule_spaces_rounds_evenly() {
+        // comfortable budget: no collisions, monotone targets, final target hit
+        let s = prune_schedule(100, 4, 0.8);
+        assert_eq!(s.len(), 4);
+        assert_eq!(s[0].0, 20);
+        assert_eq!(s[3].0, 80);
+        for w in s.windows(2) {
+            assert!(w[0].0 < w[1].0 && w[0].1 < w[1].1, "{s:?}");
+        }
+        assert!((s[3].1 - 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn prune_schedule_dedupes_collisions_and_never_fires_at_step_zero() {
+        // steps=3, rounds=4 → naive steps are 3k/5 = [0, 1, 1, 2]: round 1
+        // lands on step 0 and rounds 2/3 collide on step 1
+        let s = prune_schedule(3, 4, 0.8);
+        assert!(s.iter().all(|&(step, _)| step >= 1), "{s:?}");
+        for w in s.windows(2) {
+            assert!(w[0].0 < w[1].0, "duplicate prune step: {s:?}");
+        }
+        // colliding rounds keep the final (deeper) target: step 1 gets
+        // round 3's 0.6, not round 2's 0.4
+        assert_eq!(s, vec![(1, 0.6), (2, 0.8)]);
+    }
+
+    #[test]
+    fn prune_schedule_empty_without_rounds() {
+        assert!(prune_schedule(100, 0, 0.5).is_empty());
+    }
+
+    #[test]
+    fn prune_schedule_stays_inside_the_step_range() {
+        // a 1-step run has no step ≥ 1 to prune at: empty, not step==steps
+        assert!(prune_schedule(1, 4, 0.8).is_empty());
+        assert!(prune_schedule(0, 4, 0.8).is_empty());
+        // every scheduled step is executable by a loop over 0..steps
+        for steps in 2..12 {
+            for rounds in 1..6 {
+                for &(step, _) in &prune_schedule(steps, rounds, 0.5) {
+                    assert!(step >= 1 && step < steps, "steps={steps} rounds={rounds}");
+                }
+            }
+        }
     }
 
     #[test]

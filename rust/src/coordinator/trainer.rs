@@ -13,6 +13,7 @@ use crate::backend::{Backend, TrainState};
 use crate::config::TrainConfig;
 use crate::coordinator::schedule::{LambdaSchedule, LrSchedule, RiglSchedule};
 use crate::data::{Batcher, Dataset};
+use crate::manifest::HyperParam;
 use crate::metrics::{History, Record};
 
 /// Outcome of one (spec, seed) run.
@@ -71,17 +72,14 @@ impl<'a> Trainer<'a> {
             every: cfg.rigl_every,
         };
 
-        // pruning rounds: prune after each segment boundary (gradual target)
-        let prune_at: Vec<(usize, f32)> = if spec.method == "iter_prune"
-            && cfg.prune_rounds > 0
-        {
-            (1..=cfg.prune_rounds)
-                .map(|k| {
-                    let step = cfg.steps * k / (cfg.prune_rounds + 1);
-                    let target = cfg.prune_target * k as f64 / cfg.prune_rounds as f64;
-                    (step, target as f32)
-                })
-                .collect()
+        // pruning rounds: prune after each segment boundary (gradual target,
+        // deduplicated per step and never before the first train step)
+        let prune_at: Vec<(usize, f32)> = if spec.method == "iter_prune" {
+            crate::coordinator::schedule::prune_schedule(
+                cfg.steps,
+                cfg.prune_rounds,
+                cfg.prune_target,
+            )
         } else {
             vec![]
         };
@@ -163,13 +161,19 @@ impl<'a> Trainer<'a> {
 
     /// Full-test-set evaluation. Returns (accuracy %, mean loss, per-pattern
     /// accuracies % for pattern specs).
+    ///
+    /// Backends that accept variable batch sizes (the native backend) get a
+    /// trailing partial batch so *every* test example is scored; fixed-batch
+    /// backends (AOT/PJRT executables) keep full batches only. The mean loss
+    /// is weighted by batch size, so a partial tail cannot skew it.
     pub fn evaluate(
         &self,
         state: &TrainState,
         spec: &crate::manifest::SpecEntry,
         test: &Dataset,
     ) -> Result<(f64, f64, Vec<f64>)> {
-        let batches = crate::data::eval_batches(test, spec.batch);
+        let batches =
+            crate::data::eval_batches(test, spec.batch, !self.be.fixed_batch());
         if batches.is_empty() {
             bail!("test set smaller than one batch ({} < {})", test.n, spec.batch);
         }
@@ -181,14 +185,15 @@ impl<'a> Trainer<'a> {
         for idx in &batches {
             let b = crate::data::assemble_batch(test, idx)?;
             let m = self.be.eval_step(state, &b.x, &b.y)?;
+            let weight = b.size as f64;
             if k > 0 {
                 // pattern eval layout: [ce_0..ce_{k-1}, acc_0..acc_{k-1}]
                 for p in 0..k {
-                    loss_sum += m[p] as f64 / k as f64;
+                    loss_sum += m[p] as f64 * weight / k as f64;
                     pat_correct[p] += m[k + p] as f64;
                 }
             } else {
-                loss_sum += m[0] as f64;
+                loss_sum += m[0] as f64 * weight;
                 correct += m[1] as f64;
             }
             total += b.size;
@@ -199,7 +204,7 @@ impl<'a> Trainer<'a> {
         } else {
             total as f64
         };
-        let loss = loss_sum / batches.len() as f64;
+        let loss = loss_sum / total as f64;
         if k > 0 {
             let accs: Vec<f64> =
                 pat_correct.iter().map(|c| 100.0 * c / denom).collect();
@@ -211,15 +216,17 @@ impl<'a> Trainer<'a> {
     }
 }
 
-/// Map manifest hyper names to config values.
+/// Map manifest hyper names to config values (via the shared
+/// [`HyperParam`] vocabulary, so this cannot drift from backend parsing).
 fn build_hyper(names: &[String], lam: f64, lam2: f64, lr: f64) -> Result<Vec<f32>> {
     names
         .iter()
-        .map(|n| match n.as_str() {
-            "lambda" | "lambda1" => Ok(lam as f32),
-            "lambda2" => Ok(lam2 as f32),
-            "lr" => Ok(lr as f32),
-            other => bail!("unknown hyper-parameter '{other}' in manifest"),
+        .map(|n| {
+            Ok(match HyperParam::parse(n)? {
+                HyperParam::Lambda1 => lam as f32,
+                HyperParam::Lambda2 => lam2 as f32,
+                HyperParam::Lr => lr as f32,
+            })
         })
         .collect()
 }

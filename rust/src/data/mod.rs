@@ -170,10 +170,19 @@ pub fn assemble_batch(data: &Dataset, idx: &[usize]) -> Result<Batch> {
 }
 
 /// Sequential (non-shuffled) full sweep for evaluation.
-pub fn eval_batches(data: &Dataset, batch: usize) -> Vec<Vec<usize>> {
-    (0..data.n / batch)
-        .map(|b| (b * batch..(b + 1) * batch).collect())
-        .collect()
+///
+/// With `include_tail`, a final partial batch covers the `n % batch`
+/// remainder so no test example is silently dropped. Backends whose
+/// executables are compiled for one exact batch size (AOT/PJRT) pass
+/// `false` and keep the historical full-batches-only sweep.
+pub fn eval_batches(data: &Dataset, batch: usize, include_tail: bool) -> Vec<Vec<usize>> {
+    let full = data.n / batch;
+    let mut out: Vec<Vec<usize>> =
+        (0..full).map(|b| (b * batch..(b + 1) * batch).collect()).collect();
+    if include_tail && data.n % batch != 0 {
+        out.push((full * batch..data.n).collect());
+    }
+    out
 }
 
 #[cfg(test)]
@@ -229,9 +238,16 @@ mod tests {
 
     #[test]
     fn eval_batch_indices() {
-        let d = tiny();
-        let bs = eval_batches(&d, 4);
+        let d = tiny(); // n = 10
+        let bs = eval_batches(&d, 4, false);
         assert_eq!(bs.len(), 2);
         assert_eq!(bs[1], vec![4, 5, 6, 7]);
+        // with the tail, the 10 % 4 = 2 remainder examples are covered too
+        let bs = eval_batches(&d, 4, true);
+        assert_eq!(bs.len(), 3);
+        assert_eq!(bs[2], vec![8, 9]);
+        assert_eq!(bs.iter().map(Vec::len).sum::<usize>(), d.n);
+        // no empty tail when batch divides n
+        assert_eq!(eval_batches(&d, 5, true).len(), 2);
     }
 }

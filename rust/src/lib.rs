@@ -20,8 +20,10 @@
 //!
 //! * [`backend::native::NativeBackend`] — the **default**: a pure-Rust,
 //!   multi-threaded engine implementing the paper's linear-spec methods
-//!   (factorized KPD forward/backward, ℓ1-on-S proximal update,
-//!   group-LASSO prox, blockwise RigL, magnitude pruning, SGD/momentum).
+//!   (factorized KPD forward/backward, ℓ1-on-S proximal update, joint
+//!   multi-pattern block-size selection — `backend::native::pattern`,
+//!   Eq. 7 / Figure 3 — group-LASSO prox, blockwise RigL, magnitude
+//!   pruning, SGD/momentum).
 //!   It is manifest-free and hermetic, so `cargo build && cargo test` and
 //!   the benches run offline with no python, artifacts, or PJRT plugin.
 //! * `backend::pjrt::PjrtBackend` — the AOT path (`--features pjrt`):

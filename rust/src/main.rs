@@ -16,6 +16,9 @@
 //! Examples:
 //!   blocksparse train --spec t1_kpd_b2x2 --steps 600 --seeds 0,1,2
 //!   blocksparse train --spec qs_kpd --steps 300 --lambda 0.01
+//!   blocksparse pattern --spec f3a_pattern --steps 1200   # Figure 3a
+//!       (native runs default to the gauge calibration λ=0.002 +0.0005/ramp;
+//!       override with --lambda / --lambda-ramp)
 //!   blocksparse blockopt --m 8 --n 256
 
 use anyhow::{anyhow, bail, Result};
@@ -39,6 +42,8 @@ fn arg_spec() -> ArgSpec {
             ("lr", true, "learning rate"),
             ("lambda", true, "l1/group regularizer weight"),
             ("lambda2", true, "secondary regularizer weight"),
+            ("lambda-ramp", true, "staircase λ increment per ramp period (pattern specs)"),
+            ("ramp-every", true, "ramp period in steps (0: every 5 epochs)"),
             ("train-examples", true, "training set size"),
             ("test-examples", true, "held-out set size"),
             ("eval-every", true, "eval cadence in steps"),
@@ -77,6 +82,8 @@ fn build_cfg(args: &Args) -> Result<TrainConfig> {
     tc.lr = args.opt_f64("lr", tc.lr)?;
     tc.lambda = args.opt_f64("lambda", tc.lambda)?;
     tc.lambda2 = args.opt_f64("lambda2", tc.lambda2)?;
+    tc.lambda_ramp = args.opt_f64("lambda-ramp", tc.lambda_ramp)?;
+    tc.ramp_every = args.opt_usize("ramp-every", tc.ramp_every)?;
     tc.train_examples = args.opt_usize("train-examples", tc.train_examples)?;
     tc.test_examples = args.opt_usize("test-examples", tc.test_examples)?;
     tc.eval_every = args.opt_usize("eval-every", tc.eval_every)?;
@@ -109,9 +116,30 @@ fn cmd_list(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Default pattern-method specs to the native gauge λ calibration — unless
+/// the user configured λ deliberately (any λ flag, or a --config file,
+/// opts out). Non-pattern specs are untouched.
+fn maybe_calibrate_pattern(
+    args: &Args,
+    be: &dyn Backend,
+    cfg: &mut TrainConfig,
+) -> Result<()> {
+    if be.spec(&cfg.spec)?.method.starts_with("pattern")
+        && args.opt("config").is_none()
+        && args.opt("set").is_none()
+        && args.opt("lambda").is_none()
+        && args.opt("lambda2").is_none()
+        && args.opt("lambda-ramp").is_none()
+    {
+        blocksparse::backend::native::pattern::calibrate_lambda(cfg, &be.name());
+    }
+    Ok(())
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let be = open_backend(args)?;
-    let cfg = build_cfg(args)?;
+    let mut cfg = build_cfg(args)?;
+    maybe_calibrate_pattern(args, be.as_ref(), &mut cfg)?;
     let res = run_spec(be.as_ref(), &cfg)?;
     println!("\nspec            : {}", res.spec);
     println!("method          : {}", res.method);
@@ -133,6 +161,10 @@ fn cmd_pattern(args: &Args) -> Result<()> {
     if cfg.seeds.len() > 1 {
         cfg.seeds.truncate(1); // Figure 3 is a single-run diagnostic
     }
+    // the native gauge objective wants a smaller λ than the paper-scale
+    // TrainConfig defaults (see backend::native::pattern); explicit λ
+    // flags or a --config file opt out
+    maybe_calibrate_pattern(args, be.as_ref(), &mut cfg)?;
     let spec = be.spec(&cfg.spec)?.clone();
     let k = spec
         .num_patterns()
@@ -156,13 +188,12 @@ fn cmd_pattern(args: &Args) -> Result<()> {
     }
     println!("\nfinal ‖S^(k)‖₁ : {:?}", final_norms.iter().map(|v| (v * 1000.0).round() / 1000.0).collect::<Vec<_>>());
     println!("per-pattern acc: {:?}", outcome.pattern_accs.iter().map(|v| (v * 100.0).round() / 100.0).collect::<Vec<_>>());
-    let survivor = final_norms
-        .iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(i, _)| i)
-        .unwrap_or(0);
-    println!("surviving pattern: k={survivor}");
+    // patterns have different S sizes: survival is max *retention*
+    // (final/initial norm), the shared criterion `materialize` also uses
+    let retention =
+        probe::pattern_retention_measured(&spec, &outcome.state, &outcome.history)?;
+    let survivor = probe::pattern_survivor(&retention);
+    println!("surviving pattern (max retention): k={survivor}");
     Ok(())
 }
 

@@ -9,10 +9,35 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::tensor::DType;
 use crate::util::json::Json;
+
+/// The hyper-parameter vocabulary of `SpecEntry::hyper`. Both sides of the
+/// `Backend` boundary — the trainer building the per-step hyper vector and
+/// a backend parsing it — resolve names through this single mapping, so
+/// the alias set ("lambda" ≡ "lambda1") cannot drift between them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HyperParam {
+    /// Primary regularizer weight: "lambda" or "lambda1".
+    Lambda1,
+    /// Secondary regularizer weight (elastic ridge term): "lambda2".
+    Lambda2,
+    /// Learning rate: "lr".
+    Lr,
+}
+
+impl HyperParam {
+    pub fn parse(name: &str) -> Result<Self> {
+        match name {
+            "lambda" | "lambda1" => Ok(HyperParam::Lambda1),
+            "lambda2" => Ok(HyperParam::Lambda2),
+            "lr" => Ok(HyperParam::Lr),
+            other => bail!("unknown hyper-parameter '{other}' in manifest"),
+        }
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct IoSlot {
@@ -220,6 +245,15 @@ mod tests {
             "hyper": ["lambda", "lr"], "metrics": ["loss"]
           }]
         }"#
+    }
+
+    #[test]
+    fn hyper_param_aliases() {
+        assert_eq!(HyperParam::parse("lambda").unwrap(), HyperParam::Lambda1);
+        assert_eq!(HyperParam::parse("lambda1").unwrap(), HyperParam::Lambda1);
+        assert_eq!(HyperParam::parse("lambda2").unwrap(), HyperParam::Lambda2);
+        assert_eq!(HyperParam::parse("lr").unwrap(), HyperParam::Lr);
+        assert!(HyperParam::parse("bogus").is_err());
     }
 
     #[test]

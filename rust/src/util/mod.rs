@@ -25,6 +25,19 @@ impl Stopwatch {
     }
 }
 
+/// Index of the maximum element (last on ties, 0 for empty input). NaN
+/// ranks below every number, so a diverged candidate can never win.
+/// Shared by the pattern-selection survivor criterion on both sides of
+/// the Backend boundary so their tie-breaks cannot diverge.
+pub fn argmax(xs: &[f64]) -> usize {
+    let key = |v: f64| if v.is_nan() { f64::NEG_INFINITY } else { v };
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| key(*a.1).total_cmp(&key(*b.1)))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
 /// Mean and (sample) standard deviation — every table reports mean±std
 /// over seeds, mirroring the paper's 5-run convention.
 pub fn mean_std(xs: &[f64]) -> (f64, f64) {

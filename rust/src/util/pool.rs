@@ -5,6 +5,7 @@
 //! the bench harness (multi-seed sweeps). Work items are boxed closures;
 //! results come back over a channel in submission order.
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
@@ -63,27 +64,44 @@ impl ThreadPool {
     }
 
     /// Run `f(i)` for i in 0..n on the pool, returning results in order.
+    ///
+    /// If any job panics, the panic is re-raised *on the caller* with its
+    /// original payload once all jobs have drained — the pool's workers
+    /// survive (see `worker_loop`), so a panicking closure cannot shrink
+    /// the pool for the rest of the process.
     pub fn map<T, F>(&self, n: usize, f: F) -> Vec<T>
     where
         T: Send + 'static,
         F: Fn(usize) -> T + Send + Sync + 'static,
     {
+        type Panic = Box<dyn std::any::Any + Send + 'static>;
         let f = Arc::new(f);
-        let (tx, rx) = mpsc::channel::<(usize, T)>();
+        let (tx, rx) = mpsc::channel::<(usize, Result<T, Panic>)>();
         for i in 0..n {
             let f = f.clone();
             let tx = tx.clone();
             self.submit(move || {
-                let out = f(i);
+                let out = catch_unwind(AssertUnwindSafe(|| f(i)));
                 let _ = tx.send((i, out));
             });
         }
         drop(tx);
         let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let mut first_panic: Option<Panic> = None;
         for (i, v) in rx {
-            results[i] = Some(v);
+            match v {
+                Ok(v) => results[i] = Some(v),
+                Err(payload) => {
+                    if first_panic.is_none() {
+                        first_panic = Some(payload);
+                    }
+                }
+            }
         }
-        results.into_iter().map(|v| v.expect("worker panicked")).collect()
+        if let Some(payload) = first_panic {
+            resume_unwind(payload);
+        }
+        results.into_iter().map(|v| v.expect("pool job dropped its result")).collect()
     }
 }
 
@@ -104,7 +122,19 @@ fn worker_loop(sh: Arc<Shared>) {
         match job {
             Some(j) => {
                 sh.active.fetch_add(1, Ordering::SeqCst);
-                j();
+                // a panicking job must not take the worker down with it —
+                // that would silently shrink the pool for the rest of the
+                // process. `map` re-raises its own payload on the caller
+                // side; for fire-and-forget `submit` jobs this log line is
+                // the only trace, so don't swallow the message.
+                if let Err(payload) = catch_unwind(AssertUnwindSafe(j)) {
+                    let msg = payload
+                        .downcast_ref::<&str>()
+                        .copied()
+                        .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+                        .unwrap_or("<non-string panic payload>");
+                    crate::warn_!("thread-pool job panicked: {msg}");
+                }
                 sh.active.fetch_sub(1, Ordering::SeqCst);
             }
             None => return,
@@ -153,5 +183,38 @@ mod tests {
         let pool = ThreadPool::new(1);
         let out = pool.map(10, |i| i + 1);
         assert_eq!(out[9], 10);
+    }
+
+    #[test]
+    fn map_surfaces_panic_payload_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.map(8, |i| {
+                if i == 3 {
+                    panic!("job 3 exploded");
+                }
+                i
+            })
+        }));
+        let payload = caught.expect_err("panic must propagate to the caller");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+            .unwrap_or("<non-string payload>");
+        assert!(msg.contains("job 3 exploded"), "payload lost: {msg}");
+        // the worker that ran the panicking job is still alive: a pool of 2
+        // threads must still complete more jobs than 1 thread could block on
+        let out = pool.map(32, |i| i * 2);
+        assert_eq!(out, (0..32).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn panicking_submit_does_not_kill_worker() {
+        let pool = ThreadPool::new(1);
+        pool.submit(|| panic!("fire-and-forget panic"));
+        // the sole worker must survive to run this
+        let out = pool.map(4, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3, 4]);
     }
 }

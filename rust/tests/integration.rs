@@ -170,6 +170,221 @@ fn rigl_training_preserves_block_budget() {
     assert!(outcome.test_acc.is_finite());
 }
 
+/// Classification data from a rank-1 KPD teacher that is *block-sparse at
+/// 2×16*: W* = (S* ⊙ A*) ⊗ B* with half the (2,16) blocks zeroed. This is
+/// the paper's own setting for Figure 3 — the data has a *right* block
+/// size, so exactly one candidate of the joint pattern spec can represent
+/// the teacher (a rank-1 2×16 teacher needs rank ≥ 2 at block 2×8 and
+/// rank ≥ 8 at 2×2), and pattern selection is well-posed.
+fn teacher_weights(rng: &mut blocksparse::util::rng::Rng) -> Vec<f32> {
+    let (m1, n1, m2, n2) = (5usize, 49usize, 2usize, 16usize);
+    let (m, nf) = (m1 * m2, n1 * n2);
+    let s_star: Vec<f32> =
+        (0..m1 * n1).map(|_| if rng.uniform() < 0.5 { 1.0 } else { 0.0 }).collect();
+    let a_star: Vec<f32> =
+        (0..m1 * n1).map(|_| if rng.uniform() < 0.5 { -1.0 } else { 1.0 }).collect();
+    let b_star: Vec<f32> = (0..m2 * n2).map(|_| rng.normal()).collect();
+    // W* = kron(S* ⊙ A*, B*), scaled so the mean row square-norm is 6²
+    let mut w = vec![0.0f32; m * nf];
+    for i1 in 0..m1 {
+        for j1 in 0..n1 {
+            let sa = s_star[i1 * n1 + j1] * a_star[i1 * n1 + j1];
+            for i2 in 0..m2 {
+                for j2 in 0..n2 {
+                    w[(i1 * m2 + i2) * nf + j1 * n2 + j2] = sa * b_star[i2 * n2 + j2];
+                }
+            }
+        }
+    }
+    let msq: f64 =
+        w.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / m as f64;
+    let scale = (6.0 / msq.sqrt()) as f32;
+    for v in w.iter_mut() {
+        *v *= scale;
+    }
+    w
+}
+
+/// Sample `n` examples labeled by the teacher `w` (argmax logits, 2% label
+/// noise so the CE floor keeps gradients alive), consuming `rng` in order:
+/// all X draws, then the per-example flip decisions.
+fn teacher_samples(
+    w: &[f32],
+    rng: &mut blocksparse::util::rng::Rng,
+    n: usize,
+) -> blocksparse::data::Dataset {
+    let (m, nf) = (10usize, 784usize);
+    let x: Vec<f32> = (0..n * nf).map(|_| rng.normal()).collect();
+    let mut y = vec![0i32; n];
+    for (s, yi) in y.iter_mut().enumerate() {
+        let row = &x[s * nf..(s + 1) * nf];
+        let mut best = f32::NEG_INFINITY;
+        for c in 0..m {
+            let z: f32 = row.iter().zip(&w[c * nf..(c + 1) * nf]).map(|(a, b)| a * b).sum();
+            if z > best {
+                best = z;
+                *yi = c as i32;
+            }
+        }
+    }
+    for yi in y.iter_mut() {
+        if rng.uniform() < 0.02 {
+            *yi = rng.below(10) as i32;
+        }
+    }
+    blocksparse::data::Dataset::from_images(nf, m, x, y).unwrap()
+}
+
+/// ISSUE-2 acceptance, Figure 3a: jointly training the four block-size
+/// candidates with the staircase-λ ramp on 2×16-block-structured data must
+/// select exactly one survivor — the 2×16 pattern keeps the majority of
+/// its initial ‖S‖₁ while every other candidate collapses below 10%.
+#[test]
+fn fig3_pattern_selection_exactly_one_survivor() {
+    let be = backend();
+    let spec = be.spec("f3a_pattern").unwrap().clone();
+    let k = spec.num_patterns().unwrap();
+    assert_eq!(k, 4);
+
+    // one teacher labels both splits: the train stream (teacher draws →
+    // X → flips from Rng(84)) pins the validated trajectory, the held-out
+    // set reuses W* with an independent sample stream
+    let mut rng = blocksparse::util::rng::Rng::new(84);
+    let w_star = teacher_weights(&mut rng);
+    let train = teacher_samples(&w_star, &mut rng, 1792);
+    let mut test_rng = blocksparse::util::rng::Rng::new(84 ^ 0x7E57);
+    let test = teacher_samples(&w_star, &mut test_rng, 256);
+    let mut cfg = quick_cfg("f3a_pattern", 1000);
+    cfg.lr = 0.05;
+    // pinned λ schedule this test's dynamics were validated at — must be
+    // the shipped calibration, so recalibrating LAMBDA_CALIBRATION forces
+    // a conscious revalidation of this test
+    cfg.lambda = 0.002;
+    cfg.lambda_ramp = 0.0005;
+    cfg.ramp_every = 300; // staircase: 0.002 → 0.0035 over the run
+    assert_eq!(
+        (cfg.lambda, cfg.lambda_ramp),
+        blocksparse::backend::native::pattern::LAMBDA_CALIBRATION,
+        "pattern λ calibration changed: revalidate the pinned retention outcome"
+    );
+    let trainer = Trainer::new(&be, &cfg);
+    let outcome = trainer.run(0, &train, &test).unwrap();
+
+    // the staircase actually ramped: the s_l1 series must exist per pattern
+    for p in 0..k {
+        let series = outcome.history.series(&format!("s_l1_p{p}"));
+        assert_eq!(series.len(), cfg.steps, "missing s_l1_p{p} series");
+    }
+
+    // S^(k) init is all-ones, so retention = final ‖S‖₁ / entry count —
+    // the shared survivor criterion from the probe layer
+    let retention = probe::pattern_retention(&spec, &outcome.state).unwrap();
+    // sanity-pin the 2×16 normalization: grid is 5×49 = 245 entries
+    let finals = probe::pattern_s_norms(&spec, &outcome.state).unwrap();
+    assert!((retention[3] - finals[3] / 245.0).abs() < 1e-12);
+    // the probe's JSON-derived retention must agree with the backend's
+    // dims-based twin that `materialize` uses for survivor extraction
+    {
+        use blocksparse::backend::native::pattern;
+        use blocksparse::flops::KpdDims;
+        let dims: Vec<KpdDims> = [(2, 2), (2, 4), (2, 8), (2, 16)]
+            .iter()
+            .map(|&(m2, n2)| KpdDims::from_block(10, 784, m2, n2, 1))
+            .collect();
+        let internal = pattern::retention(&outcome.state, &dims).unwrap();
+        for (a, b) in retention.iter().zip(&internal) {
+            assert!((a - b).abs() < 1e-12, "survivor criteria diverged: {retention:?} vs {internal:?}");
+        }
+        assert_eq!(
+            pattern::survivor(&outcome.state, &dims).unwrap(),
+            probe::pattern_survivor(&retention),
+            "materialize's survivor disagrees with the reported survivor"
+        );
+    }
+    let survivors: Vec<usize> =
+        (0..k).filter(|&p| retention[p] > 0.5).collect();
+    let collapsed: Vec<usize> =
+        (0..k).filter(|&p| retention[p] < 0.1).collect();
+    assert_eq!(
+        survivors,
+        vec![3],
+        "expected exactly the 2×16 pattern to survive; retention {retention:?}"
+    );
+    assert_eq!(
+        collapsed.len(),
+        3,
+        "every non-survivor must collapse below 10%; retention {retention:?}"
+    );
+
+    // survivor extraction: materialize returns the 2×16 pattern's dense W
+    let ws = be.materialize(&outcome.state).unwrap();
+    assert_eq!(ws.len(), 1);
+    assert_eq!(ws[0].1.shape(), &[10, 784]);
+}
+
+/// ISSUE-2 acceptance: evaluation covers *every* test example. With
+/// `test.n % batch != 0` the trailing partial batch must be scored, and
+/// the resulting accuracy must be identical to a batch-size-1 sweep
+/// (loss matches up to f32 summation order).
+#[test]
+fn eval_partial_tail_matches_batch_size_one_sweep() {
+    let be = backend();
+    let spec = be.spec("t1_dense").unwrap().clone();
+    let (_, test) = coordinator::dataset_for(&spec, 5, 1024, 300).unwrap();
+    assert!(
+        test.n % spec.batch != 0,
+        "test set must not divide the batch ({} % {})",
+        test.n,
+        spec.batch
+    );
+    let state = be.init_state("t1_dense", 2).unwrap();
+    let cfg = quick_cfg("t1_dense", 1);
+    let tr = Trainer::new(&be, &cfg);
+    let (acc, loss, _) = tr.evaluate(&state, &spec, &test).unwrap();
+
+    // hand-computed full sweep, one example at a time
+    let mut correct = 0.0f64;
+    let mut ce_sum = 0.0f64;
+    for i in 0..test.n {
+        let b = blocksparse::data::assemble_batch(&test, &[i]).unwrap();
+        let m = be.eval_step(&state, &b.x, &b.y).unwrap();
+        ce_sum += m[0] as f64;
+        correct += m[1] as f64;
+    }
+    let want_acc = 100.0 * correct / test.n as f64;
+    let want_loss = ce_sum / test.n as f64;
+    assert_eq!(acc, want_acc, "partial-batch eval dropped or double-counted examples");
+    assert!(
+        (loss - want_loss).abs() < 1e-4,
+        "batch-weighted mean loss {loss} != per-example sweep {want_loss}"
+    );
+}
+
+/// A panicking closure must neither kill a pool worker for the rest of
+/// the process nor hide its payload behind a misleading expect message.
+#[test]
+fn thread_pool_map_survives_a_panicking_job() {
+    use blocksparse::util::pool::ThreadPool;
+    let pool = ThreadPool::new(2);
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        pool.map(6, |i| {
+            if i == 2 {
+                panic!("integration boom");
+            }
+            i * 10
+        })
+    }));
+    let payload = caught.expect_err("the job's panic must reach the caller");
+    let msg = payload
+        .downcast_ref::<&str>()
+        .copied()
+        .unwrap_or("<non-str payload>");
+    assert!(msg.contains("integration boom"), "payload lost: {msg}");
+    // the pool still has all its workers: further maps complete normally
+    let out = pool.map(20, |i| i + 1);
+    assert_eq!(out, (1..=20).collect::<Vec<_>>());
+}
+
 #[test]
 fn eval_accuracy_in_bounds_at_init() {
     let be = backend();
