@@ -1,0 +1,251 @@
+"""Reference mirror of the native multi-layer KPD training loop.
+
+Derives the pinned values of the Rust golden-run regression test
+(`rust/tests/mlp.rs::golden_t2_mlp_fifty_steps`): a fixed-seed 50-step run
+of the `t2_kpd_16x8_8x4_4x2` spec on deterministic class-structured data
+(uniform class templates + uniform noise, labels `i % 10`). The mirror
+replicates, bit-faithfully where floats allow:
+
+* the Rust `util::rng::Rng` stream (SplitMix64 → Xoshiro256**) including
+  the `seed ^ fnv(key)` init-seed derivation and the exact draw order of
+  `layers::init_state_parts` (per layer: A then B normals, S at ones);
+* the training math (factorized KPD forward with ReLU between slots,
+  softmax-CE, per-slot backward, SGD+momentum on A/B, plain SGD + ℓ1
+  soft-threshold prox on S);
+* the sparsity probe (materialize W per slot, block Frobenius norms,
+  relative threshold 0.02 — `sparsity::block_sparsity`).
+
+Differences remaining vs the Rust run: f64 here vs f32 there, numpy BLAS
+accumulation order vs the cache-blocked sequential kernels, and ≤1-ulp
+libm (ln/cos) deviations in the Box–Muller normals. Running the mirror in
+both f64 and f32 (`--dtype f32`) brackets that drift; the Rust test's
+tolerances are set an order of magnitude above it.
+
+Run: python3 python/tests/golden_mlp_mirror.py [--dtype f32]
+"""
+
+import argparse
+
+import numpy as np
+
+M64 = (1 << 64) - 1
+
+
+class SplitMix64:
+    def __init__(self, seed):
+        self.state = seed & M64
+
+    def next_u64(self):
+        self.state = (self.state + 0x9E3779B97F4A7C15) & M64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+        return (z ^ (z >> 31)) & M64
+
+
+def rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & M64
+
+
+class Rng:
+    """Xoshiro256** seeded via SplitMix64 — mirrors rust/src/util/rng.rs."""
+
+    def __init__(self, seed):
+        sm = SplitMix64(seed)
+        self.s = [sm.next_u64() for _ in range(4)]
+
+    def next_u64(self):
+        s = self.s
+        result = (rotl((s[1] * 5) & M64, 7) * 9) & M64
+        t = (s[1] << 17) & M64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = rotl(s[3], 45)
+        return result
+
+    def uniform(self):
+        # exact: 24-bit integer times 2^-24
+        return (self.next_u64() >> 40) * (1.0 / (1 << 24))
+
+    def normal(self):
+        # Box–Muller, f32 in Rust; f64 here (bracketed by --dtype f32)
+        while True:
+            u1 = self.uniform()
+            if u1 <= 1.1920929e-07:  # f32::EPSILON guard in the Rust source
+                continue
+            u2 = self.uniform()
+            r = np.sqrt(-2.0 * np.log(u1))
+            return r * np.cos(2.0 * np.pi * u2)
+
+
+def fnv(name: str) -> int:
+    h = 0xCBF29CE484222325
+    for b in name.encode():
+        h = ((h ^ b) * 0x100000001B3) & M64
+    return h
+
+
+# ---------------------------------------------------------------- spec
+
+KEY = "t2_kpd_16x8_8x4_4x2"
+WIDTHS = [784, 304, 100, 10]
+BLOCKS = [(8, 16), (4, 8), (2, 4)]  # (m2, n2) per slot
+RANK = 5
+MU = 0.9
+
+DATA_SEED = 123
+N_DATA, NB, STEPS = 256, 64, 50
+# calibrated so the 50-step run sits mid-collapse: enough prox pressure
+# that block sparsity is in the teens-to-thirties per layer (a pin at 0%
+# or 100% would be insensitive to backward-chain drift)
+LAM, LR = 0.2, 0.1
+
+
+def make_data(dt):
+    """Class-structured data, exactly as the Rust golden test builds it:
+    one Rng(DATA_SEED) stream draws 10 class templates (784 uniforms in
+    [-1, 1) each), then per-example noise; x = 0.8·tmpl[y] + 0.5·noise,
+    y = i % 10 (deterministic integers — no float compare in labels)."""
+    rng = Rng(DATA_SEED)
+    tmpl = np.array(
+        [rng.uniform() * 2.0 - 1.0 for _ in range(10 * WIDTHS[0])], dtype=dt
+    ).reshape(10, WIDTHS[0])
+    noise = np.array(
+        [rng.uniform() * 2.0 - 1.0 for _ in range(N_DATA * WIDTHS[0])], dtype=dt
+    ).reshape(N_DATA, WIDTHS[0])
+    y = np.arange(N_DATA) % 10
+    x = dt(0.8) * tmpl[y] + dt(0.5) * noise
+    return x.astype(dt), y
+
+
+def layer_dims():
+    out = []
+    for i, (m2, n2) in enumerate(BLOCKS):
+        m, n = WIDTHS[i + 1], WIDTHS[i]
+        m1, n1 = m // m2, n // n2
+        r = min(RANK, m1 * n1, m2 * n2)
+        out.append((m1, n1, m2, n2, r))
+    return out
+
+
+def init_state(seed, dt):
+    rng = Rng(seed ^ fnv(KEY))
+    params = []
+    for m1, n1, m2, n2, r in layer_dims():
+        a_std = np.sqrt(dt(1.0) / dt(np.float32(r * n1)))
+        b_std = np.sqrt(dt(1.0) / dt(np.float32(n2)))
+        s = np.ones((m1, n1), dtype=dt)
+        a = np.array(
+            [rng.normal() for _ in range(r * m1 * n1)], dtype=dt
+        ).reshape(r, m1, n1) * dt(a_std)
+        b = np.array(
+            [rng.normal() for _ in range(r * m2 * n2)], dtype=dt
+        ).reshape(r, m2, n2) * dt(b_std)
+        params.append(
+            dict(S=s, A=a, B=b, vA=np.zeros_like(a), vB=np.zeros_like(b))
+        )
+    return params
+
+
+def reconstruct(p, dims):
+    m1, n1, m2, n2, r = dims
+    w4 = np.einsum("ac,rac,rbd->abcd", p["S"], p["A"], p["B"])
+    return w4.reshape(m1 * m2, n1 * n2)
+
+
+def block_sparsity(w, m2, n2, eps_rel=0.02):
+    m, n = w.shape
+    w4 = w.reshape(m // m2, m2, n // n2, n2)
+    norms = np.sqrt(np.einsum("abcd,abcd->ac", w4, w4))
+    rms = np.sqrt(np.mean(norms * norms))
+    thr = eps_rel * max(rms, 1e-20)
+    return float(np.mean(norms < thr))
+
+
+def run(dtype_name, lam=LAM, lr=LR):
+    dt = np.float32 if dtype_name == "f32" else np.float64
+    dims = layer_dims()
+    params = init_state(0, dt)
+    x_all, y_all = make_data(dt)
+
+    last = None
+    for step in range(STEPS):
+        lo = (step % (N_DATA // NB)) * NB
+        x, y = x_all[lo : lo + NB], y_all[lo : lo + NB]
+
+        ws = [reconstruct(p, d).astype(dt) for p, d in zip(params, dims)]
+        acts = [x]
+        for li, w in enumerate(ws):
+            z = acts[-1] @ w.T
+            acts.append(np.maximum(z, 0) if li + 1 < len(ws) else z)
+        z = acts[-1]
+
+        zmax = z.max(axis=1, keepdims=True)
+        e = np.exp(z - zmax)
+        p_soft = e / e.sum(axis=1, keepdims=True)
+        ce = float(
+            np.mean(np.log(e.sum(axis=1)) + zmax[:, 0] - z[np.arange(NB), y])
+        )
+        acc = float(np.mean(np.argmax(z, axis=1) == y))
+        dz = p_soft.copy()
+        dz[np.arange(NB), y] -= 1.0
+        dz /= NB
+
+        s_l1 = [float(np.abs(p["S"]).sum()) for p in params]
+        loss = ce + lam * sum(s_l1)
+        last = dict(loss=loss, ce=ce, acc=acc, s_l1=s_l1)
+
+        dcur = dz
+        grads = [None] * len(ws)
+        for li in reversed(range(len(ws))):
+            xin = acts[li]
+            dw = dcur.T @ xin
+            m1, n1, m2, n2, r = dims[li]
+            dw4 = dw.reshape(m1, m2, n1, n2)
+            p = params[li]
+            dc = np.einsum("abcd,rbd->rac", dw4, p["B"])
+            c = p["S"][None, :, :] * p["A"]
+            gb = np.einsum("abcd,rac->rbd", dw4, c)
+            ga = dc * p["S"][None, :, :]
+            gs = (dc * p["A"]).sum(axis=0)
+            grads[li] = (gs, ga, gb)
+            if li > 0:
+                dx = dcur @ ws[li]
+                dcur = dx * (acts[li] > 0)
+
+        for p, (gs, ga, gb) in zip(params, grads):
+            p["vA"] = MU * p["vA"] + ga
+            p["A"] = p["A"] - dt(lr) * p["vA"]
+            p["vB"] = MU * p["vB"] + gb
+            p["B"] = p["B"] - dt(lr) * p["vB"]
+            s = p["S"] - dt(lr) * gs
+            p["S"] = np.sign(s) * np.maximum(np.abs(s) - dt(lr) * dt(lam), 0)
+
+    spars = [
+        100.0 * block_sparsity(reconstruct(p, d), d[2], d[3])
+        for p, d in zip(params, dims)
+    ]
+    final_s_l1 = [float(np.abs(p["S"]).sum()) for p in params]
+    return last, spars, final_s_l1
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dtype", default="f64", choices=["f32", "f64"])
+    args = ap.parse_args()
+    last, spars, final_s_l1 = run(args.dtype)
+    print(f"dtype            : {args.dtype}")
+    print(f"spec             : {KEY}  lambda={LAM} lr={LR} steps={STEPS}")
+    print(f"final step loss  : {last['loss']:.6f}")
+    print(f"final step ce    : {last['ce']:.6f}")
+    print(f"final step acc   : {last['acc']:.4f}")
+    print(f"pre-update s_l1  : {[round(v, 4) for v in last['s_l1']]}")
+    print(f"post-update s_l1 : {[round(v, 4) for v in final_s_l1]}")
+    print(f"block sparsity % : {[round(v, 3) for v in spars]}")
+
+
+if __name__ == "__main__":
+    main()

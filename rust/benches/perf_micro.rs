@@ -8,17 +8,58 @@
 //!                         sparse — the §4 inference claim, measured)
 //!
 //! Specs the active backend cannot run are skipped, not failed.
+//!
+//! `--json <path>` additionally writes the stats as one JSON object per
+//! kernel (mean/p50/p95 ms + iters), e.g.
+//! `cargo bench --bench perf_micro -- --json BENCH_native.json`, giving
+//! future PRs a machine-readable perf trajectory to diff against.
+
+use std::collections::BTreeMap;
 
 use blocksparse::backend::native::linalg;
 use blocksparse::backend::Backend;
-use blocksparse::bench::{quick_bench, TableWriter};
+use blocksparse::bench::{quick_bench, BenchStats, TableWriter};
 use blocksparse::coordinator::dataset_for;
 use blocksparse::data::{assemble_batch, Batcher};
 use blocksparse::tensor::Tensor;
+use blocksparse::util::json::Json;
 use blocksparse::util::rng::Rng;
+
+/// `--json <path>` / `--json=<path>` from the post-`--` bench args.
+fn json_path(args: &[String]) -> Option<String> {
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        if a == "--json" {
+            return it.next().cloned().or_else(|| Some("BENCH_native.json".to_string()));
+        }
+        if let Some(p) = a.strip_prefix("--json=") {
+            return Some(p.to_string());
+        }
+    }
+    None
+}
+
+fn write_json(path: &str, backend: &str, stats: &[BenchStats]) -> anyhow::Result<()> {
+    let mut benches = BTreeMap::new();
+    for s in stats {
+        let mut o = BTreeMap::new();
+        o.insert("mean_ms".to_string(), Json::Num(s.mean_ns / 1e6));
+        o.insert("p50_ms".to_string(), Json::Num(s.p50_ns / 1e6));
+        o.insert("p95_ms".to_string(), Json::Num(s.p95_ns / 1e6));
+        o.insert("iters".to_string(), Json::Num(s.iters as f64));
+        benches.insert(s.name.clone(), Json::Obj(o));
+    }
+    let mut root = BTreeMap::new();
+    root.insert("backend".to_string(), Json::Str(backend.to_string()));
+    root.insert("benches".to_string(), Json::Obj(benches));
+    std::fs::write(path, Json::Obj(root).to_string_pretty())?;
+    println!("wrote {path} ({} kernels)", stats.len());
+    Ok(())
+}
 
 fn main() -> anyhow::Result<()> {
     blocksparse::util::log::set_level(blocksparse::util::log::Level::Warn);
+    let args: Vec<String> = std::env::args().skip(1).collect();
     let be = blocksparse::backend::open_default()?;
     let mut stats = Vec::new();
 
@@ -122,5 +163,8 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     t.print();
+    if let Some(path) = json_path(&args) {
+        write_json(&path, &be.name(), &stats)?;
+    }
     Ok(())
 }

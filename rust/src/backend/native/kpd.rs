@@ -98,6 +98,40 @@ pub fn backward(
     tprime: &[Vec<f32>],
     d: KpdDims,
 ) -> Grads {
+    backward_impl(x, n_batch, s, a, None, dz, tprime, d).0
+}
+
+/// Backward pass that also returns dX = dZ · W (N, n1·n2) — what a
+/// *hidden* KPD layer in a multi-layer stack must hand to the layer below.
+/// Needs the B factor (r, m2, n2) to complete the chain; the per-rank U″
+/// buffer the dB product already builds is reused, so dX costs one extra
+/// (N·n1, m2)·(m2, n2) matmul per rank.
+#[allow(clippy::too_many_arguments)]
+pub fn backward_dx(
+    x: &[f32],
+    n_batch: usize,
+    s: &[f32],
+    a: &[f32],
+    b: &[f32],
+    dz: &[f32],
+    tprime: &[Vec<f32>],
+    d: KpdDims,
+) -> (Grads, Vec<f32>) {
+    let (g, dx) = backward_impl(x, n_batch, s, a, Some(b), dz, tprime, d);
+    (g, dx.expect("dx requested"))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn backward_impl(
+    x: &[f32],
+    n_batch: usize,
+    s: &[f32],
+    a: &[f32],
+    b: Option<&[f32]>,
+    dz: &[f32],
+    tprime: &[Vec<f32>],
+    d: KpdDims,
+) -> (Grads, Option<Vec<f32>>) {
     let KpdDims { m1, n1, m2, n2, r } = d;
     let m = m1 * m2;
     debug_assert_eq!(dz.len(), n_batch * m);
@@ -114,6 +148,7 @@ pub fn backward(
     let mut gs = vec![0.0f32; m1 * n1];
     let mut ga = vec![0.0f32; r * m1 * n1];
     let mut gb = vec![0.0f32; r * m2 * n2];
+    let mut dx = b.map(|_| vec![0.0f32; n_batch * n1 * n2]);
     for i in 0..r {
         let ai = &a[i * m1 * n1..(i + 1) * m1 * n1];
         let c = had(s, ai);
@@ -137,8 +172,16 @@ pub fn backward(
         // dB (m2, n2) = U″ᵀ · X′
         let dbi = linalg::matmul_tn(&u2, x, n_batch * n1, m2, n2);
         gb[i * m2 * n2..(i + 1) * m2 * n2].copy_from_slice(&dbi);
+        // dX′ (N·n1, n2) += U″ · B_i — same buffer layout as X (N, n)
+        if let (Some(dx), Some(b)) = (dx.as_mut(), b) {
+            let bi = &b[i * m2 * n2..(i + 1) * m2 * n2];
+            let dxi = linalg::matmul_nn(&u2, bi, n_batch * n1, m2, n2);
+            for (o, v) in dx.iter_mut().zip(&dxi) {
+                *o += v;
+            }
+        }
     }
-    Grads { gs, ga, gb }
+    (Grads { gs, ga, gb }, dx)
 }
 
 #[cfg(test)]
@@ -240,6 +283,39 @@ mod tests {
             bm[idx] -= h;
             let fd = (loss(&s, &a, &bp) - loss(&s, &a, &bm)) / (2.0 * h);
             assert!((fd - g.gb[idx]).abs() < 1e-2, "gb[{idx}]: {fd} vs {}", g.gb[idx]);
+        }
+    }
+
+    #[test]
+    fn backward_dx_matches_dense_chain_rule() {
+        // dX of loss = Σ Z must equal the row-sum of W (dZ = 1 ⇒ dX = 1·W),
+        // and the factor grads must be identical to the plain backward's.
+        let mut rng = Rng::new(23);
+        let d = KpdDims { m1: 2, n1: 3, m2: 2, n2: 2, r: 2 };
+        let nb = 4;
+        let (m, n) = (d.m1 * d.m2, d.n1 * d.n2);
+        let x = rand_vec(&mut rng, nb * n);
+        let s = rand_vec(&mut rng, d.m1 * d.n1);
+        let a = rand_vec(&mut rng, d.r * d.m1 * d.n1);
+        let b = rand_vec(&mut rng, d.r * d.m2 * d.n2);
+        let (_, tp) = forward(&x, nb, &s, &a, &b, d);
+        let dz = vec![1.0f32; nb * m];
+        let plain = backward(&x, nb, &s, &a, &dz, &tp, d);
+        let (g, dx) = backward_dx(&x, nb, &s, &a, &b, &dz, &tp, d);
+        assert_eq!(g.gs, plain.gs);
+        assert_eq!(g.ga, plain.ga);
+        assert_eq!(g.gb, plain.gb);
+        // dense reference: dX[b, j] = Σ_i W[i, j]
+        let st = Tensor::new(&[d.m1, d.n1], s.clone()).unwrap();
+        let at = Tensor::new(&[d.r, d.m1, d.n1], a.clone()).unwrap();
+        let bt = Tensor::new(&[d.r, d.m2, d.n2], b.clone()).unwrap();
+        let w = Tensor::kpd_reconstruct(&st, &at, &bt).unwrap();
+        for bb in 0..nb {
+            for j in 0..n {
+                let want: f32 = (0..m).map(|i| w.at2(i, j)).sum();
+                let got = dx[bb * n + j];
+                assert!((got - want).abs() < 1e-4, "dx[{bb},{j}]: {got} vs {want}");
+            }
         }
     }
 }

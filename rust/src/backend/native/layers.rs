@@ -1,0 +1,805 @@
+//! Sequential multi-layer native models — the `mlp` spec family.
+//!
+//! A spec's [`LayerCfg`] list describes a stack of linear slots with ReLU
+//! between consecutive slots (and a flatten marker in front, a no-op for
+//! the already-flat image batches). Every method of the single-slot path
+//! runs unchanged on the stack:
+//!
+//! * `kpd`          — each slot holds its own (S, A, B) factorization; the
+//!   hidden slots' backward chains dZ through [`kpd::backward_dx`];
+//! * `group_lasso` / `elastic_gl` — dense per-slot W, per-slot block prox;
+//! * `rigl_block`   — per-slot block masks, drop/grow *within* each slot
+//!   (the concatenated gradient-norm layout keeps per-slot budgets);
+//! * `iter_prune`   — per-slot element masks, *global* magnitude ranking;
+//! * `dense`        — the baseline.
+//!
+//! The forward pass caches each slot's input activation (plus the KPD T′
+//! buffers), so the backward pass is one reverse walk: softmax dZ → last
+//! slot grads → dX → ReLU mask → ... → first slot grads. All matmuls are
+//! the cache-blocked/threaded kernels in [`linalg`]; the per-slot updates
+//! are the same SGD/momentum + proximal steps the single-slot path takes.
+//!
+//! Parameter naming is `{slot}.{leaf}` (`fc1.S`, `fc2.W`, `fc2.mask`, ...),
+//! which is exactly the layout `coordinator::probe` reads per slot.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::backend::TrainState;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+use super::{
+    block_fro, block_prox, kpd, linalg, mul_expand_mask, oidx, pidx, sgd_momentum,
+    soft_threshold, Hyper, LayerCfg, SpecConfig,
+};
+
+/// One step of the sequential stack.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layer {
+    /// Input reshape marker — identity here (batches arrive flat), kept so
+    /// stacks read like the architecture they implement.
+    Flatten,
+    /// Elementwise max(·, 0) between linear slots.
+    Relu,
+    /// Linear slot `cfg.layers[i]` under the spec's parameterization.
+    Linear(usize),
+}
+
+/// The stack an `mlp` spec runs: flatten, then linear slots with ReLU
+/// between consecutive slots (none after the logits).
+pub fn stack(cfg: &SpecConfig) -> Vec<Layer> {
+    let mut out = vec![Layer::Flatten];
+    for i in 0..cfg.layers.len() {
+        if i > 0 {
+            out.push(Layer::Relu);
+        }
+        out.push(Layer::Linear(i));
+    }
+    out
+}
+
+/// Per-layer forward cache, aligned with [`stack`].
+enum Cache {
+    /// nothing to keep (flatten)
+    Empty,
+    /// post-activation y = max(x, 0) — the backward mask
+    Relu(Vec<f32>),
+    /// the slot's input activation + per-rank KPD T′ buffers (empty for
+    /// non-factorized methods)
+    Slot(Vec<f32>, Vec<Vec<f32>>),
+}
+
+/// Gradients of one linear slot.
+enum LinGrads {
+    /// (gs, ga, gb) of a KPD-factorized slot
+    Kpd(kpd::Grads),
+    /// dense dW = dZᵀ·X (pre-masking — RigL reads its growth signal from
+    /// this, the update step masks what is applied)
+    Dense(Vec<f32>),
+}
+
+fn p(lc: &LayerCfg, leaf: &str) -> String {
+    format!("{}.{}", lc.name, leaf)
+}
+
+// --------------------------------------------------------------- forward
+
+fn linear_forward(
+    cfg: &SpecConfig,
+    state: &TrainState,
+    lc: &LayerCfg,
+    x: &[f32],
+    nb: usize,
+) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
+    debug_assert_eq!(x.len(), nb * lc.n);
+    match cfg.method.as_str() {
+        "kpd" => {
+            let d = lc.dims(cfg.rank);
+            let s = state.param(&p(lc, "S"))?;
+            let a = state.param(&p(lc, "A"))?;
+            let b = state.param(&p(lc, "B"))?;
+            let (z, tp) = kpd::forward(x, nb, s.data(), a.data(), b.data(), d);
+            Ok((z, tp))
+        }
+        "rigl_block" => {
+            let w = state.param(&p(lc, "W"))?;
+            let mask = state.param(&p(lc, "mask"))?;
+            Ok((
+                linalg::block_sparse_matmul_nt(
+                    x,
+                    w.data(),
+                    mask.data(),
+                    nb,
+                    lc.m,
+                    lc.n,
+                    lc.m2,
+                    lc.n2,
+                ),
+                Vec::new(),
+            ))
+        }
+        "iter_prune" => {
+            let w = state.param(&p(lc, "W"))?;
+            let emask = state.param(&p(lc, "emask"))?;
+            let weff: Vec<f32> =
+                w.data().iter().zip(emask.data()).map(|(a, b)| a * b).collect();
+            Ok((linalg::matmul_nt(x, &weff, nb, lc.n, lc.m), Vec::new()))
+        }
+        _ => {
+            let w = state.param(&p(lc, "W"))?;
+            Ok((linalg::matmul_nt(x, w.data(), nb, lc.n, lc.m), Vec::new()))
+        }
+    }
+}
+
+fn run_forward(
+    cfg: &SpecConfig,
+    state: &TrainState,
+    st: &[Layer],
+    x: &[f32],
+    nb: usize,
+) -> Result<(Vec<f32>, Vec<Cache>)> {
+    let mut cur = x.to_vec();
+    let mut caches = Vec::with_capacity(st.len());
+    for layer in st {
+        match layer {
+            Layer::Flatten => caches.push(Cache::Empty),
+            Layer::Relu => {
+                linalg::relu_inplace(&mut cur);
+                // the clone duplicates the next Slot cache's input, but
+                // keeps the backward walk free of cross-cache adjacency
+                // assumptions; ~nb·width f32 per hidden layer is noise
+                // next to the slot matmuls
+                caches.push(Cache::Relu(cur.clone()));
+            }
+            Layer::Linear(i) => {
+                let lc = &cfg.layers[*i];
+                let (z, tp) = linear_forward(cfg, state, lc, &cur, nb)?;
+                caches.push(Cache::Slot(std::mem::replace(&mut cur, z), tp));
+            }
+        }
+    }
+    Ok((cur, caches))
+}
+
+/// Logits of the full stack on a flat batch (N × in_dim).
+pub fn forward_logits(
+    cfg: &SpecConfig,
+    state: &TrainState,
+    x: &[f32],
+    nb: usize,
+) -> Result<Vec<f32>> {
+    let st = stack(cfg);
+    Ok(run_forward(cfg, state, &st, x, nb)?.0)
+}
+
+// -------------------------------------------------------------- backward
+
+/// The slot's weight as the forward pass actually applied it (masked for
+/// RigL/pruning) — what dX must chain through.
+fn effective_w(cfg: &SpecConfig, state: &TrainState, lc: &LayerCfg) -> Result<Vec<f32>> {
+    let w = state.param(&p(lc, "W"))?;
+    match cfg.method.as_str() {
+        "rigl_block" => {
+            let mut weff = w.data().to_vec();
+            let mask = state.param(&p(lc, "mask"))?;
+            mul_expand_mask(&mut weff, mask.data(), lc.m, lc.n, lc.m2, lc.n2);
+            Ok(weff)
+        }
+        "iter_prune" => {
+            let emask = state.param(&p(lc, "emask"))?;
+            Ok(w.data().iter().zip(emask.data()).map(|(a, b)| a * b).collect())
+        }
+        _ => Ok(w.data().to_vec()),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn linear_backward(
+    cfg: &SpecConfig,
+    state: &TrainState,
+    lc: &LayerCfg,
+    x: &[f32],
+    tprimes: &[Vec<f32>],
+    dz: &[f32],
+    nb: usize,
+    need_dx: bool,
+) -> Result<(LinGrads, Option<Vec<f32>>)> {
+    if cfg.method == "kpd" {
+        let d = lc.dims(cfg.rank);
+        let s = state.param(&p(lc, "S"))?;
+        let a = state.param(&p(lc, "A"))?;
+        if need_dx {
+            let b = state.param(&p(lc, "B"))?;
+            let (g, dx) =
+                kpd::backward_dx(x, nb, s.data(), a.data(), b.data(), dz, tprimes, d);
+            Ok((LinGrads::Kpd(g), Some(dx)))
+        } else {
+            let g = kpd::backward(x, nb, s.data(), a.data(), dz, tprimes, d);
+            Ok((LinGrads::Kpd(g), None))
+        }
+    } else {
+        let gw = linalg::matmul_tn(dz, x, nb, lc.m, lc.n);
+        let dx = if !need_dx {
+            None
+        } else if cfg.method == "rigl_block" || cfg.method == "iter_prune" {
+            let weff = effective_w(cfg, state, lc)?;
+            Some(linalg::matmul_nn(dz, &weff, nb, lc.m, lc.n))
+        } else {
+            // unmasked methods chain through W directly — no copy
+            let w = state.param(&p(lc, "W"))?;
+            Some(linalg::matmul_nn(dz, w.data(), nb, lc.m, lc.n))
+        };
+        Ok((LinGrads::Dense(gw), dx))
+    }
+}
+
+/// Reverse walk: dZ of the logits in, per-slot gradients out. The chain
+/// stops at the first slot (its input gradient is never needed).
+fn run_backward(
+    cfg: &SpecConfig,
+    state: &TrainState,
+    st: &[Layer],
+    caches: &[Cache],
+    dz: Vec<f32>,
+    nb: usize,
+) -> Result<Vec<Option<LinGrads>>> {
+    let mut grads: Vec<Option<LinGrads>> = (0..cfg.layers.len()).map(|_| None).collect();
+    let mut dcur = dz;
+    for (layer, cache) in st.iter().zip(caches.iter()).rev() {
+        match (layer, cache) {
+            (Layer::Flatten, Cache::Empty) => {}
+            (Layer::Relu, Cache::Relu(y)) => linalg::relu_backward(&mut dcur, y),
+            (Layer::Linear(i), Cache::Slot(x, tprimes)) => {
+                let need_dx = *i > 0;
+                let (g, dx) = linear_backward(
+                    cfg,
+                    state,
+                    &cfg.layers[*i],
+                    x,
+                    tprimes,
+                    &dcur,
+                    nb,
+                    need_dx,
+                )?;
+                grads[*i] = Some(g);
+                match dx {
+                    Some(dx) => dcur = dx,
+                    None => break,
+                }
+            }
+            _ => bail!("mlp backward: cache does not match the stack layout"),
+        }
+    }
+    Ok(grads)
+}
+
+/// Mean softmax-CE loss and the raw analytic gradients of every slot leaf
+/// (`fc1.S`/`fc1.A`/`fc1.B` for KPD specs, `fc{i}.W` otherwise) — the hook
+/// the multi-layer finite-difference property test drives. Gradients are
+/// of the *unregularized* CE objective, before any masking: exactly what
+/// central differences of [`forward_logits`]+CE measure.
+pub fn loss_and_grads(
+    cfg: &SpecConfig,
+    state: &TrainState,
+    x: &[f32],
+    nb: usize,
+    y: &[i32],
+) -> Result<(f32, BTreeMap<String, Vec<f32>>)> {
+    let st = stack(cfg);
+    let (z, caches) = run_forward(cfg, state, &st, x, nb)?;
+    let sm = linalg::softmax_ce(&z, y, nb, cfg.out_dim)?;
+    let grads = run_backward(cfg, state, &st, &caches, sm.dz, nb)?;
+    let mut out = BTreeMap::new();
+    for (lc, g) in cfg.layers.iter().zip(grads) {
+        match g {
+            Some(LinGrads::Kpd(g)) => {
+                out.insert(p(lc, "S"), g.gs);
+                out.insert(p(lc, "A"), g.ga);
+                out.insert(p(lc, "B"), g.gb);
+            }
+            Some(LinGrads::Dense(gw)) => {
+                out.insert(p(lc, "W"), gw);
+            }
+            None => bail!("mlp backward left slot '{}' without gradients", lc.name),
+        }
+    }
+    Ok((sm.ce_mean, out))
+}
+
+// ------------------------------------------------------------ train step
+
+/// One training step of the stack. Metrics: `[loss, ce, acc]`, then for
+/// KPD `s_l1` (whole model) and one `s_l1_{slot}` per layer (pre-update,
+/// like the single-slot path), then for RigL the concatenated per-slot
+/// dense-gradient block norms (unnamed tail, length `gnorm_len`).
+pub(super) fn train_step(
+    cfg: &SpecConfig,
+    state: &mut TrainState,
+    x: &[f32],
+    nb: usize,
+    y: &[i32],
+    h: &Hyper,
+) -> Result<Vec<f32>> {
+    let st = stack(cfg);
+    let (z, caches) = run_forward(cfg, state, &st, x, nb)?;
+    let sm = linalg::softmax_ce(&z, y, nb, cfg.out_dim)?;
+    let grads = run_backward(cfg, state, &st, &caches, sm.dz, nb)?;
+
+    let method = cfg.method.as_str();
+    let mu = cfg.momentum;
+    let mut reg = 0.0f32;
+    let mut s_l1_per: Vec<f32> = Vec::new();
+    let mut gnorm_tail: Vec<f32> = Vec::new();
+    for (lc, g) in cfg.layers.iter().zip(grads) {
+        match g {
+            Some(LinGrads::Kpd(g)) => {
+                let s_l1 = state.param(&p(lc, "S"))?.abs_sum();
+                s_l1_per.push(s_l1);
+                reg += h.lam * s_l1;
+                let (ai, avi) = (pidx(state, &p(lc, "A"))?, oidx(state, &p(lc, "A.m"))?);
+                sgd_momentum(
+                    state.params[ai].data_mut(),
+                    state.opt[avi].data_mut(),
+                    &g.ga,
+                    h.lr,
+                    mu,
+                );
+                let (bi, bvi) = (pidx(state, &p(lc, "B"))?, oidx(state, &p(lc, "B.m"))?);
+                sgd_momentum(
+                    state.params[bi].data_mut(),
+                    state.opt[bvi].data_mut(),
+                    &g.gb,
+                    h.lr,
+                    mu,
+                );
+                // S: plain SGD + ℓ1 prox → exact zeros kill whole blocks
+                let si = pidx(state, &p(lc, "S"))?;
+                let sdata = state.params[si].data_mut();
+                for (pv, gv) in sdata.iter_mut().zip(&g.gs) {
+                    *pv -= h.lr * gv;
+                }
+                soft_threshold(sdata, h.lr * h.lam);
+            }
+            Some(LinGrads::Dense(mut gw)) => {
+                let (m, n, m2, n2) = (lc.m, lc.n, lc.m2, lc.n2);
+                let w = state.param(&p(lc, "W"))?.data().to_vec();
+                match method {
+                    "elastic_gl" => {
+                        let wsq: f32 = w.iter().map(|v| v * v).sum();
+                        reg += 0.5 * h.lam2 * wsq;
+                        for (gv, wv) in gw.iter_mut().zip(&w) {
+                            *gv += h.lam2 * wv;
+                        }
+                    }
+                    "rigl_block" => {
+                        // dense-gradient norms first (the growth signal),
+                        // then mask the applied gradient
+                        gnorm_tail.extend(block_fro(&gw, m, n, m2, n2));
+                        let mask = state.param(&p(lc, "mask"))?.data().to_vec();
+                        mul_expand_mask(&mut gw, &mask, m, n, m2, n2);
+                    }
+                    "iter_prune" => {
+                        let emask = state.param(&p(lc, "emask"))?.data().to_vec();
+                        for (gv, mv) in gw.iter_mut().zip(&emask) {
+                            *gv *= mv;
+                        }
+                    }
+                    _ => {}
+                }
+                if method == "group_lasso" || method == "elastic_gl" {
+                    let weight = h.lam * ((m2 * n2) as f32).sqrt();
+                    reg += weight * block_fro(&w, m, n, m2, n2).iter().sum::<f32>();
+                }
+                let (wi, wvi) = (pidx(state, &p(lc, "W"))?, oidx(state, &p(lc, "W.m"))?);
+                sgd_momentum(
+                    state.params[wi].data_mut(),
+                    state.opt[wvi].data_mut(),
+                    &gw,
+                    h.lr,
+                    mu,
+                );
+                if method == "group_lasso" || method == "elastic_gl" {
+                    let kappa = h.lr * h.lam * ((m2 * n2) as f32).sqrt();
+                    block_prox(state.params[wi].data_mut(), m, n, m2, n2, kappa);
+                }
+            }
+            None => bail!("mlp backward left slot '{}' without gradients", lc.name),
+        }
+    }
+
+    let mut out = vec![sm.ce_mean + reg, sm.ce_mean, sm.acc_frac];
+    if method == "kpd" {
+        out.push(s_l1_per.iter().sum());
+        out.extend(&s_l1_per);
+    }
+    out.extend(gnorm_tail);
+    Ok(out)
+}
+
+// ------------------------------------------------------------ state init
+
+/// Fresh parameter + optimizer tensors for the stack, slot by slot in
+/// layer order (each slot mirrors the single-slot init exactly: S at ones,
+/// A/B at the factorized scaling, W at √(1/n), RigL masks at the spec
+/// density with inactive blocks zeroed).
+pub(super) fn init_state_parts(
+    cfg: &SpecConfig,
+    rng: &mut Rng,
+) -> (Vec<String>, Vec<Tensor>, Vec<String>, Vec<Tensor>) {
+    let mut param_names = Vec::new();
+    let mut params = Vec::new();
+    let mut opt_names = Vec::new();
+    let mut opt = Vec::new();
+    for lc in &cfg.layers {
+        if cfg.method == "kpd" {
+            let d = lc.dims(cfg.rank);
+            let a_std = (1.0 / (d.r * d.n1) as f32).sqrt();
+            let b_std = (1.0 / d.n2 as f32).sqrt();
+            param_names.push(p(lc, "S"));
+            params.push(Tensor::full(&[d.m1, d.n1], 1.0));
+            param_names.push(p(lc, "A"));
+            params.push(Tensor::from_fn(&[d.r, d.m1, d.n1], |_| rng.normal() * a_std));
+            param_names.push(p(lc, "B"));
+            params.push(Tensor::from_fn(&[d.r, d.m2, d.n2], |_| rng.normal() * b_std));
+            opt_names.push(p(lc, "A.m"));
+            opt.push(Tensor::zeros(&[d.r, d.m1, d.n1]));
+            opt_names.push(p(lc, "B.m"));
+            opt.push(Tensor::zeros(&[d.r, d.m2, d.n2]));
+        } else {
+            let w_std = (1.0 / lc.n as f32).sqrt();
+            param_names.push(p(lc, "W"));
+            params.push(Tensor::from_fn(&[lc.m, lc.n], |_| rng.normal() * w_std));
+            if cfg.method == "rigl_block" {
+                let (m1, n1) = lc.grid();
+                let total = m1 * n1;
+                let k = ((cfg.rigl_density * total as f64).round() as usize).clamp(1, total);
+                let chosen = rng.choose(total, k);
+                let mut mask = vec![0.0f32; total];
+                for i in chosen {
+                    mask[i] = 1.0;
+                }
+                // inactive blocks start (and later grow) from exactly zero
+                let wi = params.len() - 1;
+                mul_expand_mask(params[wi].data_mut(), &mask, lc.m, lc.n, lc.m2, lc.n2);
+                param_names.push(p(lc, "mask"));
+                params.push(Tensor::new(&[m1, n1], mask).expect("mask dims"));
+            } else if cfg.method == "iter_prune" {
+                param_names.push(p(lc, "emask"));
+                params.push(Tensor::full(&[lc.m, lc.n], 1.0));
+            }
+            opt_names.push(p(lc, "W.m"));
+            opt.push(Tensor::zeros(&[lc.m, lc.n]));
+        }
+    }
+    (param_names, params, opt_names, opt)
+}
+
+// ----------------------------------------------------------- controllers
+
+/// Dense (block-wise sparse) W of every slot, in layer order.
+pub(super) fn materialize(cfg: &SpecConfig, state: &TrainState) -> Result<Vec<(String, Tensor)>> {
+    let mut out = Vec::with_capacity(cfg.layers.len());
+    for lc in &cfg.layers {
+        let w = match cfg.method.as_str() {
+            "kpd" => {
+                let s = state.param(&p(lc, "S"))?;
+                let a = state.param(&p(lc, "A"))?;
+                let b = state.param(&p(lc, "B"))?;
+                Tensor::kpd_reconstruct(s, a, b)?
+            }
+            "rigl_block" | "iter_prune" => {
+                Tensor::new(&[lc.m, lc.n], effective_w(cfg, state, lc)?)?
+            }
+            _ => state.param(&p(lc, "W"))?.clone(),
+        };
+        out.push((lc.name.clone(), w));
+    }
+    Ok(out)
+}
+
+/// Blockwise-RigL drop/grow on one slot: drop the k lowest-‖W‖ active
+/// blocks, grow the k highest-gradient-norm inactive ones; dropped blocks
+/// and their velocity restart from exactly zero.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn rigl_update_slot(
+    state: &mut TrainState,
+    slot: &str,
+    m: usize,
+    n: usize,
+    m2: usize,
+    n2: usize,
+    gnorm: &[f32],
+    alpha: f32,
+) -> Result<()> {
+    let n1 = n / n2;
+    let mi = pidx(state, &format!("{slot}.mask"))?;
+    let wi = pidx(state, &format!("{slot}.W"))?;
+    let vi = oidx(state, &format!("{slot}.W.m"))?;
+    let mask = state.params[mi].data().to_vec();
+    let active: Vec<usize> = (0..mask.len()).filter(|&i| mask[i] != 0.0).collect();
+    let inactive: Vec<usize> = (0..mask.len()).filter(|&i| mask[i] == 0.0).collect();
+    let k = ((alpha as f64 * active.len() as f64).floor() as usize).min(inactive.len());
+    if k == 0 {
+        return Ok(());
+    }
+    let wnorms = block_fro(state.params[wi].data(), m, n, m2, n2);
+    let mut drop = active;
+    drop.sort_by(|&a, &b| wnorms[a].total_cmp(&wnorms[b]));
+    drop.truncate(k);
+    let mut grow = inactive;
+    grow.sort_by(|&a, &b| gnorm[b].total_cmp(&gnorm[a]));
+    grow.truncate(k);
+
+    let mask_data = state.params[mi].data_mut();
+    for &blk in &drop {
+        mask_data[blk] = 0.0;
+    }
+    for &blk in &grow {
+        mask_data[blk] = 1.0;
+    }
+    // dropped weights and their velocity restart from zero (RigL grows
+    // new blocks at zero, so W need only be cleared on the drop set)
+    for &blk in &drop {
+        let (i1, j1) = (blk / n1, blk % n1);
+        for i2 in 0..m2 {
+            let row = (i1 * m2 + i2) * n;
+            for j2 in 0..n2 {
+                state.params[wi].data_mut()[row + j1 * n2 + j2] = 0.0;
+                state.opt[vi].data_mut()[row + j1 * n2 + j2] = 0.0;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Multi-slot RigL update: `gnorm` is the per-slot block norms concatenated
+/// in layer order (the layout `train_step` emits); each slot's active
+/// budget is preserved independently.
+pub(super) fn rigl_update(
+    cfg: &SpecConfig,
+    state: &mut TrainState,
+    gnorm: &[f32],
+    alpha: f32,
+) -> Result<()> {
+    let total = gnorm_len(cfg);
+    if gnorm.len() != total {
+        bail!("rigl_update wants {} block gradient norms, got {}", total, gnorm.len());
+    }
+    let mut off = 0usize;
+    for lc in &cfg.layers {
+        let (m1, n1) = lc.grid();
+        let cnt = m1 * n1;
+        rigl_update_slot(
+            state,
+            &lc.name,
+            lc.m,
+            lc.n,
+            lc.m2,
+            lc.n2,
+            &gnorm[off..off + cnt],
+            alpha,
+        )?;
+        off += cnt;
+    }
+    Ok(())
+}
+
+/// Length of the concatenated gradient-norm tail (RigL specs).
+pub(super) fn gnorm_len(cfg: &SpecConfig) -> usize {
+    cfg.layers
+        .iter()
+        .map(|l| {
+            let (m1, n1) = l.grid();
+            m1 * n1
+        })
+        .sum()
+}
+
+/// Global magnitude pruning across every slot to one whole-model sparsity
+/// target: rank all |w| together, keep the top `total · (1 − target)`,
+/// rebuild per-slot element masks, zero pruned weights and velocity.
+pub(super) fn prune(cfg: &SpecConfig, state: &mut TrainState, target: f32) -> Result<()> {
+    let sizes: Vec<usize> = cfg.layers.iter().map(|l| l.m * l.n).collect();
+    let total: usize = sizes.iter().sum();
+    let keep = total - ((target as f64) * total as f64).round() as usize;
+    let mut vals = Vec::with_capacity(total);
+    for lc in &cfg.layers {
+        vals.extend(state.param(&p(lc, "W"))?.data().iter().map(|v| v.abs()));
+    }
+    let mut order: Vec<usize> = (0..total).collect();
+    order.sort_by(|&a, &b| vals[b].total_cmp(&vals[a]));
+    let mut keep_mask = vec![false; total];
+    for &i in &order[..keep] {
+        keep_mask[i] = true;
+    }
+    let mut off = 0usize;
+    for (lc, &sz) in cfg.layers.iter().zip(&sizes) {
+        let wi = pidx(state, &p(lc, "W"))?;
+        let vi = oidx(state, &p(lc, "W.m"))?;
+        let ei = pidx(state, &p(lc, "emask"))?;
+        let mut emask = vec![0.0f32; sz];
+        for (j, em) in emask.iter_mut().enumerate() {
+            if keep_mask[off + j] {
+                *em = 1.0;
+            } else {
+                state.params[wi].data_mut()[j] = 0.0;
+                state.opt[vi].data_mut()[j] = 0.0;
+            }
+        }
+        state.params[ei] = Tensor::new(&[lc.m, lc.n], emask)?;
+        off += sz;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+    use crate::backend::Backend;
+    use crate::tensor::HostValue;
+
+    fn tiny_mlp(method: &str) -> SpecConfig {
+        // 12→8→6→4 with per-layer blocks that tile every width
+        SpecConfig::mlp("tiny", method, &[12, 8, 6, 4], &[(2, 3), (3, 2), (2, 2)], 2, 8)
+    }
+
+    fn batch(nb: usize, n: usize, classes: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+        let mut rng = Rng::new(seed);
+        let x: Vec<f32> = (0..nb * n).map(|_| rng.normal()).collect();
+        let y: Vec<i32> = (0..nb).map(|i| (i % classes) as i32).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn stack_layout_interleaves_relu() {
+        let cfg = tiny_mlp("dense");
+        assert_eq!(
+            stack(&cfg),
+            vec![
+                Layer::Flatten,
+                Layer::Linear(0),
+                Layer::Relu,
+                Layer::Linear(1),
+                Layer::Relu,
+                Layer::Linear(2)
+            ]
+        );
+    }
+
+    #[test]
+    fn kpd_forward_matches_materialized_dense_chain() {
+        // the factorized stack must equal relu(relu(X·W1ᵀ)·W2ᵀ)·W3ᵀ with
+        // every W reconstructed through Tensor::kpd_reconstruct
+        let cfg = tiny_mlp("kpd");
+        let be = NativeBackend::from_spec(cfg.clone()).unwrap();
+        let state = be.init_state("tiny", 3).unwrap();
+        let (x, _) = batch(5, 12, 4, 17);
+        let z = forward_logits(&cfg, &state, &x, 5).unwrap();
+        let ws = materialize(&cfg, &state).unwrap();
+        let mut cur = x.clone();
+        let mut nfeat = 12usize;
+        for (li, (_, w)) in ws.iter().enumerate() {
+            let m = w.shape()[0];
+            let mut next = vec![0.0f32; 5 * m];
+            for bb in 0..5 {
+                for i in 0..m {
+                    let mut acc = 0.0f32;
+                    for j in 0..nfeat {
+                        acc += cur[bb * nfeat + j] * w.at2(i, j);
+                    }
+                    next[bb * m + i] = acc;
+                }
+            }
+            if li + 1 < ws.len() {
+                linalg::relu_inplace(&mut next);
+            }
+            cur = next;
+            nfeat = m;
+        }
+        let diff = z
+            .iter()
+            .zip(&cur)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(diff < 1e-4, "factorized stack drifted from dense chain: {diff}");
+    }
+
+    #[test]
+    fn every_method_steps_and_evals_on_the_stack() {
+        for method in ["kpd", "group_lasso", "elastic_gl", "rigl_block", "iter_prune", "dense"]
+        {
+            let cfg = tiny_mlp(method);
+            let be = NativeBackend::from_spec(cfg).unwrap();
+            let entry = be.spec("tiny").unwrap().clone();
+            let mut state = be.init_state("tiny", 0).unwrap();
+            let (x, y) = batch(8, 12, 4, 5);
+            let bx = HostValue::F32(Tensor::new(&[8, 12], x).unwrap());
+            let by = HostValue::I32 { shape: vec![8], data: y };
+            let hyper: Vec<f32> = entry
+                .hyper
+                .iter()
+                .map(|h| match h.as_str() {
+                    "lr" => 0.05,
+                    "lambda2" => 1e-4,
+                    _ => 0.01,
+                })
+                .collect();
+            let m = be.train_step(&mut state, &bx, &by, &hyper).unwrap();
+            let gn = be.gnorm_len("tiny").unwrap();
+            assert_eq!(m.len(), entry.metrics.len() + gn, "{method}");
+            assert!(m.iter().all(|v| v.is_finite()), "{method}: {m:?}");
+            let e = be.eval_step(&state, &bx, &by).unwrap();
+            assert_eq!(e.len(), 2, "{method}");
+            assert!(e[0].is_finite() && (0.0..=8.0).contains(&e[1]), "{method}");
+        }
+    }
+
+    #[test]
+    fn per_slot_prox_produces_exact_zeros_per_layer() {
+        let cfg = tiny_mlp("kpd");
+        let be = NativeBackend::from_spec(cfg.clone()).unwrap();
+        let mut state = be.init_state("tiny", 1).unwrap();
+        let (x, y) = batch(8, 12, 4, 9);
+        let bx = HostValue::F32(Tensor::new(&[8, 12], x).unwrap());
+        let by = HostValue::I32 { shape: vec![8], data: y };
+        // huge λ: the prox threshold dwarfs the gradient, S → exact zeros
+        for _ in 0..40 {
+            be.train_step(&mut state, &bx, &by, &[2.0, 0.1]).unwrap();
+        }
+        for lc in &cfg.layers {
+            let s = state.param(&p(lc, "S")).unwrap();
+            assert!(
+                s.data().iter().any(|&v| v == 0.0),
+                "{}: prox never zeroed an S entry",
+                lc.name
+            );
+        }
+    }
+
+    #[test]
+    fn global_prune_hits_exact_whole_model_target() {
+        let cfg = tiny_mlp("iter_prune");
+        let be = NativeBackend::from_spec(cfg.clone()).unwrap();
+        let mut state = be.init_state("tiny", 0).unwrap();
+        be.prune(&mut state, 0.5).unwrap();
+        let total: usize = cfg.layers.iter().map(|l| l.m * l.n).sum();
+        let mut zeros = 0usize;
+        for lc in &cfg.layers {
+            let em = state.param(&p(lc, "emask")).unwrap();
+            zeros += em.data().iter().filter(|v| **v == 0.0).count();
+            // pruned weights are zeroed in place
+            let w = state.param(&p(lc, "W")).unwrap();
+            for (wv, mv) in w.data().iter().zip(em.data()) {
+                if *mv == 0.0 {
+                    assert_eq!(*wv, 0.0);
+                }
+            }
+        }
+        assert_eq!(zeros, ((0.5 * total as f64).round()) as usize);
+    }
+
+    #[test]
+    fn rigl_update_preserves_per_slot_budgets() {
+        let cfg = tiny_mlp("rigl_block");
+        let be = NativeBackend::from_spec(cfg.clone()).unwrap();
+        let mut state = be.init_state("tiny", 0).unwrap();
+        let before: Vec<f32> = cfg
+            .layers
+            .iter()
+            .map(|lc| state.param(&p(lc, "mask")).unwrap().data().iter().sum())
+            .collect();
+        let gn = be.gnorm_len("tiny").unwrap();
+        let gnorm: Vec<f32> = (0..gn).map(|i| (i as f32 * 0.37 + 0.01) % 5.0).collect();
+        be.rigl_update(&mut state, &gnorm, 0.5).unwrap();
+        let after: Vec<f32> = cfg
+            .layers
+            .iter()
+            .map(|lc| state.param(&p(lc, "mask")).unwrap().data().iter().sum())
+            .collect();
+        assert_eq!(before, after, "per-slot active budgets drifted");
+    }
+}

@@ -167,6 +167,28 @@ pub fn block_sparse_matmul_nt(
     out
 }
 
+/// In-place ReLU: a ← max(a, 0). The multi-layer stack's activation.
+pub fn relu_inplace(a: &mut [f32]) {
+    for v in a.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// ReLU backward: zero `da` wherever the *post*-activation `y` is zero
+/// (y = max(x, 0), so y == 0 covers every non-positive pre-activation;
+/// the subgradient at exactly 0 is taken as 0, matching JAX's
+/// `jax.nn.relu` VJP).
+pub fn relu_backward(da: &mut [f32], y: &[f32]) {
+    debug_assert_eq!(da.len(), y.len());
+    for (d, &yv) in da.iter_mut().zip(y) {
+        if yv <= 0.0 {
+            *d = 0.0;
+        }
+    }
+}
+
 /// Softmax cross-entropy over logits `z` (N × classes) with class ids `y`.
 pub struct SoftmaxCe {
     /// mean CE over the batch
@@ -346,5 +368,15 @@ mod tests {
     fn softmax_ce_rejects_bad_labels() {
         assert!(softmax_ce(&[0.0, 0.0], &[2], 1, 2).is_err());
         assert!(softmax_ce(&[0.0, 0.0], &[-1], 1, 2).is_err());
+    }
+
+    #[test]
+    fn relu_forward_backward_pair() {
+        let mut a = vec![-1.5, 0.0, 2.0, -0.0, 3.5];
+        relu_inplace(&mut a);
+        assert_eq!(a, vec![0.0, 0.0, 2.0, 0.0, 3.5]);
+        let mut da = vec![1.0, 1.0, 1.0, 1.0, 1.0];
+        relu_backward(&mut da, &a);
+        assert_eq!(da, vec![0.0, 0.0, 1.0, 0.0, 1.0]);
     }
 }

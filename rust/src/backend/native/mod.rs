@@ -20,8 +20,16 @@
 //! Optimization is SGD with classical momentum; the regularized leaves
 //! (S, W-blocks) use plain SGD plus their proximal operator so exact
 //! zeros appear.
+//!
+//! Beyond the single linear slot, every method also runs on sequential
+//! **multi-layer** models (the `mlp` spec family, module [`layers`]):
+//! a stack of linear slots with ReLU between them, per-layer block sizes,
+//! a shared forward that caches activations and a backward that chains dZ
+//! through the stack. The built-in registry uses it for the Table-2
+//! `t2_*` specs (784→304→100→10, the LeNet-300-100 stand-in).
 
 pub mod kpd;
+pub mod layers;
 pub mod linalg;
 pub mod pattern;
 
@@ -47,6 +55,34 @@ const METHODS: &[&str] = &[
     "dense",
 ];
 
+/// One linear slot of a multi-layer (`mlp`) spec: a W ∈ R^{m×n} with its
+/// own (m2, n2) block size. The method decides the parameterization
+/// (KPD factors / dense W / masked W), shared across the whole stack.
+#[derive(Clone, Debug)]
+pub struct LayerCfg {
+    /// slot name (`fc1`, `fc2`, ...) — the parameter-name prefix
+    pub name: String,
+    /// output features
+    pub m: usize,
+    /// input features
+    pub n: usize,
+    /// block rows
+    pub m2: usize,
+    /// block cols
+    pub n2: usize,
+}
+
+impl LayerCfg {
+    pub fn grid(&self) -> (usize, usize) {
+        (self.m / self.m2, self.n / self.n2)
+    }
+
+    /// KPD dims of this slot at the spec rank (clamped by the Eq. 2 bound).
+    pub fn dims(&self, rank: usize) -> KpdDims {
+        KpdDims::from_block(self.m, self.n, self.m2, self.n2, rank.max(1))
+    }
+}
+
 /// Manifest-free description of one trainable linear spec.
 #[derive(Clone, Debug)]
 pub struct SpecConfig {
@@ -70,6 +106,9 @@ pub struct SpecConfig {
     pub rigl_density: f64,
     /// candidate `(m2, n2)` block sizes for `pattern_kpd` (empty otherwise)
     pub patterns: Vec<(usize, usize)>,
+    /// sequential linear slots of an `mlp` spec (ReLU between consecutive
+    /// slots); empty for the single-slot linear specs
+    pub layers: Vec<LayerCfg>,
     pub tags: Vec<String>,
 }
 
@@ -98,8 +137,52 @@ impl SpecConfig {
             momentum: 0.9,
             rigl_density: 0.5,
             patterns: Vec::new(),
+            layers: Vec::new(),
             tags: Vec::new(),
         }
+    }
+
+    /// A sequential multi-layer perceptron spec: `widths` gives the layer
+    /// widths (e.g. `[784, 304, 100, 10]` → three linear slots `fc1..fc3`
+    /// with ReLU between them), `blocks[i]` the (m2, n2) block size of
+    /// slot i (missing entries default to 1×1 — elementwise). The method
+    /// applies to every slot; `rank` is shared and clamped per slot.
+    pub fn mlp(
+        key: &str,
+        method: &str,
+        widths: &[usize],
+        blocks: &[(usize, usize)],
+        rank: usize,
+        batch: usize,
+    ) -> Self {
+        assert!(widths.len() >= 2, "mlp needs at least input and output widths");
+        let mut cfg = SpecConfig::linear(
+            key,
+            method,
+            widths[0],
+            *widths.last().unwrap(),
+            1,
+            1,
+            rank,
+            batch,
+        );
+        cfg.layers = widths
+            .windows(2)
+            .enumerate()
+            .map(|(i, w)| LayerCfg {
+                name: format!("fc{}", i + 1),
+                m: w[1],
+                n: w[0],
+                m2: blocks.get(i).map(|b| b.0).unwrap_or(1),
+                n2: blocks.get(i).map(|b| b.1).unwrap_or(1),
+            })
+            .collect();
+        cfg
+    }
+
+    /// Whether this spec is a sequential multi-layer model.
+    pub fn is_mlp(&self) -> bool {
+        !self.layers.is_empty()
     }
 
     /// A joint pattern-selection spec (Eq. 7): K candidate block sizes of
@@ -120,6 +203,46 @@ impl SpecConfig {
     pub fn validate(&self) -> Result<()> {
         if !METHODS.contains(&self.method.as_str()) {
             bail!("unknown method '{}' (native backend supports {METHODS:?})", self.method);
+        }
+        if self.is_mlp() {
+            if self.method == "pattern_kpd" {
+                bail!("pattern_kpd is a single-slot method (no mlp support yet)");
+            }
+            if !self.patterns.is_empty() {
+                bail!("block-size candidates only apply to the pattern_kpd method");
+            }
+            if self.batch == 0 {
+                bail!("batch must be positive");
+            }
+            if self.method == "kpd" && self.rank == 0 {
+                bail!("kpd rank must be ≥ 1");
+            }
+            if self.layers[0].n != self.in_dim {
+                bail!("mlp first slot wants {} inputs, spec has in_dim {}",
+                      self.layers[0].n, self.in_dim);
+            }
+            if self.layers.last().unwrap().m != self.out_dim {
+                bail!("mlp last slot emits {} features, spec has out_dim {}",
+                      self.layers.last().unwrap().m, self.out_dim);
+            }
+            for (i, l) in self.layers.iter().enumerate() {
+                if l.m == 0 || l.n == 0 {
+                    bail!("slot '{}' has a zero dimension", l.name);
+                }
+                if l.m2 == 0 || l.m % l.m2 != 0 {
+                    bail!("slot '{}': block rows {} do not tile {}", l.name, l.m2, l.m);
+                }
+                if l.n2 == 0 || l.n % l.n2 != 0 {
+                    bail!("slot '{}': block cols {} do not tile {}", l.name, l.n2, l.n);
+                }
+                if i > 0 && self.layers[i - 1].m != l.n {
+                    bail!(
+                        "slot '{}' wants {} inputs but '{}' emits {}",
+                        l.name, l.n, self.layers[i - 1].name, self.layers[i - 1].m
+                    );
+                }
+            }
+            return Ok(());
         }
         if self.m2 == 0 || self.out_dim % self.m2 != 0 {
             bail!("block rows {} do not tile out_dim {}", self.m2, self.out_dim);
@@ -237,6 +360,42 @@ impl NativeBackend {
                 "table4",
             );
         }
+        // Table 2 natively: a 784→304→100→10 MLP stands in for the paper's
+        // LeNet FC stack (LeNet-300-100 shape, first hidden width rounded
+        // 300→304 so the coarsest paper combo's 8-row blocks tile it).
+        // Per-combo blocks follow the paper's "(a, b)" → (m2, n2) = (b, a)
+        // label convention (see python/compile/specs.py); rank 5 like the
+        // AOT t2 specs, clamped per slot by the Eq. 2 bound.
+        let t2_widths = [784usize, 304, 100, 10];
+        let t2_combos: [(&str, [(usize, usize); 3]); 5] = [
+            ("16x8_8x4_4x2", [(8, 16), (4, 8), (2, 4)]),
+            ("8x4_4x4_2x2", [(4, 8), (4, 4), (2, 2)]),
+            ("4x4_4x4_2x2", [(4, 4), (4, 4), (2, 2)]),
+            ("4x4_2x2_2x2", [(4, 4), (2, 2), (2, 2)]),
+            ("2x2_2x2_2x2", [(2, 2), (2, 2), (2, 2)]),
+        ];
+        for (name, blocks) in t2_combos {
+            for (short, method) in [
+                ("kpd", "kpd"),
+                ("gl", "group_lasso"),
+                ("egl", "elastic_gl"),
+                ("rigl", "rigl_block"),
+            ] {
+                add(
+                    SpecConfig::mlp(
+                        &format!("t2_{short}_{name}"),
+                        method,
+                        &t2_widths,
+                        &blocks,
+                        5,
+                        64,
+                    ),
+                    "table2",
+                );
+            }
+        }
+        add(SpecConfig::mlp("t2_prune", "iter_prune", &t2_widths, &[], 1, 64), "table2");
+        add(SpecConfig::mlp("t2_dense", "dense", &t2_widths, &[], 1, 64), "table2");
         // Figure 3a: the Table-1 block-size grid trained jointly (Eq. 7).
         // Rank 1 gives the sharpest capacity cliff between candidates: a
         // rank-1 coarse-block teacher is exactly representable at its own
@@ -267,6 +426,9 @@ impl NativeBackend {
 
 fn build_entry(cfg: &SpecConfig) -> Result<SpecEntry> {
     cfg.validate()?;
+    if cfg.is_mlp() {
+        return build_mlp_entry(cfg);
+    }
     let (m, n) = (cfg.out_dim, cfg.in_dim);
     let (m1, n1) = cfg.grid();
     let mut metrics: Vec<String> =
@@ -353,6 +515,80 @@ fn build_entry(cfg: &SpecConfig) -> Result<SpecEntry> {
         input_dtype: DType::F32,
         num_classes: m,
         slots: vec![SlotInfo { name: "fc".to_string(), m, n }],
+        method: cfg.method.clone(),
+        hyper,
+        metrics,
+        params_total,
+        info: Json::Obj(info),
+    })
+}
+
+/// Spec entry for the sequential multi-layer (`mlp`) family. Per-slot
+/// block sizes land in `info.blocks` (what the sparsity probe reads) and,
+/// for KPD, per-slot factorization shapes in `info.shapes` (what the
+/// FLOPs accounting reads). KPD specs report per-layer ‖S‖₁ metrics
+/// (`s_l1_fc1`, ...) after the whole-model `s_l1`. RigL specs append the
+/// concatenated per-slot block gradient norms to the train metrics like
+/// the single-slot path, but the tail stays *unnamed* in the registry —
+/// fine-block MLP grids reach ~10⁵ blocks and naming each would bloat
+/// every registry construction; `Backend::gnorm_len` is the contract.
+fn build_mlp_entry(cfg: &SpecConfig) -> Result<SpecEntry> {
+    let mut metrics: Vec<String> =
+        ["loss", "ce", "acc"].iter().map(|s| s.to_string()).collect();
+    let hyper: Vec<String> = match cfg.method.as_str() {
+        "kpd" => {
+            metrics.push("s_l1".to_string());
+            metrics.extend(cfg.layers.iter().map(|l| format!("s_l1_{}", l.name)));
+            vec!["lambda".to_string(), "lr".to_string()]
+        }
+        "group_lasso" => vec!["lambda".to_string(), "lr".to_string()],
+        "elastic_gl" => {
+            vec!["lambda".to_string(), "lambda2".to_string(), "lr".to_string()]
+        }
+        _ => vec!["lr".to_string()],
+    };
+    let params_total: usize = if cfg.method == "kpd" {
+        cfg.layers.iter().map(|l| l.dims(cfg.rank).train_params() as usize).sum()
+    } else {
+        cfg.layers.iter().map(|l| l.m * l.n).sum()
+    };
+    let mut blocks = BTreeMap::new();
+    for l in &cfg.layers {
+        blocks.insert(
+            l.name.clone(),
+            Json::Arr(vec![Json::Num(l.m2 as f64), Json::Num(l.n2 as f64)]),
+        );
+    }
+    let mut info = BTreeMap::new();
+    info.insert("blocks".to_string(), Json::Obj(blocks));
+    if cfg.method == "kpd" {
+        info.insert("rank".to_string(), Json::Num(cfg.rank.max(1) as f64));
+        let mut shapes = BTreeMap::new();
+        for l in &cfg.layers {
+            let d = l.dims(cfg.rank);
+            let mut shape = BTreeMap::new();
+            shape.insert("m1".to_string(), Json::Num(d.m1 as f64));
+            shape.insert("n1".to_string(), Json::Num(d.n1 as f64));
+            shape.insert("m2".to_string(), Json::Num(d.m2 as f64));
+            shape.insert("n2".to_string(), Json::Num(d.n2 as f64));
+            shape.insert("r".to_string(), Json::Num(d.r as f64));
+            shapes.insert(l.name.clone(), Json::Obj(shape));
+        }
+        info.insert("shapes".to_string(), Json::Obj(shapes));
+    }
+    Ok(SpecEntry {
+        key: cfg.key.clone(),
+        model: "mlp".to_string(),
+        batch: cfg.batch,
+        tags: cfg.tags.clone(),
+        input_shape: vec![cfg.in_dim],
+        input_dtype: DType::F32,
+        num_classes: cfg.out_dim,
+        slots: cfg
+            .layers
+            .iter()
+            .map(|l| SlotInfo { name: l.name.clone(), m: l.m, n: l.n })
+            .collect(),
         method: cfg.method.clone(),
         hyper,
         metrics,
@@ -679,6 +915,16 @@ impl Backend for NativeBackend {
                 opt: os,
             });
         }
+        if cfg.is_mlp() {
+            let (pn, ps, on, os) = layers::init_state_parts(cfg, &mut rng);
+            return Ok(TrainState {
+                spec: spec.to_string(),
+                param_names: pn,
+                opt_names: on,
+                params: ps,
+                opt: os,
+            });
+        }
         let (m, n) = (cfg.out_dim, cfg.in_dim);
         let mut param_names = Vec::new();
         let mut params = Vec::new();
@@ -738,6 +984,9 @@ impl Backend for NativeBackend {
         let ns = self.get(&state.spec)?;
         let h = parse_hyper(&ns.entry, hyper)?;
         let (xs, nb, ys) = batch_xy(x, y, ns.cfg.in_dim)?;
+        if ns.cfg.is_mlp() {
+            return layers::train_step(&ns.cfg, state, xs, nb, ys, &h);
+        }
         match ns.cfg.method.as_str() {
             "kpd" => self.step_kpd(ns, state, xs, nb, ys, &h),
             "pattern_kpd" => pattern::train_step(
@@ -761,6 +1010,11 @@ impl Backend for NativeBackend {
             // per-pattern layout [ce_0..ce_{K-1}, correct_0..correct_{K-1}]
             return pattern::eval_step(state, xs, nb, ys, &ns.cfg.pattern_dims());
         }
+        if ns.cfg.is_mlp() {
+            let z = layers::forward_logits(&ns.cfg, state, xs, nb)?;
+            let sm = linalg::softmax_ce(&z, ys, nb, ns.cfg.out_dim)?;
+            return Ok(vec![sm.ce_mean, sm.correct]);
+        }
         let z = self.forward(ns, state, xs, nb)?;
         let sm = linalg::softmax_ce(&z, ys, nb, ns.cfg.out_dim)?;
         Ok(vec![sm.ce_mean, sm.correct])
@@ -769,6 +1023,9 @@ impl Backend for NativeBackend {
     fn materialize(&self, state: &TrainState) -> Result<Vec<(String, Tensor)>> {
         let ns = self.get(&state.spec)?;
         let cfg = &ns.cfg;
+        if cfg.is_mlp() {
+            return layers::materialize(cfg, state);
+        }
         let (m, n) = (cfg.out_dim, cfg.in_dim);
         let w = match cfg.method.as_str() {
             "kpd" => {
@@ -805,51 +1062,15 @@ impl Backend for NativeBackend {
         if cfg.method != "rigl_block" {
             bail!("rigl_update on non-RigL spec '{}'", state.spec);
         }
-        let (m, n, m2, n2) = (cfg.out_dim, cfg.in_dim, cfg.m2, cfg.n2);
+        if cfg.is_mlp() {
+            // per-slot drop/grow on the concatenated gradient-norm layout
+            return layers::rigl_update(cfg, state, gnorm, alpha);
+        }
         let (m1, n1) = cfg.grid();
         if gnorm.len() != m1 * n1 {
             bail!("rigl_update wants {} block gradient norms, got {}", m1 * n1, gnorm.len());
         }
-        let mi = pidx(state, "fc.mask")?;
-        let wi = pidx(state, "fc.W")?;
-        let vi = oidx(state, "fc.W.m")?;
-        let mask = state.params[mi].data().to_vec();
-        let active: Vec<usize> =
-            (0..mask.len()).filter(|&i| mask[i] != 0.0).collect();
-        let inactive: Vec<usize> =
-            (0..mask.len()).filter(|&i| mask[i] == 0.0).collect();
-        let k = ((alpha as f64 * active.len() as f64).floor() as usize).min(inactive.len());
-        if k == 0 {
-            return Ok(());
-        }
-        let wnorms = block_fro(state.params[wi].data(), m, n, m2, n2);
-        let mut drop = active;
-        drop.sort_by(|&a, &b| wnorms[a].total_cmp(&wnorms[b]));
-        drop.truncate(k);
-        let mut grow = inactive;
-        grow.sort_by(|&a, &b| gnorm[b].total_cmp(&gnorm[a]));
-        grow.truncate(k);
-
-        let mask_data = state.params[mi].data_mut();
-        for &blk in &drop {
-            mask_data[blk] = 0.0;
-        }
-        for &blk in &grow {
-            mask_data[blk] = 1.0;
-        }
-        // dropped weights and their velocity restart from zero (RigL grows
-        // new blocks at zero, so W need only be cleared on the drop set)
-        for &blk in &drop {
-            let (i1, j1) = (blk / n1, blk % n1);
-            for i2 in 0..m2 {
-                let row = (i1 * m2 + i2) * n;
-                for j2 in 0..n2 {
-                    state.params[wi].data_mut()[row + j1 * n2 + j2] = 0.0;
-                    state.opt[vi].data_mut()[row + j1 * n2 + j2] = 0.0;
-                }
-            }
-        }
-        Ok(())
+        layers::rigl_update_slot(state, "fc", cfg.out_dim, cfg.in_dim, cfg.m2, cfg.n2, gnorm, alpha)
     }
 
     fn prune(&self, state: &mut TrainState, target: f32) -> Result<()> {
@@ -860,6 +1081,11 @@ impl Backend for NativeBackend {
         }
         if !(0.0..1.0).contains(&target) {
             bail!("prune target {target} outside [0, 1)");
+        }
+        if cfg.is_mlp() {
+            // global magnitude ranking across every slot (standard
+            // whole-model iterative pruning)
+            return layers::prune(cfg, state, target);
         }
         let total = cfg.out_dim * cfg.in_dim;
         let keep = total - ((target as f64) * total as f64).round() as usize;
@@ -885,12 +1111,14 @@ impl Backend for NativeBackend {
 
     fn gnorm_len(&self, spec: &str) -> Result<usize> {
         let ns = self.get(spec)?;
-        if ns.cfg.method == "rigl_block" {
-            let (m1, n1) = ns.cfg.grid();
-            Ok(m1 * n1)
-        } else {
-            Ok(0)
+        if ns.cfg.method != "rigl_block" {
+            return Ok(0);
         }
+        if ns.cfg.is_mlp() {
+            return Ok(layers::gnorm_len(&ns.cfg));
+        }
+        let (m1, n1) = ns.cfg.grid();
+        Ok(m1 * n1)
     }
 }
 
@@ -917,6 +1145,61 @@ mod tests {
         assert_eq!(e.block_of("fc"), Some((2, 16)));
         assert_eq!(e.rank(), Some(2));
         assert!(e.params_total < 7840);
+    }
+
+    #[test]
+    fn t2_mlp_registry_layout() {
+        let be = NativeBackend::with_default_specs();
+        for combo in
+            ["16x8_8x4_4x2", "8x4_4x4_2x2", "4x4_4x4_2x2", "4x4_2x2_2x2", "2x2_2x2_2x2"]
+        {
+            for m in ["kpd", "gl", "egl", "rigl"] {
+                assert!(be.spec(&format!("t2_{m}_{combo}")).is_ok(), "t2_{m}_{combo}");
+            }
+        }
+        let e = be.spec("t2_kpd_16x8_8x4_4x2").unwrap().clone();
+        assert_eq!(e.model, "mlp");
+        assert_eq!(e.slots.len(), 3);
+        assert_eq!(e.slots[0].m, 304);
+        assert_eq!(e.slots[0].n, 784);
+        assert_eq!(e.block_of("fc1"), Some((8, 16)));
+        assert_eq!(e.block_of("fc3"), Some((2, 4)));
+        // per-layer ‖S‖₁ metrics follow the whole-model one
+        assert_eq!(e.metric_index("s_l1"), Some(3));
+        assert_eq!(e.metric_index("s_l1_fc2"), Some(5));
+        // factorized training params far below the dense stack (Table 2's
+        // params column: "Ours" 6-23K vs 61K dense at LeNet scale)
+        let dense = be.spec("t2_dense").unwrap();
+        assert_eq!(dense.model, "mlp");
+        assert!(
+            e.params_total < dense.params_total / 4,
+            "{} vs dense {}",
+            e.params_total,
+            dense.params_total
+        );
+        assert!(be.spec("t2_prune").is_ok());
+    }
+
+    #[test]
+    fn mlp_config_validation() {
+        // width chain must tile per-layer blocks
+        assert!(SpecConfig::mlp("m", "kpd", &[12, 8, 4], &[(2, 3), (2, 2)], 2, 8)
+            .validate()
+            .is_ok());
+        assert!(SpecConfig::mlp("m", "kpd", &[12, 8, 4], &[(3, 3), (2, 2)], 2, 8)
+            .validate()
+            .is_err());
+        assert!(SpecConfig::mlp("m", "kpd", &[12, 8, 4], &[(2, 5), (2, 2)], 2, 8)
+            .validate()
+            .is_err());
+        assert!(SpecConfig::mlp("m", "kpd", &[12, 8, 4], &[], 0, 8).validate().is_err());
+        assert!(SpecConfig::mlp("m", "pattern_kpd", &[12, 8, 4], &[], 1, 8)
+            .validate()
+            .is_err());
+        // broken chain caught even when built by hand
+        let mut cfg = SpecConfig::mlp("m", "dense", &[12, 8, 4], &[], 1, 8);
+        cfg.layers[1].n = 6;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

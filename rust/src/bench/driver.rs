@@ -110,6 +110,13 @@ pub fn record_row(table: &str, label: &str, res: &SpecResult) -> Result<()> {
     obj.insert("acc_std".into(), Json::Num(res.acc_std));
     obj.insert("sparsity_mean".into(), Json::Num(res.sparsity_mean));
     obj.insert("sparsity_std".into(), Json::Num(res.sparsity_std));
+    if res.layer_sparsity.len() > 1 {
+        let mut layers = BTreeMap::new();
+        for (name, mean, _) in &res.layer_sparsity {
+            layers.insert(name.clone(), Json::Num(*mean));
+        }
+        obj.insert("layer_sparsity".into(), Json::Obj(layers));
+    }
     obj.insert("train_params".into(), Json::Num(res.train_params as f64));
     obj.insert("step_flops".into(), Json::Num(res.step_flops as f64));
     obj.insert("wall_secs".into(), Json::Num(res.wall_secs));
@@ -139,3 +146,19 @@ pub const ROW_HEADERS: [&str; 7] = [
     "Block size", "Method", "Accuracy %", "Sparsity %", "Train Params",
     "Train FLOPs/step", "Paper acc (ref)",
 ];
+
+/// One-line per-layer sparsity breakdown ("fc1 41.2±1.0%  fc2 ..."), or
+/// None for single-slot / pattern specs — the Table-2 benches print this
+/// under each multi-layer row.
+pub fn layer_breakdown(res: &SpecResult) -> Option<String> {
+    if res.layer_sparsity.len() < 2 {
+        return None;
+    }
+    Some(
+        res.layer_sparsity
+            .iter()
+            .map(|(name, m, s)| format!("{name} {m:.1}±{s:.1}%"))
+            .collect::<Vec<_>>()
+            .join("  "),
+    )
+}

@@ -14,6 +14,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::backend::TrainState;
 use crate::tensor::Tensor;
 
 const MAGIC: &[u8; 4] = b"BSCK";
@@ -30,6 +31,50 @@ impl Checkpoint {
 
     pub fn get(&self, name: &str) -> Option<&Tensor> {
         self.entries.iter().find(|(n, _)| n == name).map(|(_, t)| t)
+    }
+
+    /// Snapshot a backend [`TrainState`]: every parameter as `param:{name}`
+    /// and every optimizer slot as `opt:{name}` (the manifest's IO-slot
+    /// prefix convention), so mid-run training state — multi-layer stacks
+    /// included — round-trips bit-exactly through the container.
+    pub fn from_state(state: &TrainState) -> Self {
+        let mut entries =
+            Vec::with_capacity(state.params.len() + state.opt.len());
+        for (n, t) in state.param_names.iter().zip(&state.params) {
+            entries.push((format!("param:{n}"), t.clone()));
+        }
+        for (n, t) in state.opt_names.iter().zip(&state.opt) {
+            entries.push((format!("opt:{n}"), t.clone()));
+        }
+        Checkpoint::new(entries)
+    }
+
+    /// Restore a [`Checkpoint::from_state`] snapshot into a compatibly
+    /// shaped state (e.g. a fresh `Backend::init_state` of the same spec).
+    /// Every param/opt slot must be present with its exact shape — a
+    /// missing or reshaped entry is a spec mismatch, not a partial load.
+    pub fn restore_state(&self, state: &mut TrainState) -> Result<()> {
+        self.restore_slice("param", &state.param_names, &mut state.params)?;
+        self.restore_slice("opt", &state.opt_names, &mut state.opt)
+    }
+
+    fn restore_slice(
+        &self,
+        prefix: &str,
+        names: &[String],
+        tensors: &mut [Tensor],
+    ) -> Result<()> {
+        for (n, t) in names.iter().zip(tensors.iter_mut()) {
+            let key = format!("{prefix}:{n}");
+            let e = self
+                .get(&key)
+                .with_context(|| format!("checkpoint has no '{key}'"))?;
+            if e.shape() != t.shape() {
+                bail!("checkpoint '{key}': shape {:?} != {:?}", e.shape(), t.shape());
+            }
+            *t = e.clone();
+        }
+        Ok(())
     }
 
     pub fn save(&self, path: &Path) -> Result<()> {
@@ -175,5 +220,33 @@ mod tests {
     fn crc_known_vector() {
         // CRC32("123456789") = 0xCBF43926
         assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn state_snapshot_roundtrip_params_and_opt() {
+        let dir = std::env::temp_dir().join("bs_ckpt_state");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("s.bsck");
+        let mut st = TrainState {
+            spec: "t".into(),
+            param_names: vec!["fc1.W".into(), "fc1.mask".into()],
+            opt_names: vec!["fc1.W.m".into()],
+            params: vec![Tensor::full(&[2, 2], 3.0), Tensor::full(&[1, 2], 1.0)],
+            opt: vec![Tensor::full(&[2, 2], 0.5)],
+        };
+        Checkpoint::from_state(&st).save(&path).unwrap();
+        // perturb everything, then restore the snapshot
+        st.params[0] = Tensor::zeros(&[2, 2]);
+        st.params[1] = Tensor::zeros(&[1, 2]);
+        st.opt[0] = Tensor::zeros(&[2, 2]);
+        let back = Checkpoint::load(&path).unwrap();
+        back.restore_state(&mut st).unwrap();
+        assert_eq!(st.params[0].data(), &[3.0; 4]);
+        assert_eq!(st.params[1].data(), &[1.0; 2]);
+        assert_eq!(st.opt[0].data(), &[0.5; 4]);
+        // a state slot the snapshot lacks is a spec mismatch, not a skip
+        st.param_names.push("fc2.W".into());
+        st.params.push(Tensor::zeros(&[1]));
+        assert!(back.restore_state(&mut st).is_err());
     }
 }

@@ -23,6 +23,10 @@ pub struct SpecResult {
     pub acc_std: f64,
     pub sparsity_mean: f64,
     pub sparsity_std: f64,
+    /// per-layer sparsity (slot name, mean %, std %) in slot order —
+    /// populated for multi-slot (mlp) and single-slot specs alike, empty
+    /// for pattern specs
+    pub layer_sparsity: Vec<(String, f64, f64)>,
     pub train_params: u64,
     pub step_flops: u64,
     pub wall_secs: f64,
@@ -106,12 +110,22 @@ pub fn run_spec(be: &dyn Backend, cfg: &TrainConfig) -> Result<SpecResult> {
     let trainer = Trainer::new(be, cfg);
     let mut accs = Vec::new();
     let mut spars = Vec::new();
+    let mut layer_rates: Vec<(String, Vec<f64>)> = Vec::new();
     let mut histories = Vec::new();
     let mut pattern_accs = Vec::new();
     let mut wall = 0.0;
     for &seed in &cfg.seeds {
         let outcome = trainer.run(seed, &train, &test)?;
-        let sp = probe::measure_sparsity(be, &spec, &outcome.state)?;
+        // one probe pass: whole-model rate + per-layer breakdown (KPD
+        // specs materialize the dense stack once, not twice)
+        let (sp, layers) = probe::sparsity_report(be, &spec, &outcome.state)?;
+        // per-layer rates, aggregated positionally (slot order is fixed)
+        for (j, (name, rate)) in layers.into_iter().enumerate() {
+            if layer_rates.len() <= j {
+                layer_rates.push((name, Vec::new()));
+            }
+            layer_rates[j].1.push(rate);
+        }
         crate::info!(
             "[{}] seed {seed}: acc {:.2}% sparsity {:.2}% ({:.1}s)",
             cfg.spec, outcome.test_acc, sp, outcome.wall_secs
@@ -124,6 +138,13 @@ pub fn run_spec(be: &dyn Backend, cfg: &TrainConfig) -> Result<SpecResult> {
     }
     let (am, astd) = mean_std(&accs);
     let (sm, sstd) = mean_std(&spars);
+    let layer_sparsity: Vec<(String, f64, f64)> = layer_rates
+        .into_iter()
+        .map(|(name, rates)| {
+            let (m, s) = mean_std(&rates);
+            (name, m, s)
+        })
+        .collect();
     let (train_params, step_flops) = accounting(&spec);
     Ok(SpecResult {
         spec: cfg.spec.clone(),
@@ -132,6 +153,7 @@ pub fn run_spec(be: &dyn Backend, cfg: &TrainConfig) -> Result<SpecResult> {
         acc_std: astd,
         sparsity_mean: sm,
         sparsity_std: sstd,
+        layer_sparsity,
         train_params,
         step_flops,
         wall_secs: wall,

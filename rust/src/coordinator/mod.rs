@@ -23,16 +23,16 @@ use crate::data::{corpus, synth, Dataset};
 use crate::manifest::SpecEntry;
 
 /// Build the dataset a spec trains on. Model families map to the paper's
-/// datasets (MNIST → `synth::mnist_like`, CIFAR-100 → `synth::cifar_like`,
-/// LM → Markov corpus); real IDX files under `data/` take precedence for
-/// the MNIST-shaped models.
+/// datasets (MNIST → `synth::mnist_like` for linear/mlp/lenet5, CIFAR-100
+/// → `synth::cifar_like`, LM → Markov corpus); real IDX files under
+/// `data/` take precedence for the MNIST-shaped models.
 pub fn dataset_for(spec: &SpecEntry, data_seed: u64, train_n: usize,
                    test_n: usize) -> Result<(Dataset, Dataset)> {
     let total = train_n + test_n;
     let full = if spec.model.starts_with("lm_") {
         let seq = spec.input_shape[0];
         corpus::lm_dataset(data_seed, spec.num_classes, seq, total)
-    } else if spec.model == "linear" || spec.model == "lenet5" {
+    } else if spec.model == "linear" || spec.model == "mlp" || spec.model == "lenet5" {
         if let Some(loaded) = crate::data::idx::load_mnist_dir(std::path::Path::new("data")) {
             let d = loaded?;
             crate::info!("using real MNIST from data/ ({} examples)", d.n);

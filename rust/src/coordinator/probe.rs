@@ -17,17 +17,26 @@ use crate::manifest::SpecEntry;
 use crate::metrics::History;
 use crate::sparsity::{self, DEFAULT_EPS_REL};
 
-/// Whole-model sparsity rate in percent for a trained state.
-pub fn measure_sparsity(be: &dyn Backend, spec: &SpecEntry, state: &TrainState) -> Result<f64> {
-    let mut parts: Vec<(f64, usize)> = Vec::new();
+/// Per-slot sparsity parts (slot name, rate as a fraction, element count)
+/// — the single measurement behind both the whole-model rate and the
+/// per-layer reporting of multi-slot (mlp) specs. Methods with explicit
+/// masks read them per slot; KPD/group-LASSO measure block sparsity at
+/// each slot's own block size. Pattern specs have no per-slot notion
+/// (candidates share every slot) and return an error here — callers go
+/// through [`measure_sparsity`], which handles them.
+fn layer_parts(
+    be: &dyn Backend,
+    spec: &SpecEntry,
+    state: &TrainState,
+) -> Result<Vec<(String, f64, usize)>> {
+    let mut parts: Vec<(String, f64, usize)> = Vec::new();
     match spec.method.as_str() {
         "kpd" => {
             for (slot_name, w) in be.materialize(state)? {
-                let (m2, n2) = spec
-                    .block_of(&slot_name)
-                    .unwrap_or((1, 1));
+                let (m2, n2) = spec.block_of(&slot_name).unwrap_or((1, 1));
                 let rate = sparsity::block_sparsity(&w, m2, n2, DEFAULT_EPS_REL)?;
-                parts.push((rate, w.len()));
+                let len = w.len();
+                parts.push((slot_name, rate, len));
             }
         }
         "group_lasso" | "elastic_gl" => {
@@ -35,41 +44,95 @@ pub fn measure_sparsity(be: &dyn Backend, spec: &SpecEntry, state: &TrainState) 
                 let w = state.param_tensor(&format!("{}.W", slot.name))?;
                 let (m2, n2) = spec.block_of(&slot.name).unwrap_or((1, 1));
                 let rate = sparsity::block_sparsity(&w, m2, n2, DEFAULT_EPS_REL)?;
-                parts.push((rate, w.len()));
+                parts.push((slot.name.clone(), rate, w.len()));
             }
         }
         "rigl_block" => {
             for slot in &spec.slots {
                 let mask = state.param_tensor(&format!("{}.mask", slot.name))?;
                 let rate = sparsity::mask_sparsity(&mask);
-                parts.push((rate, slot.m * slot.n));
+                parts.push((slot.name.clone(), rate, slot.m * slot.n));
             }
         }
         "iter_prune" => {
             for slot in &spec.slots {
                 let mask = state.param_tensor(&format!("{}.emask", slot.name))?;
                 let rate = sparsity::mask_sparsity(&mask);
-                parts.push((rate, slot.m * slot.n));
+                parts.push((slot.name.clone(), rate, slot.m * slot.n));
             }
         }
-        "dense" => return Ok(0.0),
-        m if m.starts_with("pattern") => {
-            // per-pattern S sparsity of the surviving pattern is what
-            // matters; report the max-sparsity pattern's S rate
-            let k = spec.num_patterns().unwrap_or(1);
-            let mut best = 0.0f64;
-            for p in 0..k {
-                let mut pp: Vec<(f64, usize)> = Vec::new();
-                for slot in &spec.slots {
-                    let s = state.param_tensor(&format!("p{p}.{}.S", slot.name))?;
-                    pp.push((sparsity::element_sparsity(&s, DEFAULT_EPS_REL), s.len()));
-                }
-                best = best.max(sparsity::aggregate(&pp));
+        "dense" => {
+            for slot in &spec.slots {
+                parts.push((slot.name.clone(), 0.0, slot.m * slot.n));
             }
-            return Ok(100.0 * best);
         }
-        other => anyhow::bail!("sparsity probe: unknown method '{other}'"),
+        other => bail!("sparsity probe: no per-slot measurement for method '{other}'"),
     }
+    Ok(parts)
+}
+
+/// Per-layer sparsity in percent, in slot order — the Table-2 style
+/// per-layer breakdown for multi-slot specs. Empty for pattern specs
+/// (their sparsity lives in per-candidate S vectors, not per slot).
+pub fn layer_sparsity(
+    be: &dyn Backend,
+    spec: &SpecEntry,
+    state: &TrainState,
+) -> Result<Vec<(String, f64)>> {
+    if spec.method.starts_with("pattern") {
+        return Ok(vec![]);
+    }
+    Ok(layer_parts(be, spec, state)?
+        .into_iter()
+        .map(|(name, rate, _)| (name, 100.0 * rate))
+        .collect())
+}
+
+/// One-shot probe: whole-model rate (percent) plus the per-layer
+/// breakdown from a *single* measurement pass — KPD specs materialize the
+/// dense stack exactly once. What `experiment::run_spec` consumes;
+/// [`measure_sparsity`] / [`layer_sparsity`] remain for callers that need
+/// only one of the two.
+pub fn sparsity_report(
+    be: &dyn Backend,
+    spec: &SpecEntry,
+    state: &TrainState,
+) -> Result<(f64, Vec<(String, f64)>)> {
+    if spec.method.starts_with("pattern") {
+        return Ok((measure_sparsity(be, spec, state)?, vec![]));
+    }
+    let parts = layer_parts(be, spec, state)?;
+    let agg: Vec<(f64, usize)> = parts.iter().map(|(_, rate, len)| (*rate, *len)).collect();
+    let total = 100.0 * sparsity::aggregate(&agg);
+    Ok((total, parts.into_iter().map(|(name, rate, _)| (name, 100.0 * rate)).collect()))
+}
+
+/// Whole-model sparsity rate in percent for a trained state: the
+/// element-weighted aggregate of [`layer_sparsity`]'s per-slot rates
+/// (pattern specs instead report the max-sparsity candidate's S rate).
+pub fn measure_sparsity(be: &dyn Backend, spec: &SpecEntry, state: &TrainState) -> Result<f64> {
+    if spec.method.starts_with("pattern") {
+        // per-pattern S sparsity of the surviving pattern is what
+        // matters; report the max-sparsity pattern's S rate
+        let k = spec.num_patterns().unwrap_or(1);
+        let mut best = 0.0f64;
+        for p in 0..k {
+            let mut pp: Vec<(f64, usize)> = Vec::new();
+            for slot in &spec.slots {
+                let s = state.param_tensor(&format!("p{p}.{}.S", slot.name))?;
+                pp.push((sparsity::element_sparsity(&s, DEFAULT_EPS_REL), s.len()));
+            }
+            best = best.max(sparsity::aggregate(&pp));
+        }
+        return Ok(100.0 * best);
+    }
+    if spec.method == "dense" {
+        return Ok(0.0);
+    }
+    let parts: Vec<(f64, usize)> = layer_parts(be, spec, state)?
+        .into_iter()
+        .map(|(_, rate, len)| (rate, len))
+        .collect();
     Ok(100.0 * sparsity::aggregate(&parts))
 }
 

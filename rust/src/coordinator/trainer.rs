@@ -113,24 +113,18 @@ impl<'a> Trainer<'a> {
             }
 
             let mut rec = Record::new(step as u64).with("loss", metrics[0] as f64);
-            if let Some(i) = spec.metric_index("ce") {
-                if i < metrics.len() {
-                    rec = rec.with("ce", metrics[i] as f64);
+            // every *named* scalar series goes to the history: ce/acc, the
+            // whole-model s_l1, the per-layer s_l1_{slot} series of mlp
+            // specs and the per-pattern s_l1_p{k} Figure-3 series. RigL's
+            // unnamed gnorm tail stays out (it is a controller input, and
+            // fine-block MLP grids make it ~10⁵ values per step).
+            for (i, name) in spec.metrics.iter().enumerate().skip(1) {
+                if i >= metrics.len() {
+                    break;
                 }
-            }
-            if let Some(i) = spec.metric_index("s_l1") {
-                if i < metrics.len() {
-                    rec = rec.with("s_l1", metrics[i] as f64);
-                }
-            }
-            // pattern-selection series: the Figure-3 diagnostic
-            if let Some(k) = spec.num_patterns() {
-                for p in 0..k {
-                    if let Some(i) = spec.metric_index(&format!("s_l1_p{p}")) {
-                        if i < metrics.len() {
-                            rec = rec.with(&format!("s_l1_p{p}"), metrics[i] as f64);
-                        }
-                    }
+                if name == "ce" || name == "acc" || name == "s_l1" || name.starts_with("s_l1_")
+                {
+                    rec = rec.with(name, metrics[i] as f64);
                 }
             }
             history.push(rec)?;

@@ -19,11 +19,14 @@
 //! two implementations:
 //!
 //! * [`backend::native::NativeBackend`] — the **default**: a pure-Rust,
-//!   multi-threaded engine implementing the paper's linear-spec methods
-//!   (factorized KPD forward/backward, ℓ1-on-S proximal update, joint
-//!   multi-pattern block-size selection — `backend::native::pattern`,
-//!   Eq. 7 / Figure 3 — group-LASSO prox, blockwise RigL, magnitude
-//!   pruning, SGD/momentum).
+//!   multi-threaded engine implementing the paper's methods (factorized
+//!   KPD forward/backward, ℓ1-on-S proximal update, joint multi-pattern
+//!   block-size selection — `backend::native::pattern`, Eq. 7 / Figure 3
+//!   — group-LASSO prox, blockwise RigL, magnitude pruning, SGD/momentum)
+//!   on single linear slots *and* on sequential multi-layer stacks
+//!   (`backend::native::layers`, the `mlp` family behind the Table-2
+//!   `t2_*` specs: per-slot block sizes, ReLU between slots, activation
+//!   caching and dZ chaining through `kpd::backward_dx`).
 //!   It is manifest-free and hermetic, so `cargo build && cargo test` and
 //!   the benches run offline with no python, artifacts, or PJRT plugin.
 //! * `backend::pjrt::PjrtBackend` — the AOT path (`--features pjrt`):

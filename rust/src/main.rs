@@ -16,6 +16,8 @@
 //! Examples:
 //!   blocksparse train --spec t1_kpd_b2x2 --steps 600 --seeds 0,1,2
 //!   blocksparse train --spec qs_kpd --steps 300 --lambda 0.01
+//!   blocksparse train --spec t2_kpd_16x8_8x4_4x2 --steps 500
+//!       (multi-layer specs print a per-layer sparsity breakdown)
 //!   blocksparse pattern --spec f3a_pattern --steps 1200   # Figure 3a
 //!       (native runs default to the gauge calibration λ=0.002 +0.0005/ramp;
 //!       override with --lambda / --lambda-ramp)
@@ -145,6 +147,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     println!("method          : {}", res.method);
     println!("accuracy        : {:.2} ± {:.2} %", res.acc_mean, res.acc_std);
     println!("sparsity rate   : {:.2} ± {:.2} %", res.sparsity_mean, res.sparsity_std);
+    if res.layer_sparsity.len() > 1 {
+        for (name, m, s) in &res.layer_sparsity {
+            println!("  {:<13} : {:.2} ± {:.2} %", name, m, s);
+        }
+    }
     println!("training params : {}", human_count(res.train_params as f64));
     println!("training flops  : {}/step", human_count(res.step_flops as f64));
     println!("wall time       : {:.1}s over {} seeds", res.wall_secs, cfg.seeds.len());
