@@ -1,0 +1,184 @@
+//! Inference serving bench — the train→export→serve payoff, measured.
+//! Emits `BENCH_infer.json` (default; `--json <path>` overrides).
+//!
+//! Two panels, both fully native (never SKIP):
+//!
+//! 1. **kernels** — dense `matmul_nt` vs masked `block_sparse_matmul_nt`
+//!    vs packed BSR forward on the Table-2 fc1 shape (304×784, 8×16
+//!    blocks) at 50% / 75% / 90% block sparsity, with an in-bench
+//!    correctness cross-check. Gate: BSR ≥ 2× the dense path at 75%
+//!    block sparsity (the flops model predicts 4×).
+//! 2. **serving** — the batched engine on a 784→304→100→10 BSR stack at
+//!    75% block sparsity: per-request p50/p95/p99 latency and throughput
+//!    across (micro-batch cap, client count) operating points.
+
+use std::collections::BTreeMap;
+
+use blocksparse::backend::native::linalg;
+use blocksparse::bench::{json_arg, quick_bench, BenchStats, TableWriter};
+use blocksparse::infer::engine::{drive_synthetic, latency_summary, Engine, EngineOpts};
+use blocksparse::infer::{bsr, synth_block_sparse_weights, BsrLayer, BsrModel};
+use blocksparse::util::json::Json;
+use blocksparse::util::rng::Rng;
+use blocksparse::util::Stopwatch;
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+fn max_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max)
+}
+
+fn stat_obj(s: &BenchStats) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("mean_ms".to_string(), Json::Num(s.mean_ns / 1e6));
+    o.insert("p50_ms".to_string(), Json::Num(s.p50_ns / 1e6));
+    o.insert("p95_ms".to_string(), Json::Num(s.p95_ns / 1e6));
+    o.insert("iters".to_string(), Json::Num(s.iters as f64));
+    Json::Obj(o)
+}
+
+/// The Table-2 16x8_8x4_4x2 stack shape as a synthetic BSR model at one
+/// occupancy level per layer.
+fn serve_model(rng: &mut Rng, occupancy: f64) -> BsrModel {
+    let shapes: [(&str, usize, usize, usize, usize); 3] =
+        [("fc1", 304, 784, 8, 16), ("fc2", 100, 304, 4, 8), ("fc3", 10, 100, 2, 4)];
+    let layers = shapes
+        .iter()
+        .map(|&(name, m, n, m2, n2)| {
+            let (w, _) = synth_block_sparse_weights(rng, m, n, m2, n2, occupancy);
+            BsrLayer::from_dense(name, &w, m, n, m2, n2).expect("serve model layer")
+        })
+        .collect();
+    BsrModel {
+        spec: "t2_16x8_8x4_4x2(synthetic)".to_string(),
+        method: "kpd".to_string(),
+        in_dim: 784,
+        out_dim: 10,
+        layers,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    blocksparse::util::log::set_level(blocksparse::util::log::Level::Warn);
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut rng = Rng::new(0x1F5E);
+
+    // ---- panel 1: kernel speedups across sparsity levels ----------------
+    let (nb, m, n, m2, n2) = (128usize, 304usize, 784usize, 8usize, 16usize);
+    let x = rand_vec(&mut rng, nb * n);
+    let mut kernels = BTreeMap::new();
+    let mut gate = BTreeMap::new();
+    let mut table = TableWriter::new(
+        "BSR inference kernels — 128×(304×784), 8×16 blocks",
+        &["sparsity", "dense ms", "block-sparse ms", "BSR ms", "BSR speedup"],
+    );
+    for sparsity in [0.50f64, 0.75, 0.90] {
+        let (w, mask) = synth_block_sparse_weights(&mut rng, m, n, m2, n2, 1.0 - sparsity);
+        let layer = BsrLayer::from_dense("fc", &w, m, n, m2, n2)?;
+        // correctness cross-check before timing anything
+        let dense_z = linalg::matmul_nt(&x, &w, nb, n, m);
+        let masked_z = linalg::block_sparse_matmul_nt(&x, &w, &mask, nb, m, n, m2, n2);
+        let bsr_z = bsr::bsr_forward(&x, nb, &layer);
+        // tolerance covers f32 re-association over the 784-wide reduction
+        assert!(max_diff(&dense_z, &masked_z) < 1e-2, "block-sparse kernel drifted");
+        assert!(max_diff(&dense_z, &bsr_z) < 1e-2, "BSR kernel drifted");
+
+        let tag = format!("sp{}", (sparsity * 100.0).round() as u32);
+        let dense = quick_bench(&format!("infer.dense.{tag}"), || {
+            std::hint::black_box(linalg::matmul_nt(&x, &w, nb, n, m));
+        });
+        let bsm = quick_bench(&format!("infer.block_sparse.{tag}"), || {
+            std::hint::black_box(linalg::block_sparse_matmul_nt(
+                &x, &w, &mask, nb, m, n, m2, n2,
+            ));
+        });
+        let bsr_s = quick_bench(&format!("infer.bsr.{tag}"), || {
+            std::hint::black_box(bsr::bsr_forward(&x, nb, &layer));
+        });
+        let speedup = dense.mean_ns / bsr_s.mean_ns;
+        println!(
+            "BSR speedup at {:.0}% block sparsity: {speedup:.2}x dense \
+             (flops model predicts {:.1}x)",
+            sparsity * 100.0,
+            1.0 / (1.0 - sparsity)
+        );
+        table.row(vec![
+            format!("{:.0}%", sparsity * 100.0),
+            format!("{:.3}", dense.mean_ns / 1e6),
+            format!("{:.3}", bsm.mean_ns / 1e6),
+            format!("{:.3}", bsr_s.mean_ns / 1e6),
+            format!("{speedup:.2}x"),
+        ]);
+        let mut o = BTreeMap::new();
+        o.insert("dense".to_string(), stat_obj(&dense));
+        o.insert("block_sparse".to_string(), stat_obj(&bsm));
+        o.insert("bsr".to_string(), stat_obj(&bsr_s));
+        o.insert("bsr_speedup".to_string(), Json::Num(speedup));
+        o.insert("occupancy".to_string(), Json::Num(1.0 - sparsity));
+        kernels.insert(tag.clone(), Json::Obj(o));
+        gate.insert(format!("bsr_speedup_{tag}"), Json::Num(speedup));
+    }
+    table.print();
+
+    // ---- panel 2: batched serving latency/throughput --------------------
+    let model = serve_model(&mut rng, 0.25); // 75% block sparsity
+    println!(
+        "serving {}: {} stored params, {} FLOPs/example ({:.1}% block sparsity)",
+        model.spec,
+        model.nnz_params(),
+        model.infer_flops_per_example(),
+        100.0 * model.block_sparsity()
+    );
+    let mut serve = BTreeMap::new();
+    let mut stable = TableWriter::new(
+        "batched BSR serving — 784→304→100→10 @ 75% block sparsity",
+        &["max_batch", "clients", "requests", "p50 ms", "p95 ms", "p99 ms", "req/s"],
+    );
+    for &(max_batch, clients, requests) in &[(1usize, 1usize, 256usize), (8, 4, 512), (32, 16, 1024)]
+    {
+        let engine = Engine::new(
+            model.clone(),
+            EngineOpts { max_batch, workers: 4 },
+        )?;
+        let sw = Stopwatch::start();
+        let lat_ms = drive_synthetic(&engine, requests, clients, 0xBEE)?;
+        let wall = sw.elapsed_secs();
+        let summary = latency_summary(&lat_ms);
+        let rps = summary.count as f64 / wall.max(1e-9);
+        stable.row(vec![
+            max_batch.to_string(),
+            clients.to_string(),
+            summary.count.to_string(),
+            format!("{:.3}", summary.p50_ms),
+            format!("{:.3}", summary.p95_ms),
+            format!("{:.3}", summary.p99_ms),
+            format!("{rps:.0}"),
+        ]);
+        let mut o = BTreeMap::new();
+        o.insert("max_batch".to_string(), Json::Num(max_batch as f64));
+        o.insert("clients".to_string(), Json::Num(clients as f64));
+        o.insert("requests".to_string(), Json::Num(summary.count as f64));
+        o.insert("mean_ms".to_string(), Json::Num(summary.mean_ms));
+        o.insert("p50_ms".to_string(), Json::Num(summary.p50_ms));
+        o.insert("p95_ms".to_string(), Json::Num(summary.p95_ms));
+        o.insert("p99_ms".to_string(), Json::Num(summary.p99_ms));
+        o.insert("max_ms".to_string(), Json::Num(summary.max_ms));
+        o.insert("throughput_rps".to_string(), Json::Num(rps));
+        serve.insert(format!("b{max_batch}_c{clients}"), Json::Obj(o));
+    }
+    stable.print();
+
+    let mut root = BTreeMap::new();
+    root.insert("backend".to_string(), Json::Str("native-cpu".to_string()));
+    root.insert("kernels".to_string(), Json::Obj(kernels));
+    root.insert("serve".to_string(), Json::Obj(serve));
+    root.insert("gate".to_string(), Json::Obj(gate));
+    // this bench always writes its JSON — an absent flag means the default
+    let path = json_arg(&args, "BENCH_infer.json")
+        .unwrap_or_else(|| "BENCH_infer.json".to_string());
+    std::fs::write(&path, Json::Obj(root).to_string_pretty())?;
+    println!("wrote {path}");
+    Ok(())
+}

@@ -4,8 +4,10 @@
 //!  - backend.overhead     smallest eval round-trip (framework tax)
 //!  - data.batch.*         batch assembly throughput (host pipeline)
 //!  - tensor.*             host-side measurement ops (sparsity probes)
-//!  - native.matmul.*      the threaded native kernels (dense vs block-
-//!                         sparse — the §4 inference claim, measured)
+//!  - native.matmul.*      the threaded native kernels: dense vs masked
+//!                         block-sparse vs packed BSR at 50/75/90% block
+//!                         sparsity — the §4 inference claim, measured
+//!                         (`benches/infer_serve.rs` is the full panel)
 //!
 //! Specs the active backend cannot run are skipped, not failed.
 //!
@@ -18,26 +20,13 @@ use std::collections::BTreeMap;
 
 use blocksparse::backend::native::linalg;
 use blocksparse::backend::Backend;
-use blocksparse::bench::{quick_bench, BenchStats, TableWriter};
+use blocksparse::bench::{json_arg, quick_bench, BenchStats, TableWriter};
 use blocksparse::coordinator::dataset_for;
 use blocksparse::data::{assemble_batch, Batcher};
+use blocksparse::infer;
 use blocksparse::tensor::Tensor;
 use blocksparse::util::json::Json;
 use blocksparse::util::rng::Rng;
-
-/// `--json <path>` / `--json=<path>` from the post-`--` bench args.
-fn json_path(args: &[String]) -> Option<String> {
-    let mut it = args.iter();
-    while let Some(a) = it.next() {
-        if a == "--json" {
-            return it.next().cloned().or_else(|| Some("BENCH_native.json".to_string()));
-        }
-        if let Some(p) = a.strip_prefix("--json=") {
-            return Some(p.to_string());
-        }
-    }
-    None
-}
 
 fn write_json(path: &str, backend: &str, stats: &[BenchStats]) -> anyhow::Result<()> {
     let mut benches = BTreeMap::new();
@@ -125,31 +114,43 @@ fn main() -> anyhow::Result<()> {
         }));
     }
 
-    // ---- native kernels: dense vs block-sparse matmul ---------------------
+    // ---- native kernels: dense vs block-sparse vs packed BSR --------------
+    // The inference trajectory: the masked training matmul and the packed
+    // BSR serving kernel against the dense path at 50/75/90% block
+    // sparsity (the zeroed-block fraction; occupancy is the complement).
     {
         let mut rng = Rng::new(4);
         let (nb, m, n, m2, n2) = (64usize, 120usize, 400usize, 8usize, 16usize);
-        let (m1, n1) = (m / m2, n / n2);
         let x: Vec<f32> = (0..nb * n).map(|_| rng.normal()).collect();
         let w: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
-        // 50% block mask (checkerboard)
-        let mask: Vec<f32> = (0..m1 * n1)
-            .map(|i| if (i / n1 + i % n1) % 2 == 0 { 0.0 } else { 1.0 })
-            .collect();
         let dense = quick_bench("native.matmul.dense_64x400x120", || {
             std::hint::black_box(linalg::matmul_nt(&x, &w, nb, n, m));
         });
-        let sparse = quick_bench("native.matmul.block_sparse50", || {
-            std::hint::black_box(linalg::block_sparse_matmul_nt(
-                &x, &w, &mask, nb, m, n, m2, n2,
-            ));
-        });
-        println!(
-            "block-sparse/dense inference speedup: {:.2}x (flops model predicts ~2x at 50%)",
-            dense.mean_ns / sparse.mean_ns
-        );
+        let dense_mean = dense.mean_ns;
         stats.push(dense);
-        stats.push(sparse);
+        for sparsity in [0.50f64, 0.75, 0.90] {
+            let (wm, mask) =
+                infer::synth_block_sparse_weights(&mut rng, m, n, m2, n2, 1.0 - sparsity);
+            let tag = (sparsity * 100.0).round() as u32;
+            let sparse = quick_bench(&format!("native.matmul.block_sparse{tag}"), || {
+                std::hint::black_box(linalg::block_sparse_matmul_nt(
+                    &x, &wm, &mask, nb, m, n, m2, n2,
+                ));
+            });
+            let layer = infer::BsrLayer::from_dense("fc", &wm, m, n, m2, n2)?;
+            let bsr_s = quick_bench(&format!("native.matmul.bsr{tag}"), || {
+                std::hint::black_box(infer::bsr::bsr_forward(&x, nb, &layer));
+            });
+            println!(
+                "{tag}% block sparsity: block-sparse {:.2}x, BSR {:.2}x over dense \
+                 (flops model predicts {:.1}x)",
+                dense_mean / sparse.mean_ns,
+                dense_mean / bsr_s.mean_ns,
+                1.0 / (1.0 - sparsity)
+            );
+            stats.push(sparse);
+            stats.push(bsr_s);
+        }
     }
 
     let mut t = TableWriter::new("perf microbenches", &["bench", "mean ms", "p50 ms", "p95 ms", "/s"]);
@@ -163,7 +164,7 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     t.print();
-    if let Some(path) = json_path(&args) {
+    if let Some(path) = json_arg(&args, "BENCH_native.json") {
         write_json(&path, &be.name(), &stats)?;
     }
     Ok(())

@@ -29,8 +29,10 @@ fn max_threads() -> usize {
 }
 
 /// Run `f(row_index, row)` over every `cols`-wide row of `out`, splitting
-/// the rows across up to `threads` scoped workers.
-fn par_rows<F>(out: &mut [f32], rows: usize, cols: usize, threads: usize, f: F)
+/// the rows across up to `threads` scoped workers. Shared with the BSR
+/// inference kernels (`crate::infer::bsr`), which parallelize over batch
+/// rows the same way.
+pub(crate) fn par_rows<F>(out: &mut [f32], rows: usize, cols: usize, threads: usize, f: F)
 where
     F: Fn(usize, &mut [f32]) + Sync,
 {
@@ -57,7 +59,13 @@ where
     });
 }
 
-fn threads_for(work: usize) -> usize {
+/// Worker count for a kernel of `work` multiply-adds: 1 below the
+/// threading threshold, the machine cap above it. The packed BSR serving
+/// kernel (`crate::infer::bsr`) passes its *actual* occupied-block work so
+/// a highly sparse layer is not taxed with thread-spawn overhead; the
+/// masked training matmul below still passes the dense product (the mask
+/// changes every RigL round, so its threading stays shape-stable).
+pub(crate) fn threads_for(work: usize) -> usize {
     if work < PAR_THRESHOLD {
         1
     } else {

@@ -40,7 +40,11 @@ impl BenchStats {
     }
 }
 
-fn percentile(sorted: &[f64], p: f64) -> f64 {
+/// Nearest-rank percentile over an ascending-sorted sample. The single
+/// definition shared by the microbench stats here and the serving-latency
+/// summary (`infer::engine::latency_summary`), so p50/p95/p99 stay
+/// comparable across every BENCH_*.json.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     if sorted.is_empty() {
         return f64::NAN;
     }
@@ -84,6 +88,25 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, min_iters: usize,
 /// Convenience wrapper with repo-standard settings.
 pub fn quick_bench<F: FnMut()>(name: &str, f: F) -> BenchStats {
     bench(name, 2, 10, Duration::from_millis(300), f)
+}
+
+/// Parse `--json <path>` / `--json=<path>` from a bench binary's
+/// post-`--` args: `Some(path)` when given, `Some(default)` for a bare
+/// `--json`, `None` when the flag is absent. One parser for every bench
+/// that emits a BENCH_*.json, so the flag's semantics cannot drift
+/// between them; each bench decides what an absent flag means (perf_micro
+/// skips the write, infer_serve falls back to its default path).
+pub fn json_arg(args: &[String], default: &str) -> Option<String> {
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        if a == "--json" {
+            return Some(it.next().cloned().unwrap_or_else(|| default.to_string()));
+        }
+        if let Some(p) = a.strip_prefix("--json=") {
+            return Some(p.to_string());
+        }
+    }
+    None
 }
 
 // --------------------------------------------------------------- tables
@@ -159,6 +182,17 @@ mod tests {
         assert!(s.mean_ns > 0.0);
         assert!(s.p50_ns <= s.p95_ns);
         assert!(s.min_ns <= s.max_ns);
+    }
+
+    #[test]
+    fn json_arg_forms() {
+        let sv = |xs: &[&str]| xs.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+        assert_eq!(json_arg(&sv(&["--json", "out.json"]), "d.json"),
+                   Some("out.json".to_string()));
+        assert_eq!(json_arg(&sv(&["--json=inline.json"]), "d.json"),
+                   Some("inline.json".to_string()));
+        assert_eq!(json_arg(&sv(&["--json"]), "d.json"), Some("d.json".to_string()));
+        assert_eq!(json_arg(&sv(&["linear", "--bench"]), "d.json"), None);
     }
 
     #[test]

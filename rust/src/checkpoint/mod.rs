@@ -8,6 +8,11 @@
 //!
 //! Deliberately simple: no mmap, no compression — checkpoints here are at
 //! most a few tens of MB and are written at eval boundaries only.
+//!
+//! The [`wire`] helpers (length-prefixed strings, fixed-width ints, f32
+//! runs) and the trailing-[`crc32`] guard are shared with the BSR model
+//! artifact (`crate::infer`), so both containers framed this way fail the
+//! same loud way on truncation or corruption.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -19,6 +24,92 @@ use crate::tensor::Tensor;
 
 const MAGIC: &[u8; 4] = b"BSCK";
 const VERSION: u32 = 1;
+
+/// Little-endian framing primitives shared by the checkpoint container and
+/// the BSR model artifact. Readers bounds-check and error on truncation, so
+/// a short file fails before a garbage value is ever interpreted.
+pub(crate) mod wire {
+    use anyhow::{bail, Result};
+
+    pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(buf: &mut Vec<u8>, v: u64) {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_str(buf: &mut Vec<u8>, s: &str) {
+        put_u32(buf, s.len() as u32);
+        buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+        for &v in xs {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    pub fn put_u32s(buf: &mut Vec<u8>, xs: &[u32]) {
+        for &v in xs {
+            put_u32(buf, v);
+        }
+    }
+
+    pub fn get_u32(b: &[u8], off: &mut usize) -> Result<u32> {
+        if *off + 4 > b.len() {
+            bail!("truncated container (u32)");
+        }
+        let v = u32::from_le_bytes(b[*off..*off + 4].try_into().unwrap());
+        *off += 4;
+        Ok(v)
+    }
+
+    pub fn get_u64(b: &[u8], off: &mut usize) -> Result<u64> {
+        if *off + 8 > b.len() {
+            bail!("truncated container (u64)");
+        }
+        let v = u64::from_le_bytes(b[*off..*off + 8].try_into().unwrap());
+        *off += 8;
+        Ok(v)
+    }
+
+    pub fn get_str(b: &[u8], off: &mut usize) -> Result<String> {
+        let n = get_u32(b, off)? as usize;
+        if *off + n > b.len() {
+            bail!("truncated container (string)");
+        }
+        let s = String::from_utf8(b[*off..*off + n].to_vec())
+            .map_err(|_| anyhow::anyhow!("container string is not utf8"))?;
+        *off += n;
+        Ok(s)
+    }
+
+    pub fn get_f32s(b: &[u8], off: &mut usize, n: usize) -> Result<Vec<f32>> {
+        if b.len().saturating_sub(*off) < 4 * n {
+            bail!("truncated container (f32 run of {n})");
+        }
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            out.push(f32::from_le_bytes(
+                b[*off + 4 * i..*off + 4 * i + 4].try_into().unwrap(),
+            ));
+        }
+        *off += 4 * n;
+        Ok(out)
+    }
+
+    pub fn get_u32s(b: &[u8], off: &mut usize, n: usize) -> Result<Vec<u32>> {
+        if b.len().saturating_sub(*off) < 4 * n {
+            bail!("truncated container (u32 run of {n})");
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(get_u32(b, off)?);
+        }
+        Ok(out)
+    }
+}
 
 pub struct Checkpoint {
     pub entries: Vec<(String, Tensor)>,
@@ -82,19 +173,15 @@ impl Checkpoint {
             std::fs::create_dir_all(dir)?;
         }
         let mut body = Vec::new();
-        body.extend_from_slice(&VERSION.to_le_bytes());
-        body.extend_from_slice(&(self.entries.len() as u32).to_le_bytes());
+        wire::put_u32(&mut body, VERSION);
+        wire::put_u32(&mut body, self.entries.len() as u32);
         for (name, t) in &self.entries {
-            let nb = name.as_bytes();
-            body.extend_from_slice(&(nb.len() as u32).to_le_bytes());
-            body.extend_from_slice(nb);
-            body.extend_from_slice(&(t.shape().len() as u32).to_le_bytes());
+            wire::put_str(&mut body, name);
+            wire::put_u32(&mut body, t.shape().len() as u32);
             for &d in t.shape() {
-                body.extend_from_slice(&(d as u64).to_le_bytes());
+                wire::put_u64(&mut body, d as u64);
             }
-            for &v in t.data() {
-                body.extend_from_slice(&v.to_le_bytes());
-            }
+            wire::put_f32s(&mut body, t.data());
         }
         let crc = crc32(&body);
         let mut f = std::fs::File::create(path)
@@ -119,48 +206,21 @@ impl Checkpoint {
             bail!("checkpoint CRC mismatch (corrupt file)");
         }
         let mut off = 0usize;
-        let rd_u32 = |b: &[u8], o: &mut usize| -> Result<u32> {
-            if *o + 4 > b.len() {
-                bail!("truncated checkpoint");
-            }
-            let v = u32::from_le_bytes(b[*o..*o + 4].try_into().unwrap());
-            *o += 4;
-            Ok(v)
-        };
-        let version = rd_u32(body, &mut off)?;
+        let version = wire::get_u32(body, &mut off).context("reading checkpoint")?;
         if version != VERSION {
             bail!("unsupported checkpoint version {version}");
         }
-        let count = rd_u32(body, &mut off)? as usize;
+        let count = wire::get_u32(body, &mut off)? as usize;
         let mut entries = Vec::with_capacity(count);
         for _ in 0..count {
-            let nlen = rd_u32(body, &mut off)? as usize;
-            if off + nlen > body.len() {
-                bail!("truncated checkpoint (name)");
-            }
-            let name = String::from_utf8(body[off..off + nlen].to_vec())
-                .context("checkpoint name utf8")?;
-            off += nlen;
-            let ndim = rd_u32(body, &mut off)? as usize;
+            let name = wire::get_str(body, &mut off).context("checkpoint entry name")?;
+            let ndim = wire::get_u32(body, &mut off)? as usize;
             let mut dims = Vec::with_capacity(ndim);
             for _ in 0..ndim {
-                if off + 8 > body.len() {
-                    bail!("truncated checkpoint (dims)");
-                }
-                dims.push(u64::from_le_bytes(body[off..off + 8].try_into().unwrap()) as usize);
-                off += 8;
+                dims.push(wire::get_u64(body, &mut off).context("checkpoint dims")? as usize);
             }
             let n: usize = dims.iter().product();
-            if off + 4 * n > body.len() {
-                bail!("truncated checkpoint (data)");
-            }
-            let mut data = Vec::with_capacity(n);
-            for i in 0..n {
-                data.push(f32::from_le_bytes(
-                    body[off + 4 * i..off + 4 * i + 4].try_into().unwrap(),
-                ));
-            }
-            off += 4 * n;
+            let data = wire::get_f32s(body, &mut off, n).context("checkpoint data")?;
             entries.push((name, Tensor::new(&dims, data)?));
         }
         Ok(Self { entries })
@@ -202,18 +262,51 @@ mod tests {
     }
 
     #[test]
-    fn corruption_detected() {
+    fn corruption_detected_as_crc_mismatch() {
+        // flipping any single body byte must fail *at the CRC guard* — not
+        // parse garbage, not succeed with silently wrong tensor values
         let dir = std::env::temp_dir().join("bs_ckpt_test2");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("c.bsck");
         Checkpoint::new(vec![("w".into(), Tensor::full(&[4], 1.0))])
             .save(&path)
             .unwrap();
-        let mut bytes = std::fs::read(&path).unwrap();
-        let mid = bytes.len() / 2;
-        bytes[mid] ^= 0xFF;
-        std::fs::write(&path, &bytes).unwrap();
-        assert!(Checkpoint::load(&path).is_err());
+        let clean = std::fs::read(&path).unwrap();
+        for &pos in &[4usize, clean.len() / 2, clean.len() - 5] {
+            let mut bytes = clean.clone();
+            bytes[pos] ^= 0xFF;
+            std::fs::write(&path, &bytes).unwrap();
+            let err = Checkpoint::load(&path).unwrap_err();
+            assert!(
+                format!("{err:#}").contains("CRC"),
+                "byte {pos}: wanted the CRC error, got: {err:#}"
+            );
+        }
+    }
+
+    #[test]
+    fn wire_helpers_round_trip_and_reject_truncation() {
+        let mut buf = Vec::new();
+        wire::put_u32(&mut buf, 7);
+        wire::put_u64(&mut buf, u64::MAX - 3);
+        wire::put_str(&mut buf, "fc1.W");
+        wire::put_u32s(&mut buf, &[1, 2, 3]);
+        wire::put_f32s(&mut buf, &[0.5, -2.0]);
+        let mut off = 0usize;
+        assert_eq!(wire::get_u32(&buf, &mut off).unwrap(), 7);
+        assert_eq!(wire::get_u64(&buf, &mut off).unwrap(), u64::MAX - 3);
+        assert_eq!(wire::get_str(&buf, &mut off).unwrap(), "fc1.W");
+        assert_eq!(wire::get_u32s(&buf, &mut off, 3).unwrap(), vec![1, 2, 3]);
+        assert_eq!(wire::get_f32s(&buf, &mut off, 2).unwrap(), vec![0.5, -2.0]);
+        assert_eq!(off, buf.len());
+        // any further read is a loud truncation error
+        assert!(wire::get_u32(&buf, &mut off).is_err());
+        assert!(wire::get_f32s(&buf, &mut off, 1).is_err());
+        // a string whose length prefix overruns the buffer is rejected
+        let mut bad = Vec::new();
+        wire::put_u32(&mut bad, 100);
+        let mut boff = 0usize;
+        assert!(wire::get_str(&bad, &mut boff).is_err());
     }
 
     #[test]

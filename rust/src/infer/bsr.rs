@@ -1,0 +1,253 @@
+//! BSR forward kernels: Z = X·Wᵀ over the stored blocks only.
+//!
+//! Each stored (m2×n2) block is packed contiguously, so the inner loop is
+//! a straight dot product between a block row and the matching contiguous
+//! n2-segment of the input row — no gather, no mask test per element (the
+//! skip decision was paid once at export). Batch rows are split across
+//! scoped workers via the same `par_rows`/`threads_for` substrate as the
+//! training kernels in `backend::native::linalg`, with the thread decision
+//! made on the *occupied* work so sparse layers are not taxed with spawn
+//! overhead; cost therefore scales with occupancy, not the dense shape.
+
+use anyhow::{bail, Result};
+
+use crate::backend::native::linalg::{par_rows, threads_for};
+
+use super::{BsrLayer, BsrModel};
+
+/// Z(N, m) = X(N, n) · Wᵀ over the occupied blocks of `layer`.
+pub fn bsr_forward(x: &[f32], nb: usize, layer: &BsrLayer) -> Vec<f32> {
+    forward_impl(x, nb, layer, false)
+}
+
+/// Fused variant: Z = max(X·Wᵀ, 0) — the hidden layers of a served stack,
+/// saving one full pass over the activations.
+pub fn bsr_forward_relu(x: &[f32], nb: usize, layer: &BsrLayer) -> Vec<f32> {
+    forward_impl(x, nb, layer, true)
+}
+
+fn forward_impl(x: &[f32], nb: usize, l: &BsrLayer, relu: bool) -> Vec<f32> {
+    let (m, n, m2, n2) = (l.m, l.n, l.m2, l.n2);
+    debug_assert_eq!(x.len(), nb * n);
+    let m1 = m / m2;
+    let mut out = vec![0.0f32; nb * m];
+    let work = nb * l.nnz_blocks() * m2 * n2;
+    par_rows(&mut out, nb, m, threads_for(work), |b, row| {
+        let xrow = &x[b * n..(b + 1) * n];
+        for i1 in 0..m1 {
+            let orow = &mut row[i1 * m2..(i1 + 1) * m2];
+            let (lo, hi) = (l.row_ptr[i1] as usize, l.row_ptr[i1 + 1] as usize);
+            for k in lo..hi {
+                let j1 = l.col_idx[k] as usize;
+                let xseg = &xrow[j1 * n2..(j1 + 1) * n2];
+                let blk = &l.blocks[k * m2 * n2..(k + 1) * m2 * n2];
+                for (i2, o) in orow.iter_mut().enumerate() {
+                    let brow = &blk[i2 * n2..(i2 + 1) * n2];
+                    let mut acc = 0.0f32;
+                    for (bv, xv) in brow.iter().zip(xseg) {
+                        acc += bv * xv;
+                    }
+                    *o += acc;
+                }
+            }
+            if relu {
+                for o in orow.iter_mut() {
+                    if *o < 0.0 {
+                        *o = 0.0;
+                    }
+                }
+            }
+        }
+    });
+    out
+}
+
+/// Logits of the full stack on a flat batch (N × in_dim): ReLU fused into
+/// every hidden layer, none after the logits — the serving mirror of
+/// `backend::native::layers::forward_logits`.
+pub fn model_forward(model: &BsrModel, x: &[f32], nb: usize) -> Result<Vec<f32>> {
+    if model.layers.is_empty() {
+        bail!("BSR model '{}' has no layers", model.spec);
+    }
+    if nb == 0 || x.len() != nb * model.in_dim {
+        bail!(
+            "model '{}' wants a flat batch of {}·{} values, got {}",
+            model.spec, nb, model.in_dim, x.len()
+        );
+    }
+    // the first layer reads straight from the caller's batch — no copy on
+    // the serving hot path
+    let last = model.layers.len() - 1;
+    let mut cur = if last == 0 {
+        bsr_forward(x, nb, &model.layers[0])
+    } else {
+        bsr_forward_relu(x, nb, &model.layers[0])
+    };
+    for (i, l) in model.layers.iter().enumerate().skip(1) {
+        cur = if i < last {
+            bsr_forward_relu(&cur, nb, l)
+        } else {
+            bsr_forward(&cur, nb, l)
+        };
+    }
+    Ok(cur)
+}
+
+/// Row-wise argmax over (nb × classes) logits — ties resolve to the first
+/// maximum, matching `linalg::softmax_ce`'s accuracy convention.
+pub fn argmax_rows(z: &[f32], nb: usize, classes: usize) -> Vec<usize> {
+    debug_assert_eq!(z.len(), nb * classes);
+    (0..nb)
+        .map(|b| {
+            let row = &z[b * classes..(b + 1) * classes];
+            let mut best = 0usize;
+            for (j, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = j;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::linalg;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    /// Random dense W with a deterministic set of zeroed blocks.
+    fn holey_weights(
+        rng: &mut Rng,
+        m: usize,
+        n: usize,
+        m2: usize,
+        n2: usize,
+        keep_every: usize,
+    ) -> Vec<f32> {
+        let n1 = n / n2;
+        let mut w = rand_vec(rng, m * n);
+        for i in 0..m {
+            for j in 0..n {
+                let blk = (i / m2) * n1 + j / n2;
+                if blk % keep_every != 0 {
+                    w[i * n + j] = 0.0;
+                }
+            }
+        }
+        w
+    }
+
+    #[test]
+    fn bsr_forward_matches_dense_matmul() {
+        let mut rng = Rng::new(31);
+        for &(nb, m, n, m2, n2, keep) in
+            &[(5usize, 6usize, 8usize, 2usize, 4usize, 2usize), (3, 12, 10, 3, 5, 3), (4, 4, 4, 1, 1, 2)]
+        {
+            let x = rand_vec(&mut rng, nb * n);
+            let w = holey_weights(&mut rng, m, n, m2, n2, keep);
+            let l = BsrLayer::from_dense("fc", &w, m, n, m2, n2).unwrap();
+            let got = bsr_forward(&x, nb, &l);
+            let want = linalg::matmul_nt(&x, &w, nb, n, m);
+            let diff = got
+                .iter()
+                .zip(&want)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(diff < 1e-5, "({nb},{m},{n},{m2},{n2}): max diff {diff}");
+        }
+    }
+
+    #[test]
+    fn bsr_forward_threaded_path_matches_dense() {
+        // large enough that threads_for spawns workers (nb·nnz·m2·n2 > 2^21)
+        let mut rng = Rng::new(32);
+        let (nb, m, n, m2, n2) = (80usize, 128usize, 512usize, 8usize, 16usize);
+        let x = rand_vec(&mut rng, nb * n);
+        let w = holey_weights(&mut rng, m, n, m2, n2, 2);
+        let l = BsrLayer::from_dense("fc", &w, m, n, m2, n2).unwrap();
+        assert!(nb * l.nnz_blocks() * m2 * n2 > 1 << 21, "test must cross the threshold");
+        let got = bsr_forward(&x, nb, &l);
+        let want = linalg::matmul_nt(&x, &w, nb, n, m);
+        let diff = got
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(diff < 1e-3, "max diff {diff}");
+    }
+
+    #[test]
+    fn relu_fusion_matches_separate_relu() {
+        let mut rng = Rng::new(33);
+        let (nb, m, n, m2, n2) = (4usize, 6usize, 9usize, 3usize, 3usize);
+        let x = rand_vec(&mut rng, nb * n);
+        let w = holey_weights(&mut rng, m, n, m2, n2, 2);
+        let l = BsrLayer::from_dense("fc", &w, m, n, m2, n2).unwrap();
+        let mut want = bsr_forward(&x, nb, &l);
+        linalg::relu_inplace(&mut want);
+        assert_eq!(bsr_forward_relu(&x, nb, &l), want);
+    }
+
+    #[test]
+    fn empty_block_rows_emit_zero() {
+        // one fully-zero output block-row: its logits must be exactly 0
+        let (m, n, m2, n2) = (4usize, 4usize, 2usize, 2usize);
+        let mut w = vec![1.0f32; m * n];
+        for i in 0..2 {
+            for j in 0..n {
+                w[i * n + j] = 0.0;
+            }
+        }
+        let l = BsrLayer::from_dense("fc", &w, m, n, m2, n2).unwrap();
+        assert_eq!(l.row_ptr[0], l.row_ptr[1], "first block-row must be empty");
+        let x = vec![1.0f32; n];
+        let z = bsr_forward(&x, 1, &l);
+        assert_eq!(&z[..2], &[0.0, 0.0]);
+        assert_eq!(&z[2..], &[4.0, 4.0]);
+    }
+
+    #[test]
+    fn model_forward_chains_with_relu_and_validates_input() {
+        let mut rng = Rng::new(34);
+        let w1 = rand_vec(&mut rng, 6 * 8);
+        let w2 = rand_vec(&mut rng, 4 * 6);
+        let model = BsrModel {
+            spec: "tiny".into(),
+            method: "dense".into(),
+            in_dim: 8,
+            out_dim: 4,
+            layers: vec![
+                BsrLayer::from_dense("fc1", &w1, 6, 8, 2, 2).unwrap(),
+                BsrLayer::from_dense("fc2", &w2, 4, 6, 2, 2).unwrap(),
+            ],
+        };
+        let nb = 3;
+        let x = rand_vec(&mut rng, nb * 8);
+        let z = model_forward(&model, &x, nb).unwrap();
+        // reference: dense matmul chain with an explicit ReLU between
+        let mut h = linalg::matmul_nt(&x, &w1, nb, 8, 6);
+        linalg::relu_inplace(&mut h);
+        let want = linalg::matmul_nt(&h, &w2, nb, 6, 4);
+        let diff = z
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(diff < 1e-5, "max diff {diff}");
+        // wrong input length is rejected
+        assert!(model_forward(&model, &x[..7], 1).is_err());
+        assert!(model_forward(&model, &x, 0).is_err());
+    }
+
+    #[test]
+    fn argmax_rows_first_max_wins() {
+        let z = vec![0.0, 2.0, 2.0, /* row 2 */ -1.0, -3.0, -2.0];
+        assert_eq!(argmax_rows(&z, 2, 3), vec![1, 0]);
+    }
+}

@@ -1,0 +1,419 @@
+//! Batched serving engine: a request queue with dynamic micro-batching.
+//!
+//! Clients call [`Engine::predict`] (blocking). A dispatcher thread drains
+//! the queue into micro-batches — whatever is waiting, capped at
+//! `max_batch`, with no artificial fill delay — and submits each batch to
+//! a `util::pool::ThreadPool`, keeping at most one batch in flight per
+//! pool worker. Under light load a request rides alone (lowest latency);
+//! under sustained load the in-flight bound makes the backlog accumulate
+//! while workers are busy, so later batches genuinely fill toward
+//! `max_batch` (highest throughput) — the classic dynamic-batching trade
+//! handled without tuning knobs beyond `max_batch` and the worker count.
+//!
+//! Every response carries per-request latency (enqueue → logits ready) and
+//! the micro-batch size it rode in, which is exactly what the serving
+//! bench aggregates into p50/p95/p99.
+
+use std::collections::VecDeque;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::pool::ThreadPool;
+
+use super::{bsr, BsrModel};
+
+/// One served prediction.
+#[derive(Clone, Debug)]
+pub struct Prediction {
+    /// raw logits (out_dim values)
+    pub logits: Vec<f32>,
+    /// argmax class id (first maximum on ties)
+    pub class: usize,
+    /// request enqueue → response ready (queueing + compute)
+    pub latency: Duration,
+    /// size of the micro-batch this request rode in
+    pub batch_size: usize,
+}
+
+struct Pending {
+    x: Vec<f32>,
+    enqueued: Instant,
+    tx: mpsc::Sender<Prediction>,
+}
+
+struct QueueState {
+    q: VecDeque<Pending>,
+    /// micro-batches currently executing on the pool — the dispatcher only
+    /// forms a new batch while this is below the worker count, so under
+    /// sustained load requests accumulate and batches actually fill toward
+    /// `max_batch` instead of racing through one-by-one
+    in_flight: usize,
+    shutdown: bool,
+}
+
+struct Queue {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+/// Engine sizing.
+pub struct EngineOpts {
+    /// micro-batch cap: the dispatcher never packs more rows than this
+    pub max_batch: usize,
+    /// pool workers executing micro-batches concurrently
+    pub workers: usize,
+}
+
+impl Default for EngineOpts {
+    fn default() -> Self {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        EngineOpts { max_batch: 32, workers: cores.saturating_sub(1).clamp(1, 8) }
+    }
+}
+
+/// A running inference engine over one [`BsrModel`].
+pub struct Engine {
+    model: Arc<BsrModel>,
+    queue: Arc<Queue>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Engine {
+    pub fn new(model: BsrModel, opts: EngineOpts) -> Result<Engine> {
+        model.validate()?;
+        let model = Arc::new(model);
+        let queue = Arc::new(Queue {
+            state: Mutex::new(QueueState {
+                q: VecDeque::new(),
+                in_flight: 0,
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+        });
+        let max_batch = opts.max_batch.max(1);
+        let workers = opts.workers.max(1);
+        let pool = ThreadPool::new(workers);
+        let (qc, mc) = (queue.clone(), model.clone());
+        let dispatcher = std::thread::Builder::new()
+            .name("bsr-dispatch".to_string())
+            .spawn(move || dispatch_loop(qc, mc, pool, max_batch, workers))
+            .map_err(|e| anyhow!("spawning engine dispatcher: {e}"))?;
+        Ok(Engine { model, queue, dispatcher: Some(dispatcher) })
+    }
+
+    pub fn model(&self) -> &BsrModel {
+        &self.model
+    }
+
+    /// Blocking single-request predict: enqueue, wait for the micro-batch
+    /// carrying this request to finish, return logits + argmax + latency.
+    /// Safe to call from many client threads at once — that is what fills
+    /// the micro-batches.
+    pub fn predict(&self, x: &[f32]) -> Result<Prediction> {
+        if x.len() != self.model.in_dim {
+            bail!(
+                "request has {} features, model '{}' wants {}",
+                x.len(), self.model.spec, self.model.in_dim
+            );
+        }
+        let (tx, rx) = mpsc::channel();
+        // the payload copy is per-request-private: build it before taking
+        // the shared lock so concurrent clients don't serialize on it
+        let pending = Pending { x: x.to_vec(), enqueued: Instant::now(), tx };
+        {
+            let mut st = self.queue.state.lock().unwrap();
+            if st.shutdown {
+                bail!("engine is shut down");
+            }
+            st.q.push_back(pending);
+        }
+        self.queue.cv.notify_one();
+        rx.recv().map_err(|_| anyhow!("engine dropped the request (batch failed?)"))
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        {
+            let mut st = self.queue.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.queue.cv.notify_all();
+        // the dispatcher drains what is still queued, then its pool drop
+        // joins the in-flight micro-batches — no request is abandoned
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn dispatch_loop(
+    queue: Arc<Queue>,
+    model: Arc<BsrModel>,
+    pool: ThreadPool,
+    max_batch: usize,
+    workers: usize,
+) {
+    loop {
+        let batch: Vec<Pending> = {
+            let mut st = queue.state.lock().unwrap();
+            loop {
+                // bounded in-flight: only form a batch when a pool worker
+                // can take it, so a sustained backlog fills later batches
+                // toward max_batch instead of flooding the pool queue with
+                // size-1 batches
+                if !st.q.is_empty() && st.in_flight < workers {
+                    let take = st.q.len().min(max_batch);
+                    st.in_flight += 1;
+                    break st.q.drain(..take).collect();
+                }
+                if st.shutdown && st.q.is_empty() {
+                    return; // pool drops here: joins outstanding batches
+                }
+                st = queue.cv.wait(st).unwrap();
+            }
+        };
+        let (m, q) = (model.clone(), queue.clone());
+        pool.submit(move || {
+            // the pool catch_unwind's jobs and keeps its workers alive, so
+            // the slot release must survive a panicking batch too — a drop
+            // guard runs on unwind, where a trailing statement would not
+            // (a leaked slot would eventually wedge the dispatcher for
+            // good once every slot leaked)
+            struct SlotGuard(Arc<Queue>);
+            impl Drop for SlotGuard {
+                fn drop(&mut self) {
+                    let mut st = self.0.state.lock().unwrap();
+                    st.in_flight -= 1;
+                    drop(st);
+                    // wake the dispatcher: a worker slot is free again
+                    self.0.cv.notify_all();
+                }
+            }
+            let _slot = SlotGuard(q);
+            run_batch(&m, batch);
+        });
+    }
+}
+
+fn run_batch(model: &BsrModel, batch: Vec<Pending>) {
+    let nb = batch.len();
+    let mut xs = Vec::with_capacity(nb * model.in_dim);
+    for p in &batch {
+        xs.extend_from_slice(&p.x);
+    }
+    match bsr::model_forward(model, &xs, nb) {
+        Ok(z) => {
+            let classes = model.out_dim;
+            let preds = bsr::argmax_rows(&z, nb, classes);
+            for (i, p) in batch.into_iter().enumerate() {
+                let resp = Prediction {
+                    logits: z[i * classes..(i + 1) * classes].to_vec(),
+                    class: preds[i],
+                    latency: p.enqueued.elapsed(),
+                    batch_size: nb,
+                };
+                // a client that gave up (dropped rx) is not an engine error
+                let _ = p.tx.send(resp);
+            }
+        }
+        Err(e) => {
+            // dropping the senders wakes every waiter with a recv error
+            crate::warn_!("micro-batch of {nb} failed: {e:#}");
+        }
+    }
+}
+
+/// Drive an engine with synthetic random-normal traffic: `clients`
+/// concurrent threads issue `requests` predicts in total (quota split
+/// evenly, remainder to the first threads), each with its own
+/// seed-derived RNG. Returns every request's latency in milliseconds —
+/// feed to [`latency_summary`]. Shared by the `infer` CLI subcommand and
+/// `benches/infer_serve.rs` so the measured traffic shape cannot diverge
+/// between them.
+pub fn drive_synthetic(
+    engine: &Engine,
+    requests: usize,
+    clients: usize,
+    seed: u64,
+) -> Result<Vec<f64>> {
+    let requests = requests.max(1);
+    let clients = clients.max(1);
+    let in_dim = engine.model().in_dim;
+    let per_client: Vec<Result<Vec<f64>>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let quota = requests / clients + usize::from(c < requests % clients);
+                s.spawn(move || -> Result<Vec<f64>> {
+                    let mut rng = crate::util::rng::Rng::new(
+                        seed ^ (c as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                    );
+                    let mut lat = Vec::with_capacity(quota);
+                    for _ in 0..quota {
+                        let x: Vec<f32> = (0..in_dim).map(|_| rng.normal()).collect();
+                        lat.push(engine.predict(&x)?.latency.as_secs_f64() * 1e3);
+                    }
+                    Ok(lat)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("client thread panicked"))
+            .collect()
+    });
+    let mut out = Vec::with_capacity(requests);
+    for r in per_client {
+        out.extend(r?);
+    }
+    Ok(out)
+}
+
+// ----------------------------------------------------------- aggregation
+
+/// Latency distribution summary (milliseconds) — shared by the `infer`
+/// CLI subcommand and `benches/infer_serve.rs`.
+#[derive(Clone, Debug)]
+pub struct LatencySummary {
+    pub count: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+/// Nearest-rank percentiles over per-request latencies in milliseconds
+/// (via the shared [`crate::bench::percentile`], so serving numbers stay
+/// comparable with the kernel benches).
+pub fn latency_summary(lat_ms: &[f64]) -> LatencySummary {
+    if lat_ms.is_empty() {
+        return LatencySummary {
+            count: 0,
+            mean_ms: f64::NAN,
+            p50_ms: f64::NAN,
+            p95_ms: f64::NAN,
+            p99_ms: f64::NAN,
+            max_ms: f64::NAN,
+        };
+    }
+    let mut sorted = lat_ms.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    LatencySummary {
+        count: sorted.len(),
+        mean_ms: sorted.iter().sum::<f64>() / sorted.len() as f64,
+        p50_ms: crate::bench::percentile(&sorted, 0.50),
+        p95_ms: crate::bench::percentile(&sorted, 0.95),
+        p99_ms: crate::bench::percentile(&sorted, 0.99),
+        max_ms: *sorted.last().unwrap(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::BsrLayer;
+    use crate::util::rng::Rng;
+
+    fn tiny_model(seed: u64) -> (BsrModel, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let w1: Vec<f32> = (0..6 * 8).map(|_| rng.normal()).collect();
+        let w2: Vec<f32> = (0..4 * 6).map(|_| rng.normal()).collect();
+        let model = BsrModel {
+            spec: "tiny".into(),
+            method: "dense".into(),
+            in_dim: 8,
+            out_dim: 4,
+            layers: vec![
+                BsrLayer::from_dense("fc1", &w1, 6, 8, 2, 2).unwrap(),
+                BsrLayer::from_dense("fc2", &w2, 4, 6, 2, 2).unwrap(),
+            ],
+        };
+        (model, w1, w2)
+    }
+
+    #[test]
+    fn predict_matches_direct_forward() {
+        let (model, _, _) = tiny_model(41);
+        let reference = model.clone();
+        let engine =
+            Engine::new(model, EngineOpts { max_batch: 4, workers: 2 }).unwrap();
+        let mut rng = Rng::new(42);
+        for _ in 0..10 {
+            let x: Vec<f32> = (0..8).map(|_| rng.normal()).collect();
+            let p = engine.predict(&x).unwrap();
+            let want = bsr::model_forward(&reference, &x, 1).unwrap();
+            assert_eq!(p.logits, want);
+            assert_eq!(p.class, bsr::argmax_rows(&want, 1, 4)[0]);
+            assert!(p.batch_size >= 1 && p.batch_size <= 4);
+        }
+    }
+
+    #[test]
+    fn concurrent_clients_all_get_their_own_answer() {
+        let (model, _, _) = tiny_model(43);
+        let reference = model.clone();
+        let engine =
+            Engine::new(model, EngineOpts { max_batch: 8, workers: 3 }).unwrap();
+        let results: Vec<(Vec<f32>, Prediction)> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..16)
+                .map(|c| {
+                    let engine = &engine;
+                    s.spawn(move || {
+                        let mut rng = Rng::new(100 + c as u64);
+                        let x: Vec<f32> = (0..8).map(|_| rng.normal()).collect();
+                        let p = engine.predict(&x).unwrap();
+                        (x, p)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(results.len(), 16);
+        for (x, p) in &results {
+            let want = bsr::model_forward(&reference, x, 1).unwrap();
+            assert_eq!(&p.logits, &want, "a client got another client's logits");
+        }
+    }
+
+    #[test]
+    fn predict_rejects_wrong_feature_count() {
+        let (model, _, _) = tiny_model(44);
+        let engine = Engine::new(model, EngineOpts::default()).unwrap();
+        assert!(engine.predict(&[0.0; 7]).is_err());
+        assert!(engine.predict(&[0.0; 8]).is_ok());
+    }
+
+    #[test]
+    fn drop_with_idle_engine_does_not_hang() {
+        let (model, _, _) = tiny_model(45);
+        let engine = Engine::new(model, EngineOpts { max_batch: 2, workers: 1 }).unwrap();
+        drop(engine);
+    }
+
+    #[test]
+    fn drive_synthetic_collects_every_request() {
+        let (model, _, _) = tiny_model(46);
+        let engine =
+            Engine::new(model, EngineOpts { max_batch: 4, workers: 2 }).unwrap();
+        // 10 requests over 3 clients: quotas 4/3/3, all latencies returned
+        let lat = drive_synthetic(&engine, 10, 3, 7).unwrap();
+        assert_eq!(lat.len(), 10);
+        assert!(lat.iter().all(|&v| v >= 0.0 && v.is_finite()));
+    }
+
+    #[test]
+    fn latency_summary_percentiles() {
+        let lat: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = latency_summary(&lat);
+        assert_eq!(s.count, 100);
+        assert!((s.p50_ms - 51.0).abs() < 1.01); // nearest-rank on 100 samples
+        assert!(s.p95_ms >= 94.0 && s.p95_ms <= 96.0);
+        assert!(s.p99_ms >= 98.0 && s.p99_ms <= 100.0);
+        assert_eq!(s.max_ms, 100.0);
+        assert!((s.mean_ms - 50.5).abs() < 1e-9);
+        assert_eq!(latency_summary(&[]).count, 0);
+    }
+}

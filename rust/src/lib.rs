@@ -35,6 +35,14 @@
 //!   PJRT with zero re-marshalling on the hot path. The `xla` dependency
 //!   only enters the dependency graph when the feature is enabled.
 //!
+//! Past training, the [`infer`] subsystem closes the loop on the paper's
+//! inference claim: `infer::export` packs any trained spec into a BSR
+//! (block-sparse-row) model artifact (versioned, CRC-guarded on disk),
+//! `infer::bsr` runs gather-free block-GEMM forward kernels whose cost
+//! scales with occupancy, and `infer::engine` serves them behind a
+//! request queue with dynamic micro-batching — the CLI's `export` /
+//! `infer` subcommands and `benches/infer_serve.rs` drive it.
+//!
 //! See `rust/README.md` for the backend/feature matrix and offline
 //! test/bench instructions.
 
@@ -47,6 +55,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod flops;
+pub mod infer;
 pub mod manifest;
 pub mod metrics;
 #[cfg(feature = "pjrt")]

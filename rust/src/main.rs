@@ -5,6 +5,10 @@
 //!   train    --spec KEY [...]         multi-seed training run + summary row
 //!   pattern  --spec KEY [...]         pattern-selection run (Figure 3):
 //!                                     prints the per-pattern ‖S‖₁ series
+//!   export   --spec KEY --out F.bsm   train (or --ckpt restore) + pack the
+//!                                     model into a BSR inference artifact
+//!   infer    --model F.bsm [...]      serve the artifact through the
+//!                                     batched engine; latency percentiles
 //!   flops    --spec KEY | --m --n..   Prop. 2/3 accounting
 //!   blockopt --m M --n N              Eq. 5 optimal block size
 //!   bench-step --spec KEY             one-step latency microbench
@@ -21,6 +25,8 @@
 //!   blocksparse pattern --spec f3a_pattern --steps 1200   # Figure 3a
 //!       (native runs default to the gauge calibration λ=0.002 +0.0005/ramp;
 //!       override with --lambda / --lambda-ramp)
+//!   blocksparse export --spec t2_kpd_16x8_8x4_4x2 --steps 300 --out t2.bsm
+//!   blocksparse infer --model t2.bsm --batch 16 --requests 512 --clients 8
 //!   blocksparse blockopt --m 8 --n 256
 
 use anyhow::{anyhow, bail, Result};
@@ -54,7 +60,12 @@ fn arg_spec() -> ArgSpec {
             ("n", true, "matrix cols (flops/blockopt)"),
             ("block", true, "block size m2xn2, e.g. 2x16"),
             ("rank", true, "KPD rank"),
-            ("batch", true, "batch size for flops accounting"),
+            ("batch", true, "batch size (flops accounting / infer micro-batch cap)"),
+            ("out", true, "output path for the BSR model artifact (export)"),
+            ("ckpt", true, "restore training state from this checkpoint (export)"),
+            ("model", true, "BSR model artifact to serve (infer)"),
+            ("requests", true, "total requests to issue (infer, default 256)"),
+            ("clients", true, "concurrent client threads (infer, default 4)"),
             ("csv", true, "write per-step series to this CSV file"),
             ("quiet", false, "warnings and errors only"),
             ("verbose", false, "debug logging"),
@@ -204,6 +215,95 @@ fn cmd_pattern(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Train (or `--ckpt`-restore) a spec and pack it into a BSR artifact.
+fn cmd_export(args: &Args) -> Result<()> {
+    let be = open_backend(args)?;
+    let cfg = build_cfg(args)?;
+    let out = std::path::PathBuf::from(args.opt_or("out", "model.bsm"));
+    let spec = be.spec(&cfg.spec)?.clone();
+    let state = if let Some(ck) = args.opt("ckpt") {
+        let mut state = be.init_state(&cfg.spec, cfg.seeds[0] as u32)?;
+        blocksparse::checkpoint::Checkpoint::load(std::path::Path::new(ck))?
+            .restore_state(&mut state)?;
+        info!("restored {} training state from {ck}", cfg.spec);
+        state
+    } else {
+        let (train, test) = coordinator::dataset_for(
+            &spec,
+            cfg.data_seed,
+            cfg.train_examples,
+            cfg.test_examples,
+        )?;
+        let trainer = coordinator::Trainer::new(be.as_ref(), &cfg);
+        let outcome = trainer.run(cfg.seeds[0], &train, &test)?;
+        info!(
+            "trained {} for {} steps: test acc {:.2}%",
+            cfg.spec, outcome.steps_done, outcome.test_acc
+        );
+        outcome.state
+    };
+    let model = blocksparse::infer::export(be.as_ref(), &state)?;
+    model.save(&out)?;
+    println!("exported {} ({}) -> {}", model.spec, model.method, out.display());
+    for l in &model.layers {
+        let (m1, n1) = l.grid();
+        println!(
+            "  {:<6} {:>4}x{:<4} block {}x{:<3} {:>6}/{:<6} blocks  occupancy {:>5.1}%",
+            l.name, l.m, l.n, l.m2, l.n2, l.nnz_blocks(), m1 * n1,
+            100.0 * l.occupancy()
+        );
+    }
+    println!(
+        "  params {} stored (dense {}), infer {} FLOPs/example (dense {}, {:.2}x cheaper)",
+        human_count(model.nnz_params() as f64),
+        human_count(spec.slots.iter().map(|s| (s.m * s.n) as f64).sum::<f64>()),
+        human_count(model.infer_flops_per_example() as f64),
+        human_count(model.dense_flops_per_example() as f64),
+        model.dense_flops_per_example() as f64
+            / (model.infer_flops_per_example() as f64).max(1.0),
+    );
+    Ok(())
+}
+
+/// Serve a BSR artifact through the batched engine with synthetic traffic
+/// and report the latency distribution + throughput.
+fn cmd_infer(args: &Args) -> Result<()> {
+    use blocksparse::infer::engine::{drive_synthetic, latency_summary, Engine, EngineOpts};
+    let path = args
+        .opt("model")
+        .ok_or_else(|| anyhow!("infer needs --model <file.bsm> (see `blocksparse export`)"))?;
+    let model = blocksparse::infer::BsrModel::load(std::path::Path::new(path))?;
+    let max_batch = args.opt_usize("batch", 32)?;
+    let requests = args.opt_usize("requests", 256)?.max(1);
+    let clients = args.opt_usize("clients", 4)?.max(1);
+    println!(
+        "model {} ({}, {} layers): {} -> {}, block sparsity {:.1}%, {} params, {} FLOPs/example",
+        model.spec,
+        model.method,
+        model.layers.len(),
+        model.in_dim,
+        model.out_dim,
+        100.0 * model.block_sparsity(),
+        human_count(model.nnz_params() as f64),
+        human_count(model.infer_flops_per_example() as f64),
+    );
+    let engine = Engine::new(model, EngineOpts { max_batch, ..EngineOpts::default() })?;
+    let sw = blocksparse::util::Stopwatch::start();
+    let lat_ms = drive_synthetic(&engine, requests, clients, 0xC11E47)?;
+    let wall = sw.elapsed_secs();
+    let s = latency_summary(&lat_ms);
+    println!(
+        "{} requests over {clients} clients (micro-batch cap {max_batch}) in {wall:.2}s",
+        s.count
+    );
+    println!(
+        "latency ms: p50 {:.3}  p95 {:.3}  p99 {:.3}  mean {:.3}  max {:.3}",
+        s.p50_ms, s.p95_ms, s.p99_ms, s.mean_ms, s.max_ms
+    );
+    println!("throughput: {:.1} req/s", s.count as f64 / wall.max(1e-9));
+    Ok(())
+}
+
 fn cmd_flops(args: &Args) -> Result<()> {
     if let Some(_spec_key) = args.opt("spec") {
         let be = open_backend(args)?;
@@ -326,7 +426,7 @@ fn main() {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}\n");
-            eprintln!("{}", render_usage("blocksparse", "<list|train|pattern|flops|blockopt|bench-step>", &spec));
+            eprintln!("{}", render_usage("blocksparse", "<list|train|pattern|export|infer|flops|blockopt|bench-step>", &spec));
             std::process::exit(2);
         }
     };
@@ -339,12 +439,14 @@ fn main() {
         Some("list") => cmd_list(&args),
         Some("train") => cmd_train(&args),
         Some("pattern") => cmd_pattern(&args),
+        Some("export") => cmd_export(&args),
+        Some("infer") => cmd_infer(&args),
         Some("flops") => cmd_flops(&args),
         Some("blockopt") => cmd_blockopt(&args),
         Some("bench-step") => cmd_bench_step(&args),
         other => {
             eprintln!("unknown subcommand {other:?}");
-            eprintln!("{}", render_usage("blocksparse", "<list|train|pattern|flops|blockopt|bench-step>", &spec));
+            eprintln!("{}", render_usage("blocksparse", "<list|train|pattern|export|infer|flops|blockopt|bench-step>", &spec));
             std::process::exit(2);
         }
     };

@@ -96,6 +96,39 @@ mod tests {
     }
 
     #[test]
+    fn aggregate_edge_cases() {
+        // empty part list and all-zero-sized parts both report 0, not NaN
+        assert_eq!(aggregate(&[]), 0.0);
+        assert_eq!(aggregate(&[(0.7, 0)]), 0.0);
+        // zero-sized parts contribute nothing even next to real ones
+        let agg = aggregate(&[(1.0, 5), (0.9, 0), (0.0, 15)]);
+        assert!((agg - 0.25).abs() < 1e-9);
+        // order cannot matter: Σ zeros / Σ entries is symmetric
+        let a = aggregate(&[(0.25, 40), (0.75, 10), (0.5, 50)]);
+        let b = aggregate(&[(0.5, 50), (0.25, 40), (0.75, 10)]);
+        assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn block_sparsity_rejects_non_dividing_blocks() {
+        let w = Tensor::full(&[4, 6], 1.0);
+        assert!(block_sparsity(&w, 3, 2, 0.01).is_err(), "3 does not tile 4 rows");
+        assert!(block_sparsity(&w, 2, 4, 0.01).is_err(), "4 does not tile 6 cols");
+        assert!(block_sparsity(&w, 0, 2, 0.01).is_err(), "zero block rows");
+        assert!(block_sparsity(&w, 2, 3, 0.01).is_ok());
+    }
+
+    #[test]
+    fn all_zero_tensor_is_fully_sparse() {
+        let w = Tensor::zeros(&[4, 8]);
+        // rms is clamped away from 0, so every |0| entry still counts as
+        // below threshold: the degenerate matrix reports exactly 1.0
+        assert_eq!(element_sparsity(&w, DEFAULT_EPS_REL), 1.0);
+        assert_eq!(block_sparsity(&w, 2, 4, DEFAULT_EPS_REL).unwrap(), 1.0);
+        assert_eq!(mask_sparsity(&w), 1.0);
+    }
+
+    #[test]
     fn scale_free() {
         let w = Tensor::new(&[1, 4], vec![0.0, 5.0, 0.0, 5.0]).unwrap();
         let w_scaled = w.scale(1e-6);

@@ -189,7 +189,7 @@ impl Tensor {
             bail!("block norms need 2-D input");
         }
         let (m, n) = (self.shape[0], self.shape[1]);
-        if m % m2 != 0 || n % n2 != 0 {
+        if m2 == 0 || n2 == 0 || m % m2 != 0 || n % n2 != 0 {
             bail!("block ({m2},{n2}) does not tile ({m},{n})");
         }
         Tensor::new(&[m / m2, n / n2], block_fro_norms_slice(&self.data, m, n, m2, n2))

@@ -1,0 +1,171 @@
+//! End-to-end tests of the train→export→serve pipeline: a trained Table-2
+//! MLP spec exported to a BSR artifact must serve logits matching the
+//! training backend's own evaluation, and export must preserve exactly the
+//! block structure training produced (RigL masks, pruning masks).
+
+use blocksparse::backend::native::{linalg, NativeBackend};
+use blocksparse::backend::Backend;
+use blocksparse::coordinator::dataset_for;
+use blocksparse::data::{assemble_batch, Batcher};
+use blocksparse::infer::engine::{Engine, EngineOpts};
+use blocksparse::infer::{self, bsr, BsrModel};
+
+/// The acceptance-criteria round trip: train `t2_kpd_16x8_8x4_4x2` for a
+/// few steps, export to BSR, save+load the artifact, and serve a held-out
+/// batch through the engine — logits must match the backend's own forward
+/// (and therefore `eval_step`'s CE) within 1e-4.
+#[test]
+fn t2_mlp_round_trip_matches_eval_step() {
+    let be = NativeBackend::with_default_specs();
+    let spec_key = "t2_kpd_16x8_8x4_4x2";
+    let spec = be.spec(spec_key).unwrap().clone();
+    let (train, test) = dataset_for(&spec, 7, 512, 128).unwrap();
+    let mut state = be.init_state(spec_key, 0).unwrap();
+    let mut batcher = Batcher::new(&train, spec.batch, 1, true);
+    // λ high enough that the ℓ1 prox zeroes real S entries: the per-step
+    // threshold is lr·λ = 0.02 against the S init of 1.0, so exact zeros
+    // need ≥50 steps (the golden-run test pins ~15-30% block sparsity at
+    // step 50); 60 leaves margin without leaving "a few steps" territory
+    for _ in 0..60 {
+        let b = batcher.next_batch().unwrap();
+        be.train_step(&mut state, &b.x, &b.y, &[0.2, 0.1]).unwrap();
+    }
+
+    // export → save → load: the artifact round-trips bit-exactly
+    let model = infer::export(&be, &state).unwrap();
+    assert_eq!(model.layers.len(), 3);
+    assert_eq!((model.in_dim, model.out_dim), (784, 10));
+    assert_eq!(model.layers[0].m2, 8);
+    assert_eq!(model.layers[0].n2, 16);
+    assert!(
+        model.layers.iter().any(|l| l.occupancy() < 1.0),
+        "training at λ=0.2 must produce at least one pruned block (occupancies {:?})",
+        model.layers.iter().map(|l| l.occupancy()).collect::<Vec<_>>()
+    );
+    let dir = std::env::temp_dir().join("bs_infer_e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("t2.bsm");
+    model.save(&path).unwrap();
+    let model = BsrModel::load(&path).unwrap();
+
+    // held-out batch + reference logits through the materialized dense
+    // chain (what eval_step's factorized forward equals within 1e-4)
+    let nb = 32usize;
+    let idx: Vec<usize> = (0..nb).collect();
+    let batch = assemble_batch(&test, &idx).unwrap();
+    let xs = batch.x.as_f32().unwrap().data().to_vec();
+    let ys = batch.y.i32_data().unwrap().to_vec();
+    let ws = be.materialize(&state).unwrap();
+    let mut reference = xs.clone();
+    let mut feat = 784usize;
+    for (li, (_, w)) in ws.iter().enumerate() {
+        let m = w.shape()[0];
+        reference = linalg::matmul_nt(&reference, w.data(), nb, feat, m);
+        if li + 1 < ws.len() {
+            linalg::relu_inplace(&mut reference);
+        }
+        feat = m;
+    }
+
+    // serve every example through the engine from concurrent clients
+    let engine = Engine::new(model, EngineOpts { max_batch: 8, workers: 2 }).unwrap();
+    let served: Vec<(usize, Vec<f32>)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..4)
+            .map(|c| {
+                let (engine, xs) = (&engine, &xs);
+                s.spawn(move || {
+                    (0..nb)
+                        .filter(|i| i % 4 == c)
+                        .map(|i| {
+                            let p = engine.predict(&xs[i * 784..(i + 1) * 784]).unwrap();
+                            assert!(p.batch_size >= 1 && p.batch_size <= 8);
+                            (i, p.logits)
+                        })
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    assert_eq!(served.len(), nb);
+    let mut logits = vec![0.0f32; nb * 10];
+    for (i, row) in served {
+        logits[i * 10..(i + 1) * 10].copy_from_slice(&row);
+    }
+    let max_diff = logits
+        .iter()
+        .zip(&reference)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-4, "served logits drifted from the trained model: {max_diff}");
+
+    // and the engine's CE on this batch equals eval_step's within 1e-4
+    let eval = be.eval_step(&state, &batch.x, &batch.y).unwrap();
+    let sm = linalg::softmax_ce(&logits, &ys, nb, 10).unwrap();
+    assert!(
+        (sm.ce_mean - eval[0]).abs() < 1e-4,
+        "engine CE {} vs eval_step CE {}",
+        sm.ce_mean,
+        eval[0]
+    );
+    // a knife-edge argmax tie could flip one row across the two float
+    // summation orders; more than that means a real mismatch
+    assert!(
+        (sm.correct - eval[1]).abs() <= 1.0,
+        "engine correct {} vs eval_step correct {}",
+        sm.correct,
+        eval[1]
+    );
+}
+
+/// RigL export: the packed occupancy must equal the mask density exactly,
+/// and the BSR forward must match the training backend's masked matmul.
+#[test]
+fn rigl_export_preserves_mask_structure() {
+    let be = NativeBackend::with_default_specs();
+    let state = be.init_state("t1_rigl_b2x2", 3).unwrap();
+    let mask = state.param("fc.mask").unwrap().clone();
+    let density = mask.data().iter().sum::<f32>() as f64 / mask.len() as f64;
+    let model = infer::export(&be, &state).unwrap();
+    assert_eq!(model.layers.len(), 1);
+    let l = &model.layers[0];
+    assert_eq!((l.m, l.n, l.m2, l.n2), (10, 784, 2, 2));
+    assert!(
+        (l.occupancy() - density).abs() < 1e-12,
+        "occupancy {} vs mask density {density}",
+        l.occupancy()
+    );
+    assert!(l.infer_flops() < l.dense_flops());
+
+    let nb = 4usize;
+    let mut rngx = blocksparse::util::rng::Rng::new(9);
+    let x: Vec<f32> = (0..nb * 784).map(|_| rngx.normal()).collect();
+    let w = state.param("fc.W").unwrap();
+    let want =
+        linalg::block_sparse_matmul_nt(&x, w.data(), mask.data(), nb, 10, 784, 2, 2);
+    let got = bsr::model_forward(&model, &x, nb).unwrap();
+    let diff = got
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(diff < 1e-4, "BSR forward drifted from the masked matmul: {diff}");
+}
+
+/// Iterative-pruning export packs at 1×1 (element CSR): the stored-value
+/// fraction is exactly the keep rate the pruning controller enforced.
+#[test]
+fn prune_export_is_element_level() {
+    let be = NativeBackend::with_default_specs();
+    let mut state = be.init_state("t1_prune", 0).unwrap();
+    be.prune(&mut state, 0.6).unwrap();
+    let model = infer::export(&be, &state).unwrap();
+    let l = &model.layers[0];
+    assert_eq!((l.m2, l.n2), (1, 1), "prune specs declare no block shape");
+    assert!(
+        (l.occupancy() - 0.4).abs() < 1e-3,
+        "occupancy {} vs 40% keep rate",
+        l.occupancy()
+    );
+    assert_eq!(model.nnz_params(), l.nnz_blocks() as u64);
+}
