@@ -1,0 +1,141 @@
+//! Data-parallel training scaling: steps/sec at R ∈ {1, 2, 4, 8} replicas
+//! on the coarse-block Table-2 MLP (`t2_kpd_16x8_8x4_4x2`), driven
+//! through `train::DataParallelTrainer` with kernel threading pinned to 1
+//! inside replica workers — so the replica axis is the only parallelism
+//! being measured.
+//!
+//! Every replica count runs the *same* shard plan and reduction tree, so
+//! besides throughput this bench verifies the determinism headline: the
+//! final parameters at R = 2/4/8 are compared bitwise against R = 1.
+//!
+//! `--json <path>` writes BENCH_train.json with per-R steps/sec, speedup
+//! and scaling efficiency plus a `gate` object the CI python gate checks
+//! (R=4 speedup ≥ 1.6× on ≥4-core machines, monotone steps/sec,
+//! bit_identical == true). Scale knob: BS_STEPS (timed steps per R).
+
+use std::collections::BTreeMap;
+
+use blocksparse::backend::Backend;
+use blocksparse::bench::json_arg;
+use blocksparse::coordinator::dataset_for;
+use blocksparse::data::assemble_batch;
+use blocksparse::tensor::Tensor;
+use blocksparse::train::DataParallelTrainer;
+use blocksparse::util::json::Json;
+use blocksparse::util::Stopwatch;
+
+const SPEC: &str = "t2_kpd_16x8_8x4_4x2";
+const REPLICAS: [usize; 4] = [1, 2, 4, 8];
+
+fn main() -> anyhow::Result<()> {
+    blocksparse::util::log::set_level(blocksparse::util::log::Level::Warn);
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let be = blocksparse::backend::open_default()?;
+    let Ok(spec) = be.spec(SPEC) else {
+        println!("SKIP train_scale: {SPEC} not available on backend '{}'", be.name());
+        return Ok(());
+    };
+    let spec = spec.clone();
+    if !be.supports_grad_step(SPEC) {
+        println!("SKIP train_scale: backend '{}' has no separable gradient path", be.name());
+        return Ok(());
+    }
+    let steps: usize =
+        std::env::var("BS_STEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(40);
+    let warmup = 3usize;
+    let threads =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+
+    // a fixed cycle of batches, shared by every replica count
+    let (train, _test) = dataset_for(&spec, 7, spec.batch * 8, spec.batch)?;
+    let batches: Vec<_> = (0..4)
+        .map(|b| {
+            let idx: Vec<usize> = (b * spec.batch..(b + 1) * spec.batch).collect();
+            assemble_batch(&train, &idx)
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let hyper: Vec<f32> = spec
+        .hyper
+        .iter()
+        .map(|h| match h.as_str() {
+            "lr" => 0.05,
+            _ => 0.008,
+        })
+        .collect();
+
+    println!(
+        "train_scale: {SPEC} batch {} on {} host threads, {steps} timed steps/R",
+        spec.batch, threads
+    );
+    let mut rows = BTreeMap::new();
+    let mut sps: Vec<f64> = Vec::new();
+    let mut golden: Option<Vec<Tensor>> = None;
+    let mut bit_identical = true;
+    for &r in &REPLICAS {
+        let dp = DataParallelTrainer::new(be.as_ref(), SPEC, r)?;
+        let mut state = be.init_state(SPEC, 0)?;
+        for step in 0..warmup {
+            let b = &batches[step % batches.len()];
+            dp.step(&mut state, &b.x, &b.y, &hyper)?;
+        }
+        let sw = Stopwatch::start();
+        for step in 0..steps {
+            let b = &batches[(warmup + step) % batches.len()];
+            dp.step(&mut state, &b.x, &b.y, &hyper)?;
+        }
+        let wall = sw.elapsed_secs();
+        let steps_per_sec = steps as f64 / wall.max(1e-9);
+        match &golden {
+            None => golden = Some(state.params.clone()),
+            Some(g) => {
+                let same = g
+                    .iter()
+                    .zip(&state.params)
+                    .all(|(a, b)| a.data() == b.data());
+                if !same {
+                    bit_identical = false;
+                }
+            }
+        }
+        let speedup = steps_per_sec / sps.first().copied().unwrap_or(steps_per_sec);
+        println!(
+            "  R={r}: {steps_per_sec:7.2} steps/s  speedup {speedup:4.2}x  \
+             efficiency {:5.1}%  ({wall:.2}s)",
+            100.0 * speedup / r as f64
+        );
+        let mut row = BTreeMap::new();
+        row.insert("steps_per_sec".to_string(), Json::Num(steps_per_sec));
+        row.insert("speedup".to_string(), Json::Num(speedup));
+        row.insert("efficiency".to_string(), Json::Num(speedup / r as f64));
+        row.insert("wall_secs".to_string(), Json::Num(wall));
+        rows.insert(format!("r{r}"), Json::Obj(row));
+        sps.push(steps_per_sec);
+    }
+    let speedup_r4 = sps[2] / sps[0];
+    // monotone within a 10% measurement-noise band over R = 1, 2, 4 only —
+    // R=8 oversubscribes small hosts and its timing is noise (the CI gate
+    // uses the same definition, so the artifact and the gate agree)
+    let monotone = sps[..3].windows(2).all(|w| w[1] >= w[0] * 0.9);
+    println!(
+        "R=4 speedup {speedup_r4:.2}x (gate >= 1.6x on >= 4 cores), \
+         monotone over R=1,2,4: {monotone}, bit-identical across R: {bit_identical}"
+    );
+
+    if let Some(path) = json_arg(&args, "BENCH_train.json") {
+        let mut gate = BTreeMap::new();
+        gate.insert("speedup_r4".to_string(), Json::Num(speedup_r4));
+        gate.insert("monotone".to_string(), Json::Bool(monotone));
+        gate.insert("bit_identical".to_string(), Json::Bool(bit_identical));
+        let mut root = BTreeMap::new();
+        root.insert("spec".to_string(), Json::Str(SPEC.to_string()));
+        root.insert("backend".to_string(), Json::Str(be.name()));
+        root.insert("batch".to_string(), Json::Num(spec.batch as f64));
+        root.insert("steps".to_string(), Json::Num(steps as f64));
+        root.insert("threads".to_string(), Json::Num(threads as f64));
+        root.insert("rows".to_string(), Json::Obj(rows));
+        root.insert("gate".to_string(), Json::Obj(gate));
+        std::fs::write(&path, Json::Obj(root).to_string_pretty())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}

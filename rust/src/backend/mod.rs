@@ -67,9 +67,35 @@ impl TrainState {
     }
 }
 
+/// Raw gradient of one batch shard, as produced by [`Backend::grad_step`].
+///
+/// Everything is a per-example **sum** (not a mean): shard gradients then
+/// combine by pure addition — the unit the data-parallel trainer's
+/// fixed-order tree reduction (`crate::train::reduce`) operates on — and
+/// one final division by the total example count recovers the full-batch
+/// mean gradient. (The sums come from rescaling `softmax_ce`'s 1/N-scaled
+/// dZ by the shard size, so for shard sizes that are not powers of two
+/// they match the mathematical sums to f32 rounding, not bit-exactly —
+/// deterministic either way, which is what the replica guarantee needs.)
+#[derive(Clone, Debug)]
+pub struct GradOut {
+    /// Σ over the shard of per-example CE gradients, flattened as the
+    /// concatenation of the spec's gradient leaves in registry order
+    /// ([`Backend::grad_len`] gives the total length).
+    pub grad_sum: Vec<f32>,
+    /// Σ over the shard of per-example CE losses.
+    pub ce_sum: f32,
+    /// Number of correctly classified shard examples.
+    pub correct: f32,
+    /// Shard size in examples.
+    pub examples: usize,
+}
+
 /// An execution engine for training/eval steps. Object-safe: the
 /// coordinator, CLI and benches hold a `&dyn Backend` / `Box<dyn Backend>`.
-pub trait Backend {
+/// `Send + Sync` so the data-parallel trainer can run `grad_step` from
+/// replica worker threads against one shared backend.
+pub trait Backend: Send + Sync {
     /// Human-readable backend identity ("native-cpu", PJRT platform, ...).
     fn name(&self) -> String;
 
@@ -115,6 +141,49 @@ pub trait Backend {
     /// Number of per-block gradient-norm values appended to `train_step`
     /// metrics for RigL specs (0 for every other method).
     fn gnorm_len(&self, spec: &str) -> Result<usize>;
+
+    /// Whether [`Backend::grad_step`] / [`Backend::apply_update`] are
+    /// implemented for `spec` — the data-parallel trainer's precondition.
+    /// Backends without a separable gradient path (AOT/PJRT executables
+    /// fuse gradient and update into one lowered program) keep the default
+    /// `false` and train single-replica through the fused `train_step`.
+    fn supports_grad_step(&self, spec: &str) -> bool {
+        let _ = spec;
+        false
+    }
+
+    /// Length of the flat gradient buffer [`Backend::grad_step`] produces
+    /// for `spec` (the concatenation of every gradient leaf).
+    fn grad_len(&self, spec: &str) -> Result<usize> {
+        bail!("backend '{}' has no separable gradient path for '{spec}'", self.name())
+    }
+
+    /// Forward/backward on one batch shard **without touching the state**:
+    /// per-leaf gradient *sums* plus summed loss/accuracy stats. Together
+    /// with [`Backend::apply_update`] this splits `train_step` so shard
+    /// gradients can be computed on replica workers and reduced
+    /// deterministically before one optimizer step.
+    fn grad_step(&self, state: &TrainState, x: &HostValue, y: &HostValue) -> Result<GradOut> {
+        let _ = (state, x, y);
+        bail!("backend '{}' has no separable gradient path", self.name())
+    }
+
+    /// Optimizer + proximal update from a reduced **mean**-gradient buffer
+    /// (laid out exactly as `grad_step` produces it); `ce_mean` /
+    /// `acc_frac` are the reduced batch statistics. Returns the same
+    /// metrics vector `train_step` returns — both paths call the same
+    /// per-method apply kernels, so the math cannot drift.
+    fn apply_update(
+        &self,
+        state: &mut TrainState,
+        grad: Vec<f32>,
+        ce_mean: f32,
+        acc_frac: f32,
+        hyper: &[f32],
+    ) -> Result<Vec<f32>> {
+        let _ = (state, grad, ce_mean, acc_frac, hyper);
+        bail!("backend '{}' has no separable gradient path", self.name())
+    }
 }
 
 /// Open the backend for `artifact_dir`, honoring an explicit `--backend`

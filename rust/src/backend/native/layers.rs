@@ -24,9 +24,9 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
-use crate::backend::TrainState;
+use crate::backend::{GradOut, TrainState};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -326,8 +326,126 @@ pub(super) fn train_step(
     let st = stack(cfg);
     let (z, caches) = run_forward(cfg, state, &st, x, nb)?;
     let sm = linalg::softmax_ce(&z, y, nb, cfg.out_dim)?;
-    let grads = run_backward(cfg, state, &st, &caches, sm.dz, nb)?;
+    let grads = collect_grads(cfg, run_backward(cfg, state, &st, &caches, sm.dz, nb)?)?;
+    apply_slots(cfg, state, grads, sm.ce_mean, sm.acc_frac, h)
+}
 
+/// Gradient half of the stack ([`crate::backend::Backend::grad_step`]):
+/// per-example gradient *sums* of every slot leaf, flattened in
+/// [`grad_layout`] order, plus the shard's summed loss/accuracy stats.
+/// The state is untouched; masking and regularizer terms are
+/// state-dependent and belong to [`apply_update`].
+pub(super) fn grad_step(
+    cfg: &SpecConfig,
+    state: &TrainState,
+    x: &[f32],
+    nb: usize,
+    y: &[i32],
+) -> Result<GradOut> {
+    let st = stack(cfg);
+    let (z, caches) = run_forward(cfg, state, &st, x, nb)?;
+    let mut sm = linalg::softmax_ce(&z, y, nb, cfg.out_dim)?;
+    super::scale_to_sum(&mut sm.dz, nb);
+    let grads = collect_grads(cfg, run_backward(cfg, state, &st, &caches, sm.dz, nb)?)?;
+    let mut grad_sum = Vec::new();
+    for g in grads {
+        match g {
+            LinGrads::Kpd(g) => {
+                grad_sum.extend(g.gs);
+                grad_sum.extend(g.ga);
+                grad_sum.extend(g.gb);
+            }
+            LinGrads::Dense(gw) => grad_sum.extend(gw),
+        }
+    }
+    Ok(GradOut {
+        grad_sum,
+        ce_sum: sm.ce_mean * nb as f32,
+        correct: sm.correct,
+        examples: nb,
+    })
+}
+
+/// Update half for a reduced flat mean-gradient buffer: slice it back
+/// into per-slot leaves and run the same per-slot update the fused step
+/// runs.
+pub(super) fn apply_update(
+    cfg: &SpecConfig,
+    state: &mut TrainState,
+    grad: &[f32],
+    ce_mean: f32,
+    acc_frac: f32,
+    h: &Hyper,
+) -> Result<Vec<f32>> {
+    apply_slots(cfg, state, unflatten(cfg, grad)?, ce_mean, acc_frac, h)
+}
+
+/// Flat gradient-buffer layout of the stack, slot by slot in layer order.
+pub(super) fn grad_layout(cfg: &SpecConfig) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for lc in &cfg.layers {
+        if cfg.method == "kpd" {
+            let d = lc.dims(cfg.rank);
+            out.push((p(lc, "S"), d.m1 * d.n1));
+            out.push((p(lc, "A"), d.r * d.m1 * d.n1));
+            out.push((p(lc, "B"), d.r * d.m2 * d.n2));
+        } else {
+            out.push((p(lc, "W"), lc.m * lc.n));
+        }
+    }
+    out
+}
+
+fn collect_grads(cfg: &SpecConfig, grads: Vec<Option<LinGrads>>) -> Result<Vec<LinGrads>> {
+    cfg.layers
+        .iter()
+        .zip(grads)
+        .map(|(lc, g)| {
+            g.ok_or_else(|| anyhow!("mlp backward left slot '{}' without gradients", lc.name))
+        })
+        .collect()
+}
+
+fn unflatten(cfg: &SpecConfig, grad: &[f32]) -> Result<Vec<LinGrads>> {
+    let mut out = Vec::with_capacity(cfg.layers.len());
+    let mut off = 0usize;
+    for (name, len) in grad_layout(cfg) {
+        if off + len > grad.len() {
+            bail!("gradient buffer too short for leaf '{name}'");
+        }
+        let slice = grad[off..off + len].to_vec();
+        off += len;
+        if name.ends_with(".W") {
+            out.push(LinGrads::Dense(slice));
+        } else if name.ends_with(".S") {
+            out.push(LinGrads::Kpd(kpd::Grads { gs: slice, ga: Vec::new(), gb: Vec::new() }));
+        } else if let Some(LinGrads::Kpd(g)) = out.last_mut() {
+            if name.ends_with(".A") {
+                g.ga = slice;
+            } else {
+                g.gb = slice;
+            }
+        } else {
+            bail!("gradient leaf '{name}' arrived out of order");
+        }
+    }
+    if off != grad.len() {
+        bail!("gradient buffer has {} values, layout wants {off}", grad.len());
+    }
+    Ok(out)
+}
+
+/// The per-slot optimizer/prox updates on mean gradients — the one copy
+/// of the update math, shared by the fused [`train_step`] and the
+/// data-parallel [`apply_update`].
+fn apply_slots(
+    cfg: &SpecConfig,
+    state: &mut TrainState,
+    grads: Vec<LinGrads>,
+    ce_mean: f32,
+    acc_frac: f32,
+    h: &Hyper,
+) -> Result<Vec<f32>> {
     let method = cfg.method.as_str();
     let mu = cfg.momentum;
     let mut reg = 0.0f32;
@@ -335,7 +453,7 @@ pub(super) fn train_step(
     let mut gnorm_tail: Vec<f32> = Vec::new();
     for (lc, g) in cfg.layers.iter().zip(grads) {
         match g {
-            Some(LinGrads::Kpd(g)) => {
+            LinGrads::Kpd(g) => {
                 let s_l1 = state.param(&p(lc, "S"))?.abs_sum();
                 s_l1_per.push(s_l1);
                 reg += h.lam * s_l1;
@@ -363,7 +481,7 @@ pub(super) fn train_step(
                 }
                 soft_threshold(sdata, h.lr * h.lam);
             }
-            Some(LinGrads::Dense(mut gw)) => {
+            LinGrads::Dense(mut gw) => {
                 let (m, n, m2, n2) = (lc.m, lc.n, lc.m2, lc.n2);
                 let w = state.param(&p(lc, "W"))?.data().to_vec();
                 match method {
@@ -406,11 +524,10 @@ pub(super) fn train_step(
                     block_prox(state.params[wi].data_mut(), m, n, m2, n2, kappa);
                 }
             }
-            None => bail!("mlp backward left slot '{}' without gradients", lc.name),
         }
     }
 
-    let mut out = vec![sm.ce_mean + reg, sm.ce_mean, sm.acc_frac];
+    let mut out = vec![ce_mean + reg, ce_mean, acc_frac];
     if method == "kpd" {
         out.push(s_l1_per.iter().sum());
         out.extend(&s_l1_per);

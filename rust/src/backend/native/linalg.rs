@@ -28,6 +28,30 @@ fn max_threads() -> usize {
     })
 }
 
+thread_local! {
+    /// Per-thread cap on kernel worker threads. The data-parallel trainer
+    /// pins this to 1 inside replica workers so the replica axis is the
+    /// only parallelism — kernel row threading on top would just
+    /// oversubscribe the cores.
+    static THREAD_CAP: std::cell::Cell<usize> = std::cell::Cell::new(usize::MAX);
+}
+
+/// Run `f` with this thread's kernel threading capped at `cap` (1 = fully
+/// single-threaded kernels). Restores the previous cap on exit, panic
+/// included. The cap never changes any result: [`par_rows`] partitions
+/// output rows, so each element's accumulation order is identical at every
+/// thread count — only scheduling differs.
+pub fn with_thread_cap<T>(cap: usize, f: impl FnOnce() -> T) -> T {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            THREAD_CAP.with(|c| c.set(self.0));
+        }
+    }
+    let _restore = Restore(THREAD_CAP.with(|c| c.replace(cap.max(1))));
+    f()
+}
+
 /// Run `f(row_index, row)` over every `cols`-wide row of `out`, splitting
 /// the rows across up to `threads` scoped workers. Shared with the BSR
 /// inference kernels (`crate::infer::bsr`), which parallelize over batch
@@ -66,10 +90,11 @@ where
 /// masked training matmul below still passes the dense product (the mask
 /// changes every RigL round, so its threading stays shape-stable).
 pub(crate) fn threads_for(work: usize) -> usize {
-    if work < PAR_THRESHOLD {
+    let cap = THREAD_CAP.with(|c| c.get());
+    if cap <= 1 || work < PAR_THRESHOLD {
         1
     } else {
-        max_threads()
+        max_threads().min(cap)
     }
 }
 
@@ -376,6 +401,27 @@ mod tests {
     fn softmax_ce_rejects_bad_labels() {
         assert!(softmax_ce(&[0.0, 0.0], &[2], 1, 2).is_err());
         assert!(softmax_ce(&[0.0, 0.0], &[-1], 1, 2).is_err());
+    }
+
+    #[test]
+    fn thread_cap_pins_kernels_without_changing_results() {
+        let mut rng = Rng::new(13);
+        let (m, k, n) = (160, 130, 160); // above PAR_THRESHOLD
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let threaded = matmul_nn(&a, &b, m, k, n);
+        let capped = with_thread_cap(1, || {
+            assert_eq!(threads_for(m * k * n), 1, "cap must force 1 worker");
+            matmul_nn(&a, &b, m, k, n)
+        });
+        // cap restored after the scope
+        assert!(threads_for(m * k * n) >= 1);
+        assert_eq!(threaded, capped, "thread cap changed kernel results");
+        // nested caps restore outward
+        with_thread_cap(2, || {
+            with_thread_cap(1, || assert_eq!(threads_for(usize::MAX / 2), 1));
+            assert!(threads_for(usize::MAX / 2) <= 2);
+        });
     }
 
     #[test]

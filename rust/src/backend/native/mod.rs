@@ -43,7 +43,7 @@ use crate::tensor::{DType, HostValue, Tensor};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
-use super::{Backend, TrainState};
+use super::{Backend, GradOut, TrainState};
 
 const METHODS: &[&str] = &[
     "kpd",
@@ -632,6 +632,44 @@ fn sgd_momentum(p: &mut [f32], v: &mut [f32], g: &[f32], lr: f32, mu: f32) {
     }
 }
 
+/// Undo `softmax_ce`'s 1/N scaling on dZ so every gradient chained from
+/// it becomes a per-example *sum* — the unit the data-parallel tree
+/// reduction combines (`backend::GradOut`).
+fn scale_to_sum(dz: &mut [f32], nb: usize) {
+    let s = nb as f32;
+    for v in dz.iter_mut() {
+        *v *= s;
+    }
+}
+
+/// Flat gradient-buffer layout of a spec: `(leaf name, length)` in the
+/// canonical order `grad_step` concatenates and `apply_update` slices —
+/// KPD slots contribute `[S, A, B]`, dense-parameterized slots `[W]`,
+/// pattern specs one `[S, A, B]` triple per candidate.
+pub fn grad_layout(cfg: &SpecConfig) -> Vec<(String, usize)> {
+    if cfg.method == "pattern_kpd" {
+        let mut out = Vec::new();
+        for (p, d) in cfg.pattern_dims().iter().enumerate() {
+            out.push((pattern::pname(p, "S"), d.m1 * d.n1));
+            out.push((pattern::pname(p, "A"), d.r * d.m1 * d.n1));
+            out.push((pattern::pname(p, "B"), d.r * d.m2 * d.n2));
+        }
+        return out;
+    }
+    if cfg.is_mlp() {
+        return layers::grad_layout(cfg);
+    }
+    if cfg.method == "kpd" {
+        let d = cfg.dims();
+        return vec![
+            ("fc.S".to_string(), d.m1 * d.n1),
+            ("fc.A".to_string(), d.r * d.m1 * d.n1),
+            ("fc.B".to_string(), d.r * d.m2 * d.n2),
+        ];
+    }
+    vec![("fc.W".to_string(), cfg.out_dim * cfg.in_dim)]
+}
+
 /// Elementwise soft-threshold: the prox of t·‖·‖₁ (produces exact zeros).
 fn soft_threshold(xs: &mut [f32], t: f32) {
     if t <= 0.0 {
@@ -785,20 +823,70 @@ impl NativeBackend {
         h: &Hyper,
     ) -> Result<Vec<f32>> {
         let d = ns.cfg.dims();
-        let mu = ns.cfg.momentum;
         let s = state.param("fc.S")?.data().to_vec();
         let a = state.param("fc.A")?.data().to_vec();
         let b = state.param("fc.B")?.data().to_vec();
         let (z, tp) = kpd::forward(x, nb, &s, &a, &b, d);
         let sm = linalg::softmax_ce(&z, y, nb, d.m())?;
         let g = kpd::backward(x, nb, &s, &a, &sm.dz, &tp, d);
-        let s_l1: f32 = s.iter().map(|v| v.abs()).sum();
+        self.apply_kpd(ns, state, &g.gs, &g.ga, &g.gb, sm.ce_mean, sm.acc_frac, h)
+    }
 
+    /// KPD gradient half of [`Backend::grad_step`]: per-example gradient
+    /// sums of (S, A, B) on one shard, state untouched.
+    fn grad_kpd(
+        &self,
+        ns: &NativeSpec,
+        state: &TrainState,
+        x: &[f32],
+        nb: usize,
+        y: &[i32],
+    ) -> Result<GradOut> {
+        let d = ns.cfg.dims();
+        // `state` is a shared borrow here (unlike the fused step, which
+        // must snapshot before mutating): no parameter copies
+        let s = state.param("fc.S")?;
+        let a = state.param("fc.A")?;
+        let b = state.param("fc.B")?;
+        let (z, tp) = kpd::forward(x, nb, s.data(), a.data(), b.data(), d);
+        let mut sm = linalg::softmax_ce(&z, y, nb, d.m())?;
+        scale_to_sum(&mut sm.dz, nb);
+        let g = kpd::backward(x, nb, s.data(), a.data(), &sm.dz, &tp, d);
+        let mut grad_sum = g.gs;
+        grad_sum.extend(g.ga);
+        grad_sum.extend(g.gb);
+        Ok(GradOut {
+            grad_sum,
+            ce_sum: sm.ce_mean * nb as f32,
+            correct: sm.correct,
+            examples: nb,
+        })
+    }
+
+    /// KPD update half: SGD/momentum on A/B, plain SGD + ℓ1 prox on S
+    /// (the gradients are batch means). Shared by the fused `train_step`
+    /// and the data-parallel `apply_update` so the two paths cannot drift.
+    #[allow(clippy::too_many_arguments)]
+    fn apply_kpd(
+        &self,
+        ns: &NativeSpec,
+        state: &mut TrainState,
+        gs: &[f32],
+        ga: &[f32],
+        gb: &[f32],
+        ce_mean: f32,
+        acc_frac: f32,
+        h: &Hyper,
+    ) -> Result<Vec<f32>> {
+        let mu = ns.cfg.momentum;
+        // ‖S‖₁ pre-update, so the loss reports the objective the
+        // gradients were taken at
+        let s_l1 = state.param("fc.S")?.abs_sum();
         let (ai, avi) = (pidx(state, "fc.A")?, oidx(state, "fc.A.m")?);
         sgd_momentum(
             state.params[ai].data_mut(),
             state.opt[avi].data_mut(),
-            &g.ga,
+            ga,
             h.lr,
             mu,
         );
@@ -806,20 +894,20 @@ impl NativeBackend {
         sgd_momentum(
             state.params[bi].data_mut(),
             state.opt[bvi].data_mut(),
-            &g.gb,
+            gb,
             h.lr,
             mu,
         );
         // S: plain SGD step + the ℓ1 prox (soft-threshold) → exact zeros
         let si = pidx(state, "fc.S")?;
         let sdata = state.params[si].data_mut();
-        for (p, gi) in sdata.iter_mut().zip(&g.gs) {
+        for (p, gi) in sdata.iter_mut().zip(gs) {
             *p -= h.lr * gi;
         }
         soft_threshold(sdata, h.lr * h.lam);
 
-        let loss = sm.ce_mean + h.lam * s_l1;
-        Ok(vec![loss, sm.ce_mean, sm.acc_frac, s_l1])
+        let loss = ce_mean + h.lam * s_l1;
+        Ok(vec![loss, ce_mean, acc_frac, s_l1])
     }
 
     fn step_dense_family(
@@ -831,13 +919,51 @@ impl NativeBackend {
         y: &[i32],
         h: &Hyper,
     ) -> Result<Vec<f32>> {
+        let z = self.forward(ns, state, x, nb)?;
+        let sm = linalg::softmax_ce(&z, y, nb, ns.cfg.out_dim)?;
+        let dw = linalg::matmul_tn(&sm.dz, x, nb, ns.cfg.out_dim, ns.cfg.in_dim);
+        self.apply_dense(ns, state, dw, sm.ce_mean, sm.acc_frac, h)
+    }
+
+    /// Dense-family gradient half of [`Backend::grad_step`]: the raw
+    /// per-example-summed dW = dZᵀ·X of one shard — before any masking or
+    /// ridge term, which are state-dependent and belong to the update half.
+    fn grad_dense(
+        &self,
+        ns: &NativeSpec,
+        state: &TrainState,
+        x: &[f32],
+        nb: usize,
+        y: &[i32],
+    ) -> Result<GradOut> {
+        let z = self.forward(ns, state, x, nb)?;
+        let mut sm = linalg::softmax_ce(&z, y, nb, ns.cfg.out_dim)?;
+        scale_to_sum(&mut sm.dz, nb);
+        let dw = linalg::matmul_tn(&sm.dz, x, nb, ns.cfg.out_dim, ns.cfg.in_dim);
+        Ok(GradOut {
+            grad_sum: dw,
+            ce_sum: sm.ce_mean * nb as f32,
+            correct: sm.correct,
+            examples: nb,
+        })
+    }
+
+    /// Dense-family update half: regularizer terms, gradient masking,
+    /// SGD/momentum and the block-group prox — `dw` is the raw mean
+    /// gradient. Shared by the fused `train_step` and `apply_update`.
+    fn apply_dense(
+        &self,
+        ns: &NativeSpec,
+        state: &mut TrainState,
+        mut dw: Vec<f32>,
+        ce_mean: f32,
+        acc_frac: f32,
+        h: &Hyper,
+    ) -> Result<Vec<f32>> {
         let cfg = &ns.cfg;
         let (m, n, m2, n2) = (cfg.out_dim, cfg.in_dim, cfg.m2, cfg.n2);
         let method = cfg.method.as_str();
-        let z = self.forward(ns, state, x, nb)?;
-        let sm = linalg::softmax_ce(&z, y, nb, m)?;
         let w = state.param("fc.W")?.data().to_vec();
-        let mut dw = linalg::matmul_tn(&sm.dz, x, nb, m, n);
 
         let mut reg = 0.0f32;
         let mut gnorm_tail: Vec<f32> = Vec::new();
@@ -882,7 +1008,7 @@ impl NativeBackend {
             block_prox(state.params[wi].data_mut(), m, n, m2, n2, kappa);
         }
 
-        let mut out = vec![sm.ce_mean + reg, sm.ce_mean, sm.acc_frac];
+        let mut out = vec![ce_mean + reg, ce_mean, acc_frac];
         out.extend(gnorm_tail);
         Ok(out)
     }
@@ -1119,6 +1245,71 @@ impl Backend for NativeBackend {
         }
         let (m1, n1) = ns.cfg.grid();
         Ok(m1 * n1)
+    }
+
+    fn supports_grad_step(&self, spec: &str) -> bool {
+        // every native family (single-slot, mlp, pattern) has a separable
+        // gradient path
+        self.get(spec).is_ok()
+    }
+
+    fn grad_len(&self, spec: &str) -> Result<usize> {
+        Ok(grad_layout(&self.get(spec)?.cfg).iter().map(|(_, l)| l).sum())
+    }
+
+    fn grad_step(&self, state: &TrainState, x: &HostValue, y: &HostValue) -> Result<GradOut> {
+        let ns = self.get(&state.spec)?;
+        let (xs, nb, ys) = batch_xy(x, y, ns.cfg.in_dim)?;
+        if ns.cfg.is_mlp() {
+            return layers::grad_step(&ns.cfg, state, xs, nb, ys);
+        }
+        match ns.cfg.method.as_str() {
+            "kpd" => self.grad_kpd(ns, state, xs, nb, ys),
+            "pattern_kpd" => pattern::grad_step(state, xs, nb, ys, &ns.cfg.pattern_dims()),
+            _ => self.grad_dense(ns, state, xs, nb, ys),
+        }
+    }
+
+    fn apply_update(
+        &self,
+        state: &mut TrainState,
+        grad: Vec<f32>,
+        ce_mean: f32,
+        acc_frac: f32,
+        hyper: &[f32],
+    ) -> Result<Vec<f32>> {
+        let ns = self.get(&state.spec)?;
+        let h = parse_hyper(&ns.entry, hyper)?;
+        let want = self.grad_len(&state.spec)?;
+        if grad.len() != want {
+            bail!(
+                "apply_update on '{}': gradient buffer has {} values, layout wants {want}",
+                state.spec,
+                grad.len()
+            );
+        }
+        if ns.cfg.is_mlp() {
+            return layers::apply_update(&ns.cfg, state, &grad, ce_mean, acc_frac, &h);
+        }
+        match ns.cfg.method.as_str() {
+            "kpd" => {
+                let d = ns.cfg.dims();
+                let (gs, rest) = grad.split_at(d.m1 * d.n1);
+                let (ga, gb) = rest.split_at(d.r * d.m1 * d.n1);
+                self.apply_kpd(ns, state, gs, ga, gb, ce_mean, acc_frac, &h)
+            }
+            "pattern_kpd" => pattern::apply_update(
+                state,
+                &grad,
+                &ns.cfg.pattern_dims(),
+                ce_mean,
+                acc_frac,
+                h.lam,
+                h.lr,
+                ns.cfg.momentum,
+            ),
+            _ => self.apply_dense(ns, state, grad, ce_mean, acc_frac, &h),
+        }
     }
 }
 

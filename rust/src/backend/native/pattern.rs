@@ -32,9 +32,9 @@
 //! Evaluation scores every candidate **individually** — the eval layout is
 //! `[ce_0..ce_{K-1}, correct_0..correct_{K-1}]`, matching `Trainer::evaluate`.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use crate::backend::TrainState;
+use crate::backend::{GradOut, TrainState};
 use crate::flops::KpdDims;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -164,11 +164,115 @@ pub fn train_step(
     }
     let sm = linalg::softmax_ce(&z, y, nb, m)?;
 
-    // backward + update per pattern, all sharing dZ
-    let mut metrics = vec![0.0, sm.ce_mean, sm.acc_frac];
+    // backward per pattern, all sharing dZ, at the pre-update snapshot
+    let grads: Vec<kpd::Grads> = dims
+        .iter()
+        .enumerate()
+        .map(|(p, &d)| kpd::backward(x, nb, &ss[p], &aa[p], &sm.dz, &caches[p], d))
+        .collect();
+    apply(state, dims, &grads, sm.ce_mean, sm.acc_frac, lam, lr, mu)
+}
+
+/// Gradient half of the joint step ([`crate::backend::Backend::grad_step`]):
+/// every candidate's (gs, ga, gb) at the shared dZ, concatenated in
+/// pattern order as per-example *sums*. State untouched.
+pub fn grad_step(
+    state: &TrainState,
+    x: &[f32],
+    nb: usize,
+    y: &[i32],
+    dims: &[KpdDims],
+) -> Result<GradOut> {
+    let m = dims[0].m();
+    let mut z = vec![0.0f32; nb * m];
+    let mut caches = Vec::with_capacity(dims.len());
+    // `state` stays a shared borrow throughout (the fused step must
+    // snapshot S/A because it mutates them; this path never does), so
+    // the factors are read in place with no copies
+    for (p, &d) in dims.iter().enumerate() {
+        let s = state.param(&pname(p, "S"))?;
+        let a = state.param(&pname(p, "A"))?;
+        let b = state.param(&pname(p, "B"))?;
+        let (zp, tp) = kpd::forward(x, nb, s.data(), a.data(), b.data(), d);
+        for (acc, v) in z.iter_mut().zip(&zp) {
+            *acc += v;
+        }
+        caches.push(tp);
+    }
+    let mut sm = linalg::softmax_ce(&z, y, nb, m)?;
+    super::scale_to_sum(&mut sm.dz, nb);
+    let mut grad_sum = Vec::new();
+    for (p, &d) in dims.iter().enumerate() {
+        let s = state.param(&pname(p, "S"))?;
+        let a = state.param(&pname(p, "A"))?;
+        let g = kpd::backward(x, nb, s.data(), a.data(), &sm.dz, &caches[p], d);
+        grad_sum.extend(g.gs);
+        grad_sum.extend(g.ga);
+        grad_sum.extend(g.gb);
+    }
+    Ok(GradOut {
+        grad_sum,
+        ce_sum: sm.ce_mean * nb as f32,
+        correct: sm.correct,
+        examples: nb,
+    })
+}
+
+/// Update half for a reduced flat mean-gradient buffer: slice it back
+/// into per-candidate (gs, ga, gb) triples and run [`apply`].
+#[allow(clippy::too_many_arguments)]
+pub fn apply_update(
+    state: &mut TrainState,
+    grad: &[f32],
+    dims: &[KpdDims],
+    ce_mean: f32,
+    acc_frac: f32,
+    lam: f32,
+    lr: f32,
+    mu: f32,
+) -> Result<Vec<f32>> {
+    let mut grads = Vec::with_capacity(dims.len());
+    let mut off = 0usize;
+    for &d in dims {
+        let (sl, al, bl) = (d.m1 * d.n1, d.r * d.m1 * d.n1, d.r * d.m2 * d.n2);
+        if off + sl + al + bl > grad.len() {
+            bail!("pattern gradient buffer too short");
+        }
+        let gs = grad[off..off + sl].to_vec();
+        off += sl;
+        let ga = grad[off..off + al].to_vec();
+        off += al;
+        let gb = grad[off..off + bl].to_vec();
+        off += bl;
+        grads.push(kpd::Grads { gs, ga, gb });
+    }
+    if off != grad.len() {
+        bail!("pattern gradient buffer has {} values, layout wants {off}", grad.len());
+    }
+    apply(state, dims, &grads, ce_mean, acc_frac, lam, lr, mu)
+}
+
+/// Per-candidate optimizer + gauge + prox updates on mean gradients — the
+/// one copy of the update math, shared by the fused [`train_step`] and
+/// the data-parallel [`apply_update`]. Returns the metrics vector
+/// `[loss, ce, acc, s_l1_p0 .. s_l1_p{K-1}]` with ‖S‖₁ read pre-update.
+#[allow(clippy::too_many_arguments)]
+fn apply(
+    state: &mut TrainState,
+    dims: &[KpdDims],
+    grads: &[kpd::Grads],
+    ce_mean: f32,
+    acc_frac: f32,
+    lam: f32,
+    lr: f32,
+    mu: f32,
+) -> Result<Vec<f32>> {
+    let mut metrics = vec![0.0, ce_mean, acc_frac];
     let mut total_l1 = 0.0f32;
     for (p, &d) in dims.iter().enumerate() {
-        let g = kpd::backward(x, nb, &ss[p], &aa[p], &sm.dz, &caches[p], d);
+        // pre-update ‖S‖₁ (this pattern's S has not been touched yet)
+        let s_l1 = state.param(&pname(p, "S"))?.abs_sum();
+        let g = &grads[p];
         let (ai, avi) = (pidx(state, &pname(p, "A"))?, oidx(state, &pname(p, "A.m"))?);
         sgd_momentum(state.params[ai].data_mut(), state.opt[avi].data_mut(), &g.ga, lr, mu);
         let (bi, bvi) = (pidx(state, &pname(p, "B"))?, oidx(state, &pname(p, "B.m"))?);
@@ -190,11 +294,10 @@ pub fn train_step(
         }
         soft_threshold(sdata, s_lr * lam);
 
-        let s_l1: f32 = ss[p].iter().map(|v| v.abs()).sum();
         total_l1 += s_l1;
         metrics.push(s_l1);
     }
-    metrics[0] = sm.ce_mean + lam * total_l1;
+    metrics[0] = ce_mean + lam * total_l1;
     Ok(metrics)
 }
 

@@ -5,7 +5,9 @@
 //! paper-style rows next to the paper's reference values, and appends the
 //! measured rows to `bench_results/results.jsonl` for EXPERIMENTS.md.
 //!
-//! Scale knobs (env): BS_STEPS, BS_SEEDS, BS_TRAIN_N, BS_TEST_N — the
+//! Scale knobs (env): BS_STEPS, BS_SEEDS, BS_TRAIN_N, BS_TEST_N, plus
+//! BS_REPLICAS (>1 routes every run through the data-parallel sharded
+//! trainer — the CI smoke gate drives the table2 panel this way) — the
 //! defaults keep a full `cargo bench` run in CPU-budget; EXPERIMENTS.md
 //! records which settings produced the committed numbers.
 
@@ -41,6 +43,7 @@ pub struct BenchEnv {
     pub seeds: Vec<u64>,
     pub train_n: usize,
     pub test_n: usize,
+    pub replicas: usize,
 }
 
 impl BenchEnv {
@@ -55,7 +58,9 @@ impl BenchEnv {
             .unwrap_or(train_n);
         let test_n = std::env::var("BS_TEST_N").ok().and_then(|v| v.parse().ok())
             .unwrap_or(test_n);
-        Self { steps, seeds: (0..nseeds as u64).collect(), train_n, test_n }
+        let replicas = std::env::var("BS_REPLICAS").ok().and_then(|v| v.parse().ok())
+            .unwrap_or(1usize).max(1);
+        Self { steps, seeds: (0..nseeds as u64).collect(), train_n, test_n, replicas }
     }
 
     pub fn config(&self, be: &dyn Backend, spec_key: &str) -> Result<TrainConfig> {
@@ -69,6 +74,7 @@ impl BenchEnv {
         tc.test_examples = self.test_n;
         tc.lambda = lam;
         tc.lambda2 = lam2;
+        tc.replicas = self.replicas;
         if spec.method.starts_with("pattern") {
             crate::backend::native::pattern::calibrate_lambda(&mut tc, &be.name());
         }

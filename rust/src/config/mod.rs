@@ -231,6 +231,10 @@ pub struct TrainConfig {
     /// iterative-pruning rounds and final sparsity target
     pub prune_rounds: usize,
     pub prune_target: f64,
+    /// data-parallel gradient replicas: >1 shards every batch across this
+    /// many workers with a deterministic reduction (`crate::train`); 1 is
+    /// the fused single-replica step
+    pub replicas: usize,
     pub data_seed: u64,
     pub out_dir: String,
 }
@@ -263,6 +267,7 @@ impl TrainConfig {
             rigl_alpha_decay: cfg.f64_or("rigl.alpha_decay", 0.75),
             prune_rounds: cfg.usize_or("prune.rounds", 4),
             prune_target: cfg.f64_or("prune.target", 0.5),
+            replicas: cfg.usize_or("train.replicas", 1).max(1),
             data_seed: cfg.usize_or("data.seed", 42) as u64,
             out_dir: cfg.str_or("run.out_dir", "runs").to_string(),
         }
@@ -328,5 +333,14 @@ mod tests {
         assert_eq!(tc.seeds, vec![0, 1, 2]);
         assert_eq!(tc.steps, 800);
         assert_eq!(tc.spec, "t1_kpd_b2x2");
+        assert_eq!(tc.replicas, 1);
+    }
+
+    #[test]
+    fn replicas_from_config_clamped_positive() {
+        let cfg = Config::parse("[train]\nreplicas = 4\n").unwrap();
+        assert_eq!(TrainConfig::from_config(&cfg, "x").replicas, 4);
+        let cfg = Config::parse("[train]\nreplicas = 0\n").unwrap();
+        assert_eq!(TrainConfig::from_config(&cfg, "x").replicas, 1);
     }
 }

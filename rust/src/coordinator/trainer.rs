@@ -34,25 +34,31 @@ pub struct Trainer<'a> {
     pub cfg: &'a TrainConfig,
 }
 
-impl<'a> Trainer<'a> {
-    pub fn new(be: &'a dyn Backend, cfg: &'a TrainConfig) -> Self {
-        Self { be, cfg }
-    }
+/// Shared per-run machinery of the fused and data-parallel drivers:
+/// schedules, the RigL/pruning controllers and the metric history. Both
+/// drivers feed every step's metrics vector through [`RunLoop::after_step`],
+/// so the controller behavior and the recorded series cannot differ
+/// between them.
+struct RunLoop {
+    spec: crate::manifest::SpecEntry,
+    lam: LambdaSchedule,
+    lr: LrSchedule,
+    rigl: RiglSchedule,
+    prune_at: Vec<(usize, f32)>,
+    is_rigl: bool,
+    gnorm_len: usize,
+    gnorm_acc: Vec<f32>,
+    history: History,
+}
 
-    /// Train `spec` from `seed`, evaluating on `test` at the end (and every
-    /// `eval_every` steps into the history).
-    pub fn run(&self, seed: u64, train: &Dataset, test: &Dataset) -> Result<RunOutcome> {
-        let cfg = self.cfg;
-        let spec = self.be.spec(&cfg.spec)?.clone();
-        let mut state = self.be.init_state(&cfg.spec, seed as u32)?;
-        let mut batcher = Batcher::new(train, spec.batch, seed ^ 0xBA7C4, true);
-        let steps_per_epoch = batcher.batches_per_epoch().max(1);
-
+impl RunLoop {
+    fn new(t: &Trainer, spec: crate::manifest::SpecEntry, steps_per_epoch: usize) -> Result<Self> {
+        let cfg = t.cfg;
         // schedules: ramp unit is epochs when ramp_every==0 was not set
         let ramp_every_steps = if cfg.ramp_every > 0 {
             cfg.ramp_every
         } else {
-            5 * steps_per_epoch // the paper's "+ramp every 5 epochs"
+            5 * steps_per_epoch.max(1) // the paper's "+ramp every 5 epochs"
         };
         let lam = if spec.method.starts_with("pattern") {
             LambdaSchedule::staircase(cfg.lambda, cfg.lambda_ramp, ramp_every_steps)
@@ -84,73 +90,182 @@ impl<'a> Trainer<'a> {
             vec![]
         };
 
-        let mut history = History::new();
         let is_rigl = spec.method == "rigl_block";
         // metrics = [loss, ce, acc] ++ gnorm blocks (RigL specs only)
-        let gnorm_len: usize = if is_rigl { self.be.gnorm_len(&cfg.spec)? } else { 0 };
-        let mut gnorm_acc: Vec<f32> = vec![0.0; gnorm_len];
+        let gnorm_len: usize = if is_rigl { t.be.gnorm_len(&cfg.spec)? } else { 0 };
+        Ok(RunLoop {
+            spec,
+            lam,
+            lr,
+            rigl,
+            prune_at,
+            is_rigl,
+            gnorm_len,
+            gnorm_acc: vec![0.0; gnorm_len],
+            history: History::new(),
+        })
+    }
+
+    fn hyper(&self, cfg: &TrainConfig, step: usize) -> Result<Vec<f32>> {
+        build_hyper(&self.spec.hyper, self.lam.at(step), cfg.lambda2, self.lr.at(step))
+    }
+
+    /// Controllers + history for one completed step (identical for the
+    /// fused and sharded drivers).
+    fn after_step(
+        &mut self,
+        t: &Trainer,
+        state: &mut TrainState,
+        step: usize,
+        seed: u64,
+        metrics: &[f32],
+        test: &Dataset,
+    ) -> Result<()> {
+        let cfg = t.cfg;
+        if self.is_rigl && metrics.len() >= 3 + self.gnorm_len {
+            // exponential moving average of the dense-grad block norms
+            for (a, m) in self.gnorm_acc.iter_mut().zip(&metrics[3..3 + self.gnorm_len]) {
+                *a = 0.7 * *a + 0.3 * m;
+            }
+            if self.rigl.is_update_step(step) {
+                t.be.rigl_update(state, &self.gnorm_acc, self.rigl.alpha(step) as f32)?;
+            }
+        }
+        for &(pstep, ptarget) in &self.prune_at {
+            if step == pstep {
+                t.be.prune(state, ptarget)?;
+                crate::debug!("pruned to target {ptarget} at step {step}");
+            }
+        }
+
+        let mut rec = Record::new(step as u64).with("loss", metrics[0] as f64);
+        // every *named* scalar series goes to the history: ce/acc, the
+        // whole-model s_l1, the per-layer s_l1_{slot} series of mlp
+        // specs and the per-pattern s_l1_p{k} Figure-3 series. RigL's
+        // unnamed gnorm tail stays out (it is a controller input, and
+        // fine-block MLP grids make it ~10⁵ values per step).
+        for (i, name) in self.spec.metrics.iter().enumerate().skip(1) {
+            if i >= metrics.len() {
+                break;
+            }
+            if name == "ce" || name == "acc" || name == "s_l1" || name.starts_with("s_l1_") {
+                rec = rec.with(name, metrics[i] as f64);
+            }
+        }
+        self.history.push(rec)?;
+
+        if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
+            let (acc, loss, _) = t.evaluate(state, &self.spec, test)?;
+            self.history.push(
+                Record::new(step as u64).with("test_acc", acc).with("test_loss", loss),
+            )?;
+            crate::info!(
+                "[{}] seed {seed} step {}/{}: loss {:.4} test_acc {:.2}%",
+                cfg.spec, step + 1, cfg.steps, metrics[0], acc
+            );
+        }
+        Ok(())
+    }
+
+    /// Final evaluation + outcome assembly.
+    fn finish(
+        self,
+        t: &Trainer,
+        state: TrainState,
+        test: &Dataset,
+        sw: crate::util::Stopwatch,
+    ) -> Result<RunOutcome> {
+        let (test_acc, test_loss, pattern_accs) = t.evaluate(&state, &self.spec, test)?;
+        Ok(RunOutcome {
+            state,
+            history: self.history,
+            test_acc,
+            test_loss,
+            pattern_accs,
+            steps_done: t.cfg.steps,
+            wall_secs: sw.elapsed_secs(),
+        })
+    }
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(be: &'a dyn Backend, cfg: &'a TrainConfig) -> Self {
+        Self { be, cfg }
+    }
+
+    /// Train `spec` from `seed`, evaluating on `test` at the end (and every
+    /// `eval_every` steps into the history).
+    ///
+    /// `cfg.replicas > 1` delegates to the data-parallel driver
+    /// ([`Trainer::run_sharded`]) when the backend has a separable
+    /// gradient path; backends without one (AOT/PJRT) log a warning and
+    /// fall back to this fused single-replica loop.
+    pub fn run(&self, seed: u64, train: &Dataset, test: &Dataset) -> Result<RunOutcome> {
+        if self.cfg.replicas > 1 {
+            if self.be.supports_grad_step(&self.cfg.spec) {
+                return self.run_sharded(self.cfg.replicas, seed, train, test);
+            }
+            crate::warn_!(
+                "[{}] backend '{}' has no separable gradient path; \
+                 falling back to the fused single-replica step",
+                self.cfg.spec,
+                self.be.name()
+            );
+        }
+        let cfg = self.cfg;
+        let spec = self.be.spec(&cfg.spec)?.clone();
+        let mut state = self.be.init_state(&cfg.spec, seed as u32)?;
+        let mut batcher = Batcher::new(train, spec.batch, seed ^ 0xBA7C4, true);
+        let mut lp = RunLoop::new(self, spec, batcher.batches_per_epoch())?;
 
         let sw = crate::util::Stopwatch::start();
         for step in 0..cfg.steps {
             let batch = batcher.next_batch()?;
-            let hyper = build_hyper(&spec.hyper, lam.at(step), cfg.lambda2, lr.at(step))?;
+            let hyper = lp.hyper(cfg, step)?;
             let metrics = self.be.train_step(&mut state, &batch.x, &batch.y, &hyper)?;
-
-            if is_rigl && metrics.len() >= 3 + gnorm_len {
-                // exponential moving average of the dense-grad block norms
-                for (a, m) in gnorm_acc.iter_mut().zip(&metrics[3..3 + gnorm_len]) {
-                    *a = 0.7 * *a + 0.3 * m;
-                }
-                if rigl.is_update_step(step) {
-                    self.be.rigl_update(&mut state, &gnorm_acc, rigl.alpha(step) as f32)?;
-                }
-            }
-            for &(pstep, ptarget) in &prune_at {
-                if step == pstep {
-                    self.be.prune(&mut state, ptarget)?;
-                    crate::debug!("pruned to target {ptarget} at step {step}");
-                }
-            }
-
-            let mut rec = Record::new(step as u64).with("loss", metrics[0] as f64);
-            // every *named* scalar series goes to the history: ce/acc, the
-            // whole-model s_l1, the per-layer s_l1_{slot} series of mlp
-            // specs and the per-pattern s_l1_p{k} Figure-3 series. RigL's
-            // unnamed gnorm tail stays out (it is a controller input, and
-            // fine-block MLP grids make it ~10⁵ values per step).
-            for (i, name) in spec.metrics.iter().enumerate().skip(1) {
-                if i >= metrics.len() {
-                    break;
-                }
-                if name == "ce" || name == "acc" || name == "s_l1" || name.starts_with("s_l1_")
-                {
-                    rec = rec.with(name, metrics[i] as f64);
-                }
-            }
-            history.push(rec)?;
-
-            if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
-                let (acc, loss, _) = self.evaluate(&state, &spec, test)?;
-                history.push(
-                    Record::new(step as u64).with("test_acc", acc).with("test_loss", loss),
-                )?;
-                crate::info!(
-                    "[{}] seed {seed} step {}/{}: loss {:.4} test_acc {:.2}%",
-                    cfg.spec, step + 1, cfg.steps, metrics[0], acc
-                );
-            }
+            lp.after_step(self, &mut state, step, seed, &metrics, test)?;
         }
+        lp.finish(self, state, test, sw)
+    }
 
-        let (test_acc, test_loss, pattern_accs) = self.evaluate(&state, &spec, test)?;
-        Ok(RunOutcome {
-            state,
-            history,
-            test_acc,
-            test_loss,
-            pattern_accs,
-            steps_done: cfg.steps,
-            wall_secs: sw.elapsed_secs(),
-        })
+    /// The data-parallel run loop: batches come from the pure
+    /// [`crate::data::ShardPlan`] and every step runs through the
+    /// [`crate::train::DataParallelTrainer`], so the whole run — final
+    /// parameters, optimizer state, metric stream, RigL decisions — is a
+    /// pure function of (spec, seed, data, hyper) for **any** replica
+    /// count ≥ 1. Public so the bit-exactness suite and the scaling bench
+    /// can drive it at R = 1 as the comparison baseline. (The fused
+    /// `replicas == 1` path keeps the historical `Batcher` order, so it
+    /// matches this driver statistically, not bitwise.)
+    pub fn run_sharded(
+        &self,
+        replicas: usize,
+        seed: u64,
+        train: &Dataset,
+        test: &Dataset,
+    ) -> Result<RunOutcome> {
+        let cfg = self.cfg;
+        let spec = self.be.spec(&cfg.spec)?.clone();
+        let mut state = self.be.init_state(&cfg.spec, seed as u32)?;
+        let dp = crate::train::DataParallelTrainer::new(self.be, &cfg.spec, replicas)?;
+        // one source of truth for the micro-shard width: the plan splits
+        // batches exactly as wide as the driver expects
+        let mut plan = crate::data::ShardPlan::new(seed ^ 0xBA7C4, train.n, spec.batch)?
+            .with_shard_width(dp.shard_width());
+        let mut lp = RunLoop::new(self, spec, plan.steps_per_epoch())?;
+
+        let sw = crate::util::Stopwatch::start();
+        for step in 0..cfg.steps {
+            let shards = plan
+                .step_shards(step)
+                .iter()
+                .map(|idx| crate::data::assemble_batch(train, idx))
+                .collect::<Result<Vec<_>>>()?;
+            let hyper = lp.hyper(cfg, step)?;
+            let metrics = dp.step_shards(&mut state, &shards, &hyper)?;
+            lp.after_step(self, &mut state, step, seed, &metrics, test)?;
+        }
+        lp.finish(self, state, test, sw)
     }
 
     /// Full-test-set evaluation. Returns (accuracy %, mean loss, per-pattern

@@ -141,6 +141,114 @@ impl<'a> Batcher<'a> {
     }
 }
 
+/// Deterministic data-parallel batch/shard plan: which examples form step
+/// `s`'s batch and how that batch splits into gradient micro-shards.
+///
+/// This is the **pure-function** twin of the stateful [`Batcher`], built
+/// for the data-parallel trainer's determinism contract (unit-tested here
+/// and end-to-end in `tests/parallel.rs`):
+///
+/// * the epoch-`e` permutation is drawn from a fresh [`Rng`] keyed by
+///   `(seed, e)` only — unlike a continuing shuffle stream, neither the
+///   batch size, the step count, nor the replica count can shift any
+///   epoch's order, so `batch_indices(step)` is a pure function of
+///   `(seed, n, batch, step)`;
+/// * micro-shard boundaries depend only on the batch size (fixed
+///   [`ShardPlan::SHARD`]-wide slices plus one shorter tail), **never on
+///   the replica count** — replicas only decide which worker computes a
+///   shard, so the gradient reduction tree is identical for every R.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    seed: u64,
+    n: usize,
+    batch: usize,
+    shard: usize,
+    /// one-entry (epoch → permutation) memo so the per-step queries are
+    /// O(batch) amortized instead of reshuffling all `n` examples every
+    /// step; invisible to the plan's pure-function semantics
+    cache: Option<(usize, Vec<usize>)>,
+}
+
+impl ShardPlan {
+    /// Default micro-shard width in examples: small enough that a
+    /// batch-64 spec spreads across 8 replicas, large enough that
+    /// per-shard kernel launches stay amortized.
+    pub const SHARD: usize = 8;
+
+    pub fn new(seed: u64, n: usize, batch: usize) -> Result<Self> {
+        if batch == 0 || batch > n {
+            bail!("shard plan wants 0 < batch <= n, got batch {batch}, n {n}");
+        }
+        Ok(Self { seed, n, batch, shard: Self::SHARD, cache: None })
+    }
+
+    /// Override the micro-shard width (tests drive tail shards with it).
+    /// Changing the width changes the reduction tree — it is part of the
+    /// run's definition, like the batch size — but for any fixed width
+    /// the result stays independent of the replica count.
+    pub fn with_shard_width(mut self, shard: usize) -> Self {
+        assert!(shard > 0, "shard width must be positive");
+        self.shard = shard;
+        self
+    }
+
+    pub fn shard_width(&self) -> usize {
+        self.shard
+    }
+
+    /// Batches per epoch (drop-last semantics, like [`Batcher`]).
+    pub fn steps_per_epoch(&self) -> usize {
+        (self.n / self.batch).max(1)
+    }
+
+    /// The epoch-`e` permutation of all `n` examples — pure in
+    /// `(seed, epoch)`.
+    pub fn epoch_order(&self, epoch: usize) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..self.n).collect();
+        let mut rng =
+            Rng::new(self.seed ^ (epoch as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15));
+        rng.shuffle(&mut order);
+        order
+    }
+
+    /// Example indices of step `s`'s batch. Takes `&mut self` only for
+    /// the epoch-permutation memo — the result is the same pure function
+    /// of `(seed, n, batch, step)` regardless of query order or history.
+    pub fn batch_indices(&mut self, step: usize) -> Vec<usize> {
+        let spe = self.steps_per_epoch();
+        let (epoch, slot) = (step / spe, step % spe);
+        if self.cache.as_ref().map(|(e, _)| *e) != Some(epoch) {
+            self.cache = Some((epoch, self.epoch_order(epoch)));
+        }
+        let order = &self.cache.as_ref().expect("epoch memo just filled").1;
+        order[slot * self.batch..(slot + 1) * self.batch].to_vec()
+    }
+
+    /// Step `s`'s batch already split into per-shard index slices
+    /// (replica-count-independent).
+    pub fn step_shards(&mut self, step: usize) -> Vec<Vec<usize>> {
+        let idx = self.batch_indices(step);
+        shard_ranges(idx.len(), self.shard)
+            .into_iter()
+            .map(|(lo, len)| idx[lo..lo + len].to_vec())
+            .collect()
+    }
+}
+
+/// Split `0..n` into fixed `width`-wide ranges `(start, len)` plus one
+/// shorter tail when `width` does not divide `n`.
+pub fn shard_ranges(n: usize, width: usize) -> Vec<(usize, usize)> {
+    assert!(width > 0, "shard width must be positive");
+    let mut out = Vec::with_capacity((n + width - 1) / width);
+    let mut lo = 0usize;
+    while lo < n {
+        let len = width.min(n - lo);
+        out.push((lo, len));
+        lo += len;
+    }
+    out
+}
+
 /// Gather rows `idx` into one host-value batch.
 pub fn assemble_batch(data: &Dataset, idx: &[usize]) -> Result<Batch> {
     let b = idx.len();
@@ -234,6 +342,60 @@ mod tests {
         assert_eq!(b.x.i32_data().unwrap()[0], 6);
         assert_eq!(b.y.i32_data().unwrap()[0], 7);
         assert_eq!(b.x.shape(), &[2, 6]);
+    }
+
+    #[test]
+    fn shard_plan_is_pure_and_batch_independent() {
+        // same (seed, n): the epoch permutation must not depend on the
+        // batch size, the replica count, or any prior calls
+        let mut a = ShardPlan::new(9, 40, 8).unwrap();
+        let b = ShardPlan::new(9, 40, 10).unwrap();
+        for e in 0..3 {
+            assert_eq!(a.epoch_order(e), b.epoch_order(e), "epoch {e}");
+            let mut sorted = a.epoch_order(e);
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..40).collect::<Vec<_>>(), "not a permutation");
+        }
+        assert_ne!(a.epoch_order(0), a.epoch_order(1), "epochs must reshuffle");
+        assert_ne!(
+            ShardPlan::new(10, 40, 8).unwrap().epoch_order(0),
+            a.epoch_order(0),
+            "seed must matter"
+        );
+        // repeated queries of the same step are identical (pure function),
+        // including across the epoch memo (query epoch 1, then 0 again)
+        let first = a.batch_indices(7);
+        let _other_epoch = a.batch_indices(a.steps_per_epoch() + 1);
+        assert_eq!(first, a.batch_indices(7));
+        // one epoch covers each example at most once
+        let mut seen = vec![0usize; 40];
+        for s in 0..a.steps_per_epoch() {
+            for i in a.batch_indices(s) {
+                seen[i] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c <= 1), "{seen:?}");
+    }
+
+    #[test]
+    fn shard_plan_shards_are_replica_independent_fixed_width() {
+        let mut plan = ShardPlan::new(3, 64, 20).unwrap(); // default width 8
+        let shards = plan.step_shards(0);
+        assert_eq!(
+            shards.iter().map(Vec::len).collect::<Vec<_>>(),
+            vec![8, 8, 4],
+            "fixed 8-wide shards + tail"
+        );
+        assert_eq!(shards.concat(), plan.batch_indices(0));
+        // width override: batch 96 at width 36 leaves a 24-example tail
+        assert_eq!(shard_ranges(96, 36), vec![(0, 36), (36, 36), (72, 24)]);
+        assert_eq!(shard_ranges(96, 16).len(), 6);
+        assert_eq!(shard_ranges(0, 8), vec![]);
+        assert_eq!(shard_ranges(5, 8), vec![(0, 5)]);
+        let mut wide = ShardPlan::new(3, 64, 20).unwrap().with_shard_width(64);
+        assert_eq!(wide.step_shards(0).len(), 1);
+        assert!(ShardPlan::new(3, 4, 0).is_err());
+        assert!(ShardPlan::new(3, 4, 5).is_err());
     }
 
     #[test]

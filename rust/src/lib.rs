@@ -35,6 +35,14 @@
 //!   PJRT with zero re-marshalling on the hot path. The `xla` dependency
 //!   only enters the dependency graph when the feature is enabled.
 //!
+//! Training scales out through the [`train`] subsystem: the `Backend`
+//! contract is split into `grad_step` (per-shard forward/backward → flat
+//! gradient sums) and `apply_update` (optimizer + prox), and
+//! `train::DataParallelTrainer` shards every batch across R replica
+//! workers with a fixed-order pairwise tree reduction — bit-identical to
+//! a single worker for any R (`--replicas`, `TrainConfig.replicas`;
+//! PJRT falls back to the fused single-replica step).
+//!
 //! Past training, the [`infer`] subsystem closes the loop on the paper's
 //! inference claim: `infer::export` packs any trained spec into a BSR
 //! (block-sparse-row) model artifact (versioned, CRC-guarded on disk),
@@ -63,6 +71,7 @@ pub mod runtime;
 pub mod sparsity;
 pub mod tensor;
 pub mod testutil;
+pub mod train;
 pub mod util;
 
 /// Default artifact directory, overridable via `BLOCKSPARSE_ARTIFACTS`.

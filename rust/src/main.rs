@@ -55,6 +55,7 @@ fn arg_spec() -> ArgSpec {
             ("train-examples", true, "training set size"),
             ("test-examples", true, "held-out set size"),
             ("eval-every", true, "eval cadence in steps"),
+            ("replicas", true, "data-parallel gradient replicas (>1 shards each batch)"),
             ("artifacts", true, "artifact directory (default: artifacts)"),
             ("m", true, "matrix rows (flops/blockopt)"),
             ("n", true, "matrix cols (flops/blockopt)"),
@@ -100,6 +101,7 @@ fn build_cfg(args: &Args) -> Result<TrainConfig> {
     tc.train_examples = args.opt_usize("train-examples", tc.train_examples)?;
     tc.test_examples = args.opt_usize("test-examples", tc.test_examples)?;
     tc.eval_every = args.opt_usize("eval-every", tc.eval_every)?;
+    tc.replicas = args.opt_usize("replicas", tc.replicas)?.max(1);
     Ok(tc)
 }
 
@@ -156,6 +158,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     let res = run_spec(be.as_ref(), &cfg)?;
     println!("\nspec            : {}", res.spec);
     println!("method          : {}", res.method);
+    if cfg.replicas > 1 {
+        // report the mode that actually ran: backends without a separable
+        // gradient path fall back to the fused single-replica step
+        if be.supports_grad_step(&cfg.spec) {
+            println!("replicas        : {} (sharded data-parallel)", cfg.replicas);
+        } else {
+            println!("replicas        : 1 (backend has no grad_step; fused fallback)");
+        }
+    }
     println!("accuracy        : {:.2} ± {:.2} %", res.acc_mean, res.acc_std);
     println!("sparsity rate   : {:.2} ± {:.2} %", res.sparsity_mean, res.sparsity_std);
     if res.layer_sparsity.len() > 1 {

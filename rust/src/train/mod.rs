@@ -1,0 +1,244 @@
+//! Data-parallel sharded training: multi-worker gradient replicas with a
+//! deterministic reduction.
+//!
+//! The paper's pitch is *efficient training*; this subsystem opens the
+//! scale axis of it. A batch is split into fixed micro-shards
+//! ([`crate::data::ShardPlan::SHARD`]-wide, replica-count-independent),
+//! every shard's gradient is computed by `Backend::grad_step` on a pool of
+//! R replica workers, the shard gradients are combined by the fixed-order
+//! pairwise tree in [`reduce`], and one `Backend::apply_update` takes the
+//! optimizer step — so a step is
+//!
+//! ```text
+//!   shard₀ … shard_{S-1}  --grad_step-->  g₀ … g_{S-1}   (R workers)
+//!   tree_reduce(g₀ … g_{S-1}) / N        --apply_update-->  θ'
+//! ```
+//!
+//! **Determinism contract.** The shard boundaries, the reduction tree and
+//! the final normalization depend only on (spec, batch, shard width) —
+//! never on R, thread scheduling, or shard completion order — and kernel
+//! row-threading never changes accumulation order. A run through this
+//! driver is therefore a pure function of (spec, seed, data, hyper):
+//! **R workers are bit-identical to 1 worker for any R**, including the
+//! optimizer state, the metric stream and the RigL gradient-norm tail.
+//! `tests/parallel.rs` pins this end-to-end.
+//!
+//! Replica workers cap kernel row-threading at host-cores / replicas
+//! ([`crate::backend::native::linalg::with_thread_cap`]): the replica axis
+//! is the primary parallelism, and unbounded row threads on top would
+//! oversubscribe the cores — while a low replica count on a big machine
+//! still gets to use the spare cores inside each worker. Backends without
+//! a separable gradient path (AOT/PJRT
+//! executables fuse gradient and update) report
+//! `supports_grad_step == false` and the coordinator falls back to the
+//! fused single-replica `train_step`.
+
+pub mod reduce;
+
+use anyhow::{bail, Result};
+
+use crate::backend::native::linalg;
+use crate::backend::{Backend, GradOut, TrainState};
+use crate::data::{self, Batch};
+use crate::tensor::{HostValue, Tensor};
+use crate::util::pool::ThreadPool;
+
+/// Data-parallel step driver: R replica workers on a [`ThreadPool`], one
+/// optimizer step per batch. Construction fails on backends without a
+/// separable gradient path — callers fall back to the fused step.
+pub struct DataParallelTrainer<'a> {
+    be: &'a dyn Backend,
+    pool: ThreadPool,
+    replicas: usize,
+    shard: usize,
+    /// kernel-thread cap inside each replica worker: host cores split
+    /// across the replicas (≥ 1), so low replica counts on big machines
+    /// still use the hardware without oversubscribing at high counts.
+    /// Never affects results — row threading cannot change accumulation
+    /// order — only scheduling.
+    inner_cap: usize,
+}
+
+impl<'a> DataParallelTrainer<'a> {
+    pub fn new(be: &'a dyn Backend, spec: &str, replicas: usize) -> Result<Self> {
+        if replicas == 0 {
+            bail!("data-parallel training wants >= 1 replica");
+        }
+        if !be.supports_grad_step(spec) {
+            bail!(
+                "backend '{}' has no separable gradient path for '{spec}' \
+                 (AOT/PJRT executables fuse gradient and update into one \
+                 program); train with --replicas 1",
+                be.name()
+            );
+        }
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Ok(Self {
+            be,
+            pool: ThreadPool::new(replicas),
+            replicas,
+            shard: data::ShardPlan::SHARD,
+            inner_cap: (cores / replicas).max(1),
+        })
+    }
+
+    /// Override the micro-shard width. Part of the run's definition (like
+    /// the batch size): any fixed width stays bit-identical across R.
+    pub fn with_shard_width(mut self, shard: usize) -> Self {
+        assert!(shard > 0, "shard width must be positive");
+        self.shard = shard;
+        self
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    pub fn shard_width(&self) -> usize {
+        self.shard
+    }
+
+    /// One data-parallel training step on a whole batch: split its rows
+    /// into fixed micro-shards and run [`DataParallelTrainer::step_shards`].
+    /// Returns the same metrics vector the fused `train_step` returns.
+    pub fn step(
+        &self,
+        state: &mut TrainState,
+        x: &HostValue,
+        y: &HostValue,
+        hyper: &[f32],
+    ) -> Result<Vec<f32>> {
+        let nb = match x.shape() {
+            [rows, _] => *rows,
+            other => bail!("data-parallel step wants a 2-D x batch, got {other:?}"),
+        };
+        let shards: Vec<Batch> = data::shard_ranges(nb, self.shard)
+            .into_iter()
+            .map(|(lo, len)| slice_batch(x, y, lo, len))
+            .collect::<Result<_>>()?;
+        self.step_shards(state, &shards, hyper)
+    }
+
+    /// Like [`DataParallelTrainer::step`] on pre-assembled shard batches
+    /// (what the coordinator builds straight from a
+    /// [`crate::data::ShardPlan`], skipping the full-batch assembly).
+    /// Shards must arrive in plan order — that order is the reduction
+    /// order.
+    pub fn step_shards(
+        &self,
+        state: &mut TrainState,
+        shards: &[Batch],
+        hyper: &[f32],
+    ) -> Result<Vec<f32>> {
+        if shards.is_empty() {
+            bail!("data-parallel step on zero shards");
+        }
+        let be = self.be;
+        let cap = self.inner_cap;
+        let snapshot: &TrainState = state;
+        // `scoped_map` returns results in shard order no matter which
+        // replica finishes first, so the reduction below is deterministic.
+        let outs: Vec<Result<GradOut>> = self.pool.scoped_map(shards.len(), |i| {
+            linalg::with_thread_cap(cap, || be.grad_step(snapshot, &shards[i].x, &shards[i].y))
+        });
+        let mut parts = Vec::with_capacity(outs.len());
+        for o in outs {
+            parts.push(o?);
+        }
+        let total = reduce::tree_reduce(parts)?;
+        if total.examples == 0 {
+            bail!("data-parallel step saw zero examples");
+        }
+        let inv = 1.0 / total.examples as f32;
+        // scale the owned reduced buffer in place: no second allocation
+        // of the full gradient on the hot loop
+        let mut grad = total.grad_sum;
+        for v in &mut grad {
+            *v *= inv;
+        }
+        self.be.apply_update(state, grad, total.ce_sum * inv, total.correct * inv, hyper)
+    }
+}
+
+/// Rows `[lo, lo + len)` of an `(x, y)` image batch as an owned shard
+/// batch (the `HostValue`-level twin of `data::assemble_batch` on
+/// contiguous rows).
+fn slice_batch(x: &HostValue, y: &HostValue, lo: usize, len: usize) -> Result<Batch> {
+    let xt = x.as_f32()?;
+    let f = match xt.shape() {
+        [_, cols] => *cols,
+        other => bail!("shard slicing wants a 2-D f32 x batch, got {other:?}"),
+    };
+    let xs = xt.data()[lo * f..(lo + len) * f].to_vec();
+    let ys = match y {
+        HostValue::I32 { shape, data } if shape.len() == 1 => data[lo..lo + len].to_vec(),
+        _ => bail!("shard slicing wants i32 class-id labels"),
+    };
+    Ok(Batch {
+        x: HostValue::F32(Tensor::new(&[len, f], xs)?),
+        y: HostValue::I32 { shape: vec![len], data: ys },
+        size: len,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::{NativeBackend, SpecConfig};
+    use crate::util::rng::Rng;
+
+    fn batch(nb: usize, n: usize, classes: usize, seed: u64) -> (HostValue, HostValue) {
+        let mut rng = Rng::new(seed);
+        let x = Tensor::from_fn(&[nb, n], |_| rng.normal());
+        let y: Vec<i32> = (0..nb).map(|i| (i % classes) as i32).collect();
+        (HostValue::F32(x), HostValue::I32 { shape: vec![nb], data: y })
+    }
+
+    #[test]
+    fn slice_batch_rows() {
+        let (x, y) = batch(10, 4, 3, 1);
+        let b = slice_batch(&x, &y, 6, 3).unwrap();
+        assert_eq!(b.size, 3);
+        assert_eq!(b.x.shape(), &[3, 4]);
+        let full = x.as_f32().unwrap();
+        assert_eq!(b.x.as_f32().unwrap().data(), &full.data()[24..36]);
+        assert_eq!(b.y.i32_data().unwrap(), &[0, 1, 2]);
+    }
+
+    #[test]
+    fn new_rejects_zero_replicas_and_unknown_specs() {
+        let be = NativeBackend::with_default_specs();
+        assert!(DataParallelTrainer::new(&be, "qs_kpd", 0).is_err());
+        assert!(DataParallelTrainer::new(&be, "no_such_spec", 2).is_err());
+        assert!(DataParallelTrainer::new(&be, "qs_kpd", 2).is_ok());
+    }
+
+    #[test]
+    fn step_metrics_match_layout_and_are_replica_invariant() {
+        let cfg = SpecConfig::linear("dp_t", "kpd", 24, 6, 2, 4, 2, 16);
+        let be = NativeBackend::from_spec(cfg).unwrap();
+        let entry = be.spec("dp_t").unwrap().clone();
+        let (x, y) = batch(16, 24, 6, 5);
+        let run = |replicas: usize| {
+            let dp = DataParallelTrainer::new(&be, "dp_t", replicas)
+                .unwrap()
+                .with_shard_width(5); // 16 = 5 + 5 + 5 + 1: tail shard
+            let mut state = be.init_state("dp_t", 3).unwrap();
+            let mut metrics = Vec::new();
+            for _ in 0..4 {
+                metrics = dp.step(&mut state, &x, &y, &[0.01, 0.1]).unwrap();
+            }
+            (state, metrics)
+        };
+        let (s1, m1) = run(1);
+        let (s3, m3) = run(3);
+        assert_eq!(m1.len(), entry.metrics.len());
+        assert_eq!(m1, m3, "metrics diverged across replica counts");
+        for (n, t) in s1.param_names.iter().zip(&s1.params) {
+            assert_eq!(t.data(), s3.param(n).unwrap().data(), "param '{n}' diverged");
+        }
+        for (t1, t3) in s1.opt.iter().zip(&s3.opt) {
+            assert_eq!(t1.data(), t3.data(), "optimizer state diverged");
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Deterministic gradient reduction: the fixed-order pairwise tree.
+//!
+//! Shard gradients are per-example **sums** ([`GradOut`]), so combining
+//! two shards is pure addition. The tree combines adjacent pairs level by
+//! level — (0,1), (2,3), …, an odd tail passing through — until one
+//! accumulator remains. The tree *shape* depends only on the shard count,
+//! never on which replica produced a shard or in what order replicas
+//! finished, so the reduced gradient is bit-identical for every replica
+//! count R ≥ 1. (A naive left fold would work too; the pairwise tree
+//! keeps the f32 accumulation error O(log S) instead of O(S) and is the
+//! shape an actual multi-node all-reduce would use.)
+
+use anyhow::{bail, Result};
+
+use crate::backend::GradOut;
+
+/// Merge `b` into `a`: elementwise gradient sums plus the summed stats.
+fn accumulate(a: &mut GradOut, b: &GradOut) -> Result<()> {
+    if a.grad_sum.len() != b.grad_sum.len() {
+        bail!(
+            "gradient shards disagree on layout: {} vs {} values",
+            a.grad_sum.len(),
+            b.grad_sum.len()
+        );
+    }
+    for (x, y) in a.grad_sum.iter_mut().zip(&b.grad_sum) {
+        *x += y;
+    }
+    a.ce_sum += b.ce_sum;
+    a.correct += b.correct;
+    a.examples += b.examples;
+    Ok(())
+}
+
+/// Reduce shard gradients (in shard-index order) with the fixed-order
+/// pairwise tree. The input order **is** the reduction order — callers
+/// must pass shards in their plan order, which `ThreadPool::scoped_map`
+/// preserves regardless of completion order.
+pub fn tree_reduce(mut parts: Vec<GradOut>) -> Result<GradOut> {
+    if parts.is_empty() {
+        bail!("tree_reduce on zero shards");
+    }
+    while parts.len() > 1 {
+        let mut next = Vec::with_capacity((parts.len() + 1) / 2);
+        let mut it = parts.into_iter();
+        while let Some(mut a) = it.next() {
+            if let Some(b) = it.next() {
+                accumulate(&mut a, &b)?;
+            }
+            next.push(a);
+        }
+        parts = next;
+    }
+    Ok(parts.pop().expect("nonempty after reduction"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shard(vals: &[f32], ce: f32, correct: f32, n: usize) -> GradOut {
+        GradOut { grad_sum: vals.to_vec(), ce_sum: ce, correct, examples: n }
+    }
+
+    #[test]
+    fn reduces_sums_and_stats() {
+        for count in [1usize, 2, 3, 5, 8] {
+            let parts: Vec<GradOut> = (0..count)
+                .map(|i| shard(&[i as f32, 1.0], 0.5, 1.0, 4))
+                .collect();
+            let total = tree_reduce(parts).unwrap();
+            let want: f32 = (0..count).map(|i| i as f32).sum();
+            assert_eq!(total.grad_sum, vec![want, count as f32], "count {count}");
+            assert_eq!(total.examples, 4 * count);
+            assert_eq!(total.correct, count as f32);
+            assert!((total.ce_sum - 0.5 * count as f32).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn tree_shape_is_pairwise() {
+        // pick f32 values whose sum exposes association order: with
+        // a = 2^25, b = -2^25, c = 1, d = 1:
+        //   pairwise  ((a+b) + (c+d)) = 2
+        //   left fold (((a+b)+c)+d)   = 2 as well, but
+        //   skewed    (a + (b+(c+d))) = 0 because b+2 rounds to b
+        let (a, b, c, d) = (33554432.0f32, -33554432.0, 1.0, 1.0);
+        let total =
+            tree_reduce(vec![shard(&[a], 0.0, 0.0, 1), shard(&[b], 0.0, 0.0, 1),
+                             shard(&[c], 0.0, 0.0, 1), shard(&[d], 0.0, 0.0, 1)])
+                .unwrap();
+        assert_eq!(total.grad_sum[0], (a + b) + (c + d));
+        // the reduction is a pure function of the input order
+        let again =
+            tree_reduce(vec![shard(&[a], 0.0, 0.0, 1), shard(&[b], 0.0, 0.0, 1),
+                             shard(&[c], 0.0, 0.0, 1), shard(&[d], 0.0, 0.0, 1)])
+                .unwrap();
+        assert_eq!(total.grad_sum, again.grad_sum);
+    }
+
+    #[test]
+    fn layout_mismatch_and_empty_error() {
+        assert!(tree_reduce(vec![]).is_err());
+        let bad = vec![shard(&[1.0], 0.0, 0.0, 1), shard(&[1.0, 2.0], 0.0, 0.0, 1)];
+        assert!(tree_reduce(bad).is_err());
+    }
+}

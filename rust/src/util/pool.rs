@@ -58,8 +58,12 @@ impl ThreadPool {
     }
 
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.submit_boxed(Box::new(f));
+    }
+
+    fn submit_boxed(&self, job: Job) {
         let mut q = self.shared.queue.lock().unwrap();
-        q.push_back(Box::new(f));
+        q.push_back(job);
         self.shared.cv.notify_one();
     }
 
@@ -97,6 +101,73 @@ impl ThreadPool {
                     }
                 }
             }
+        }
+        if let Some(payload) = first_panic {
+            resume_unwind(payload);
+        }
+        results.into_iter().map(|v| v.expect("pool job dropped its result")).collect()
+    }
+
+    /// Like [`ThreadPool::map`], but the closure — and its results — may
+    /// borrow from the caller's stack (the data-parallel trainer runs
+    /// `grad_step(&state, &shard)` on the pool this way, with no cloning
+    /// and no per-step thread spawns).
+    ///
+    /// Panics in jobs propagate to the caller exactly like [`ThreadPool::map`].
+    pub fn scoped_map<'env, T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send + 'env,
+        F: Fn(usize) -> T + Sync + 'env,
+    {
+        type Panic = Box<dyn std::any::Any + Send + 'static>;
+        if n == 0 {
+            return Vec::new();
+        }
+        let (tx, rx) = mpsc::channel::<(usize, Result<T, Panic>)>();
+        {
+            let f = &f;
+            for i in 0..n {
+                let tx = tx.clone();
+                let job: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+                    let out = catch_unwind(AssertUnwindSafe(|| f(i)));
+                    // `tx.send` is the job's completion signal: nothing may
+                    // touch `f` (or anything else borrowing 'env) after it —
+                    // once the caller has received all n signals it may
+                    // return and invalidate those borrows. The only 'env
+                    // things alive past the send are the no-op drop of the
+                    // `&F` capture and `tx` itself (whose channel state is
+                    // Arc-owned and, post-receive, holds no 'env values).
+                    let _ = tx.send((i, out));
+                });
+                // SAFETY: only the lifetime is erased. Every *use* of the
+                // 'env borrows happens before the job's send (see above),
+                // and this function does not return before the receive
+                // loop below has observed all n sends (or, on pool
+                // shutdown, the channel's disconnect after unexecuted job
+                // closures were dropped), so no 'env borrow is dereferenced
+                // after 'env ends.
+                let job: Job = unsafe {
+                    std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(job)
+                };
+                self.submit_boxed(job);
+            }
+        }
+        drop(tx);
+        let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let mut first_panic: Option<Panic> = None;
+        let mut pending = n;
+        while pending > 0 {
+            match rx.recv() {
+                Ok((i, Ok(v))) => results[i] = Some(v),
+                Ok((_, Err(payload))) => {
+                    if first_panic.is_none() {
+                        first_panic = Some(payload);
+                    }
+                }
+                // all senders gone: every job is finished or was dropped
+                Err(_) => break,
+            }
+            pending -= 1;
         }
         if let Some(payload) = first_panic {
             resume_unwind(payload);
@@ -207,6 +278,35 @@ mod tests {
         // threads must still complete more jobs than 1 thread could block on
         let out = pool.map(32, |i| i * 2);
         assert_eq!(out, (0..32).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_map_borrows_stack_data() {
+        let pool = ThreadPool::new(4);
+        let data: Vec<u64> = (0..64).collect(); // stack-owned, not 'static
+        let doubled = pool.scoped_map(data.len(), |i| data[i] * 2);
+        assert_eq!(doubled, data.iter().map(|v| v * 2).collect::<Vec<_>>());
+        // results may borrow too
+        let refs = pool.scoped_map(4, |i| &data[i]);
+        assert_eq!(refs, vec![&0, &1, &2, &3]);
+    }
+
+    #[test]
+    fn scoped_map_surfaces_panics_like_map() {
+        let pool = ThreadPool::new(2);
+        let data = vec![1u32, 2, 3, 4];
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.scoped_map(data.len(), |i| {
+                if i == 2 {
+                    panic!("scoped job 2 exploded");
+                }
+                data[i]
+            })
+        }));
+        assert!(caught.is_err(), "panic must propagate");
+        // pool and borrows both survive
+        let out = pool.scoped_map(data.len(), |i| data[i] + 1);
+        assert_eq!(out, vec![2, 3, 4, 5]);
     }
 
     #[test]

@@ -304,6 +304,80 @@ fn prop_mlp_fd_gradients_both_hidden_layers_through_relu() {
     });
 }
 
+/// Gradient-accumulation linearity (ISSUE-5): `grad_step` on a full batch
+/// must equal the size-weighted fixed-order reduction of `grad_step` on
+/// its shards — for *random* shard splits, on every leaf of all three MLP
+/// slots. Shard gradients are per-example sums, so the reduction is the
+/// tree sum followed by one division by N; agreement is to f32
+/// re-association tolerance. This is the algebraic fact the data-parallel
+/// trainer's bit-exactness rests on.
+#[test]
+fn prop_grad_step_linear_in_shards_all_mlp_slots() {
+    use blocksparse::tensor::HostValue;
+    use blocksparse::train::reduce::tree_reduce;
+    prop_check("grad shard linearity", 8, |g| {
+        let widths = [12usize, 8, 6, 4];
+        let blocks = [
+            (*g.pick(&[1usize, 2, 4]), *g.pick(&[2usize, 3, 4])),
+            (*g.pick(&[1usize, 2]), *g.pick(&[2usize, 4])),
+            (*g.pick(&[1usize, 2]), *g.pick(&[2usize, 3])),
+        ];
+        let rank = g.usize_in(1, 3);
+        let nb = g.usize_in(6, 24);
+        let cfg = SpecConfig::mlp("lin_mlp", "kpd", &widths, &blocks, rank, nb);
+        let be = NativeBackend::from_spec(cfg.clone()).map_err(|e| e.to_string())?;
+        let state = be.init_state("lin_mlp", g.case as u32).map_err(|e| e.to_string())?;
+        let x = g.normal_vec(nb * widths[0]);
+        let y: Vec<i32> = (0..nb).map(|i| (i % 4) as i32).collect();
+        let wrap = |lo: usize, hi: usize| -> (HostValue, HostValue) {
+            (
+                HostValue::F32(
+                    Tensor::new(&[hi - lo, widths[0]], x[lo * widths[0]..hi * widths[0]].to_vec())
+                        .unwrap(),
+                ),
+                HostValue::I32 { shape: vec![hi - lo], data: y[lo..hi].to_vec() },
+            )
+        };
+
+        let (bx, by) = wrap(0, nb);
+        let full = be.grad_step(&state, &bx, &by).map_err(|e| e.to_string())?;
+        // every slot leaf is present in the flat buffer
+        let want_len: usize = be.grad_len("lin_mlp").map_err(|e| e.to_string())?;
+        prop_assert!(full.grad_sum.len() == want_len, "layout length");
+
+        // a random split into 1..=nb shards (random cut points)
+        let mut cuts = vec![0usize, nb];
+        for _ in 0..g.usize_in(0, 4) {
+            cuts.push(g.usize_in(1, nb.saturating_sub(1).max(1)));
+        }
+        cuts.sort_unstable();
+        cuts.dedup();
+        let mut parts = Vec::new();
+        for w in cuts.windows(2) {
+            let (sx, sy) = wrap(w[0], w[1]);
+            parts.push(be.grad_step(&state, &sx, &sy).map_err(|e| e.to_string())?);
+        }
+        let reduced = tree_reduce(parts).map_err(|e| e.to_string())?;
+        prop_assert!(reduced.examples == full.examples, "example count");
+        prop_assert!(
+            close(reduced.ce_sum, full.ce_sum, 1e-4, 1e-5),
+            "ce_sum {} vs {}",
+            reduced.ce_sum,
+            full.ce_sum
+        );
+        prop_assert!(reduced.correct == full.correct, "correct count must be exact");
+        let inv = 1.0 / nb as f32;
+        for (i, (a, b)) in full.grad_sum.iter().zip(&reduced.grad_sum).enumerate() {
+            let (ma, mb) = (a * inv, b * inv);
+            prop_assert!(
+                close(ma, mb, 1e-5, 1e-4),
+                "mean grad[{i}]: full {ma} vs sharded {mb} (splits {cuts:?})"
+            );
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_block_fro_invariant_under_block_permutation() {
     // permuting whole blocks permutes the norm grid (sum preserved)
