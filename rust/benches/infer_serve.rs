@@ -14,7 +14,7 @@
 
 use std::collections::BTreeMap;
 
-use blocksparse::backend::native::linalg;
+use blocksparse::backend::native::{linalg, simd};
 use blocksparse::bench::{json_arg, quick_bench, BenchStats, TableWriter};
 use blocksparse::infer::engine::{drive_synthetic, latency_summary, Engine, EngineOpts};
 use blocksparse::infer::{bsr, synth_block_sparse_weights, BsrLayer, BsrModel};
@@ -79,8 +79,8 @@ fn main() -> anyhow::Result<()> {
         let layer = BsrLayer::from_dense("fc", &w, m, n, m2, n2)?;
         // correctness cross-check before timing anything
         let dense_z = linalg::matmul_nt(&x, &w, nb, n, m);
-        let masked_z = linalg::block_sparse_matmul_nt(&x, &w, &mask, nb, m, n, m2, n2);
-        let bsr_z = bsr::bsr_forward(&x, nb, &layer);
+        let masked_z = linalg::block_sparse_matmul_nt(&x, &w, &mask, nb, m, n, m2, n2)?;
+        let bsr_z = bsr::bsr_forward(&x, nb, &layer)?;
         // tolerance covers f32 re-association over the 784-wide reduction
         assert!(max_diff(&dense_z, &masked_z) < 1e-2, "block-sparse kernel drifted");
         assert!(max_diff(&dense_z, &bsr_z) < 1e-2, "BSR kernel drifted");
@@ -90,12 +90,13 @@ fn main() -> anyhow::Result<()> {
             std::hint::black_box(linalg::matmul_nt(&x, &w, nb, n, m));
         });
         let bsm = quick_bench(&format!("infer.block_sparse.{tag}"), || {
-            std::hint::black_box(linalg::block_sparse_matmul_nt(
-                &x, &w, &mask, nb, m, n, m2, n2,
-            ));
+            std::hint::black_box(
+                linalg::block_sparse_matmul_nt(&x, &w, &mask, nb, m, n, m2, n2)
+                    .expect("block-sparse shapes"),
+            );
         });
         let bsr_s = quick_bench(&format!("infer.bsr.{tag}"), || {
-            std::hint::black_box(bsr::bsr_forward(&x, nb, &layer));
+            std::hint::black_box(bsr::bsr_forward(&x, nb, &layer).expect("bsr shapes"));
         });
         let speedup = dense.mean_ns / bsr_s.mean_ns;
         println!(
@@ -160,11 +161,13 @@ fn main() -> anyhow::Result<()> {
         o.insert("max_batch".to_string(), Json::Num(max_batch as f64));
         o.insert("clients".to_string(), Json::Num(clients as f64));
         o.insert("requests".to_string(), Json::Num(summary.count as f64));
-        o.insert("mean_ms".to_string(), Json::Num(summary.mean_ms));
-        o.insert("p50_ms".to_string(), Json::Num(summary.p50_ms));
-        o.insert("p95_ms".to_string(), Json::Num(summary.p95_ms));
-        o.insert("p99_ms".to_string(), Json::Num(summary.p99_ms));
-        o.insert("max_ms".to_string(), Json::Num(summary.max_ms));
+        // num_or_null: an empty sample summarizes to NaN fields, and RFC
+        // 8259 JSON has no NaN literal — nulls keep the file parseable
+        o.insert("mean_ms".to_string(), Json::num_or_null(summary.mean_ms));
+        o.insert("p50_ms".to_string(), Json::num_or_null(summary.p50_ms));
+        o.insert("p95_ms".to_string(), Json::num_or_null(summary.p95_ms));
+        o.insert("p99_ms".to_string(), Json::num_or_null(summary.p99_ms));
+        o.insert("max_ms".to_string(), Json::num_or_null(summary.max_ms));
         o.insert("throughput_rps".to_string(), Json::Num(rps));
         serve.insert(format!("b{max_batch}_c{clients}"), Json::Obj(o));
     }
@@ -172,6 +175,10 @@ fn main() -> anyhow::Result<()> {
 
     let mut root = BTreeMap::new();
     root.insert("backend".to_string(), Json::Str("native-cpu".to_string()));
+    root.insert(
+        "simd".to_string(),
+        Json::Str(simd::dispatched().label().to_string()),
+    );
     root.insert("kernels".to_string(), Json::Obj(kernels));
     root.insert("serve".to_string(), Json::Obj(serve));
     root.insert("gate".to_string(), Json::Obj(gate));

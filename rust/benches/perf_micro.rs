@@ -4,21 +4,29 @@
 //!  - backend.overhead     smallest eval round-trip (framework tax)
 //!  - data.batch.*         batch assembly throughput (host pipeline)
 //!  - tensor.*             host-side measurement ops (sparsity probes)
-//!  - native.matmul.*      the threaded native kernels: dense vs masked
-//!                         block-sparse vs packed BSR at 50/75/90% block
-//!                         sparsity — the §4 inference claim, measured
-//!                         (`benches/infer_serve.rs` is the full panel)
+//!  - native.matmul.*      the threaded native kernels: dense (nn/nt/tn)
+//!                         vs masked block-sparse vs packed BSR at
+//!                         50/75/90% block sparsity — the §4 inference
+//!                         claim, measured (`benches/infer_serve.rs` is
+//!                         the full panel). Every kernel is benched twice:
+//!                         `.scalar` pins the reference loops, and
+//!                         `.dispatched` runs whatever `simd::dispatched()`
+//!                         resolves to (AVX2/NEON when available,
+//!                         overridable via `BS_NATIVE_SIMD`).
 //!
 //! Specs the active backend cannot run are skipped, not failed.
 //!
 //! `--json <path>` additionally writes the stats as one JSON object per
-//! kernel (mean/p50/p95 ms + iters), e.g.
+//! kernel (mean/p50/p95 ms + iters) plus a root `simd` label and a `gate`
+//! object with the scalar→dispatched geomean speedup over the dense
+//! matmul trio, e.g.
 //! `cargo bench --bench perf_micro -- --json BENCH_native.json`, giving
 //! future PRs a machine-readable perf trajectory to diff against.
 
 use std::collections::BTreeMap;
 
 use blocksparse::backend::native::linalg;
+use blocksparse::backend::native::simd::{self, SimdKind};
 use blocksparse::backend::Backend;
 use blocksparse::bench::{json_arg, quick_bench, BenchStats, TableWriter};
 use blocksparse::coordinator::dataset_for;
@@ -28,22 +36,67 @@ use blocksparse::tensor::Tensor;
 use blocksparse::util::json::Json;
 use blocksparse::util::rng::Rng;
 
-fn write_json(path: &str, backend: &str, stats: &[BenchStats]) -> anyhow::Result<()> {
+fn write_json(
+    path: &str,
+    backend: &str,
+    simd_label: &str,
+    matmul_geomean: f64,
+    stats: &[BenchStats],
+) -> anyhow::Result<()> {
     let mut benches = BTreeMap::new();
     for s in stats {
         let mut o = BTreeMap::new();
-        o.insert("mean_ms".to_string(), Json::Num(s.mean_ns / 1e6));
-        o.insert("p50_ms".to_string(), Json::Num(s.p50_ns / 1e6));
-        o.insert("p95_ms".to_string(), Json::Num(s.p95_ns / 1e6));
+        o.insert("mean_ms".to_string(), Json::num_or_null(s.mean_ns / 1e6));
+        o.insert("p50_ms".to_string(), Json::num_or_null(s.p50_ns / 1e6));
+        o.insert("p95_ms".to_string(), Json::num_or_null(s.p95_ns / 1e6));
         o.insert("iters".to_string(), Json::Num(s.iters as f64));
         benches.insert(s.name.clone(), Json::Obj(o));
     }
+    let mut gate = BTreeMap::new();
+    gate.insert(
+        "matmul_geomean_speedup".to_string(),
+        Json::num_or_null(matmul_geomean),
+    );
+    gate.insert("min_geomean_when_simd".to_string(), Json::Num(1.5));
     let mut root = BTreeMap::new();
     root.insert("backend".to_string(), Json::Str(backend.to_string()));
+    root.insert("simd".to_string(), Json::Str(simd_label.to_string()));
+    root.insert("gate".to_string(), Json::Obj(gate));
     root.insert("benches".to_string(), Json::Obj(benches));
     std::fs::write(path, Json::Obj(root).to_string_pretty())?;
     println!("wrote {path} ({} kernels)", stats.len());
     Ok(())
+}
+
+/// Bench `run` under the pinned scalar kind and under the dispatched kind,
+/// pushing both (`<name>.scalar`, `<name>.dispatched`) onto `stats`, and
+/// return the scalar→dispatched mean-latency speedup. On scalar-only
+/// hosts both variants run the same loops and the speedup sits at ~1.0.
+fn bench_pair<F: FnMut(SimdKind)>(
+    stats: &mut Vec<BenchStats>,
+    name: &str,
+    kind: SimdKind,
+    mut run: F,
+) -> f64 {
+    let scalar = quick_bench(&format!("{name}.scalar"), || run(SimdKind::Scalar));
+    let disp = quick_bench(&format!("{name}.dispatched"), || run(kind));
+    let speedup = scalar.mean_ns / disp.mean_ns;
+    println!(
+        "{name}: scalar {:.3} ms, {} {:.3} ms ({speedup:.2}x)",
+        scalar.mean_ns / 1e6,
+        kind.label(),
+        disp.mean_ns / 1e6
+    );
+    stats.push(scalar);
+    stats.push(disp);
+    speedup
+}
+
+fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
 }
 
 fn main() -> anyhow::Result<()> {
@@ -118,40 +171,78 @@ fn main() -> anyhow::Result<()> {
     // The inference trajectory: the masked training matmul and the packed
     // BSR serving kernel against the dense path at 50/75/90% block
     // sparsity (the zeroed-block fraction; occupancy is the complement).
+    // Each kernel runs twice — pinned-scalar and dispatched — so the JSON
+    // records both the SIMD win and a drift baseline for scalar hosts.
+    let kind = simd::dispatched();
+    println!("SIMD dispatch: {}", kind.label());
+    let mut dense_speedups: Vec<f64> = Vec::new();
     {
         let mut rng = Rng::new(4);
         let (nb, m, n, m2, n2) = (64usize, 120usize, 400usize, 8usize, 16usize);
         let x: Vec<f32> = (0..nb * n).map(|_| rng.normal()).collect();
         let w: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
-        let dense = quick_bench("native.matmul.dense_64x400x120", || {
-            std::hint::black_box(linalg::matmul_nt(&x, &w, nb, n, m));
-        });
-        let dense_mean = dense.mean_ns;
-        stats.push(dense);
+        // nt — the forward X·Wᵀ layout
+        dense_speedups.push(bench_pair(
+            &mut stats,
+            "native.matmul.dense_64x400x120",
+            kind,
+            |k| {
+                std::hint::black_box(linalg::matmul_nt_with(k, &x, &w, nb, n, m));
+            },
+        ));
+        // nn — same macro shape against a pre-transposed W (the dX layout)
+        let mut wt = vec![0.0f32; n * m];
+        for i in 0..m {
+            for j in 0..n {
+                wt[j * m + i] = w[i * n + j];
+            }
+        }
+        dense_speedups.push(bench_pair(
+            &mut stats,
+            "native.matmul.nn_64x400x120",
+            kind,
+            |k| {
+                std::hint::black_box(linalg::matmul_nn_with(k, &x, &wt, nb, n, m));
+            },
+        ));
+        // tn — dW = dZᵀ·X (the gradient layout)
+        let dz: Vec<f32> = (0..nb * m).map(|_| rng.normal()).collect();
+        dense_speedups.push(bench_pair(
+            &mut stats,
+            "native.matmul.tn_120x64x400",
+            kind,
+            |k| {
+                std::hint::black_box(linalg::matmul_tn_with(k, &dz, &x, nb, m, n));
+            },
+        ));
         for sparsity in [0.50f64, 0.75, 0.90] {
             let (wm, mask) =
                 infer::synth_block_sparse_weights(&mut rng, m, n, m2, n2, 1.0 - sparsity);
             let tag = (sparsity * 100.0).round() as u32;
-            let sparse = quick_bench(&format!("native.matmul.block_sparse{tag}"), || {
-                std::hint::black_box(linalg::block_sparse_matmul_nt(
-                    &x, &wm, &mask, nb, m, n, m2, n2,
-                ));
-            });
-            let layer = infer::BsrLayer::from_dense("fc", &wm, m, n, m2, n2)?;
-            let bsr_s = quick_bench(&format!("native.matmul.bsr{tag}"), || {
-                std::hint::black_box(infer::bsr::bsr_forward(&x, nb, &layer));
-            });
-            println!(
-                "{tag}% block sparsity: block-sparse {:.2}x, BSR {:.2}x over dense \
-                 (flops model predicts {:.1}x)",
-                dense_mean / sparse.mean_ns,
-                dense_mean / bsr_s.mean_ns,
-                1.0 / (1.0 - sparsity)
+            bench_pair(
+                &mut stats,
+                &format!("native.matmul.block_sparse{tag}"),
+                kind,
+                |k| {
+                    std::hint::black_box(
+                        linalg::block_sparse_matmul_nt_with(k, &x, &wm, &mask, nb, m, n, m2, n2)
+                            .expect("block-sparse shapes"),
+                    );
+                },
             );
-            stats.push(sparse);
-            stats.push(bsr_s);
+            let layer = infer::BsrLayer::from_dense("fc", &wm, m, n, m2, n2)?;
+            bench_pair(&mut stats, &format!("native.matmul.bsr{tag}"), kind, |k| {
+                std::hint::black_box(
+                    infer::bsr::bsr_forward_with(k, &x, nb, &layer, false).expect("bsr shapes"),
+                );
+            });
         }
     }
+    let matmul_geo = geomean(&dense_speedups);
+    println!(
+        "dense matmul geomean speedup (scalar → {}): {matmul_geo:.2}x",
+        kind.label()
+    );
 
     let mut t = TableWriter::new("perf microbenches", &["bench", "mean ms", "p50 ms", "p95 ms", "/s"]);
     for s in &stats {
@@ -165,7 +256,7 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
     if let Some(path) = json_arg(&args, "BENCH_native.json") {
-        write_json(&path, &be.name(), &stats)?;
+        write_json(&path, &be.name(), kind.label(), matmul_geo, &stats)?;
     }
     Ok(())
 }

@@ -132,6 +132,10 @@ fn main() -> anyhow::Result<()> {
         root.insert("batch".to_string(), Json::Num(spec.batch as f64));
         root.insert("steps".to_string(), Json::Num(steps as f64));
         root.insert("threads".to_string(), Json::Num(threads as f64));
+        root.insert(
+            "simd".to_string(),
+            Json::Str(blocksparse::backend::native::simd::dispatched().label().to_string()),
+        );
         root.insert("rows".to_string(), Json::Obj(rows));
         root.insert("gate".to_string(), Json::Obj(gate));
         std::fs::write(&path, Json::Obj(root).to_string_pretty())?;

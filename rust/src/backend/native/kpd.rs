@@ -16,6 +16,7 @@
 use crate::flops::KpdDims;
 
 use super::linalg;
+use super::simd::{self, SimdKind};
 
 /// Regroup T (N·n1, m2) → T′ (n1, N·m2).
 fn regroup_t(t: &[f32], n_batch: usize, n1: usize, m2: usize) -> Vec<f32> {
@@ -48,6 +49,21 @@ pub fn forward(
     b: &[f32],
     d: KpdDims,
 ) -> (Vec<f32>, Vec<Vec<f32>>) {
+    forward_with(simd::active(), x, n_batch, s, a, b, d)
+}
+
+/// [`forward`] with an explicit SIMD kind threaded through both per-rank
+/// matmuls — the kind is resolved exactly once per KPD application.
+#[allow(clippy::too_many_arguments)]
+pub fn forward_with(
+    kind: SimdKind,
+    x: &[f32],
+    n_batch: usize,
+    s: &[f32],
+    a: &[f32],
+    b: &[f32],
+    d: KpdDims,
+) -> (Vec<f32>, Vec<Vec<f32>>) {
     let KpdDims { m1, n1, m2, n2, r } = d;
     let (m, n) = (m1 * m2, n1 * n2);
     debug_assert_eq!(x.len(), n_batch * n);
@@ -59,10 +75,10 @@ pub fn forward(
     for i in 0..r {
         let bi = &b[i * m2 * n2..(i + 1) * m2 * n2];
         // X′ (N·n1, n2) is the same buffer as X — contiguous regrouping
-        let t = linalg::matmul_nt(x, bi, n_batch * n1, n2, m2);
+        let t = linalg::matmul_nt_with(kind, x, bi, n_batch * n1, n2, m2);
         let tp = regroup_t(&t, n_batch, n1, m2);
         let c = had(s, &a[i * m1 * n1..(i + 1) * m1 * n1]);
-        let zc = linalg::matmul_nn(&c, &tp, m1, n1, n_batch * m2);
+        let zc = linalg::matmul_nn_with(kind, &c, &tp, m1, n1, n_batch * m2);
         for bb in 0..n_batch {
             for i1 in 0..m1 {
                 let src = &zc[i1 * n_batch * m2 + bb * m2..i1 * n_batch * m2 + (bb + 1) * m2];
@@ -98,7 +114,22 @@ pub fn backward(
     tprime: &[Vec<f32>],
     d: KpdDims,
 ) -> Grads {
-    backward_impl(x, n_batch, s, a, None, dz, tprime, d).0
+    backward_impl(simd::active(), x, n_batch, s, a, None, dz, tprime, d).0
+}
+
+/// [`backward`] with an explicit SIMD kind (see [`forward_with`]).
+#[allow(clippy::too_many_arguments)]
+pub fn backward_with(
+    kind: SimdKind,
+    x: &[f32],
+    n_batch: usize,
+    s: &[f32],
+    a: &[f32],
+    dz: &[f32],
+    tprime: &[Vec<f32>],
+    d: KpdDims,
+) -> Grads {
+    backward_impl(kind, x, n_batch, s, a, None, dz, tprime, d).0
 }
 
 /// Backward pass that also returns dX = dZ · W (N, n1·n2) — what a
@@ -117,12 +148,13 @@ pub fn backward_dx(
     tprime: &[Vec<f32>],
     d: KpdDims,
 ) -> (Grads, Vec<f32>) {
-    let (g, dx) = backward_impl(x, n_batch, s, a, Some(b), dz, tprime, d);
+    let (g, dx) = backward_impl(simd::active(), x, n_batch, s, a, Some(b), dz, tprime, d);
     (g, dx.expect("dx requested"))
 }
 
 #[allow(clippy::too_many_arguments)]
 fn backward_impl(
+    kind: SimdKind,
     x: &[f32],
     n_batch: usize,
     s: &[f32],
@@ -153,13 +185,13 @@ fn backward_impl(
         let ai = &a[i * m1 * n1..(i + 1) * m1 * n1];
         let c = had(s, ai);
         // dC (m1, n1) = dZ′ · T′ᵀ
-        let dc = linalg::matmul_nt(&dzp, &tprime[i], m1, n_batch * m2, n1);
+        let dc = linalg::matmul_nt_with(kind, &dzp, &tprime[i], m1, n_batch * m2, n1);
         for j in 0..m1 * n1 {
             ga[i * m1 * n1 + j] = dc[j] * s[j];
             gs[j] += dc[j] * ai[j];
         }
         // U′ (n1, N·m2) = Cᵀ · dZ′
-        let up = linalg::matmul_tn(&c, &dzp, m1, n1, n_batch * m2);
+        let up = linalg::matmul_tn_with(kind, &c, &dzp, m1, n1, n_batch * m2);
         // U″ (N·n1, m2)
         let mut u2 = vec![0.0f32; n_batch * n1 * m2];
         for bb in 0..n_batch {
@@ -170,12 +202,12 @@ fn backward_impl(
             }
         }
         // dB (m2, n2) = U″ᵀ · X′
-        let dbi = linalg::matmul_tn(&u2, x, n_batch * n1, m2, n2);
+        let dbi = linalg::matmul_tn_with(kind, &u2, x, n_batch * n1, m2, n2);
         gb[i * m2 * n2..(i + 1) * m2 * n2].copy_from_slice(&dbi);
         // dX′ (N·n1, n2) += U″ · B_i — same buffer layout as X (N, n)
         if let (Some(dx), Some(b)) = (dx.as_mut(), b) {
             let bi = &b[i * m2 * n2..(i + 1) * m2 * n2];
-            let dxi = linalg::matmul_nn(&u2, bi, n_batch * n1, m2, n2);
+            let dxi = linalg::matmul_nn_with(kind, &u2, bi, n_batch * n1, m2, n2);
             for (o, v) in dx.iter_mut().zip(&dxi) {
                 *o += v;
             }

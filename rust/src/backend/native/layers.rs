@@ -31,8 +31,9 @@ use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
 use super::{
-    block_fro, block_prox, kpd, linalg, mul_expand_mask, oidx, pidx, sgd_momentum,
-    soft_threshold, Hyper, LayerCfg, SpecConfig,
+    block_fro, block_prox, kpd, linalg, mul_expand_mask, oidx, param_pair_mut, pidx,
+    sgd_momentum, sgd_momentum_block_masked, sgd_momentum_l2, sgd_momentum_masked,
+    sgd_prox_l1, Hyper, LayerCfg, SpecConfig,
 };
 
 /// One step of the sequential stack.
@@ -116,7 +117,7 @@ fn linear_forward(
                     lc.n,
                     lc.m2,
                     lc.n2,
-                ),
+                )?,
                 Vec::new(),
             ))
         }
@@ -473,52 +474,78 @@ fn apply_slots(
                     h.lr,
                     mu,
                 );
-                // S: plain SGD + ℓ1 prox → exact zeros kill whole blocks
+                // S: plain SGD fused with the ℓ1 prox → exact zeros kill
+                // whole blocks
                 let si = pidx(state, &p(lc, "S"))?;
-                let sdata = state.params[si].data_mut();
-                for (pv, gv) in sdata.iter_mut().zip(&g.gs) {
-                    *pv -= h.lr * gv;
-                }
-                soft_threshold(sdata, h.lr * h.lam);
+                sgd_prox_l1(state.params[si].data_mut(), &g.gs, h.lr, h.lr * h.lam);
             }
-            LinGrads::Dense(mut gw) => {
+            LinGrads::Dense(gw) => {
                 let (m, n, m2, n2) = (lc.m, lc.n, lc.m2, lc.n2);
-                let w = state.param(&p(lc, "W"))?.data().to_vec();
-                match method {
-                    "elastic_gl" => {
+                // regularizer terms from the pre-update W via a shared
+                // borrow; masking/ridge sweeps are fused into the single
+                // momentum pass below (no W/mask clones)
+                {
+                    let w = state.param(&p(lc, "W"))?.data();
+                    if method == "elastic_gl" {
                         let wsq: f32 = w.iter().map(|v| v * v).sum();
                         reg += 0.5 * h.lam2 * wsq;
-                        for (gv, wv) in gw.iter_mut().zip(&w) {
-                            *gv += h.lam2 * wv;
-                        }
                     }
-                    "rigl_block" => {
-                        // dense-gradient norms first (the growth signal),
-                        // then mask the applied gradient
-                        gnorm_tail.extend(block_fro(&gw, m, n, m2, n2));
-                        let mask = state.param(&p(lc, "mask"))?.data().to_vec();
-                        mul_expand_mask(&mut gw, &mask, m, n, m2, n2);
+                    if method == "group_lasso" || method == "elastic_gl" {
+                        let weight = h.lam * ((m2 * n2) as f32).sqrt();
+                        reg += weight * block_fro(w, m, n, m2, n2).iter().sum::<f32>();
                     }
-                    "iter_prune" => {
-                        let emask = state.param(&p(lc, "emask"))?.data().to_vec();
-                        for (gv, mv) in gw.iter_mut().zip(&emask) {
-                            *gv *= mv;
-                        }
-                    }
-                    _ => {}
                 }
-                if method == "group_lasso" || method == "elastic_gl" {
-                    let weight = h.lam * ((m2 * n2) as f32).sqrt();
-                    reg += weight * block_fro(&w, m, n, m2, n2).iter().sum::<f32>();
+                if method == "rigl_block" {
+                    // dense-gradient norms (the growth signal) come from
+                    // the unmasked gradient
+                    gnorm_tail.extend(block_fro(&gw, m, n, m2, n2));
                 }
                 let (wi, wvi) = (pidx(state, &p(lc, "W"))?, oidx(state, &p(lc, "W.m"))?);
-                sgd_momentum(
-                    state.params[wi].data_mut(),
-                    state.opt[wvi].data_mut(),
-                    &gw,
-                    h.lr,
-                    mu,
-                );
+                match method {
+                    "elastic_gl" => sgd_momentum_l2(
+                        state.params[wi].data_mut(),
+                        state.opt[wvi].data_mut(),
+                        &gw,
+                        h.lr,
+                        mu,
+                        h.lam2,
+                    ),
+                    "rigl_block" => {
+                        let mi = pidx(state, &p(lc, "mask"))?;
+                        let (wt, mt) = param_pair_mut(&mut state.params, wi, mi);
+                        sgd_momentum_block_masked(
+                            wt.data_mut(),
+                            state.opt[wvi].data_mut(),
+                            &gw,
+                            mt.data(),
+                            m,
+                            n,
+                            m2,
+                            n2,
+                            h.lr,
+                            mu,
+                        );
+                    }
+                    "iter_prune" => {
+                        let ei = pidx(state, &p(lc, "emask"))?;
+                        let (wt, et) = param_pair_mut(&mut state.params, wi, ei);
+                        sgd_momentum_masked(
+                            wt.data_mut(),
+                            state.opt[wvi].data_mut(),
+                            &gw,
+                            et.data(),
+                            h.lr,
+                            mu,
+                        );
+                    }
+                    _ => sgd_momentum(
+                        state.params[wi].data_mut(),
+                        state.opt[wvi].data_mut(),
+                        &gw,
+                        h.lr,
+                        mu,
+                    ),
+                }
                 if method == "group_lasso" || method == "elastic_gl" {
                     let kappa = h.lr * h.lam * ((m2 * n2) as f32).sqrt();
                     block_prox(state.params[wi].data_mut(), m, n, m2, n2, kappa);

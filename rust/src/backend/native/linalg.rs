@@ -1,15 +1,18 @@
-//! Multi-threaded cache-blocked f32 kernels for the native backend.
+//! Multi-threaded f32 kernels for the native backend.
 //!
 //! Everything is row-major slices + explicit dims; parallelism is plain
 //! `std::thread::scope` chunking over output rows (no rayon in the offline
 //! cache). The inner loops are laid out so the streamed operand is read
-//! contiguously (ikj for A·B, dot-product form for A·Bᵀ), with the k
-//! dimension tiled to keep the hot B rows in cache.
+//! contiguously (k-unrolled axpy for A·B, register-blocked 1×4 dot panels
+//! for A·Bᵀ) and run through the runtime-dispatched SIMD microkernels in
+//! [`super::simd`] — every public kernel has a `*_with(kind, ..)` twin
+//! taking an explicit [`SimdKind`], used by the parity tests and the
+//! scalar-vs-dispatched bench variants. The kind is resolved once per
+//! call, so results depend only on (inputs, kind): never on thread count.
 
 use anyhow::{bail, Result};
 
-/// k-dimension tile: 256 f32 = 1 KiB per streamed row slice.
-const K_TILE: usize = 256;
+use super::simd::{self, SimdKind};
 
 /// Work (in multiply-adds) below which threading is pure overhead: scoped
 /// threads are spawned per call, so the cutoff sits well above the spawn
@@ -21,7 +24,9 @@ fn max_threads() -> usize {
     *CACHED.get_or_init(|| {
         if let Ok(v) = std::env::var("BS_NATIVE_THREADS") {
             if let Ok(n) = v.parse::<usize>() {
-                return n.max(1);
+                // same 1..=16 bound as autodetect: a stray huge value must
+                // not spawn thousands of scoped threads per kernel call
+                return n.clamp(1, 16);
             }
         }
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(1, 16)
@@ -100,23 +105,40 @@ pub(crate) fn threads_for(work: usize) -> usize {
 
 /// C(m,n) = A(m,k) · B(k,n).
 pub fn matmul_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    matmul_nn_with(simd::active(), a, b, m, k, n)
+}
+
+/// [`matmul_nn`] with an explicit SIMD kind. The k loop streams B rows
+/// through 2-deep fused axpy sweeps — no zero-skip on `a[i,k]`: a zero
+/// coefficient against a non-finite B entry must still produce NaN
+/// (0·∞ = NaN), and the branch defeats vectorization anyway.
+pub fn matmul_nn_with(
+    kind: SimdKind,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     let mut out = vec![0.0f32; m * n];
     par_rows(&mut out, m, n, threads_for(m * k * n), |i, row| {
         let arow = &a[i * k..(i + 1) * k];
-        for k0 in (0..k).step_by(K_TILE) {
-            let k1 = (k0 + K_TILE).min(k);
-            for kk in k0..k1 {
-                let av = arow[kk];
-                if av == 0.0 {
-                    continue;
-                }
-                let brow = &b[kk * n..(kk + 1) * n];
-                for (o, &bv) in row.iter_mut().zip(brow) {
-                    *o += av * bv;
-                }
-            }
+        let mut kk = 0;
+        while kk + 2 <= k {
+            simd::axpy2(
+                kind,
+                arow[kk],
+                &b[kk * n..(kk + 1) * n],
+                arow[kk + 1],
+                &b[(kk + 1) * n..(kk + 2) * n],
+                row,
+            );
+            kk += 2;
+        }
+        if kk < k {
+            simd::axpy(kind, arow[kk], &b[kk * n..(kk + 1) * n], row);
         }
     });
     out
@@ -124,18 +146,41 @@ pub fn matmul_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32>
 
 /// C(m,n) = A(m,k) · B(n,k)ᵀ — both operands read contiguously (dot form).
 pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    matmul_nt_with(simd::active(), a, b, m, k, n)
+}
+
+/// [`matmul_nt`] with an explicit SIMD kind: 1×4 register-blocked dot
+/// panels (one A-row load feeds four B-row accumulators), scalar-kind
+/// bit-identical to four independent dots.
+pub fn matmul_nt_with(
+    kind: SimdKind,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
     let mut out = vec![0.0f32; m * n];
     par_rows(&mut out, m, n, threads_for(m * k * n), |i, row| {
         let arow = &a[i * k..(i + 1) * k];
-        for (j, o) in row.iter_mut().enumerate() {
-            let brow = &b[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for (av, bv) in arow.iter().zip(brow) {
-                acc += av * bv;
-            }
-            *o = acc;
+        let mut j = 0;
+        while j + 4 <= n {
+            let d = simd::dot4(
+                kind,
+                arow,
+                &b[j * k..(j + 1) * k],
+                &b[(j + 1) * k..(j + 2) * k],
+                &b[(j + 2) * k..(j + 3) * k],
+                &b[(j + 3) * k..(j + 4) * k],
+            );
+            row[j..j + 4].copy_from_slice(&d);
+            j += 4;
+        }
+        while j < n {
+            row[j] = simd::dot(kind, arow, &b[j * k..(j + 1) * k]);
+            j += 1;
         }
     });
     out
@@ -143,19 +188,38 @@ pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32>
 
 /// C(m,n) = A(k,m)ᵀ · B(k,n) — the gradient-shaped product (e.g. dW = dZᵀX).
 pub fn matmul_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
+    matmul_tn_with(simd::active(), a, b, k, m, n)
+}
+
+/// [`matmul_tn`] with an explicit SIMD kind. Same fused-axpy core as
+/// [`matmul_nn_with`] with strided A loads; the old `a == 0.0` skip is
+/// gone for the same NaN-propagation reason.
+pub fn matmul_tn_with(
+    kind: SimdKind,
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    m: usize,
+    n: usize,
+) -> Vec<f32> {
     debug_assert_eq!(a.len(), k * m);
     debug_assert_eq!(b.len(), k * n);
     let mut out = vec![0.0f32; m * n];
     par_rows(&mut out, m, n, threads_for(m * k * n), |i, row| {
-        for kk in 0..k {
-            let av = a[kk * m + i];
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[kk * n..(kk + 1) * n];
-            for (o, &bv) in row.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
+        let mut kk = 0;
+        while kk + 2 <= k {
+            simd::axpy2(
+                kind,
+                a[kk * m + i],
+                &b[kk * n..(kk + 1) * n],
+                a[(kk + 1) * m + i],
+                &b[(kk + 1) * n..(kk + 2) * n],
+                row,
+            );
+            kk += 2;
+        }
+        if kk < k {
+            simd::axpy(kind, a[kk * m + i], &b[kk * n..(kk + 1) * n], row);
         }
     });
     out
@@ -163,6 +227,9 @@ pub fn matmul_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32>
 
 /// Z(N,m) = X(N,n) · Wᵀ skipping whole (m2×n2) blocks where the (m1,n1)
 /// `mask` is zero — the baselines' block-sparse inference/training matmul.
+/// The mask skip is *semantic* (a masked block contributes exactly nothing,
+/// whatever W holds there) and stays; shape validation is real, not
+/// debug-only: a non-dividing block shape would silently mis-bin the mask.
 #[allow(clippy::too_many_arguments)]
 pub fn block_sparse_matmul_nt(
     x: &[f32],
@@ -173,11 +240,38 @@ pub fn block_sparse_matmul_nt(
     n: usize,
     m2: usize,
     n2: usize,
-) -> Vec<f32> {
-    debug_assert_eq!(x.len(), n_batch * n);
-    debug_assert_eq!(w.len(), m * n);
-    let n1 = n / n2;
-    debug_assert_eq!(mask.len(), (m / m2) * n1);
+) -> Result<Vec<f32>> {
+    block_sparse_matmul_nt_with(simd::active(), x, w, mask, n_batch, m, n, m2, n2)
+}
+
+/// [`block_sparse_matmul_nt`] with an explicit SIMD kind: each surviving
+/// block contributes one n2-wide dot, accumulated block-major per output
+/// element (replica-count-independent by construction).
+#[allow(clippy::too_many_arguments)]
+pub fn block_sparse_matmul_nt_with(
+    kind: SimdKind,
+    x: &[f32],
+    w: &[f32],
+    mask: &[f32],
+    n_batch: usize,
+    m: usize,
+    n: usize,
+    m2: usize,
+    n2: usize,
+) -> Result<Vec<f32>> {
+    if m2 == 0 || n2 == 0 || m % m2 != 0 || n % n2 != 0 {
+        bail!("block shape ({m2},{n2}) does not tile weight ({m},{n})");
+    }
+    let (m1, n1) = (m / m2, n / n2);
+    if x.len() != n_batch * n || w.len() != m * n || mask.len() != m1 * n1 {
+        bail!(
+            "block_sparse_matmul_nt shape mismatch: x {} (want {n_batch}·{n}), \
+             w {} (want {m}·{n}), mask {} (want {m1}·{n1})",
+            x.len(),
+            w.len(),
+            mask.len()
+        );
+    }
     let mut out = vec![0.0f32; n_batch * m];
     par_rows(&mut out, n_batch, m, threads_for(n_batch * m * n), |b, row| {
         let xrow = &x[b * n..(b + 1) * n];
@@ -190,14 +284,12 @@ pub fn block_sparse_matmul_nt(
                     continue;
                 }
                 let lo = j1 * n2;
-                for j2 in 0..n2 {
-                    acc += xrow[lo + j2] * wrow[lo + j2];
-                }
+                acc += simd::dot(kind, &xrow[lo..lo + n2], &wrow[lo..lo + n2]);
             }
             *o = acc;
         }
     });
-    out
+    Ok(out)
 }
 
 /// In-place ReLU: a ← max(a, 0). The multi-layer stack's activation.
@@ -345,7 +437,7 @@ mod tests {
         let w = rand_vec(&mut rng, m * n);
         // zero block (0,1) and (1,0)
         let mask = vec![1.0, 0.0, 0.0, 1.0];
-        let got = block_sparse_matmul_nt(&x, &w, &mask, nb, m, n, m2, n2);
+        let got = block_sparse_matmul_nt(&x, &w, &mask, nb, m, n, m2, n2).unwrap();
         // reference: explicitly mask W then dense-nt
         let mut wm = w.clone();
         for i in 0..m {
@@ -357,6 +449,91 @@ mod tests {
         }
         let want = matmul_nt(&x, &wm, nb, n, m);
         assert!(max_diff(&got, &want) < 1e-5);
+    }
+
+    /// Regression for the old `if av == 0.0 { continue }` zero-skips: a
+    /// zero coefficient against ∞ must produce NaN in the output, in
+    /// every matmul variant (0·∞ = NaN — a diverged run must not be
+    /// silently masked back to finite numbers).
+    #[test]
+    fn nan_propagates_through_all_matmul_variants() {
+        let (m, k, n) = (3, 4, 5);
+        // A has an explicit zero where B holds ∞ in the shared k slot.
+        let mut a = vec![1.0f32; m * k];
+        a[2] = 0.0; // A[0, 2] = 0
+        let mut b = vec![1.0f32; k * n];
+        b[2 * n] = f32::INFINITY; // B[2, 0] = ∞
+        let nn = matmul_nn(&a, &b, m, k, n);
+        assert!(nn[0].is_nan(), "nn: 0·∞ must be NaN, got {}", nn[0]);
+        assert!(nn[1].is_finite(), "nn: untouched column stays finite");
+
+        // nt: B stored (n, k); poison B[0, 2] so row 0 · col 0 hits 0·∞.
+        let mut bt = vec![1.0f32; n * k];
+        bt[2] = f32::INFINITY;
+        let nt = matmul_nt(&a, &bt, m, k, n);
+        assert!(nt[0].is_nan(), "nt: 0·∞ must be NaN, got {}", nt[0]);
+        assert!(nt[1].is_finite(), "nt");
+
+        // tn: A stored (k, m); A[2, 0] = 0 meets B[2, 0] = ∞.
+        let mut at = vec![1.0f32; k * m];
+        at[2 * m] = 0.0;
+        let tn = matmul_tn(&at, &b, k, m, n);
+        assert!(tn[0].is_nan(), "tn: 0·∞ must be NaN, got {}", tn[0]);
+        assert!(tn[1].is_finite(), "tn");
+
+        // block-sparse: an *unmasked* block with 0·∞ inside must go NaN
+        // (the mask skip is semantic and may still drop whole blocks).
+        let (nb, bm, bn, m2, n2) = (2usize, 2usize, 4usize, 1usize, 2usize);
+        let mut x = vec![1.0f32; nb * bn];
+        x[0] = 0.0;
+        let mut w = vec![1.0f32; bm * bn];
+        w[0] = f32::INFINITY;
+        let mask = vec![1.0; (bm / m2) * (bn / n2)];
+        let bs = block_sparse_matmul_nt(&x, &w, &mask, nb, bm, bn, m2, n2).unwrap();
+        assert!(bs[0].is_nan(), "block_sparse: 0·∞ must be NaN, got {}", bs[0]);
+        // ... but a masked block hides the ∞ entirely
+        let mut mask2 = mask;
+        mask2[0] = 0.0;
+        let bs2 = block_sparse_matmul_nt(&x, &w, &mask2, nb, bm, bn, m2, n2).unwrap();
+        assert!(bs2[0].is_finite(), "masked block must not leak its ∞");
+    }
+
+    /// The debug-only shape asserts are now real validation: non-dividing
+    /// block shapes and mismatched buffer lengths must error in release
+    /// builds instead of mis-binning the mask or indexing out of bounds.
+    #[test]
+    fn block_sparse_rejects_bad_shapes() {
+        let x = vec![0.0f32; 2 * 8];
+        let w = vec![0.0f32; 4 * 8];
+        let mask = vec![1.0f32; 2 * 2];
+        // m2 does not divide m
+        assert!(block_sparse_matmul_nt(&x, &w, &mask, 2, 4, 8, 3, 4).is_err());
+        // n2 does not divide n
+        assert!(block_sparse_matmul_nt(&x, &w, &mask, 2, 4, 8, 2, 5).is_err());
+        // zero block edge
+        assert!(block_sparse_matmul_nt(&x, &w, &mask, 2, 4, 8, 0, 4).is_err());
+        // wrong x / w / mask lengths
+        assert!(block_sparse_matmul_nt(&x[..15], &w, &mask, 2, 4, 8, 2, 4).is_err());
+        assert!(block_sparse_matmul_nt(&x, &w[..31], &mask, 2, 4, 8, 2, 4).is_err());
+        assert!(block_sparse_matmul_nt(&x, &w, &mask[..3], 2, 4, 8, 2, 4).is_err());
+        // and the happy path still goes through
+        assert!(block_sparse_matmul_nt(&x, &w, &mask, 2, 4, 8, 2, 4).is_ok());
+    }
+
+    /// Explicit-kind wrappers agree with the dispatched entry points under
+    /// tolerance (bitwise when the host dispatches scalar); exhaustive
+    /// cross-kind parity lives in tests/simd.rs.
+    #[test]
+    fn explicit_kind_matches_dispatched() {
+        let mut rng = Rng::new(21);
+        let (m, k, n) = (7, 33, 9);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let bt = rand_vec(&mut rng, n * k);
+        let kind = simd::active();
+        assert_eq!(matmul_nn(&a, &b, m, k, n), matmul_nn_with(kind, &a, &b, m, k, n));
+        assert_eq!(matmul_nt(&a, &bt, m, k, n), matmul_nt_with(kind, &a, &bt, m, k, n));
+        assert_eq!(matmul_tn(&b, &b, k, n, n), matmul_tn_with(kind, &b, &b, k, n, n));
     }
 
     #[test]

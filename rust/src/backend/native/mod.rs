@@ -32,6 +32,7 @@ pub mod kpd;
 pub mod layers;
 pub mod linalg;
 pub mod pattern;
+pub mod simd;
 
 use std::collections::BTreeMap;
 
@@ -632,6 +633,88 @@ fn sgd_momentum(p: &mut [f32], v: &mut [f32], g: &[f32], lr: f32, mu: f32) {
     }
 }
 
+// Fused update passes: each helper below folds what used to be a separate
+// whole-leaf sweep (gradient masking / ridge term / prox) into the single
+// optimizer sweep. Every one keeps the exact per-element arithmetic
+// *sequence* of the old two-sweep code, so results are bit-identical —
+// pinned by `fused_updates_match_two_sweep_reference` below.
+
+/// p ← prox_{t·‖·‖₁}(p − lr·g): plain SGD fused with the elementwise
+/// soft-threshold (exact zeros) — the S-leaf update of every KPD path.
+fn sgd_prox_l1(p: &mut [f32], g: &[f32], lr: f32, t: f32) {
+    if t <= 0.0 {
+        for (pi, gi) in p.iter_mut().zip(g) {
+            *pi -= lr * gi;
+        }
+        return;
+    }
+    for (pi, gi) in p.iter_mut().zip(g) {
+        let v = *pi - lr * gi;
+        *pi = v.signum() * (v.abs() - t).max(0.0);
+    }
+}
+
+/// [`sgd_momentum`] with the elastic ridge term λ₂·p folded into the
+/// gradient (reads the pre-update p, like the old separate g-sweep).
+fn sgd_momentum_l2(p: &mut [f32], v: &mut [f32], g: &[f32], lr: f32, mu: f32, lam2: f32) {
+    for ((pi, vi), gi) in p.iter_mut().zip(v.iter_mut()).zip(g) {
+        *vi = mu * *vi + (gi + lam2 * *pi);
+        *pi -= lr * *vi;
+    }
+}
+
+/// [`sgd_momentum`] with an elementwise gradient mask (iter_prune):
+/// g ⊙ mask feeds the momentum, no separate masking sweep or mask clone.
+fn sgd_momentum_masked(p: &mut [f32], v: &mut [f32], g: &[f32], mask: &[f32], lr: f32, mu: f32) {
+    for (((pi, vi), gi), mv) in p.iter_mut().zip(v.iter_mut()).zip(g).zip(mask) {
+        *vi = mu * *vi + gi * mv;
+        *pi -= lr * *vi;
+    }
+}
+
+/// [`sgd_momentum`] with an (m2×n2) block mask expanded on the fly
+/// (rigl_block): replaces `mul_expand_mask` + momentum, and with it the
+/// m·n-sized mask expansion and the mask `.to_vec()` clone.
+#[allow(clippy::too_many_arguments)]
+fn sgd_momentum_block_masked(
+    p: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    mask: &[f32],
+    m: usize,
+    n: usize,
+    m2: usize,
+    n2: usize,
+    lr: f32,
+    mu: f32,
+) {
+    let n1 = n / n2;
+    for i in 0..m {
+        let mrow = &mask[(i / m2) * n1..(i / m2 + 1) * n1];
+        let prow = &mut p[i * n..(i + 1) * n];
+        let vrow = &mut v[i * n..(i + 1) * n];
+        let grow = &g[i * n..(i + 1) * n];
+        for (j, ((pi, vi), gi)) in prow.iter_mut().zip(vrow.iter_mut()).zip(grow).enumerate() {
+            *vi = mu * *vi + gi * mrow[j / n2];
+            *pi -= lr * *vi;
+        }
+    }
+}
+
+/// Simultaneous `&mut` to param `i` and `&` to param `j` (i ≠ j) — lets
+/// the masked updates above read a mask leaf while mutating W, instead of
+/// cloning the mask out of the state.
+fn param_pair_mut(params: &mut [Tensor], i: usize, j: usize) -> (&mut Tensor, &Tensor) {
+    debug_assert_ne!(i, j);
+    if i < j {
+        let (lo, hi) = params.split_at_mut(j);
+        (&mut lo[i], &hi[0])
+    } else {
+        let (lo, hi) = params.split_at_mut(i);
+        (&mut hi[0], &lo[j])
+    }
+}
+
 /// Undo `softmax_ce`'s 1/N scaling on dZ so every gradient chained from
 /// it becomes a per-example *sum* — the unit the data-parallel tree
 /// reduction combines (`backend::GradOut`).
@@ -668,16 +751,6 @@ pub fn grad_layout(cfg: &SpecConfig) -> Vec<(String, usize)> {
         ];
     }
     vec![("fc.W".to_string(), cfg.out_dim * cfg.in_dim)]
-}
-
-/// Elementwise soft-threshold: the prox of t·‖·‖₁ (produces exact zeros).
-fn soft_threshold(xs: &mut [f32], t: f32) {
-    if t <= 0.0 {
-        return;
-    }
-    for v in xs.iter_mut() {
-        *v = v.signum() * (v.abs() - t).max(0.0);
-    }
 }
 
 /// Per-block Frobenius norms on an (m2×n2) grid — the shared tensor-layer
@@ -788,7 +861,7 @@ impl NativeBackend {
             "rigl_block" => {
                 let w = state.param("fc.W")?;
                 let mask = state.param("fc.mask")?;
-                Ok(linalg::block_sparse_matmul_nt(
+                linalg::block_sparse_matmul_nt(
                     x,
                     w.data(),
                     mask.data(),
@@ -797,7 +870,7 @@ impl NativeBackend {
                     n,
                     cfg.m2,
                     cfg.n2,
-                ))
+                )
             }
             "iter_prune" => {
                 let w = state.param("fc.W")?;
@@ -898,13 +971,9 @@ impl NativeBackend {
             h.lr,
             mu,
         );
-        // S: plain SGD step + the ℓ1 prox (soft-threshold) → exact zeros
+        // S: plain SGD step fused with the ℓ1 prox → exact zeros
         let si = pidx(state, "fc.S")?;
-        let sdata = state.params[si].data_mut();
-        for (p, gi) in sdata.iter_mut().zip(gs) {
-            *p -= h.lr * gi;
-        }
-        soft_threshold(sdata, h.lr * h.lam);
+        sgd_prox_l1(state.params[si].data_mut(), gs, h.lr, h.lr * h.lam);
 
         let loss = ce_mean + h.lam * s_l1;
         Ok(vec![loss, ce_mean, acc_frac, s_l1])
@@ -955,7 +1024,7 @@ impl NativeBackend {
         &self,
         ns: &NativeSpec,
         state: &mut TrainState,
-        mut dw: Vec<f32>,
+        dw: Vec<f32>,
         ce_mean: f32,
         acc_frac: f32,
         h: &Hyper,
@@ -963,46 +1032,76 @@ impl NativeBackend {
         let cfg = &ns.cfg;
         let (m, n, m2, n2) = (cfg.out_dim, cfg.in_dim, cfg.m2, cfg.n2);
         let method = cfg.method.as_str();
-        let w = state.param("fc.W")?.data().to_vec();
+        let mu = cfg.momentum;
 
+        // Regularizer terms read the *pre-update* W through a shared
+        // borrow — the old W clone is gone; the mask/ridge sweeps are
+        // fused into the momentum update below.
         let mut reg = 0.0f32;
-        let mut gnorm_tail: Vec<f32> = Vec::new();
-        match method {
-            "elastic_gl" => {
+        {
+            let w = state.param("fc.W")?.data();
+            if method == "elastic_gl" {
                 let wsq: f32 = w.iter().map(|v| v * v).sum();
                 reg += 0.5 * h.lam2 * wsq;
-                for (g, wv) in dw.iter_mut().zip(&w) {
-                    *g += h.lam2 * wv;
-                }
             }
-            "rigl_block" => {
-                // dense-gradient block norms first (the growth signal),
-                // then mask the applied gradient to the active blocks
-                gnorm_tail = block_fro(&dw, m, n, m2, n2);
-                let mask = state.param("fc.mask")?.data().to_vec();
-                mul_expand_mask(&mut dw, &mask, m, n, m2, n2);
+            if method == "group_lasso" || method == "elastic_gl" {
+                let weight = h.lam * ((m2 * n2) as f32).sqrt();
+                reg += weight * block_fro(w, m, n, m2, n2).iter().sum::<f32>();
             }
-            "iter_prune" => {
-                let emask = state.param("fc.emask")?.data().to_vec();
-                for (g, mv) in dw.iter_mut().zip(&emask) {
-                    *g *= mv;
-                }
-            }
-            _ => {}
         }
-        if method == "group_lasso" || method == "elastic_gl" {
-            let weight = h.lam * ((m2 * n2) as f32).sqrt();
-            reg += weight * block_fro(&w, m, n, m2, n2).iter().sum::<f32>();
+        // dense-gradient block norms (the RigL growth signal) come from
+        // the *unmasked* gradient, so they are taken before the update
+        let mut gnorm_tail: Vec<f32> = Vec::new();
+        if method == "rigl_block" {
+            gnorm_tail = block_fro(&dw, m, n, m2, n2);
         }
 
         let (wi, wvi) = (pidx(state, "fc.W")?, oidx(state, "fc.W.m")?);
-        sgd_momentum(
-            state.params[wi].data_mut(),
-            state.opt[wvi].data_mut(),
-            &dw,
-            h.lr,
-            cfg.momentum,
-        );
+        match method {
+            "elastic_gl" => sgd_momentum_l2(
+                state.params[wi].data_mut(),
+                state.opt[wvi].data_mut(),
+                &dw,
+                h.lr,
+                mu,
+                h.lam2,
+            ),
+            "rigl_block" => {
+                let mi = pidx(state, "fc.mask")?;
+                let (wt, mt) = param_pair_mut(&mut state.params, wi, mi);
+                sgd_momentum_block_masked(
+                    wt.data_mut(),
+                    state.opt[wvi].data_mut(),
+                    &dw,
+                    mt.data(),
+                    m,
+                    n,
+                    m2,
+                    n2,
+                    h.lr,
+                    mu,
+                );
+            }
+            "iter_prune" => {
+                let ei = pidx(state, "fc.emask")?;
+                let (wt, et) = param_pair_mut(&mut state.params, wi, ei);
+                sgd_momentum_masked(
+                    wt.data_mut(),
+                    state.opt[wvi].data_mut(),
+                    &dw,
+                    et.data(),
+                    h.lr,
+                    mu,
+                );
+            }
+            _ => sgd_momentum(
+                state.params[wi].data_mut(),
+                state.opt[wvi].data_mut(),
+                &dw,
+                h.lr,
+                mu,
+            ),
+        }
         if method == "group_lasso" || method == "elastic_gl" {
             let kappa = h.lr * h.lam * ((m2 * n2) as f32).sqrt();
             block_prox(state.params[wi].data_mut(), m, n, m2, n2, kappa);
@@ -1542,5 +1641,84 @@ mod tests {
         be.train_step(&mut state, &x, &y, &[0.1]).unwrap();
         let v = &state.opt[0];
         assert!(v.data().iter().any(|&g| g != 0.0), "velocity stayed zero");
+    }
+
+    /// The fused optimizer sweeps must be *bit-identical* to the old
+    /// two-sweep formulations they replaced — this is what keeps every
+    /// golden-pinned run valid across the fusion refactor.
+    #[test]
+    fn fused_updates_match_two_sweep_reference() {
+        let mut rng = Rng::new(77);
+        let (m, n, m2, n2) = (6usize, 8usize, 2usize, 4usize);
+        let len = m * n;
+        let p0: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+        let v0: Vec<f32> = (0..len).map(|_| rng.normal() * 0.1).collect();
+        let g: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+        let (lr, mu, lam2, t) = (0.07f32, 0.9f32, 1e-3f32, 0.05f32);
+
+        // sgd_prox_l1 vs SGD sweep + the old standalone soft-threshold
+        // sweep (prox of t·‖·‖₁)
+        let mut fused = p0.clone();
+        sgd_prox_l1(&mut fused, &g, lr, t);
+        let mut reference = p0.clone();
+        for (p, gi) in reference.iter_mut().zip(&g) {
+            *p -= lr * gi;
+        }
+        for v in reference.iter_mut() {
+            *v = v.signum() * (v.abs() - t).max(0.0);
+        }
+        assert_eq!(fused, reference, "sgd_prox_l1");
+        // t = 0 degenerates to plain SGD
+        let mut plain = p0.clone();
+        sgd_prox_l1(&mut plain, &g, lr, 0.0);
+        assert_eq!(plain, p0.iter().zip(&g).map(|(p, gi)| p - lr * gi).collect::<Vec<_>>());
+
+        // sgd_momentum_l2 vs g += λ₂·w sweep + sgd_momentum
+        let (mut fp, mut fv) = (p0.clone(), v0.clone());
+        sgd_momentum_l2(&mut fp, &mut fv, &g, lr, mu, lam2);
+        let (mut rp, mut rv) = (p0.clone(), v0.clone());
+        let mut g2 = g.clone();
+        for (gi, wv) in g2.iter_mut().zip(&p0) {
+            *gi += lam2 * wv;
+        }
+        sgd_momentum(&mut rp, &mut rv, &g2, lr, mu);
+        assert_eq!(fp, rp, "sgd_momentum_l2 params");
+        assert_eq!(fv, rv, "sgd_momentum_l2 velocity");
+
+        // sgd_momentum_masked vs g ⊙ mask sweep + sgd_momentum
+        let emask: Vec<f32> = (0..len).map(|i| (i % 3 == 0) as u8 as f32).collect();
+        let (mut fp, mut fv) = (p0.clone(), v0.clone());
+        sgd_momentum_masked(&mut fp, &mut fv, &g, &emask, lr, mu);
+        let (mut rp, mut rv) = (p0.clone(), v0.clone());
+        let gm: Vec<f32> = g.iter().zip(&emask).map(|(gi, mv)| gi * mv).collect();
+        sgd_momentum(&mut rp, &mut rv, &gm, lr, mu);
+        assert_eq!(fp, rp, "sgd_momentum_masked params");
+        assert_eq!(fv, rv, "sgd_momentum_masked velocity");
+
+        // sgd_momentum_block_masked vs mul_expand_mask + sgd_momentum
+        let mask: Vec<f32> = (0..(m / m2) * (n / n2)).map(|i| (i % 2) as f32).collect();
+        let (mut fp, mut fv) = (p0.clone(), v0.clone());
+        sgd_momentum_block_masked(&mut fp, &mut fv, &g, &mask, m, n, m2, n2, lr, mu);
+        let (mut rp, mut rv) = (p0.clone(), v0.clone());
+        let mut gb = g.clone();
+        mul_expand_mask(&mut gb, &mask, m, n, m2, n2);
+        sgd_momentum(&mut rp, &mut rv, &gb, lr, mu);
+        assert_eq!(fp, rp, "sgd_momentum_block_masked params");
+        assert_eq!(fv, rv, "sgd_momentum_block_masked velocity");
+    }
+
+    #[test]
+    fn param_pair_mut_borrows_both_orders() {
+        let mut params = vec![Tensor::full(&[2], 1.0), Tensor::full(&[2], 2.0)];
+        {
+            let (a, b) = param_pair_mut(&mut params, 0, 1);
+            a.data_mut()[0] = 5.0;
+            assert_eq!(b.data()[0], 2.0);
+        }
+        let (a, b) = param_pair_mut(&mut params, 1, 0);
+        a.data_mut()[0] = 7.0;
+        assert_eq!(b.data()[0], 5.0);
+        assert_eq!(params[0].data()[0], 5.0);
+        assert_eq!(params[1].data()[0], 7.0);
     }
 }

@@ -39,7 +39,7 @@ use crate::flops::KpdDims;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
-use super::{kpd, linalg, oidx, pidx, sgd_momentum, soft_threshold};
+use super::{kpd, linalg, oidx, pidx, sgd_momentum, sgd_prox_l1};
 
 /// λ calibration for the native gauge objective as `(base, ramp per
 /// period)`: empirically chosen for the lr·√(r·n) S step. The paper's
@@ -284,15 +284,11 @@ fn apply(
             renorm_slice(&mut state.params[ai].data_mut()[r * ga_len..(r + 1) * ga_len], na);
             renorm_slice(&mut state.params[bi].data_mut()[r * gb_len..(r + 1) * gb_len], nbn);
         }
-        // S^(k): plain SGD at the gauge-compensated step + ℓ1 prox
-        // (exact zeros kill whole blocks)
+        // S^(k): plain SGD at the gauge-compensated step fused with the
+        // ℓ1 prox (exact zeros kill whole blocks)
         let s_lr = lr * s_step_scale(&d);
         let si = pidx(state, &pname(p, "S"))?;
-        let sdata = state.params[si].data_mut();
-        for (pv, gv) in sdata.iter_mut().zip(&g.gs) {
-            *pv -= s_lr * gv;
-        }
-        soft_threshold(sdata, s_lr * lam);
+        sgd_prox_l1(state.params[si].data_mut(), &g.gs, s_lr, s_lr * lam);
 
         total_l1 += s_l1;
         metrics.push(s_l1);

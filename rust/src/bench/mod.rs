@@ -40,16 +40,21 @@ impl BenchStats {
     }
 }
 
-/// Nearest-rank percentile over an ascending-sorted sample. The single
-/// definition shared by the microbench stats here and the serving-latency
-/// summary (`infer::engine::latency_summary`), so p50/p95/p99 stay
-/// comparable across every BENCH_*.json.
+/// Nearest-rank percentile over an ascending-sorted sample: the smallest
+/// value with at least p·N of the sample at or below it, i.e. index
+/// ⌈p·N⌉ − 1. The single definition shared by the microbench stats here
+/// and the serving-latency summary (`infer::engine::latency_summary`), so
+/// p50/p95/p99 stay comparable across every BENCH_*.json.
+///
+/// The previous `round((N−1)·p)` interpolation was *not* nearest-rank —
+/// on 100 sorted samples it reported the 51st value as p50, skewing every
+/// recorded tail; see `percentile_is_nearest_rank` for the pinned table.
 pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     if sorted.is_empty() {
         return f64::NAN;
     }
-    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
-    sorted[idx]
+    let rank = (p * sorted.len() as f64).ceil() as usize;
+    sorted[rank.saturating_sub(1).min(sorted.len() - 1)]
 }
 
 /// Run `f` for `warmup` iterations, then sample until `min_iters` AND
@@ -182,6 +187,29 @@ mod tests {
         assert!(s.mean_ns > 0.0);
         assert!(s.p50_ns <= s.p95_ns);
         assert!(s.min_ns <= s.max_ns);
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        // canonical nearest-rank table on 1..=100
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.50), 50.0);
+        assert_eq!(percentile(&v, 0.95), 95.0);
+        assert_eq!(percentile(&v, 0.99), 99.0);
+        assert_eq!(percentile(&v, 1.00), 100.0);
+        assert_eq!(percentile(&v, 0.0), 1.0); // rank 0 clamps to the minimum
+        // N = 5 (the Wikipedia nearest-rank example shape):
+        // ceil(0.30·5) = 2 → 2nd value; ceil(0.40·5) = 2 as well
+        let v5 = [15.0, 20.0, 35.0, 40.0, 50.0];
+        assert_eq!(percentile(&v5, 0.30), 20.0);
+        assert_eq!(percentile(&v5, 0.40), 20.0);
+        assert_eq!(percentile(&v5, 0.50), 35.0);
+        assert_eq!(percentile(&v5, 1.00), 50.0);
+        // single sample: every percentile is that sample
+        assert_eq!(percentile(&[7.0], 0.5), 7.0);
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+        // empty sample: NaN sentinel (serialized as null by num_or_null)
+        assert!(percentile(&[], 0.5).is_nan());
     }
 
     #[test]

@@ -12,26 +12,68 @@
 use anyhow::{bail, Result};
 
 use crate::backend::native::linalg::{par_rows, threads_for};
+use crate::backend::native::simd::{self, SimdKind};
 
 use super::{BsrLayer, BsrModel};
 
 /// Z(N, m) = X(N, n) · Wᵀ over the occupied blocks of `layer`.
-pub fn bsr_forward(x: &[f32], nb: usize, layer: &BsrLayer) -> Vec<f32> {
-    forward_impl(x, nb, layer, false)
+pub fn bsr_forward(x: &[f32], nb: usize, layer: &BsrLayer) -> Result<Vec<f32>> {
+    forward_impl(simd::active(), x, nb, layer, false)
 }
 
 /// Fused variant: Z = max(X·Wᵀ, 0) — the hidden layers of a served stack,
 /// saving one full pass over the activations.
-pub fn bsr_forward_relu(x: &[f32], nb: usize, layer: &BsrLayer) -> Vec<f32> {
-    forward_impl(x, nb, layer, true)
+pub fn bsr_forward_relu(x: &[f32], nb: usize, layer: &BsrLayer) -> Result<Vec<f32>> {
+    forward_impl(simd::active(), x, nb, layer, true)
 }
 
-fn forward_impl(x: &[f32], nb: usize, l: &BsrLayer, relu: bool) -> Vec<f32> {
+/// [`bsr_forward`] / [`bsr_forward_relu`] with an explicit SIMD kind —
+/// the scalar-vs-dispatched bench variants and parity tests go through
+/// here.
+pub fn bsr_forward_with(
+    kind: SimdKind,
+    x: &[f32],
+    nb: usize,
+    layer: &BsrLayer,
+    relu: bool,
+) -> Result<Vec<f32>> {
+    forward_impl(kind, x, nb, layer, relu)
+}
+
+fn forward_impl(kind: SimdKind, x: &[f32], nb: usize, l: &BsrLayer, relu: bool) -> Result<Vec<f32>> {
     let (m, n, m2, n2) = (l.m, l.n, l.m2, l.n2);
-    debug_assert_eq!(x.len(), nb * n);
-    let m1 = m / m2;
+    // Real validation, not debug asserts: `from_dense` builds consistent
+    // layers, but deserialized or hand-built ones must not mis-bin the
+    // mask or run `row_ptr`/`col_idx` out of bounds in release builds.
+    if m2 == 0 || n2 == 0 || m % m2 != 0 || n % n2 != 0 {
+        bail!("layer '{}': block ({m2},{n2}) does not tile ({m},{n})", l.name);
+    }
+    let (m1, n1) = (m / m2, n / n2);
+    if x.len() != nb * n {
+        bail!("layer '{}': batch wants {nb}·{n} values, got {}", l.name, x.len());
+    }
+    if l.row_ptr.len() != m1 + 1 {
+        bail!("layer '{}': row_ptr has {} entries, want {}", l.name, l.row_ptr.len(), m1 + 1);
+    }
+    if !l.row_ptr.windows(2).all(|w| w[0] <= w[1]) || l.row_ptr[0] != 0 {
+        bail!("layer '{}': row_ptr is not monotonically increasing from 0", l.name);
+    }
+    // row_ptr is the authoritative block count the kernel walks — the
+    // index/payload buffers must cover it exactly
+    let nnz = l.row_ptr[m1] as usize;
+    if l.col_idx.len() != nnz || l.blocks.len() != nnz * m2 * n2 {
+        bail!(
+            "layer '{}': {} col_idx / {} block values for {nnz} stored blocks",
+            l.name,
+            l.col_idx.len(),
+            l.blocks.len()
+        );
+    }
+    if l.col_idx.iter().any(|&j| j as usize >= n1) {
+        bail!("layer '{}': col_idx out of range [0, {n1})", l.name);
+    }
     let mut out = vec![0.0f32; nb * m];
-    let work = nb * l.nnz_blocks() * m2 * n2;
+    let work = nb * nnz * m2 * n2;
     par_rows(&mut out, nb, m, threads_for(work), |b, row| {
         let xrow = &x[b * n..(b + 1) * n];
         for i1 in 0..m1 {
@@ -42,12 +84,7 @@ fn forward_impl(x: &[f32], nb: usize, l: &BsrLayer, relu: bool) -> Vec<f32> {
                 let xseg = &xrow[j1 * n2..(j1 + 1) * n2];
                 let blk = &l.blocks[k * m2 * n2..(k + 1) * m2 * n2];
                 for (i2, o) in orow.iter_mut().enumerate() {
-                    let brow = &blk[i2 * n2..(i2 + 1) * n2];
-                    let mut acc = 0.0f32;
-                    for (bv, xv) in brow.iter().zip(xseg) {
-                        acc += bv * xv;
-                    }
-                    *o += acc;
+                    *o += simd::dot(kind, &blk[i2 * n2..(i2 + 1) * n2], xseg);
                 }
             }
             if relu {
@@ -59,7 +96,7 @@ fn forward_impl(x: &[f32], nb: usize, l: &BsrLayer, relu: bool) -> Vec<f32> {
             }
         }
     });
-    out
+    Ok(out)
 }
 
 /// Logits of the full stack on a flat batch (N × in_dim): ReLU fused into
@@ -77,18 +114,12 @@ pub fn model_forward(model: &BsrModel, x: &[f32], nb: usize) -> Result<Vec<f32>>
     }
     // the first layer reads straight from the caller's batch — no copy on
     // the serving hot path
+    // the kind is resolved once for the whole stack
+    let kind = simd::active();
     let last = model.layers.len() - 1;
-    let mut cur = if last == 0 {
-        bsr_forward(x, nb, &model.layers[0])
-    } else {
-        bsr_forward_relu(x, nb, &model.layers[0])
-    };
+    let mut cur = forward_impl(kind, x, nb, &model.layers[0], last != 0)?;
     for (i, l) in model.layers.iter().enumerate().skip(1) {
-        cur = if i < last {
-            bsr_forward_relu(&cur, nb, l)
-        } else {
-            bsr_forward(&cur, nb, l)
-        };
+        cur = forward_impl(kind, &cur, nb, l, i < last)?;
     }
     Ok(cur)
 }
@@ -152,7 +183,7 @@ mod tests {
             let x = rand_vec(&mut rng, nb * n);
             let w = holey_weights(&mut rng, m, n, m2, n2, keep);
             let l = BsrLayer::from_dense("fc", &w, m, n, m2, n2).unwrap();
-            let got = bsr_forward(&x, nb, &l);
+            let got = bsr_forward(&x, nb, &l).unwrap();
             let want = linalg::matmul_nt(&x, &w, nb, n, m);
             let diff = got
                 .iter()
@@ -172,7 +203,7 @@ mod tests {
         let w = holey_weights(&mut rng, m, n, m2, n2, 2);
         let l = BsrLayer::from_dense("fc", &w, m, n, m2, n2).unwrap();
         assert!(nb * l.nnz_blocks() * m2 * n2 > 1 << 21, "test must cross the threshold");
-        let got = bsr_forward(&x, nb, &l);
+        let got = bsr_forward(&x, nb, &l).unwrap();
         let want = linalg::matmul_nt(&x, &w, nb, n, m);
         let diff = got
             .iter()
@@ -189,9 +220,9 @@ mod tests {
         let x = rand_vec(&mut rng, nb * n);
         let w = holey_weights(&mut rng, m, n, m2, n2, 2);
         let l = BsrLayer::from_dense("fc", &w, m, n, m2, n2).unwrap();
-        let mut want = bsr_forward(&x, nb, &l);
+        let mut want = bsr_forward(&x, nb, &l).unwrap();
         linalg::relu_inplace(&mut want);
-        assert_eq!(bsr_forward_relu(&x, nb, &l), want);
+        assert_eq!(bsr_forward_relu(&x, nb, &l).unwrap(), want);
     }
 
     #[test]
@@ -207,9 +238,49 @@ mod tests {
         let l = BsrLayer::from_dense("fc", &w, m, n, m2, n2).unwrap();
         assert_eq!(l.row_ptr[0], l.row_ptr[1], "first block-row must be empty");
         let x = vec![1.0f32; n];
-        let z = bsr_forward(&x, 1, &l);
+        let z = bsr_forward(&x, 1, &l).unwrap();
         assert_eq!(&z[..2], &[0.0, 0.0]);
         assert_eq!(&z[2..], &[4.0, 4.0]);
+    }
+
+    /// The shape checks are real validation now: a hand-built (or
+    /// corrupted-on-disk) layer with a non-dividing block shape, a wrong
+    /// batch length, or inconsistent row_ptr/col_idx must error instead
+    /// of mis-binning or indexing out of bounds in release builds.
+    #[test]
+    fn forward_rejects_inconsistent_layers() {
+        let mut rng = Rng::new(35);
+        let (m, n, m2, n2) = (6usize, 8usize, 2usize, 4usize);
+        let w = rand_vec(&mut rng, m * n);
+        let good = BsrLayer::from_dense("fc", &w, m, n, m2, n2).unwrap();
+        let x = vec![0.0f32; 2 * n];
+        assert!(bsr_forward(&x, 2, &good).is_ok());
+
+        // wrong batch length
+        assert!(bsr_forward(&x[..15], 2, &good).is_err());
+
+        // non-dividing block shape
+        let mut bad = good.clone();
+        bad.m2 = 4; // 6 % 4 != 0
+        assert!(bsr_forward(&x, 2, &bad).is_err());
+        let mut bad = good.clone();
+        bad.n2 = 3; // 8 % 3 != 0
+        assert!(bsr_forward(&x, 2, &bad).is_err());
+
+        // truncated row_ptr would read past the end
+        let mut bad = good.clone();
+        bad.row_ptr.pop();
+        assert!(bsr_forward(&x, 2, &bad).is_err());
+
+        // col_idx pointing past the last block column
+        let mut bad = good.clone();
+        bad.col_idx[0] = (n / n2) as u32;
+        assert!(bsr_forward(&x, 2, &bad).is_err());
+
+        // block payload length out of sync with the index
+        let mut bad = good.clone();
+        bad.blocks.truncate(bad.blocks.len() - 1);
+        assert!(bsr_forward(&x, 2, &bad).is_err());
     }
 
     #[test]

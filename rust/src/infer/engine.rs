@@ -406,14 +406,20 @@ mod tests {
 
     #[test]
     fn latency_summary_percentiles() {
+        // nearest-rank (ceil(p·N)−1) pinned exactly on 1..=100: p50 is the
+        // 50th sorted value, p95 the 95th, p99 the 99th, and p100 ≡ max
         let lat: Vec<f64> = (1..=100).map(|i| i as f64).collect();
         let s = latency_summary(&lat);
         assert_eq!(s.count, 100);
-        assert!((s.p50_ms - 51.0).abs() < 1.01); // nearest-rank on 100 samples
-        assert!(s.p95_ms >= 94.0 && s.p95_ms <= 96.0);
-        assert!(s.p99_ms >= 98.0 && s.p99_ms <= 100.0);
+        assert_eq!(s.p50_ms, 50.0);
+        assert_eq!(s.p95_ms, 95.0);
+        assert_eq!(s.p99_ms, 99.0);
         assert_eq!(s.max_ms, 100.0);
         assert!((s.mean_ms - 50.5).abs() < 1e-9);
-        assert_eq!(latency_summary(&[]).count, 0);
+        // the empty summary is all-NaN (count 0) — the JSON writers must
+        // map those to nulls, pinned in util::json
+        let empty = latency_summary(&[]);
+        assert_eq!(empty.count, 0);
+        assert!(empty.mean_ms.is_nan() && empty.p99_ms.is_nan() && empty.max_ms.is_nan());
     }
 }

@@ -109,6 +109,18 @@ impl Json {
             .ok_or_else(|| anyhow::anyhow!("missing array field '{key}'"))
     }
 
+    /// A number field that may legitimately be undefined: finite values
+    /// become `Num`, NaN/±∞ become `Null`. RFC 8259 has no NaN literal —
+    /// an empty `latency_summary` used to serialize its NaN fields as a
+    /// bare `NaN`, producing unparseable BENCH_*.json.
+    pub fn num_or_null(v: f64) -> Json {
+        if v.is_finite() {
+            Json::Num(v)
+        } else {
+            Json::Null
+        }
+    }
+
     // ---- writer ----------------------------------------------------------
     pub fn to_string_pretty(&self) -> String {
         let mut out = String::new();
@@ -121,7 +133,11 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
+                // backstop for writers that bypass num_or_null: a
+                // non-finite Num still must not emit an invalid literal
+                if !n.is_finite() {
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 9e15 {
                     out.push_str(&format!("{}", *n as i64));
                 } else {
                     out.push_str(&format!("{n}"));
@@ -423,5 +439,20 @@ mod tests {
     fn utf8_passthrough() {
         let j = Json::parse("\"αβ≥\"").unwrap();
         assert_eq!(j, Json::Str("αβ≥".into()));
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        assert_eq!(Json::num_or_null(1.5), Json::Num(1.5));
+        assert_eq!(Json::num_or_null(f64::NAN), Json::Null);
+        assert_eq!(Json::num_or_null(f64::INFINITY), Json::Null);
+        assert_eq!(Json::num_or_null(f64::NEG_INFINITY), Json::Null);
+        // the writer backstop: even a raw Num(NaN) must stay parseable
+        let j = Json::Arr(vec![Json::Num(f64::NAN), Json::Num(2.0)]);
+        let s = j.to_string_pretty();
+        assert!(!s.contains("NaN"), "bare NaN literal in {s}");
+        let back = Json::parse(&s).unwrap();
+        assert_eq!(back.as_arr().unwrap()[0], Json::Null);
+        assert_eq!(back.as_arr().unwrap()[1], Json::Num(2.0));
     }
 }

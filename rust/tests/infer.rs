@@ -141,8 +141,8 @@ fn rigl_export_preserves_mask_structure() {
     let mut rngx = blocksparse::util::rng::Rng::new(9);
     let x: Vec<f32> = (0..nb * 784).map(|_| rngx.normal()).collect();
     let w = state.param("fc.W").unwrap();
-    let want =
-        linalg::block_sparse_matmul_nt(&x, w.data(), mask.data(), nb, 10, 784, 2, 2);
+    let want = linalg::block_sparse_matmul_nt(&x, w.data(), mask.data(), nb, 10, 784, 2, 2)
+        .unwrap();
     let got = bsr::model_forward(&model, &x, nb).unwrap();
     let diff = got
         .iter()

@@ -12,6 +12,7 @@
 //! * the RigL / pruning controllers keep their per-slot / global
 //!   contracts on the stack.
 
+use blocksparse::backend::native::simd::{self, SimdKind};
 use blocksparse::backend::native::NativeBackend;
 use blocksparse::backend::{Backend, TrainState};
 use blocksparse::checkpoint::Checkpoint;
@@ -20,7 +21,13 @@ use blocksparse::coordinator::{self, experiment, probe, Trainer};
 use blocksparse::tensor::{HostValue, Tensor};
 use blocksparse::util::rng::Rng;
 
+/// Every test's entry point — and the place the SIMD path is pinned off.
+/// The golden expectations in this binary were produced by the scalar
+/// kernels (and are mirrored bit-faithfully in Python), so the pin keeps
+/// them valid on AVX2/NEON hosts. All tests pin the same kind, so the
+/// process-wide pin cannot race across the concurrent test threads.
 fn backend() -> NativeBackend {
+    simd::force(SimdKind::Scalar);
     NativeBackend::with_default_specs()
 }
 

@@ -8,6 +8,7 @@
 //! baseline) on the golden-run data pipeline from `tests/mlp.rs`, plus
 //! direct `DataParallelTrainer` steps for the shard-level contracts.
 
+use blocksparse::backend::native::simd::{self, SimdKind};
 use blocksparse::backend::native::NativeBackend;
 use blocksparse::backend::{Backend, TrainState};
 use blocksparse::config::{Config, TrainConfig};
@@ -18,7 +19,12 @@ use blocksparse::tensor::{HostValue, Tensor};
 use blocksparse::train::DataParallelTrainer;
 use blocksparse::util::rng::Rng;
 
+/// Pin the scalar kernels for the whole binary: the bit-identity
+/// expectations here were produced by the scalar path, and every test
+/// pins the same kind so the process-wide pin cannot race across the
+/// concurrent test threads.
 fn backend() -> NativeBackend {
+    simd::force(SimdKind::Scalar);
     NativeBackend::with_default_specs()
 }
 
@@ -101,6 +107,7 @@ fn golden_t2_bit_identical_across_replicas() {
 /// the shard count either) must stay bit-identical.
 #[test]
 fn tail_shard_bit_identical() {
+    simd::force(SimdKind::Scalar); // this test builds its backend directly
     assert_eq!(shard_ranges(96, 36), vec![(0, 36), (36, 36), (72, 24)]);
     let cfg = blocksparse::backend::native::SpecConfig::mlp(
         "tail96",

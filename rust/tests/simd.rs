@@ -1,0 +1,192 @@
+//! SIMD dispatch contract tests — in their own binary (own process) so
+//! the `force`/`unforce` pin test cannot race the lib unit tests, which
+//! bit-compare kernels resolved through `simd::active()`.
+//!
+//! Every other test here uses only the explicit-kind `*_with` APIs, so the
+//! pin test is the sole reader/writer of the process-wide pin. Parity is
+//! checked scalar-vs-`detect()`: on a scalar-only host both sides run the
+//! same loops and the assertions degenerate to exact equality.
+
+use blocksparse::backend::native::linalg;
+use blocksparse::backend::native::simd::{self, SimdKind};
+use blocksparse::backend::native::kpd;
+use blocksparse::flops::KpdDims;
+use blocksparse::infer::{bsr, synth_block_sparse_weights, BsrLayer};
+use blocksparse::util::rng::Rng;
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+/// Relative-ish closeness for f32 re-association drift across SIMD lanes.
+fn close(a: f32, b: f32, tol: f32) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+fn assert_close_all(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(close(*g, *w, tol), "{what}[{i}]: {g} vs {w}");
+    }
+}
+
+/// Scalar and detected-SIMD kinds agree (under f32 re-association
+/// tolerance) on every matmul variant, across ragged shapes that exercise
+/// both the vector bodies and every tail width.
+#[test]
+fn matmul_variants_scalar_vs_simd_parity() {
+    let vec_kind = simd::detect();
+    let mut rng = Rng::new(0x51D);
+    for &(m, k, n) in &[(1usize, 1usize, 1usize), (3, 7, 5), (7, 130, 9), (16, 257, 33)] {
+        let a = rand_vec(&mut rng, m * k);
+        let b_nn = rand_vec(&mut rng, k * n);
+        let b_nt = rand_vec(&mut rng, n * k);
+        assert_close_all(
+            &linalg::matmul_nn_with(vec_kind, &a, &b_nn, m, k, n),
+            &linalg::matmul_nn_with(SimdKind::Scalar, &a, &b_nn, m, k, n),
+            1e-4,
+            "matmul_nn",
+        );
+        assert_close_all(
+            &linalg::matmul_nt_with(vec_kind, &a, &b_nt, m, k, n),
+            &linalg::matmul_nt_with(SimdKind::Scalar, &a, &b_nt, m, k, n),
+            1e-4,
+            "matmul_nt",
+        );
+        let a_tn = rand_vec(&mut rng, k * m);
+        assert_close_all(
+            &linalg::matmul_tn_with(vec_kind, &a_tn, &b_nn, k, m, n),
+            &linalg::matmul_tn_with(SimdKind::Scalar, &a_tn, &b_nn, k, m, n),
+            1e-4,
+            "matmul_tn",
+        );
+    }
+}
+
+/// Same parity contract for the masked block-sparse matmul and the packed
+/// BSR forward, at several occupancy levels.
+#[test]
+fn block_sparse_and_bsr_scalar_vs_simd_parity() {
+    let vec_kind = simd::detect();
+    let mut rng = Rng::new(0xB5);
+    let (nb, m, n, m2, n2) = (8usize, 24usize, 64usize, 8usize, 16usize);
+    let x = rand_vec(&mut rng, nb * n);
+    for occupancy in [1.0f64, 0.5, 0.25] {
+        let (w, mask) = synth_block_sparse_weights(&mut rng, m, n, m2, n2, occupancy);
+        let scalar_z =
+            linalg::block_sparse_matmul_nt_with(SimdKind::Scalar, &x, &w, &mask, nb, m, n, m2, n2)
+                .expect("scalar block-sparse");
+        let simd_z =
+            linalg::block_sparse_matmul_nt_with(vec_kind, &x, &w, &mask, nb, m, n, m2, n2)
+                .expect("simd block-sparse");
+        assert_close_all(&simd_z, &scalar_z, 1e-4, "block_sparse");
+
+        let layer = BsrLayer::from_dense("fc", &w, m, n, m2, n2).expect("layer");
+        for relu in [false, true] {
+            let scalar_b = bsr::bsr_forward_with(SimdKind::Scalar, &x, nb, &layer, relu)
+                .expect("scalar bsr");
+            let simd_b =
+                bsr::bsr_forward_with(vec_kind, &x, nb, &layer, relu).expect("simd bsr");
+            assert_close_all(&simd_b, &scalar_b, 1e-4, "bsr");
+        }
+    }
+}
+
+/// KPD forward parity between the pinned-scalar and detected kinds.
+#[test]
+fn kpd_forward_scalar_vs_simd_parity() {
+    let vec_kind = simd::detect();
+    let mut rng = Rng::new(0x4B);
+    let d = KpdDims { m1: 3, n1: 4, m2: 4, n2: 5, r: 3 };
+    let nb = 6usize;
+    let x = rand_vec(&mut rng, nb * d.n1 * d.n2);
+    let s = rand_vec(&mut rng, d.m1 * d.n1);
+    let a = rand_vec(&mut rng, d.r * d.m1 * d.n1);
+    let b = rand_vec(&mut rng, d.r * d.m2 * d.n2);
+    let (z_s, _) = kpd::forward_with(SimdKind::Scalar, &x, nb, &s, &a, &b, d);
+    let (z_v, _) = kpd::forward_with(vec_kind, &x, nb, &s, &a, &b, d);
+    assert_close_all(&z_v, &z_s, 1e-4, "kpd forward");
+}
+
+/// Central-finite-difference gradient check of the KPD backward pass
+/// *under the detected SIMD kind*: the analytic dS/dA/dB of the smooth
+/// quadratic loss L = ½‖Z‖² must match central differences of the same
+/// SIMD forward. This is the FD coverage the golden (scalar-pinned) tests
+/// cannot give the vector bodies.
+#[test]
+fn kpd_fd_gradients_under_simd_kind() {
+    let kind = simd::detect();
+    let mut rng = Rng::new(0xFD);
+    let d = KpdDims { m1: 2, n1: 3, m2: 2, n2: 3, r: 2 };
+    let nb = 4usize;
+    let x = rand_vec(&mut rng, nb * d.n1 * d.n2);
+    let s = rand_vec(&mut rng, d.m1 * d.n1);
+    let a = rand_vec(&mut rng, d.r * d.m1 * d.n1);
+    let b = rand_vec(&mut rng, d.r * d.m2 * d.n2);
+
+    let loss = |s: &[f32], a: &[f32], b: &[f32]| -> f64 {
+        let (z, _) = kpd::forward_with(kind, x.as_slice(), nb, s, a, b, d);
+        0.5 * z.iter().map(|v| *v as f64 * *v as f64).sum::<f64>()
+    };
+    // analytic grads: dL/dZ = Z for the quadratic loss
+    let (z, tprime) = kpd::forward_with(kind, &x, nb, &s, &a, &b, d);
+    let grads = kpd::backward_with(kind, &x, nb, &s, &a, z.as_slice(), &tprime, d);
+
+    let h = 1e-2f32;
+    let check = |name: &str, base: &[f32], analytic: &[f32], which: usize| {
+        for idx in 0..base.len() {
+            let mut plus = base.to_vec();
+            plus[idx] += h;
+            let mut minus = base.to_vec();
+            minus[idx] -= h;
+            let (lp, lm) = match which {
+                0 => (loss(&plus, &a, &b), loss(&minus, &a, &b)),
+                1 => (loss(&s, &plus, &b), loss(&s, &minus, &b)),
+                _ => (loss(&s, &a, &plus), loss(&s, &a, &minus)),
+            };
+            let fd = ((lp - lm) / (2.0 * h as f64)) as f32;
+            let an = analytic[idx];
+            assert!(
+                (fd - an).abs() < 1e-2 + 3e-2 * fd.abs().max(an.abs()),
+                "{name}[{idx}] under {kind:?}: fd {fd} vs analytic {an}"
+            );
+        }
+    };
+    check("dS", &s, &grads.gs, 0);
+    check("dA", &a, &grads.ga, 1);
+    check("dB", &b, &grads.gb, 2);
+}
+
+/// `force` pins `active()` process-wide until `unforce`; forcing a kind
+/// the CPU cannot run downgrades to scalar rather than crashing later.
+#[test]
+fn force_pin_overrides_dispatch_until_unforce() {
+    let detected = simd::detect();
+    simd::force(SimdKind::Scalar);
+    assert_eq!(simd::active(), SimdKind::Scalar);
+    simd::force(detected);
+    assert_eq!(simd::active(), detected);
+    // an unavailable ISA request downgrades to scalar at force time
+    let foreign = match detected {
+        SimdKind::Avx2 => SimdKind::Neon,
+        _ => SimdKind::Avx2,
+    };
+    simd::force(foreign);
+    assert_eq!(simd::active(), SimdKind::Scalar);
+    simd::unforce();
+    assert_eq!(simd::active(), simd::dispatched());
+}
+
+/// The `BS_NATIVE_SIMD` env knob governs `dispatched()`: CI runs this
+/// binary once unset and once with `BS_NATIVE_SIMD=0`, so both arms of
+/// the match are exercised across the two runs.
+#[test]
+fn env_knob_governs_dispatch() {
+    let d = simd::dispatched();
+    match std::env::var("BS_NATIVE_SIMD").ok().as_deref() {
+        Some("0") | Some("off") | Some("scalar") => assert_eq!(d, SimdKind::Scalar),
+        Some("avx2") => assert!(d == SimdKind::Avx2 || d == SimdKind::Scalar),
+        Some("neon") => assert!(d == SimdKind::Neon || d == SimdKind::Scalar),
+        _ => assert_eq!(d, simd::detect()),
+    }
+}
