@@ -8,11 +8,15 @@
 //!                         vs masked block-sparse vs packed BSR at
 //!                         50/75/90% block sparsity — the §4 inference
 //!                         claim, measured (`benches/infer_serve.rs` is
-//!                         the full panel). Every kernel is benched twice:
-//!                         `.scalar` pins the reference loops, and
-//!                         `.dispatched` runs whatever `simd::dispatched()`
-//!                         resolves to (AVX2/NEON when available,
-//!                         overridable via `BS_NATIVE_SIMD`).
+//!                         the full panel) — plus the attention-projection
+//!                         block-GEMM at the t3 vit_t shape. Every kernel
+//!                         is benched twice: `.scalar` pins the reference
+//!                         loops, and `.dispatched` runs whatever
+//!                         `simd::dispatched()` resolves to (AVX2/NEON
+//!                         when available, overridable via
+//!                         `BS_NATIVE_SIMD`).
+//!  - native.layernorm.*   the transformer LayerNorm sweep, forward and
+//!                         backward, scalar vs dispatched like the matmuls
 //!
 //! Specs the active backend cannot run are skipped, not failed.
 //!
@@ -237,6 +241,37 @@ fn main() -> anyhow::Result<()> {
                 );
             });
         }
+    }
+
+    // ---- transformer hot paths --------------------------------------------
+    // The two kernels the t3_* family adds to the per-step profile: the
+    // attention-projection block-GEMM (every q/k/v/o projection is a
+    // (batch·seq)×d × d×d matmul over a 4×4 block mask — vit_t shape:
+    // 16 sequences of 16 tokens at d_model 64, half the blocks zeroed)
+    // and the LayerNorm sweep that runs twice per encoder block.
+    {
+        let mut rng = Rng::new(5);
+        let (rows, d, m2, n2) = (256usize, 64usize, 4usize, 4usize);
+        let x: Vec<f32> = (0..rows * d).map(|_| rng.normal()).collect();
+        let (wm, mask) = infer::synth_block_sparse_weights(&mut rng, d, d, m2, n2, 0.5);
+        bench_pair(&mut stats, "native.matmul.attnproj_256x64x64_b4x4", kind, |k| {
+            std::hint::black_box(
+                linalg::block_sparse_matmul_nt_with(k, &x, &wm, &mask, rows, d, d, m2, n2)
+                    .expect("attnproj shapes"),
+            );
+        });
+        let g: Vec<f32> = (0..d).map(|_| 1.0 + 0.1 * rng.normal()).collect();
+        let b: Vec<f32> = (0..d).map(|_| 0.1 * rng.normal()).collect();
+        bench_pair(&mut stats, "native.layernorm.fwd_256x64", kind, |k| {
+            std::hint::black_box(linalg::layernorm_with(k, &x, &g, &b, rows, d));
+        });
+        let (_, xhat, rstd) = linalg::layernorm(&x, &g, &b, rows, d);
+        let dy: Vec<f32> = (0..rows * d).map(|_| rng.normal()).collect();
+        bench_pair(&mut stats, "native.layernorm.bwd_256x64", kind, |k| {
+            std::hint::black_box(linalg::layernorm_backward_with(
+                k, &dy, &xhat, &rstd, &g, rows, d,
+            ));
+        });
     }
     let matmul_geo = geomean(&dense_speedups);
     println!(

@@ -1,9 +1,14 @@
-//! Sequential multi-layer native models — the `mlp` spec family.
+//! The composable layer-graph core every native family runs on.
 //!
-//! A spec's [`LayerCfg`] list describes a stack of linear slots with ReLU
-//! between consecutive slots (and a flatten marker in front, a no-op for
-//! the already-flat image batches). Every method of the single-slot path
-//! runs unchanged on the stack:
+//! A spec's [`LayerCfg`] list describes linear *slots*; this module owns
+//! the per-slot primitives — [`linear_forward`] caching, [`linear_backward`]
+//! chaining, [`apply_slots`] (fused SGD/momentum + prox), gradient
+//! flattening/unflattening, RigL/prune hooks, and state init — and the
+//! sequential ReLU [`stack`] the `linear`/`mlp` families run directly.
+//! `pattern.rs` (per-candidate stacks) and `transformer.rs` (embedding +
+//! attention + FFN graphs) are thin drivers over the same slot primitives,
+//! so the fused, sharded and pattern paths cannot drift. Every method of
+//! the original single-slot path runs unchanged on any slot:
 //!
 //! * `kpd`          — each slot holds its own (S, A, B) factorization; the
 //!   hidden slots' backward chains dZ through [`kpd::backward_dx`];
@@ -73,7 +78,7 @@ enum Cache {
 }
 
 /// Gradients of one linear slot.
-enum LinGrads {
+pub(super) enum LinGrads {
     /// (gs, ga, gb) of a KPD-factorized slot
     Kpd(kpd::Grads),
     /// dense dW = dZᵀ·X (pre-masking — RigL reads its growth signal from
@@ -81,13 +86,13 @@ enum LinGrads {
     Dense(Vec<f32>),
 }
 
-fn p(lc: &LayerCfg, leaf: &str) -> String {
+pub(super) fn p(lc: &LayerCfg, leaf: &str) -> String {
     format!("{}.{}", lc.name, leaf)
 }
 
 // --------------------------------------------------------------- forward
 
-fn linear_forward(
+pub(super) fn linear_forward(
     cfg: &SpecConfig,
     state: &TrainState,
     lc: &LayerCfg,
@@ -96,7 +101,7 @@ fn linear_forward(
 ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
     debug_assert_eq!(x.len(), nb * lc.n);
     match cfg.method.as_str() {
-        "kpd" => {
+        "kpd" | "pattern_kpd" => {
             let d = lc.dims(cfg.rank);
             let s = state.param(&p(lc, "S"))?;
             let a = state.param(&p(lc, "A"))?;
@@ -198,7 +203,7 @@ fn effective_w(cfg: &SpecConfig, state: &TrainState, lc: &LayerCfg) -> Result<Ve
 }
 
 #[allow(clippy::too_many_arguments)]
-fn linear_backward(
+pub(super) fn linear_backward(
     cfg: &SpecConfig,
     state: &TrainState,
     lc: &LayerCfg,
@@ -208,7 +213,7 @@ fn linear_backward(
     nb: usize,
     need_dx: bool,
 ) -> Result<(LinGrads, Option<Vec<f32>>)> {
-    if cfg.method == "kpd" {
+    if cfg.method == "kpd" || cfg.method == "pattern_kpd" {
         let d = lc.dims(cfg.rank);
         let s = state.param(&p(lc, "S"))?;
         let a = state.param(&p(lc, "A"))?;
@@ -313,8 +318,8 @@ pub fn loss_and_grads(
 // ------------------------------------------------------------ train step
 
 /// One training step of the stack. Metrics: `[loss, ce, acc]`, then for
-/// KPD `s_l1` (whole model) and one `s_l1_{slot}` per layer (pre-update,
-/// like the single-slot path), then for RigL the concatenated per-slot
+/// KPD `s_l1` (whole model) plus, on multi-slot specs, one `s_l1_{slot}`
+/// per layer (pre-update), then for RigL the concatenated per-slot
 /// dense-gradient block norms (unnamed tail, length `gnorm_len`).
 pub(super) fn train_step(
     cfg: &SpecConfig,
@@ -397,7 +402,10 @@ pub(super) fn grad_layout(cfg: &SpecConfig) -> Vec<(String, usize)> {
     out
 }
 
-fn collect_grads(cfg: &SpecConfig, grads: Vec<Option<LinGrads>>) -> Result<Vec<LinGrads>> {
+pub(super) fn collect_grads(
+    cfg: &SpecConfig,
+    grads: Vec<Option<LinGrads>>,
+) -> Result<Vec<LinGrads>> {
     cfg.layers
         .iter()
         .zip(grads)
@@ -407,7 +415,7 @@ fn collect_grads(cfg: &SpecConfig, grads: Vec<Option<LinGrads>>) -> Result<Vec<L
         .collect()
 }
 
-fn unflatten(cfg: &SpecConfig, grad: &[f32]) -> Result<Vec<LinGrads>> {
+pub(super) fn unflatten(cfg: &SpecConfig, grad: &[f32]) -> Result<Vec<LinGrads>> {
     let mut out = Vec::with_capacity(cfg.layers.len());
     let mut off = 0usize;
     for (name, len) in grad_layout(cfg) {
@@ -437,9 +445,10 @@ fn unflatten(cfg: &SpecConfig, grad: &[f32]) -> Result<Vec<LinGrads>> {
 }
 
 /// The per-slot optimizer/prox updates on mean gradients — the one copy
-/// of the update math, shared by the fused [`train_step`] and the
-/// data-parallel [`apply_update`].
-fn apply_slots(
+/// of the update math, shared by the fused [`train_step`], the
+/// data-parallel [`apply_update`], and the transformer driver (which runs
+/// it over its projection/FFN slots before updating its dense extras).
+pub(super) fn apply_slots(
     cfg: &SpecConfig,
     state: &mut TrainState,
     grads: Vec<LinGrads>,
@@ -557,7 +566,12 @@ fn apply_slots(
     let mut out = vec![ce_mean + reg, ce_mean, acc_frac];
     if method == "kpd" {
         out.push(s_l1_per.iter().sum());
-        out.extend(&s_l1_per);
+        // single-slot specs keep their original `[loss, ce, acc, s_l1]`
+        // layout; the per-slot breakdown only exists when there is more
+        // than one slot to break down
+        if cfg.layers.len() > 1 {
+            out.extend(&s_l1_per);
+        }
     }
     out.extend(gnorm_tail);
     Ok(out)

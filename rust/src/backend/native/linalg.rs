@@ -314,6 +314,116 @@ pub fn relu_backward(da: &mut [f32], y: &[f32]) {
     }
 }
 
+/// LayerNorm variance floor — keeps rstd finite on constant rows.
+pub const LAYERNORM_EPS: f32 = 1e-5;
+
+/// Row-wise LayerNorm: y = g ⊙ (x − μ)/√(σ² + ε) + b over `d`-wide rows.
+/// Returns `(y, xhat, rstd)` — the normalized activations plus the two
+/// backward caches ([`layernorm_backward`] wants x̂ and 1/σ per row).
+/// Rows run sequentially: at encoder widths (d ≤ a few hundred) a row is
+/// a few hundred FLOPs and the scoped-thread spawn cost would dominate;
+/// the variance reduction still runs through the SIMD dot microkernel.
+pub fn layernorm(x: &[f32], g: &[f32], b: &[f32], rows: usize, d: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    layernorm_with(simd::active(), x, g, b, rows, d)
+}
+
+/// [`layernorm`] with an explicit SIMD kind (scalar pins + bench twins).
+pub fn layernorm_with(
+    kind: SimdKind,
+    x: &[f32],
+    g: &[f32],
+    b: &[f32],
+    rows: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(x.len(), rows * d);
+    debug_assert_eq!(g.len(), d);
+    debug_assert_eq!(b.len(), d);
+    let mut y = vec![0.0f32; rows * d];
+    let mut xhat = vec![0.0f32; rows * d];
+    let mut rstd = vec![0.0f32; rows];
+    let inv_d = 1.0f32 / d as f32;
+    for r in 0..rows {
+        let xrow = &x[r * d..(r + 1) * d];
+        let mut mean = 0.0f32;
+        for &v in xrow {
+            mean += v;
+        }
+        mean *= inv_d;
+        let hrow = &mut xhat[r * d..(r + 1) * d];
+        for (h, &v) in hrow.iter_mut().zip(xrow) {
+            *h = v - mean;
+        }
+        let var = simd::dot(kind, hrow, hrow) * inv_d;
+        let rs = 1.0 / (var + LAYERNORM_EPS).sqrt();
+        rstd[r] = rs;
+        let yrow = &mut y[r * d..(r + 1) * d];
+        for (j, (yv, h)) in yrow.iter_mut().zip(hrow.iter_mut()).enumerate() {
+            *h *= rs;
+            *yv = g[j] * *h + b[j];
+        }
+    }
+    (y, xhat, rstd)
+}
+
+/// LayerNorm backward from the forward caches: given dY and the cached
+/// (x̂, 1/σ), returns `(dx, dg, db)` where dg/db are the column sums
+/// dg = Σ_rows dY ⊙ x̂ and db = Σ_rows dY, and
+/// dx = rstd · (dx̂ − mean(dx̂) − x̂ · mean(dx̂ ⊙ x̂)) with dx̂ = dY ⊙ g.
+pub fn layernorm_backward(
+    dy: &[f32],
+    xhat: &[f32],
+    rstd: &[f32],
+    g: &[f32],
+    rows: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    layernorm_backward_with(simd::active(), dy, xhat, rstd, g, rows, d)
+}
+
+/// [`layernorm_backward`] with an explicit SIMD kind.
+#[allow(clippy::too_many_arguments)]
+pub fn layernorm_backward_with(
+    kind: SimdKind,
+    dy: &[f32],
+    xhat: &[f32],
+    rstd: &[f32],
+    g: &[f32],
+    rows: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(dy.len(), rows * d);
+    debug_assert_eq!(xhat.len(), rows * d);
+    debug_assert_eq!(rstd.len(), rows);
+    debug_assert_eq!(g.len(), d);
+    let mut dx = vec![0.0f32; rows * d];
+    let mut dg = vec![0.0f32; d];
+    let mut db = vec![0.0f32; d];
+    let inv_d = 1.0f32 / d as f32;
+    let mut dxhat = vec![0.0f32; d];
+    for r in 0..rows {
+        let dyrow = &dy[r * d..(r + 1) * d];
+        let hrow = &xhat[r * d..(r + 1) * d];
+        for (j, ((dh, &dyv), &hv)) in dxhat.iter_mut().zip(dyrow).zip(hrow).enumerate() {
+            *dh = dyv * g[j];
+            dg[j] += dyv * hv;
+            db[j] += dyv;
+        }
+        let mut h1 = 0.0f32;
+        for &dh in dxhat.iter() {
+            h1 += dh;
+        }
+        h1 *= inv_d;
+        let h2 = simd::dot(kind, &dxhat, hrow) * inv_d;
+        let rs = rstd[r];
+        let dxrow = &mut dx[r * d..(r + 1) * d];
+        for ((dxv, &dh), &hv) in dxrow.iter_mut().zip(&dxhat).zip(hrow) {
+            *dxv = rs * (dh - h1 - hv * h2);
+        }
+    }
+    (dx, dg, db)
+}
+
 /// Softmax cross-entropy over logits `z` (N × classes) with class ids `y`.
 pub struct SoftmaxCe {
     /// mean CE over the batch
@@ -599,6 +709,102 @@ mod tests {
             with_thread_cap(1, || assert_eq!(threads_for(usize::MAX / 2), 1));
             assert!(threads_for(usize::MAX / 2) <= 2);
         });
+    }
+
+    #[test]
+    fn layernorm_normalizes_rows_and_applies_affine() {
+        let mut rng = Rng::new(31);
+        let (rows, d) = (6, 16);
+        let x = rand_vec(&mut rng, rows * d);
+        let g = vec![1.0f32; d];
+        let b = vec![0.0f32; d];
+        let (y, xhat, rstd) = layernorm(&x, &g, &b, rows, d);
+        assert_eq!(y, xhat, "unit affine: y must equal x̂");
+        for r in 0..rows {
+            let row = &y[r * d..(r + 1) * d];
+            let mean: f32 = row.iter().sum::<f32>() / d as f32;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+            assert!(mean.abs() < 1e-5, "row {r} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-3, "row {r} var {var}");
+            assert!(rstd[r] > 0.0);
+        }
+        // non-trivial gain/bias shift the normalized row exactly
+        let g2: Vec<f32> = (0..d).map(|j| 0.5 + j as f32 * 0.1).collect();
+        let b2: Vec<f32> = (0..d).map(|j| j as f32 * 0.01 - 0.05).collect();
+        let (y2, xhat2, _) = layernorm(&x, &g2, &b2, rows, d);
+        for r in 0..rows {
+            for j in 0..d {
+                let want = g2[j] * xhat2[r * d + j] + b2[j];
+                assert!((y2[r * d + j] - want).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn layernorm_constant_row_stays_finite() {
+        let x = vec![3.0f32; 8];
+        let (y, _, rstd) = layernorm(&x, &[1.0; 8], &[0.0; 8], 1, 8);
+        assert!(y.iter().all(|v| v.is_finite() && v.abs() < 1e-3));
+        assert!(rstd[0].is_finite());
+    }
+
+    #[test]
+    fn layernorm_backward_matches_finite_difference() {
+        let mut rng = Rng::new(37);
+        let (rows, d) = (3, 8);
+        let x = rand_vec(&mut rng, rows * d);
+        let g: Vec<f32> = (0..d).map(|j| 1.0 + 0.1 * j as f32).collect();
+        let b: Vec<f32> = (0..d).map(|j| 0.02 * j as f32).collect();
+        // scalar objective: L = Σ w ⊙ y with fixed random w
+        let w = rand_vec(&mut rng, rows * d);
+        let loss = |x: &[f32], g: &[f32], b: &[f32]| -> f32 {
+            let (y, _, _) = layernorm(x, g, b, rows, d);
+            y.iter().zip(&w).map(|(a, b)| a * b).sum()
+        };
+        let (_, xhat, rstd) = layernorm(&x, &g, &b, rows, d);
+        let (dx, dg, db) = layernorm_backward(&w, &xhat, &rstd, &g, rows, d);
+        let h = 1e-2f32;
+        let probes = [0usize, 5, 11, 17, 23];
+        for &i in &probes {
+            let (mut xp, mut xm) = (x.clone(), x.clone());
+            xp[i] += h;
+            xm[i] -= h;
+            let fd = (loss(&xp, &g, &b) - loss(&xm, &g, &b)) / (2.0 * h);
+            assert!((fd - dx[i]).abs() < 5e-3, "dx[{i}]: fd {fd} vs {}", dx[i]);
+        }
+        for j in [0usize, 3, 7] {
+            let (mut gp, mut gm) = (g.clone(), g.clone());
+            gp[j] += h;
+            gm[j] -= h;
+            let fd = (loss(&x, &gp, &b) - loss(&x, &gm, &b)) / (2.0 * h);
+            assert!((fd - dg[j]).abs() < 5e-3, "dg[{j}]: fd {fd} vs {}", dg[j]);
+            let (mut bp, mut bm) = (b.clone(), b.clone());
+            bp[j] += h;
+            bm[j] -= h;
+            let fd = (loss(&x, &g, &bp) - loss(&x, &g, &bm)) / (2.0 * h);
+            assert!((fd - db[j]).abs() < 5e-3, "db[{j}]: fd {fd} vs {}", db[j]);
+        }
+    }
+
+    #[test]
+    fn layernorm_explicit_kind_matches_dispatched() {
+        let mut rng = Rng::new(41);
+        let (rows, d) = (5, 24);
+        let x = rand_vec(&mut rng, rows * d);
+        let g = rand_vec(&mut rng, d);
+        let b = rand_vec(&mut rng, d);
+        let kind = simd::active();
+        let (y0, h0, r0) = layernorm(&x, &g, &b, rows, d);
+        let (y1, h1, r1) = layernorm_with(kind, &x, &g, &b, rows, d);
+        assert_eq!(y0, y1);
+        assert_eq!(h0, h1);
+        assert_eq!(r0, r1);
+        let dy = rand_vec(&mut rng, rows * d);
+        let (dx0, dg0, db0) = layernorm_backward(&dy, &h0, &r0, &g, rows, d);
+        let (dx1, dg1, db1) = layernorm_backward_with(kind, &dy, &h0, &r0, &g, rows, d);
+        assert_eq!(dx0, dx1);
+        assert_eq!(dg0, dg1);
+        assert_eq!(db0, db1);
     }
 
     #[test]

@@ -21,18 +21,23 @@
 //! (S, W-blocks) use plain SGD plus their proximal operator so exact
 //! zeros appear.
 //!
-//! Beyond the single linear slot, every method also runs on sequential
-//! **multi-layer** models (the `mlp` spec family, module [`layers`]):
-//! a stack of linear slots with ReLU between them, per-layer block sizes,
-//! a shared forward that caches activations and a backward that chains dZ
-//! through the stack. The built-in registry uses it for the Table-2
-//! `t2_*` specs (784→304→100→10, the LeNet-300-100 stand-in).
+//! Every family runs on one composable layer graph (module [`layers`]):
+//! the per-slot forward/backward/update primitives plus the sequential
+//! ReLU stack. The single-slot `linear` specs are a one-slot stack, the
+//! Table-2 `mlp` specs a three-slot stack (784→304→100→10, the
+//! LeNet-300-100 stand-in), `pattern_kpd` drives one slot per candidate
+//! (module [`pattern`]), and the Table-3 `t3_*` transformer specs
+//! (module [`transformer`]) hang embedding / LayerNorm / causal
+//! multi-head attention around block-sparse q/k/v/o/FFN slots. This
+//! module is the thin outer driver: spec configs, the registry, and the
+//! `Backend` routing into those families.
 
 pub mod kpd;
 pub mod layers;
 pub mod linalg;
 pub mod pattern;
 pub mod simd;
+pub mod transformer;
 
 use std::collections::BTreeMap;
 
@@ -107,9 +112,26 @@ pub struct SpecConfig {
     pub rigl_density: f64,
     /// candidate `(m2, n2)` block sizes for `pattern_kpd` (empty otherwise)
     pub patterns: Vec<(usize, usize)>,
-    /// sequential linear slots of an `mlp` spec (ReLU between consecutive
-    /// slots); empty for the single-slot linear specs
+    /// the linear slots of the layer graph: one `fc` slot for the linear
+    /// specs, `fc1..fcN` with ReLU between them for `mlp` specs, the
+    /// q/k/v/o/fc1/fc2 projection slots per block for transformer specs;
+    /// empty only for `pattern_kpd` (which builds one slot per candidate)
     pub layers: Vec<LayerCfg>,
+    /// model family label for the spec entry (`""` keeps the implied
+    /// `linear`/`mlp`; transformer specs set `lm_*` so the coordinator
+    /// picks the Markov LM corpus and cosine LR schedule)
+    pub model: String,
+    /// transformer sequence length (tokens per example; 0 = not a
+    /// transformer)
+    pub seq: usize,
+    /// transformer residual width
+    pub d_model: usize,
+    /// attention heads (must divide `d_model`)
+    pub heads: usize,
+    /// FFN hidden width
+    pub d_ff: usize,
+    /// encoder blocks; `depth > 0` marks the spec as a transformer
+    pub depth: usize,
     pub tags: Vec<String>,
 }
 
@@ -126,6 +148,13 @@ impl SpecConfig {
         rank: usize,
         batch: usize,
     ) -> Self {
+        // pattern_kpd builds one slot per candidate at train time; every
+        // other method runs the one-slot layer graph directly
+        let layers = if method == "pattern_kpd" {
+            Vec::new()
+        } else {
+            vec![LayerCfg { name: "fc".to_string(), m: out_dim, n: in_dim, m2, n2 }]
+        };
         SpecConfig {
             key: key.to_string(),
             method: method.to_string(),
@@ -138,7 +167,13 @@ impl SpecConfig {
             momentum: 0.9,
             rigl_density: 0.5,
             patterns: Vec::new(),
-            layers: Vec::new(),
+            layers,
+            model: String::new(),
+            seq: 0,
+            d_model: 0,
+            heads: 0,
+            d_ff: 0,
+            depth: 0,
             tags: Vec::new(),
         }
     }
@@ -181,9 +216,62 @@ impl SpecConfig {
         cfg
     }
 
-    /// Whether this spec is a sequential multi-layer model.
+    /// Whether this spec is a sequential multi-layer (`mlp`) model.
     pub fn is_mlp(&self) -> bool {
-        !self.layers.is_empty()
+        self.layers.len() > 1 && !self.is_transformer()
+    }
+
+    /// Whether this spec is a transformer (`t3_*`) model.
+    pub fn is_transformer(&self) -> bool {
+        self.depth > 0
+    }
+
+    /// A block-sparse transformer LM spec: `depth` pre-LN encoder blocks
+    /// (causal multi-head attention + ReLU FFN, residual around each) over
+    /// token + positional embeddings, LayerNorm → tied-width vocab head on
+    /// top. The q/k/v/o projections (`d×d`) and FFN matrices (`d_ff×d`,
+    /// `d×d_ff`) are linear slots of the shared layer graph, so every
+    /// method (KPD factorization, group-lasso prox, RigL masks, ...)
+    /// applies to them unchanged; embeddings, LayerNorm gains/biases and
+    /// the head stay dense (plain SGD/momentum).
+    #[allow(clippy::too_many_arguments)]
+    pub fn transformer(
+        key: &str,
+        model: &str,
+        method: &str,
+        vocab: usize,
+        seq: usize,
+        d_model: usize,
+        heads: usize,
+        d_ff: usize,
+        depth: usize,
+        m2: usize,
+        n2: usize,
+        rank: usize,
+        batch: usize,
+    ) -> Self {
+        let mut cfg = SpecConfig::linear(key, method, seq, vocab, m2, n2, rank, batch);
+        cfg.model = model.to_string();
+        cfg.seq = seq;
+        cfg.d_model = d_model;
+        cfg.heads = heads;
+        cfg.d_ff = d_ff;
+        cfg.depth = depth;
+        let mut layers = Vec::with_capacity(depth * 6);
+        for i in 0..depth {
+            for (leaf, m, n) in [
+                ("q", d_model, d_model),
+                ("k", d_model, d_model),
+                ("v", d_model, d_model),
+                ("o", d_model, d_model),
+                ("fc1", d_ff, d_model),
+                ("fc2", d_model, d_ff),
+            ] {
+                layers.push(LayerCfg { name: format!("b{i}.{leaf}"), m, n, m2, n2 });
+            }
+        }
+        cfg.layers = layers;
+        cfg
     }
 
     /// A joint pattern-selection spec (Eq. 7): K candidate block sizes of
@@ -202,78 +290,122 @@ impl SpecConfig {
     }
 
     pub fn validate(&self) -> Result<()> {
+        // every bail names the offending spec key and the families the
+        // native backend supports, so registry errors are actionable
+        const FAMILIES: &str =
+            "supported families: linear (one slot), mlp (slot stack), \
+             pattern_kpd (one slot per block-size candidate), transformer (t3_*)";
         if !METHODS.contains(&self.method.as_str()) {
-            bail!("unknown method '{}' (native backend supports {METHODS:?})", self.method);
+            bail!(
+                "spec '{}': unknown method '{}' — the native backend supports \
+                 {METHODS:?}; {FAMILIES}",
+                self.key, self.method
+            );
         }
-        if self.is_mlp() {
-            if self.method == "pattern_kpd" {
-                bail!("pattern_kpd is a single-slot method (no mlp support yet)");
+        if self.batch == 0 {
+            bail!("spec '{}': batch must be positive", self.key);
+        }
+        if (self.method == "kpd" || self.method == "pattern_kpd") && self.rank == 0 {
+            bail!("spec '{}': {} rank must be ≥ 1", self.key, self.method);
+        }
+        if self.method == "pattern_kpd" {
+            if !self.layers.is_empty() || self.is_transformer() {
+                bail!(
+                    "spec '{}': pattern_kpd builds its own per-candidate slots and \
+                     cannot take a layer stack; {FAMILIES}",
+                    self.key
+                );
             }
-            if !self.patterns.is_empty() {
-                bail!("block-size candidates only apply to the pattern_kpd method");
+            if self.patterns.is_empty() {
+                bail!(
+                    "spec '{}': pattern_kpd needs at least one (m2, n2) candidate",
+                    self.key
+                );
             }
-            if self.batch == 0 {
-                bail!("batch must be positive");
-            }
-            if self.method == "kpd" && self.rank == 0 {
-                bail!("kpd rank must be ≥ 1");
-            }
-            if self.layers[0].n != self.in_dim {
-                bail!("mlp first slot wants {} inputs, spec has in_dim {}",
-                      self.layers[0].n, self.in_dim);
-            }
-            if self.layers.last().unwrap().m != self.out_dim {
-                bail!("mlp last slot emits {} features, spec has out_dim {}",
-                      self.layers.last().unwrap().m, self.out_dim);
-            }
-            for (i, l) in self.layers.iter().enumerate() {
-                if l.m == 0 || l.n == 0 {
-                    bail!("slot '{}' has a zero dimension", l.name);
-                }
-                if l.m2 == 0 || l.m % l.m2 != 0 {
-                    bail!("slot '{}': block rows {} do not tile {}", l.name, l.m2, l.m);
-                }
-                if l.n2 == 0 || l.n % l.n2 != 0 {
-                    bail!("slot '{}': block cols {} do not tile {}", l.name, l.n2, l.n);
-                }
-                if i > 0 && self.layers[i - 1].m != l.n {
+            for &(m2, n2) in &self.patterns {
+                if m2 == 0 || self.out_dim % m2 != 0 {
                     bail!(
-                        "slot '{}' wants {} inputs but '{}' emits {}",
-                        l.name, l.n, self.layers[i - 1].name, self.layers[i - 1].m
+                        "spec '{}': pattern block rows {m2} do not tile out_dim {}",
+                        self.key, self.out_dim
+                    );
+                }
+                if n2 == 0 || self.in_dim % n2 != 0 {
+                    bail!(
+                        "spec '{}': pattern block cols {n2} do not tile in_dim {}",
+                        self.key, self.in_dim
                     );
                 }
             }
             return Ok(());
         }
-        if self.m2 == 0 || self.out_dim % self.m2 != 0 {
-            bail!("block rows {} do not tile out_dim {}", self.m2, self.out_dim);
-        }
-        if self.n2 == 0 || self.in_dim % self.n2 != 0 {
-            bail!("block cols {} do not tile in_dim {}", self.n2, self.in_dim);
-        }
-        if self.batch == 0 {
-            bail!("batch must be positive");
-        }
-        if (self.method == "kpd" || self.method == "pattern_kpd") && self.rank == 0 {
-            bail!("{} rank must be ≥ 1", self.method);
-        }
-        if self.method == "pattern_kpd" {
-            if self.patterns.is_empty() {
-                bail!("pattern_kpd needs at least one (m2, n2) candidate");
-            }
-            for &(m2, n2) in &self.patterns {
-                if m2 == 0 || self.out_dim % m2 != 0 {
-                    bail!("pattern block rows {m2} do not tile out_dim {}", self.out_dim);
-                }
-                if n2 == 0 || self.in_dim % n2 != 0 {
-                    bail!("pattern block cols {n2} do not tile in_dim {}", self.in_dim);
-                }
-            }
-        } else if !self.patterns.is_empty() {
-            bail!("block-size candidates only apply to the pattern_kpd method");
+        if !self.patterns.is_empty() {
+            bail!(
+                "spec '{}': block-size candidates only apply to the pattern_kpd \
+                 family, not method '{}'; {FAMILIES}",
+                self.key, self.method
+            );
         }
         if !(0.0..=1.0).contains(&self.rigl_density) {
-            bail!("rigl_density must be in [0, 1]");
+            bail!("spec '{}': rigl_density must be in [0, 1]", self.key);
+        }
+        if self.layers.is_empty() {
+            bail!(
+                "spec '{}': no layer slots — every non-pattern spec runs on the \
+                 layer graph; {FAMILIES}",
+                self.key
+            );
+        }
+        if self.is_transformer() {
+            if self.seq == 0 {
+                bail!("spec '{}': transformer seq length must be positive", self.key);
+            }
+            if self.d_model == 0 || self.heads == 0 || self.d_model % self.heads != 0 {
+                bail!(
+                    "spec '{}': attention heads {} must divide d_model {}",
+                    self.key, self.heads, self.d_model
+                );
+            }
+            if self.d_ff == 0 {
+                bail!("spec '{}': transformer d_ff must be positive", self.key);
+            }
+        } else {
+            // linear/mlp: the slot chain must span in_dim → out_dim; a
+            // transformer's slots hang off the residual stream instead
+            if self.layers[0].n != self.in_dim {
+                bail!(
+                    "spec '{}': first slot wants {} inputs, spec has in_dim {}",
+                    self.key, self.layers[0].n, self.in_dim
+                );
+            }
+            if self.layers.last().unwrap().m != self.out_dim {
+                bail!(
+                    "spec '{}': last slot emits {} features, spec has out_dim {}",
+                    self.key, self.layers.last().unwrap().m, self.out_dim
+                );
+            }
+        }
+        for (i, l) in self.layers.iter().enumerate() {
+            if l.m == 0 || l.n == 0 {
+                bail!("spec '{}': slot '{}' has a zero dimension", self.key, l.name);
+            }
+            if l.m2 == 0 || l.m % l.m2 != 0 {
+                bail!(
+                    "spec '{}': slot '{}': block rows {} do not tile {}",
+                    self.key, l.name, l.m2, l.m
+                );
+            }
+            if l.n2 == 0 || l.n % l.n2 != 0 {
+                bail!(
+                    "spec '{}': slot '{}': block cols {} do not tile {}",
+                    self.key, l.name, l.n2, l.n
+                );
+            }
+            if i > 0 && !self.is_transformer() && self.layers[i - 1].m != l.n {
+                bail!(
+                    "spec '{}': slot '{}' wants {} inputs but '{}' emits {}",
+                    self.key, l.name, l.n, self.layers[i - 1].name, self.layers[i - 1].m
+                );
+            }
         }
         Ok(())
     }
@@ -413,6 +545,45 @@ impl NativeBackend {
             ),
             "fig3",
         );
+        // Table 3 natively: width/depth-scaled encoder LMs on the Markov
+        // corpus stand in for the paper's ViT-t / ViT-b / Swin-t rows
+        // (same "scaled proxy" convention as the t2 LeNet stand-in). All
+        // projection/FFN slots use 4×4 blocks, KPD rank 2; seq 16 over a
+        // 64-token vocabulary. The `lm_*` model labels route the specs to
+        // `data::corpus::lm_dataset` and the cosine LR schedule.
+        let t3_models: [(&str, &str, usize, usize, usize, usize); 3] = [
+            ("vit_t", "lm_vit_t", 64, 4, 128, 2),
+            ("vit_b", "lm_vit_b", 96, 6, 192, 3),
+            ("swin_t", "lm_swin_t", 80, 4, 160, 2),
+        ];
+        for (tag, model, d, heads, d_ff, depth) in t3_models {
+            for (short, method) in [
+                ("dense", "dense"),
+                ("gl", "group_lasso"),
+                ("egl", "elastic_gl"),
+                ("rigl", "rigl_block"),
+                ("kpd", "kpd"),
+            ] {
+                add(
+                    SpecConfig::transformer(
+                        &format!("t3_{tag}_{short}"),
+                        model,
+                        method,
+                        64,
+                        16,
+                        d,
+                        heads,
+                        d_ff,
+                        depth,
+                        4,
+                        4,
+                        2,
+                        16,
+                    ),
+                    "table3",
+                );
+            }
+        }
         be
     }
 
@@ -427,6 +598,9 @@ impl NativeBackend {
 
 fn build_entry(cfg: &SpecConfig) -> Result<SpecEntry> {
     cfg.validate()?;
+    if cfg.is_transformer() {
+        return build_t3_entry(cfg);
+    }
     if cfg.is_mlp() {
         return build_mlp_entry(cfg);
     }
@@ -598,6 +772,89 @@ fn build_mlp_entry(cfg: &SpecConfig) -> Result<SpecEntry> {
     })
 }
 
+/// Spec entry for the transformer (`t3_*`) family. The projection/FFN
+/// slots report like an mlp entry — per-slot block sizes in `info.blocks`
+/// (the sparsity probe's layout), per-slot KPD shapes in `info.shapes`
+/// (the FLOPs accounting's layout), per-slot `s_l1_{slot}` metrics after
+/// the whole-model one, an unnamed RigL gradient-norm tail. Dense extras
+/// (embeddings, LayerNorms, head) count toward `params_total` but carry
+/// no block structure; the FLOPs columns cover the slot matmuls only —
+/// the attention/LayerNorm backbone is method-invariant, so it cancels
+/// out of every cross-method comparison the tables make.
+fn build_t3_entry(cfg: &SpecConfig) -> Result<SpecEntry> {
+    let mut metrics: Vec<String> =
+        ["loss", "ce", "acc"].iter().map(|s| s.to_string()).collect();
+    let hyper: Vec<String> = match cfg.method.as_str() {
+        "kpd" => {
+            metrics.push("s_l1".to_string());
+            metrics.extend(cfg.layers.iter().map(|l| format!("s_l1_{}", l.name)));
+            vec!["lambda".to_string(), "lr".to_string()]
+        }
+        "group_lasso" => vec!["lambda".to_string(), "lr".to_string()],
+        "elastic_gl" => {
+            vec!["lambda".to_string(), "lambda2".to_string(), "lr".to_string()]
+        }
+        _ => vec!["lr".to_string()],
+    };
+    let slot_params: usize = if cfg.method == "kpd" {
+        cfg.layers.iter().map(|l| l.dims(cfg.rank).train_params() as usize).sum()
+    } else {
+        cfg.layers.iter().map(|l| l.m * l.n).sum()
+    };
+    let extra_params: usize =
+        transformer::dense_extra_layout(cfg).iter().map(|(_, l)| l).sum();
+    let mut blocks = BTreeMap::new();
+    for l in &cfg.layers {
+        blocks.insert(
+            l.name.clone(),
+            Json::Arr(vec![Json::Num(l.m2 as f64), Json::Num(l.n2 as f64)]),
+        );
+    }
+    let mut info = BTreeMap::new();
+    info.insert("blocks".to_string(), Json::Obj(blocks));
+    if cfg.method == "kpd" {
+        info.insert("rank".to_string(), Json::Num(cfg.rank.max(1) as f64));
+        let mut shapes = BTreeMap::new();
+        for l in &cfg.layers {
+            let d = l.dims(cfg.rank);
+            let mut shape = BTreeMap::new();
+            shape.insert("m1".to_string(), Json::Num(d.m1 as f64));
+            shape.insert("n1".to_string(), Json::Num(d.n1 as f64));
+            shape.insert("m2".to_string(), Json::Num(d.m2 as f64));
+            shape.insert("n2".to_string(), Json::Num(d.n2 as f64));
+            shape.insert("r".to_string(), Json::Num(d.r as f64));
+            shapes.insert(l.name.clone(), Json::Obj(shape));
+        }
+        info.insert("shapes".to_string(), Json::Obj(shapes));
+    }
+    let mut dims = BTreeMap::new();
+    dims.insert("seq".to_string(), Json::Num(cfg.seq as f64));
+    dims.insert("d_model".to_string(), Json::Num(cfg.d_model as f64));
+    dims.insert("heads".to_string(), Json::Num(cfg.heads as f64));
+    dims.insert("d_ff".to_string(), Json::Num(cfg.d_ff as f64));
+    dims.insert("depth".to_string(), Json::Num(cfg.depth as f64));
+    info.insert("transformer".to_string(), Json::Obj(dims));
+    Ok(SpecEntry {
+        key: cfg.key.clone(),
+        model: cfg.model.clone(),
+        batch: cfg.batch,
+        tags: cfg.tags.clone(),
+        input_shape: vec![cfg.seq],
+        input_dtype: DType::I32,
+        num_classes: cfg.out_dim,
+        slots: cfg
+            .layers
+            .iter()
+            .map(|l| SlotInfo { name: l.name.clone(), m: l.m, n: l.n })
+            .collect(),
+        method: cfg.method.clone(),
+        hyper,
+        metrics,
+        params_total: slot_params + extra_params,
+        info: Json::Obj(info),
+    })
+}
+
 // ------------------------------------------------------------- helpers
 
 fn fnv(name: &str) -> u64 {
@@ -728,7 +985,9 @@ fn scale_to_sum(dz: &mut [f32], nb: usize) {
 /// Flat gradient-buffer layout of a spec: `(leaf name, length)` in the
 /// canonical order `grad_step` concatenates and `apply_update` slices —
 /// KPD slots contribute `[S, A, B]`, dense-parameterized slots `[W]`,
-/// pattern specs one `[S, A, B]` triple per candidate.
+/// pattern specs one `[S, A, B]` triple per candidate, transformer specs
+/// their slot layout followed by the dense extras (embeddings, LayerNorm
+/// gains/biases, head).
 pub fn grad_layout(cfg: &SpecConfig) -> Vec<(String, usize)> {
     if cfg.method == "pattern_kpd" {
         let mut out = Vec::new();
@@ -739,18 +998,11 @@ pub fn grad_layout(cfg: &SpecConfig) -> Vec<(String, usize)> {
         }
         return out;
     }
-    if cfg.is_mlp() {
-        return layers::grad_layout(cfg);
+    let mut out = layers::grad_layout(cfg);
+    if cfg.is_transformer() {
+        out.extend(transformer::dense_extra_layout(cfg));
     }
-    if cfg.method == "kpd" {
-        let d = cfg.dims();
-        return vec![
-            ("fc.S".to_string(), d.m1 * d.n1),
-            ("fc.A".to_string(), d.r * d.m1 * d.n1),
-            ("fc.B".to_string(), d.r * d.m2 * d.n2),
-        ];
-    }
-    vec![("fc.W".to_string(), cfg.out_dim * cfg.in_dim)]
+    out
 }
 
 /// Per-block Frobenius norms on an (m2×n2) grid — the shared tensor-layer
@@ -815,6 +1067,33 @@ fn batch_xy<'a>(
     Ok((xt.data(), nb, ys))
 }
 
+/// Token batch of a transformer spec: x and y are i32 id grids of shape
+/// `[batch, seq]` (y = next-token targets, the `lm_dataset` layout).
+fn batch_tokens<'a>(
+    x: &'a HostValue,
+    y: &'a HostValue,
+    seq: usize,
+) -> Result<(&'a [i32], usize, &'a [i32])> {
+    let (toks, nb) = match x {
+        HostValue::I32 { shape, data } if shape.len() == 2 && shape[1] == seq => {
+            (data.as_slice(), shape[0])
+        }
+        _ => bail!("transformer spec wants i32 token ids of shape [batch, {seq}]"),
+    };
+    if nb == 0 {
+        bail!("empty batch");
+    }
+    let targets = match y {
+        HostValue::I32 { shape, data }
+            if shape.len() == 2 && shape[0] == nb && shape[1] == seq =>
+        {
+            data.as_slice()
+        }
+        _ => bail!("transformer spec wants i32 target ids of shape [{nb}, {seq}]"),
+    };
+    Ok((toks, nb, targets))
+}
+
 struct Hyper {
     lam: f32,
     lam2: f32,
@@ -843,275 +1122,7 @@ fn parse_hyper(entry: &SpecEntry, hyper: &[f32]) -> Result<Hyper> {
     Ok(out)
 }
 
-// ------------------------------------------------------------- the impl
-
-impl NativeBackend {
-    /// Logits for the current parameters under the spec's method.
-    fn forward(&self, ns: &NativeSpec, state: &TrainState, x: &[f32], nb: usize) -> Result<Vec<f32>> {
-        let cfg = &ns.cfg;
-        let (m, n) = (cfg.out_dim, cfg.in_dim);
-        match cfg.method.as_str() {
-            "kpd" => {
-                let s = state.param("fc.S")?;
-                let a = state.param("fc.A")?;
-                let b = state.param("fc.B")?;
-                let (z, _) = kpd::forward(x, nb, s.data(), a.data(), b.data(), cfg.dims());
-                Ok(z)
-            }
-            "rigl_block" => {
-                let w = state.param("fc.W")?;
-                let mask = state.param("fc.mask")?;
-                linalg::block_sparse_matmul_nt(
-                    x,
-                    w.data(),
-                    mask.data(),
-                    nb,
-                    m,
-                    n,
-                    cfg.m2,
-                    cfg.n2,
-                )
-            }
-            "iter_prune" => {
-                let w = state.param("fc.W")?;
-                let emask = state.param("fc.emask")?;
-                let weff: Vec<f32> =
-                    w.data().iter().zip(emask.data()).map(|(a, b)| a * b).collect();
-                Ok(linalg::matmul_nt(x, &weff, nb, n, m))
-            }
-            _ => {
-                let w = state.param("fc.W")?;
-                Ok(linalg::matmul_nt(x, w.data(), nb, n, m))
-            }
-        }
-    }
-
-    fn step_kpd(
-        &self,
-        ns: &NativeSpec,
-        state: &mut TrainState,
-        x: &[f32],
-        nb: usize,
-        y: &[i32],
-        h: &Hyper,
-    ) -> Result<Vec<f32>> {
-        let d = ns.cfg.dims();
-        let s = state.param("fc.S")?.data().to_vec();
-        let a = state.param("fc.A")?.data().to_vec();
-        let b = state.param("fc.B")?.data().to_vec();
-        let (z, tp) = kpd::forward(x, nb, &s, &a, &b, d);
-        let sm = linalg::softmax_ce(&z, y, nb, d.m())?;
-        let g = kpd::backward(x, nb, &s, &a, &sm.dz, &tp, d);
-        self.apply_kpd(ns, state, &g.gs, &g.ga, &g.gb, sm.ce_mean, sm.acc_frac, h)
-    }
-
-    /// KPD gradient half of [`Backend::grad_step`]: per-example gradient
-    /// sums of (S, A, B) on one shard, state untouched.
-    fn grad_kpd(
-        &self,
-        ns: &NativeSpec,
-        state: &TrainState,
-        x: &[f32],
-        nb: usize,
-        y: &[i32],
-    ) -> Result<GradOut> {
-        let d = ns.cfg.dims();
-        // `state` is a shared borrow here (unlike the fused step, which
-        // must snapshot before mutating): no parameter copies
-        let s = state.param("fc.S")?;
-        let a = state.param("fc.A")?;
-        let b = state.param("fc.B")?;
-        let (z, tp) = kpd::forward(x, nb, s.data(), a.data(), b.data(), d);
-        let mut sm = linalg::softmax_ce(&z, y, nb, d.m())?;
-        scale_to_sum(&mut sm.dz, nb);
-        let g = kpd::backward(x, nb, s.data(), a.data(), &sm.dz, &tp, d);
-        let mut grad_sum = g.gs;
-        grad_sum.extend(g.ga);
-        grad_sum.extend(g.gb);
-        Ok(GradOut {
-            grad_sum,
-            ce_sum: sm.ce_mean * nb as f32,
-            correct: sm.correct,
-            examples: nb,
-        })
-    }
-
-    /// KPD update half: SGD/momentum on A/B, plain SGD + ℓ1 prox on S
-    /// (the gradients are batch means). Shared by the fused `train_step`
-    /// and the data-parallel `apply_update` so the two paths cannot drift.
-    #[allow(clippy::too_many_arguments)]
-    fn apply_kpd(
-        &self,
-        ns: &NativeSpec,
-        state: &mut TrainState,
-        gs: &[f32],
-        ga: &[f32],
-        gb: &[f32],
-        ce_mean: f32,
-        acc_frac: f32,
-        h: &Hyper,
-    ) -> Result<Vec<f32>> {
-        let mu = ns.cfg.momentum;
-        // ‖S‖₁ pre-update, so the loss reports the objective the
-        // gradients were taken at
-        let s_l1 = state.param("fc.S")?.abs_sum();
-        let (ai, avi) = (pidx(state, "fc.A")?, oidx(state, "fc.A.m")?);
-        sgd_momentum(
-            state.params[ai].data_mut(),
-            state.opt[avi].data_mut(),
-            ga,
-            h.lr,
-            mu,
-        );
-        let (bi, bvi) = (pidx(state, "fc.B")?, oidx(state, "fc.B.m")?);
-        sgd_momentum(
-            state.params[bi].data_mut(),
-            state.opt[bvi].data_mut(),
-            gb,
-            h.lr,
-            mu,
-        );
-        // S: plain SGD step fused with the ℓ1 prox → exact zeros
-        let si = pidx(state, "fc.S")?;
-        sgd_prox_l1(state.params[si].data_mut(), gs, h.lr, h.lr * h.lam);
-
-        let loss = ce_mean + h.lam * s_l1;
-        Ok(vec![loss, ce_mean, acc_frac, s_l1])
-    }
-
-    fn step_dense_family(
-        &self,
-        ns: &NativeSpec,
-        state: &mut TrainState,
-        x: &[f32],
-        nb: usize,
-        y: &[i32],
-        h: &Hyper,
-    ) -> Result<Vec<f32>> {
-        let z = self.forward(ns, state, x, nb)?;
-        let sm = linalg::softmax_ce(&z, y, nb, ns.cfg.out_dim)?;
-        let dw = linalg::matmul_tn(&sm.dz, x, nb, ns.cfg.out_dim, ns.cfg.in_dim);
-        self.apply_dense(ns, state, dw, sm.ce_mean, sm.acc_frac, h)
-    }
-
-    /// Dense-family gradient half of [`Backend::grad_step`]: the raw
-    /// per-example-summed dW = dZᵀ·X of one shard — before any masking or
-    /// ridge term, which are state-dependent and belong to the update half.
-    fn grad_dense(
-        &self,
-        ns: &NativeSpec,
-        state: &TrainState,
-        x: &[f32],
-        nb: usize,
-        y: &[i32],
-    ) -> Result<GradOut> {
-        let z = self.forward(ns, state, x, nb)?;
-        let mut sm = linalg::softmax_ce(&z, y, nb, ns.cfg.out_dim)?;
-        scale_to_sum(&mut sm.dz, nb);
-        let dw = linalg::matmul_tn(&sm.dz, x, nb, ns.cfg.out_dim, ns.cfg.in_dim);
-        Ok(GradOut {
-            grad_sum: dw,
-            ce_sum: sm.ce_mean * nb as f32,
-            correct: sm.correct,
-            examples: nb,
-        })
-    }
-
-    /// Dense-family update half: regularizer terms, gradient masking,
-    /// SGD/momentum and the block-group prox — `dw` is the raw mean
-    /// gradient. Shared by the fused `train_step` and `apply_update`.
-    fn apply_dense(
-        &self,
-        ns: &NativeSpec,
-        state: &mut TrainState,
-        dw: Vec<f32>,
-        ce_mean: f32,
-        acc_frac: f32,
-        h: &Hyper,
-    ) -> Result<Vec<f32>> {
-        let cfg = &ns.cfg;
-        let (m, n, m2, n2) = (cfg.out_dim, cfg.in_dim, cfg.m2, cfg.n2);
-        let method = cfg.method.as_str();
-        let mu = cfg.momentum;
-
-        // Regularizer terms read the *pre-update* W through a shared
-        // borrow — the old W clone is gone; the mask/ridge sweeps are
-        // fused into the momentum update below.
-        let mut reg = 0.0f32;
-        {
-            let w = state.param("fc.W")?.data();
-            if method == "elastic_gl" {
-                let wsq: f32 = w.iter().map(|v| v * v).sum();
-                reg += 0.5 * h.lam2 * wsq;
-            }
-            if method == "group_lasso" || method == "elastic_gl" {
-                let weight = h.lam * ((m2 * n2) as f32).sqrt();
-                reg += weight * block_fro(w, m, n, m2, n2).iter().sum::<f32>();
-            }
-        }
-        // dense-gradient block norms (the RigL growth signal) come from
-        // the *unmasked* gradient, so they are taken before the update
-        let mut gnorm_tail: Vec<f32> = Vec::new();
-        if method == "rigl_block" {
-            gnorm_tail = block_fro(&dw, m, n, m2, n2);
-        }
-
-        let (wi, wvi) = (pidx(state, "fc.W")?, oidx(state, "fc.W.m")?);
-        match method {
-            "elastic_gl" => sgd_momentum_l2(
-                state.params[wi].data_mut(),
-                state.opt[wvi].data_mut(),
-                &dw,
-                h.lr,
-                mu,
-                h.lam2,
-            ),
-            "rigl_block" => {
-                let mi = pidx(state, "fc.mask")?;
-                let (wt, mt) = param_pair_mut(&mut state.params, wi, mi);
-                sgd_momentum_block_masked(
-                    wt.data_mut(),
-                    state.opt[wvi].data_mut(),
-                    &dw,
-                    mt.data(),
-                    m,
-                    n,
-                    m2,
-                    n2,
-                    h.lr,
-                    mu,
-                );
-            }
-            "iter_prune" => {
-                let ei = pidx(state, "fc.emask")?;
-                let (wt, et) = param_pair_mut(&mut state.params, wi, ei);
-                sgd_momentum_masked(
-                    wt.data_mut(),
-                    state.opt[wvi].data_mut(),
-                    &dw,
-                    et.data(),
-                    h.lr,
-                    mu,
-                );
-            }
-            _ => sgd_momentum(
-                state.params[wi].data_mut(),
-                state.opt[wvi].data_mut(),
-                &dw,
-                h.lr,
-                mu,
-            ),
-        }
-        if method == "group_lasso" || method == "elastic_gl" {
-            let kappa = h.lr * h.lam * ((m2 * n2) as f32).sqrt();
-            block_prox(state.params[wi].data_mut(), m, n, m2, n2, kappa);
-        }
-
-        let mut out = vec![ce_mean + reg, ce_mean, acc_frac];
-        out.extend(gnorm_tail);
-        Ok(out)
-    }
-}
+// ---------------------------------------------------- Backend routing
 
 impl Backend for NativeBackend {
     fn name(&self) -> String {
@@ -1130,73 +1141,22 @@ impl Backend for NativeBackend {
         let ns = self.get(spec)?;
         let cfg = &ns.cfg;
         let mut rng = Rng::new((seed as u64) ^ fnv(&cfg.key));
-        if cfg.method == "pattern_kpd" {
-            let (pn, ps, on, os) = pattern::init_state_parts(&cfg.pattern_dims(), &mut rng);
-            return Ok(TrainState {
-                spec: spec.to_string(),
-                param_names: pn,
-                opt_names: on,
-                params: ps,
-                opt: os,
-            });
-        }
-        if cfg.is_mlp() {
-            let (pn, ps, on, os) = layers::init_state_parts(cfg, &mut rng);
-            return Ok(TrainState {
-                spec: spec.to_string(),
-                param_names: pn,
-                opt_names: on,
-                params: ps,
-                opt: os,
-            });
-        }
-        let (m, n) = (cfg.out_dim, cfg.in_dim);
-        let mut param_names = Vec::new();
-        let mut params = Vec::new();
-        let mut opt_names = Vec::new();
-        let mut opt = Vec::new();
-        if cfg.method == "kpd" {
-            let d = cfg.dims();
-            // scaled so the reconstructed W has ≈ sqrt(1/n) entries
-            let a_std = (1.0 / (d.r * d.n1) as f32).sqrt();
-            let b_std = (1.0 / d.n2 as f32).sqrt();
-            param_names.push("fc.S".to_string());
-            params.push(Tensor::full(&[d.m1, d.n1], 1.0));
-            param_names.push("fc.A".to_string());
-            params.push(Tensor::from_fn(&[d.r, d.m1, d.n1], |_| rng.normal() * a_std));
-            param_names.push("fc.B".to_string());
-            params.push(Tensor::from_fn(&[d.r, d.m2, d.n2], |_| rng.normal() * b_std));
-            opt_names.push("fc.A.m".to_string());
-            opt.push(Tensor::zeros(&[d.r, d.m1, d.n1]));
-            opt_names.push("fc.B.m".to_string());
-            opt.push(Tensor::zeros(&[d.r, d.m2, d.n2]));
+        let (pn, ps, on, os) = if cfg.method == "pattern_kpd" {
+            pattern::init_state_parts(&cfg.pattern_dims(), &mut rng)
+        } else if cfg.is_transformer() {
+            transformer::init_state_parts(cfg, &mut rng)
         } else {
-            let w_std = (1.0 / n as f32).sqrt();
-            param_names.push("fc.W".to_string());
-            params.push(Tensor::from_fn(&[m, n], |_| rng.normal() * w_std));
-            if cfg.method == "rigl_block" {
-                let (m1, n1) = cfg.grid();
-                let total = m1 * n1;
-                let k = ((cfg.rigl_density * total as f64).round() as usize).clamp(1, total);
-                let chosen = rng.choose(total, k);
-                let mut mask = vec![0.0f32; total];
-                for i in chosen {
-                    mask[i] = 1.0;
-                }
-                // inactive blocks start (and later grow) from exactly zero:
-                // without this, the first grow step would resurrect the
-                // untrained random init of a never-active block
-                mul_expand_mask(params[0].data_mut(), &mask, m, n, cfg.m2, cfg.n2);
-                param_names.push("fc.mask".to_string());
-                params.push(Tensor::new(&[m1, n1], mask)?);
-            } else if cfg.method == "iter_prune" {
-                param_names.push("fc.emask".to_string());
-                params.push(Tensor::full(&[m, n], 1.0));
-            }
-            opt_names.push("fc.W.m".to_string());
-            opt.push(Tensor::zeros(&[m, n]));
-        }
-        Ok(TrainState { spec: spec.to_string(), param_names, opt_names, params, opt })
+            // linear and mlp specs are one-slot and N-slot stacks of the
+            // same layer graph — one init path, bit-identical RNG order
+            layers::init_state_parts(cfg, &mut rng)
+        };
+        Ok(TrainState {
+            spec: spec.to_string(),
+            param_names: pn,
+            opt_names: on,
+            params: ps,
+            opt: os,
+        })
     }
 
     fn train_step(
@@ -1208,39 +1168,33 @@ impl Backend for NativeBackend {
     ) -> Result<Vec<f32>> {
         let ns = self.get(&state.spec)?;
         let h = parse_hyper(&ns.entry, hyper)?;
-        let (xs, nb, ys) = batch_xy(x, y, ns.cfg.in_dim)?;
-        if ns.cfg.is_mlp() {
-            return layers::train_step(&ns.cfg, state, xs, nb, ys, &h);
+        if ns.cfg.is_transformer() {
+            let (toks, nb, targets) = batch_tokens(x, y, ns.cfg.seq)?;
+            return transformer::train_step(&ns.cfg, state, toks, nb, targets, &h);
         }
+        let (xs, nb, ys) = batch_xy(x, y, ns.cfg.in_dim)?;
         match ns.cfg.method.as_str() {
-            "kpd" => self.step_kpd(ns, state, xs, nb, ys, &h),
-            "pattern_kpd" => pattern::train_step(
-                state,
-                xs,
-                nb,
-                ys,
-                &ns.cfg.pattern_dims(),
-                h.lam,
-                h.lr,
-                ns.cfg.momentum,
-            ),
-            _ => self.step_dense_family(ns, state, xs, nb, ys, &h),
+            "pattern_kpd" => {
+                pattern::train_step(&ns.cfg, state, xs, nb, ys, h.lam, h.lr, ns.cfg.momentum)
+            }
+            _ => layers::train_step(&ns.cfg, state, xs, nb, ys, &h),
         }
     }
 
     fn eval_step(&self, state: &TrainState, x: &HostValue, y: &HostValue) -> Result<Vec<f32>> {
         let ns = self.get(&state.spec)?;
+        if ns.cfg.is_transformer() {
+            let (toks, nb, targets) = batch_tokens(x, y, ns.cfg.seq)?;
+            // [per-token mean CE, correct token count] — the trainer's
+            // evaluate divides by examples·seq for token-level accuracy
+            return transformer::eval_step(&ns.cfg, state, toks, nb, targets);
+        }
         let (xs, nb, ys) = batch_xy(x, y, ns.cfg.in_dim)?;
         if ns.cfg.method == "pattern_kpd" {
             // per-pattern layout [ce_0..ce_{K-1}, correct_0..correct_{K-1}]
-            return pattern::eval_step(state, xs, nb, ys, &ns.cfg.pattern_dims());
+            return pattern::eval_step(&ns.cfg, state, xs, nb, ys);
         }
-        if ns.cfg.is_mlp() {
-            let z = layers::forward_logits(&ns.cfg, state, xs, nb)?;
-            let sm = linalg::softmax_ce(&z, ys, nb, ns.cfg.out_dim)?;
-            return Ok(vec![sm.ce_mean, sm.correct]);
-        }
-        let z = self.forward(ns, state, xs, nb)?;
+        let z = layers::forward_logits(&ns.cfg, state, xs, nb)?;
         let sm = linalg::softmax_ce(&z, ys, nb, ns.cfg.out_dim)?;
         Ok(vec![sm.ce_mean, sm.correct])
     }
@@ -1248,37 +1202,16 @@ impl Backend for NativeBackend {
     fn materialize(&self, state: &TrainState) -> Result<Vec<(String, Tensor)>> {
         let ns = self.get(&state.spec)?;
         let cfg = &ns.cfg;
-        if cfg.is_mlp() {
-            return layers::materialize(cfg, state);
+        if cfg.method == "pattern_kpd" {
+            // survivor extraction: the max-retention candidate's dense W
+            let (p, w) = pattern::materialize_survivor(state, &cfg.pattern_dims())?;
+            crate::debug!("{}: materializing surviving pattern k={p}", cfg.key);
+            return Ok(vec![("fc".to_string(), w)]);
         }
-        let (m, n) = (cfg.out_dim, cfg.in_dim);
-        let w = match cfg.method.as_str() {
-            "kpd" => {
-                let s = state.param("fc.S")?;
-                let a = state.param("fc.A")?;
-                let b = state.param("fc.B")?;
-                Tensor::kpd_reconstruct(s, a, b)?
-            }
-            "pattern_kpd" => {
-                // survivor extraction: the max-retention candidate's dense W
-                let (p, w) = pattern::materialize_survivor(state, &cfg.pattern_dims())?;
-                crate::debug!("{}: materializing surviving pattern k={p}", cfg.key);
-                w
-            }
-            "rigl_block" => {
-                let mut w = state.param("fc.W")?.data().to_vec();
-                let mask = state.param("fc.mask")?;
-                mul_expand_mask(&mut w, mask.data(), m, n, cfg.m2, cfg.n2);
-                Tensor::new(&[m, n], w)?
-            }
-            "iter_prune" => {
-                let w = state.param("fc.W")?;
-                let emask = state.param("fc.emask")?;
-                w.hadamard(emask)?
-            }
-            _ => state.param("fc.W")?.clone(),
-        };
-        Ok(vec![("fc".to_string(), w)])
+        // every slot of the layer graph — for transformers that is the
+        // q/k/v/o/FFN projection stack (the block-sparse weights; the
+        // dense extras live in the training checkpoint, not the export)
+        layers::materialize(cfg, state)
     }
 
     fn rigl_update(&self, state: &mut TrainState, gnorm: &[f32], alpha: f32) -> Result<()> {
@@ -1287,15 +1220,8 @@ impl Backend for NativeBackend {
         if cfg.method != "rigl_block" {
             bail!("rigl_update on non-RigL spec '{}'", state.spec);
         }
-        if cfg.is_mlp() {
-            // per-slot drop/grow on the concatenated gradient-norm layout
-            return layers::rigl_update(cfg, state, gnorm, alpha);
-        }
-        let (m1, n1) = cfg.grid();
-        if gnorm.len() != m1 * n1 {
-            bail!("rigl_update wants {} block gradient norms, got {}", m1 * n1, gnorm.len());
-        }
-        layers::rigl_update_slot(state, "fc", cfg.out_dim, cfg.in_dim, cfg.m2, cfg.n2, gnorm, alpha)
+        // per-slot drop/grow on the concatenated gradient-norm layout
+        layers::rigl_update(cfg, state, gnorm, alpha)
     }
 
     fn prune(&self, state: &mut TrainState, target: f32) -> Result<()> {
@@ -1307,31 +1233,9 @@ impl Backend for NativeBackend {
         if !(0.0..1.0).contains(&target) {
             bail!("prune target {target} outside [0, 1)");
         }
-        if cfg.is_mlp() {
-            // global magnitude ranking across every slot (standard
-            // whole-model iterative pruning)
-            return layers::prune(cfg, state, target);
-        }
-        let total = cfg.out_dim * cfg.in_dim;
-        let keep = total - ((target as f64) * total as f64).round() as usize;
-        let wi = pidx(state, "fc.W")?;
-        let vi = oidx(state, "fc.W.m")?;
-        let ei = pidx(state, "fc.emask")?;
-        let w = state.params[wi].data().to_vec();
-        let mut order: Vec<usize> = (0..total).collect();
-        order.sort_by(|&a, &b| w[b].abs().total_cmp(&w[a].abs()));
-        let mut emask = vec![0.0f32; total];
-        for &i in &order[..keep] {
-            emask[i] = 1.0;
-        }
-        for i in 0..total {
-            if emask[i] == 0.0 {
-                state.params[wi].data_mut()[i] = 0.0;
-                state.opt[vi].data_mut()[i] = 0.0;
-            }
-        }
-        state.params[ei] = Tensor::new(&[cfg.out_dim, cfg.in_dim], emask)?;
-        Ok(())
+        // global magnitude ranking across every slot (standard
+        // whole-model iterative pruning)
+        layers::prune(cfg, state, target)
     }
 
     fn gnorm_len(&self, spec: &str) -> Result<usize> {
@@ -1339,11 +1243,7 @@ impl Backend for NativeBackend {
         if ns.cfg.method != "rigl_block" {
             return Ok(0);
         }
-        if ns.cfg.is_mlp() {
-            return Ok(layers::gnorm_len(&ns.cfg));
-        }
-        let (m1, n1) = ns.cfg.grid();
-        Ok(m1 * n1)
+        Ok(layers::gnorm_len(&ns.cfg))
     }
 
     fn supports_grad_step(&self, spec: &str) -> bool {
@@ -1358,14 +1258,14 @@ impl Backend for NativeBackend {
 
     fn grad_step(&self, state: &TrainState, x: &HostValue, y: &HostValue) -> Result<GradOut> {
         let ns = self.get(&state.spec)?;
-        let (xs, nb, ys) = batch_xy(x, y, ns.cfg.in_dim)?;
-        if ns.cfg.is_mlp() {
-            return layers::grad_step(&ns.cfg, state, xs, nb, ys);
+        if ns.cfg.is_transformer() {
+            let (toks, nb, targets) = batch_tokens(x, y, ns.cfg.seq)?;
+            return transformer::grad_step(&ns.cfg, state, toks, nb, targets);
         }
+        let (xs, nb, ys) = batch_xy(x, y, ns.cfg.in_dim)?;
         match ns.cfg.method.as_str() {
-            "kpd" => self.grad_kpd(ns, state, xs, nb, ys),
-            "pattern_kpd" => pattern::grad_step(state, xs, nb, ys, &ns.cfg.pattern_dims()),
-            _ => self.grad_dense(ns, state, xs, nb, ys),
+            "pattern_kpd" => pattern::grad_step(&ns.cfg, state, xs, nb, ys),
+            _ => layers::grad_step(&ns.cfg, state, xs, nb, ys),
         }
     }
 
@@ -1387,16 +1287,10 @@ impl Backend for NativeBackend {
                 grad.len()
             );
         }
-        if ns.cfg.is_mlp() {
-            return layers::apply_update(&ns.cfg, state, &grad, ce_mean, acc_frac, &h);
+        if ns.cfg.is_transformer() {
+            return transformer::apply_update(&ns.cfg, state, &grad, ce_mean, acc_frac, &h);
         }
         match ns.cfg.method.as_str() {
-            "kpd" => {
-                let d = ns.cfg.dims();
-                let (gs, rest) = grad.split_at(d.m1 * d.n1);
-                let (ga, gb) = rest.split_at(d.r * d.m1 * d.n1);
-                self.apply_kpd(ns, state, gs, ga, gb, ce_mean, acc_frac, &h)
-            }
             "pattern_kpd" => pattern::apply_update(
                 state,
                 &grad,
@@ -1407,7 +1301,7 @@ impl Backend for NativeBackend {
                 h.lr,
                 ns.cfg.momentum,
             ),
-            _ => self.apply_dense(ns, state, grad, ce_mean, acc_frac, &h),
+            _ => layers::apply_update(&ns.cfg, state, &grad, ce_mean, acc_frac, &h),
         }
     }
 }

@@ -39,7 +39,8 @@ use crate::flops::KpdDims;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
-use super::{kpd, linalg, oidx, pidx, sgd_momentum, sgd_prox_l1};
+use super::layers::LinGrads;
+use super::{kpd, layers, linalg, oidx, pidx, sgd_momentum, sgd_prox_l1, LayerCfg, SpecConfig};
 
 /// λ calibration for the native gauge objective as `(base, ramp per
 /// period)`: empirically chosen for the lr·√(r·n) S step. The paper's
@@ -65,6 +66,27 @@ pub fn calibrate_lambda(cfg: &mut crate::config::TrainConfig, backend_name: &str
 /// Canonical parameter name for pattern `p`: `p{p}.fc.{leaf}`.
 pub fn pname(p: usize, leaf: &str) -> String {
     format!("p{p}.fc.{leaf}")
+}
+
+/// Synthetic one-slot layer configs, one per candidate: slot `p{k}.fc`
+/// over the shared m×n weight at that candidate's block size. This is the
+/// bridge onto the layer-graph core — every candidate's forward/backward
+/// runs through [`layers::linear_forward`] / [`layers::linear_backward`]
+/// like any other slot (the `pattern_kpd` method takes the KPD path, and
+/// `LayerCfg::dims` reproduces `SpecConfig::pattern_dims` exactly); only
+/// the gauge-fixed update below stays pattern-specific.
+fn slot_cfgs(cfg: &SpecConfig) -> Vec<LayerCfg> {
+    cfg.patterns
+        .iter()
+        .enumerate()
+        .map(|(p, &(m2, n2))| LayerCfg {
+            name: format!("p{p}.fc"),
+            m: cfg.out_dim,
+            n: cfg.in_dim,
+            m2,
+            n2,
+        })
+        .collect()
 }
 
 /// Nominal per-rank Frobenius norms the gauge holds A_r and B_r at:
@@ -135,65 +157,58 @@ pub fn init_state_parts(
 /// gradients were taken at).
 #[allow(clippy::too_many_arguments)]
 pub fn train_step(
+    cfg: &SpecConfig,
     state: &mut TrainState,
     x: &[f32],
     nb: usize,
     y: &[i32],
-    dims: &[KpdDims],
     lam: f32,
     lr: f32,
     mu: f32,
 ) -> Result<Vec<f32>> {
-    let m = dims[0].m();
+    let dims = cfg.pattern_dims();
+    let slots = slot_cfgs(cfg);
+    let m = cfg.out_dim;
     // forward: one summed-logit pass, keeping each pattern's T′ caches
     let mut z = vec![0.0f32; nb * m];
-    let mut caches = Vec::with_capacity(dims.len());
-    let mut ss = Vec::with_capacity(dims.len());
-    let mut aa = Vec::with_capacity(dims.len());
-    for (p, &d) in dims.iter().enumerate() {
-        let s = state.param(&pname(p, "S"))?.data().to_vec();
-        let a = state.param(&pname(p, "A"))?.data().to_vec();
-        let b = state.param(&pname(p, "B"))?;
-        let (zp, tp) = kpd::forward(x, nb, &s, &a, b.data(), d);
+    let mut caches = Vec::with_capacity(slots.len());
+    for lc in &slots {
+        let (zp, tp) = layers::linear_forward(cfg, state, lc, x, nb)?;
         for (acc, v) in z.iter_mut().zip(&zp) {
             *acc += v;
         }
         caches.push(tp);
-        ss.push(s);
-        aa.push(a);
     }
     let sm = linalg::softmax_ce(&z, y, nb, m)?;
 
-    // backward per pattern, all sharing dZ, at the pre-update snapshot
-    let grads: Vec<kpd::Grads> = dims
-        .iter()
-        .enumerate()
-        .map(|(p, &d)| kpd::backward(x, nb, &ss[p], &aa[p], &sm.dz, &caches[p], d))
-        .collect();
-    apply(state, dims, &grads, sm.ce_mean, sm.acc_frac, lam, lr, mu)
+    // backward per pattern, all sharing dZ (each candidate's gradients
+    // are independent given dZ — no dX chaining between candidates)
+    let mut grads = Vec::with_capacity(slots.len());
+    for (lc, tp) in slots.iter().zip(&caches) {
+        match layers::linear_backward(cfg, state, lc, x, tp, &sm.dz, nb, false)?.0 {
+            LinGrads::Kpd(g) => grads.push(g),
+            LinGrads::Dense(_) => bail!("pattern_kpd slots are KPD-factorized"),
+        }
+    }
+    apply(state, &dims, &grads, sm.ce_mean, sm.acc_frac, lam, lr, mu)
 }
 
 /// Gradient half of the joint step ([`crate::backend::Backend::grad_step`]):
 /// every candidate's (gs, ga, gb) at the shared dZ, concatenated in
 /// pattern order as per-example *sums*. State untouched.
 pub fn grad_step(
+    cfg: &SpecConfig,
     state: &TrainState,
     x: &[f32],
     nb: usize,
     y: &[i32],
-    dims: &[KpdDims],
 ) -> Result<GradOut> {
-    let m = dims[0].m();
+    let slots = slot_cfgs(cfg);
+    let m = cfg.out_dim;
     let mut z = vec![0.0f32; nb * m];
-    let mut caches = Vec::with_capacity(dims.len());
-    // `state` stays a shared borrow throughout (the fused step must
-    // snapshot S/A because it mutates them; this path never does), so
-    // the factors are read in place with no copies
-    for (p, &d) in dims.iter().enumerate() {
-        let s = state.param(&pname(p, "S"))?;
-        let a = state.param(&pname(p, "A"))?;
-        let b = state.param(&pname(p, "B"))?;
-        let (zp, tp) = kpd::forward(x, nb, s.data(), a.data(), b.data(), d);
+    let mut caches = Vec::with_capacity(slots.len());
+    for lc in &slots {
+        let (zp, tp) = layers::linear_forward(cfg, state, lc, x, nb)?;
         for (acc, v) in z.iter_mut().zip(&zp) {
             *acc += v;
         }
@@ -202,13 +217,15 @@ pub fn grad_step(
     let mut sm = linalg::softmax_ce(&z, y, nb, m)?;
     super::scale_to_sum(&mut sm.dz, nb);
     let mut grad_sum = Vec::new();
-    for (p, &d) in dims.iter().enumerate() {
-        let s = state.param(&pname(p, "S"))?;
-        let a = state.param(&pname(p, "A"))?;
-        let g = kpd::backward(x, nb, s.data(), a.data(), &sm.dz, &caches[p], d);
-        grad_sum.extend(g.gs);
-        grad_sum.extend(g.ga);
-        grad_sum.extend(g.gb);
+    for (lc, tp) in slots.iter().zip(&caches) {
+        match layers::linear_backward(cfg, state, lc, x, tp, &sm.dz, nb, false)?.0 {
+            LinGrads::Kpd(g) => {
+                grad_sum.extend(g.gs);
+                grad_sum.extend(g.ga);
+                grad_sum.extend(g.gb);
+            }
+            LinGrads::Dense(_) => bail!("pattern_kpd slots are KPD-factorized"),
+        }
     }
     Ok(GradOut {
         grad_sum,
@@ -302,20 +319,18 @@ fn apply(
 /// best pattern") is measurable from one state. Layout:
 /// `[ce_0..ce_{K-1}, correct_0..correct_{K-1}]`.
 pub fn eval_step(
+    cfg: &SpecConfig,
     state: &TrainState,
     x: &[f32],
     nb: usize,
     y: &[i32],
-    dims: &[KpdDims],
 ) -> Result<Vec<f32>> {
-    let m = dims[0].m();
-    let mut ces = Vec::with_capacity(dims.len());
-    let mut corrects = Vec::with_capacity(dims.len());
-    for (p, &d) in dims.iter().enumerate() {
-        let s = state.param(&pname(p, "S"))?;
-        let a = state.param(&pname(p, "A"))?;
-        let b = state.param(&pname(p, "B"))?;
-        let (z, _) = kpd::forward(x, nb, s.data(), a.data(), b.data(), d);
+    let slots = slot_cfgs(cfg);
+    let m = cfg.out_dim;
+    let mut ces = Vec::with_capacity(slots.len());
+    let mut corrects = Vec::with_capacity(slots.len());
+    for lc in &slots {
+        let (z, _) = layers::linear_forward(cfg, state, lc, x, nb)?;
         let sm = linalg::softmax_ce(&z, y, nb, m)?;
         ces.push(sm.ce_mean);
         corrects.push(sm.correct);
@@ -365,6 +380,11 @@ mod tests {
     fn dims2() -> Vec<KpdDims> {
         // two candidates over the same 4×8 weight: blocks 2×2 and 2×4
         vec![KpdDims::from_block(4, 8, 2, 2, 2), KpdDims::from_block(4, 8, 2, 4, 2)]
+    }
+
+    /// The spec whose `pattern_dims()` equals [`dims2`].
+    fn cfg2() -> SpecConfig {
+        SpecConfig::pattern("pat_test", 8, 4, &[(2, 2), (2, 4)], 2, 8)
     }
 
     fn state_for(dims: &[KpdDims], seed: u64) -> TrainState {
@@ -419,7 +439,7 @@ mod tests {
         }
         // the joint step reports CE of the summed logits: recompute both ways
         let mut st2 = state_for(&dims, 2);
-        let m = train_step(&mut st2, &x, 3, &y, &dims, 0.0, 0.0, 0.0).unwrap();
+        let m = train_step(&cfg2(), &mut st2, &x, 3, &y, 0.0, 0.0, 0.0).unwrap();
         let sm = linalg::softmax_ce(&zref, &y, 3, 4).unwrap();
         assert!((m[1] - sm.ce_mean).abs() < 1e-4, "{} vs {}", m[1], sm.ce_mean);
     }
@@ -429,7 +449,7 @@ mod tests {
         let dims = dims2();
         let mut st = state_for(&dims, 3);
         let (x, y) = batch(6, 8, 4, 8);
-        let m = train_step(&mut st, &x, 6, &y, &dims, 0.05, 0.1, 0.9).unwrap();
+        let m = train_step(&cfg2(), &mut st, &x, 6, &y, 0.05, 0.1, 0.9).unwrap();
         // [loss, ce, acc, s_l1_p0, s_l1_p1]
         assert_eq!(m.len(), 5);
         assert!(m.iter().all(|v| v.is_finite()), "{m:?}");
@@ -441,7 +461,7 @@ mod tests {
         assert!((m[0] - want).abs() < 1e-4);
         // a few steps of pure prox (λ≫grad) produce exact zeros
         for _ in 0..40 {
-            train_step(&mut st, &x, 6, &y, &dims, 2.0, 0.1, 0.9).unwrap();
+            train_step(&cfg2(), &mut st, &x, 6, &y, 2.0, 0.1, 0.9).unwrap();
         }
         let zeros = st
             .param(&pname(0, "S"))
@@ -458,7 +478,7 @@ mod tests {
         let dims = dims2();
         let st = state_for(&dims, 4);
         let (x, y) = batch(5, 8, 4, 9);
-        let m = eval_step(&st, &x, 5, &y, &dims).unwrap();
+        let m = eval_step(&cfg2(), &st, &x, 5, &y).unwrap();
         assert_eq!(m.len(), 4);
         assert!(m[0] > 0.0 && m[1] > 0.0, "ce must be positive: {m:?}");
         assert!(m[2] >= 0.0 && m[2] <= 5.0, "correct count in range: {m:?}");

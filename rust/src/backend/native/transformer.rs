@@ -1,0 +1,754 @@
+//! The transformer (`t3_*`) family: a causal encoder LM whose projection
+//! and FFN matrices are slots of the shared layer graph.
+//!
+//! Architecture (pre-LN, one residual around each sub-block):
+//!
+//! ```text
+//!   h₀ = E[token] + P[position]                       (dense extras)
+//!   for each block i:
+//!     h ← h + O( attn( Q(LN₁(h)), K(LN₁(h)), V(LN₁(h)) ) )
+//!     h ← h + FC₂( relu( FC₁(LN₂(h)) ) )
+//!   logits = LNf(h) · head_Wᵀ
+//! ```
+//!
+//! Q/K/V/O (`d×d`) and FC₁/FC₂ (`d_ff×d`, `d×d_ff`) are [`super::LayerCfg`]
+//! slots named `b{i}.q` … `b{i}.fc2`, running through
+//! [`layers::linear_forward`] / [`layers::linear_backward`] /
+//! [`layers::apply_slots`] — so every method of the paper (KPD
+//! factorization with the ℓ1-on-S prox, group-lasso block shrink, RigL
+//! block masks, dense) applies to the transformer's weight matrices with
+//! zero transformer-specific update code. Embeddings, LayerNorm
+//! gains/biases and the vocab head are *dense extras*: plain SGD/momentum
+//! leaves appended after the slots in the flat gradient layout
+//! ([`dense_extra_layout`]).
+//!
+//! Attention is exact causal softmax attention, computed head-by-head with
+//! the runtime-dispatched SIMD dot/axpy microkernels; the SIMD kind is
+//! resolved once per call so results depend only on (inputs, kind). The
+//! attention/LayerNorm backbone is method-invariant — it cancels out of
+//! every cross-method comparison Table 3 makes.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::backend::{GradOut, TrainState};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+use super::{layers, layers::LinGrads, linalg, simd, Hyper, SpecConfig};
+
+// ------------------------------------------------------------ state layout
+
+/// The dense (non-slot) parameter leaves, in the canonical order they
+/// follow the slot leaves in the flat gradient buffer: token + positional
+/// embeddings, per-block LayerNorm gains/biases, final LayerNorm, vocab
+/// head. Every entry also owns a `{name}.m` momentum buffer.
+pub(super) fn dense_extra_layout(cfg: &SpecConfig) -> Vec<(String, usize)> {
+    let d = cfg.d_model;
+    let mut out = vec![
+        ("emb.E".to_string(), cfg.out_dim * d),
+        ("emb.P".to_string(), cfg.seq * d),
+    ];
+    for i in 0..cfg.depth {
+        out.push((format!("b{i}.ln1.g"), d));
+        out.push((format!("b{i}.ln1.b"), d));
+        out.push((format!("b{i}.ln2.g"), d));
+        out.push((format!("b{i}.ln2.b"), d));
+    }
+    out.push(("lnf.g".to_string(), d));
+    out.push(("lnf.b".to_string(), d));
+    out.push(("head.W".to_string(), cfg.out_dim * d));
+    out
+}
+
+/// Fresh parameters + momentum for a transformer spec: the slot leaves
+/// first (identical RNG order to an mlp over the same slots, through
+/// [`layers::init_state_parts`]), then the dense extras — embeddings and
+/// head at √(1/d) normal, gains at one, biases at zero.
+pub(super) fn init_state_parts(
+    cfg: &SpecConfig,
+    rng: &mut Rng,
+) -> (Vec<String>, Vec<Tensor>, Vec<String>, Vec<Tensor>) {
+    let (mut pn, mut ps, mut on, mut os) = layers::init_state_parts(cfg, rng);
+    let d = cfg.d_model;
+    let std = (1.0 / d as f32).sqrt();
+    for (name, _) in dense_extra_layout(cfg) {
+        let t = match name.as_str() {
+            "emb.E" | "head.W" => Tensor::from_fn(&[cfg.out_dim, d], |_| rng.normal() * std),
+            "emb.P" => Tensor::from_fn(&[cfg.seq, d], |_| rng.normal() * std),
+            _ if name.ends_with(".g") => Tensor::full(&[d], 1.0),
+            _ => Tensor::zeros(&[d]),
+        };
+        on.push(format!("{name}.m"));
+        os.push(Tensor::zeros(t.shape()));
+        pn.push(name);
+        ps.push(t);
+    }
+    (pn, ps, on, os)
+}
+
+// ---------------------------------------------------------------- forward
+
+/// Per-encoder-block backward caches, one entry per block in depth order.
+struct BlockCache {
+    ln1_xhat: Vec<f32>,
+    ln1_rstd: Vec<f32>,
+    /// LN₁ output — the q/k/v slots' input activation
+    u1: Vec<f32>,
+    q_tp: Vec<Vec<f32>>,
+    k_tp: Vec<Vec<f32>>,
+    v_tp: Vec<Vec<f32>>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// post-softmax causal attention weights, `[nb, heads, seq, seq]`
+    att: Vec<f32>,
+    /// attention output (heads re-concatenated) — the o slot's input
+    ao: Vec<f32>,
+    o_tp: Vec<Vec<f32>>,
+    ln2_xhat: Vec<f32>,
+    ln2_rstd: Vec<f32>,
+    /// LN₂ output — fc1's input activation
+    u2: Vec<f32>,
+    fc1_tp: Vec<Vec<f32>>,
+    /// post-ReLU FFN hidden — fc2's input and the ReLU backward mask
+    f: Vec<f32>,
+    fc2_tp: Vec<Vec<f32>>,
+}
+
+struct FwdCache {
+    blocks: Vec<BlockCache>,
+    lnf_xhat: Vec<f32>,
+    lnf_rstd: Vec<f32>,
+    /// final LayerNorm output — the head matmul's input
+    uf: Vec<f32>,
+}
+
+/// Causal multi-head attention forward: per (batch, head, query) row a
+/// max-subtracted softmax over keys `t2 ≤ t1`, then the probability-weighted
+/// sum of values. Returns the attention output (`[N, d]`, heads
+/// concatenated) and the post-softmax weights (the backward cache).
+fn attention_forward(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    nb: usize,
+    seq: usize,
+    heads: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let dh = d / heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let kind = simd::active();
+    let mut att = vec![0.0f32; nb * heads * seq * seq];
+    let mut ao = vec![0.0f32; nb * seq * d];
+    for b in 0..nb {
+        for hh in 0..heads {
+            let hoff = hh * dh;
+            for t1 in 0..seq {
+                let r1 = b * seq + t1;
+                let qrow = &q[r1 * d + hoff..r1 * d + hoff + dh];
+                let arow = &mut att[((b * heads + hh) * seq + t1) * seq..][..seq];
+                let mut amax = f32::NEG_INFINITY;
+                for (t2, av) in arow.iter_mut().enumerate().take(t1 + 1) {
+                    let r2 = b * seq + t2;
+                    let s =
+                        simd::dot(kind, qrow, &k[r2 * d + hoff..r2 * d + hoff + dh]) * scale;
+                    *av = s;
+                    if s > amax {
+                        amax = s;
+                    }
+                }
+                let mut esum = 0.0f32;
+                for av in arow.iter_mut().take(t1 + 1) {
+                    *av = (*av - amax).exp();
+                    esum += *av;
+                }
+                let inv = 1.0 / esum;
+                let aorow = &mut ao[r1 * d + hoff..r1 * d + hoff + dh];
+                for t2 in 0..=t1 {
+                    arow[t2] *= inv;
+                    let r2 = b * seq + t2;
+                    simd::axpy(kind, arow[t2], &v[r2 * d + hoff..r2 * d + hoff + dh], aorow);
+                }
+            }
+        }
+    }
+    (ao, att)
+}
+
+/// Attention backward from the forward caches: d(loss)/d(attention output)
+/// in, (dq, dk, dv) out. Chains through the softmax Jacobian
+/// (ds = a ⊙ (da − ⟨da, a⟩)) and the 1/√d_h score scaling.
+#[allow(clippy::too_many_arguments)]
+fn attention_backward(
+    dao: &[f32],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    att: &[f32],
+    nb: usize,
+    seq: usize,
+    heads: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let dh = d / heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let kind = simd::active();
+    let mut dq = vec![0.0f32; q.len()];
+    let mut dk = vec![0.0f32; k.len()];
+    let mut dv = vec![0.0f32; v.len()];
+    let mut datt = vec![0.0f32; seq];
+    for b in 0..nb {
+        for hh in 0..heads {
+            let hoff = hh * dh;
+            for t1 in 0..seq {
+                let r1 = b * seq + t1;
+                let daorow = &dao[r1 * d + hoff..r1 * d + hoff + dh];
+                let arow = &att[((b * heads + hh) * seq + t1) * seq..][..seq];
+                for t2 in 0..=t1 {
+                    let r2 = b * seq + t2;
+                    datt[t2] =
+                        simd::dot(kind, daorow, &v[r2 * d + hoff..r2 * d + hoff + dh]);
+                    simd::axpy(
+                        kind,
+                        arow[t2],
+                        daorow,
+                        &mut dv[r2 * d + hoff..r2 * d + hoff + dh],
+                    );
+                }
+                let mut dot_sum = 0.0f32;
+                for t2 in 0..=t1 {
+                    dot_sum += datt[t2] * arow[t2];
+                }
+                for t2 in 0..=t1 {
+                    let r2 = b * seq + t2;
+                    let ds = arow[t2] * (datt[t2] - dot_sum) * scale;
+                    simd::axpy(
+                        kind,
+                        ds,
+                        &k[r2 * d + hoff..r2 * d + hoff + dh],
+                        &mut dq[r1 * d + hoff..r1 * d + hoff + dh],
+                    );
+                    simd::axpy(
+                        kind,
+                        ds,
+                        &q[r1 * d + hoff..r1 * d + hoff + dh],
+                        &mut dk[r2 * d + hoff..r2 * d + hoff + dh],
+                    );
+                }
+            }
+        }
+    }
+    (dq, dk, dv)
+}
+
+fn run_forward(
+    cfg: &SpecConfig,
+    state: &TrainState,
+    toks: &[i32],
+    nb: usize,
+) -> Result<(Vec<f32>, FwdCache)> {
+    let (d, seq, vocab) = (cfg.d_model, cfg.seq, cfg.out_dim);
+    let n = nb * seq;
+    debug_assert_eq!(toks.len(), n);
+    let e = state.param("emb.E")?;
+    let pos = state.param("emb.P")?;
+    let mut h = vec![0.0f32; n * d];
+    for r in 0..n {
+        let tok = toks[r];
+        if tok < 0 || tok as usize >= vocab {
+            bail!("token id {tok} outside vocabulary [0, {vocab})");
+        }
+        let erow = &e.data()[tok as usize * d..(tok as usize + 1) * d];
+        let t = r % seq;
+        let prow = &pos.data()[t * d..(t + 1) * d];
+        let hrow = &mut h[r * d..(r + 1) * d];
+        for ((hv, &ev), &pv) in hrow.iter_mut().zip(erow).zip(prow) {
+            *hv = ev + pv;
+        }
+    }
+    let mut blocks = Vec::with_capacity(cfg.depth);
+    for i in 0..cfg.depth {
+        let base = i * 6;
+        let g1 = state.param(&format!("b{i}.ln1.g"))?;
+        let b1 = state.param(&format!("b{i}.ln1.b"))?;
+        let (u1, ln1_xhat, ln1_rstd) = linalg::layernorm(&h, g1.data(), b1.data(), n, d);
+        let (q, q_tp) = layers::linear_forward(cfg, state, &cfg.layers[base], &u1, n)?;
+        let (k, k_tp) = layers::linear_forward(cfg, state, &cfg.layers[base + 1], &u1, n)?;
+        let (v, v_tp) = layers::linear_forward(cfg, state, &cfg.layers[base + 2], &u1, n)?;
+        let (ao, att) = attention_forward(&q, &k, &v, nb, seq, cfg.heads, d);
+        let (out, o_tp) = layers::linear_forward(cfg, state, &cfg.layers[base + 3], &ao, n)?;
+        for (hv, ov) in h.iter_mut().zip(&out) {
+            *hv += ov;
+        }
+        let g2 = state.param(&format!("b{i}.ln2.g"))?;
+        let b2 = state.param(&format!("b{i}.ln2.b"))?;
+        let (u2, ln2_xhat, ln2_rstd) = linalg::layernorm(&h, g2.data(), b2.data(), n, d);
+        let (mut f, fc1_tp) =
+            layers::linear_forward(cfg, state, &cfg.layers[base + 4], &u2, n)?;
+        linalg::relu_inplace(&mut f);
+        let (ff, fc2_tp) = layers::linear_forward(cfg, state, &cfg.layers[base + 5], &f, n)?;
+        for (hv, fv) in h.iter_mut().zip(&ff) {
+            *hv += fv;
+        }
+        blocks.push(BlockCache {
+            ln1_xhat,
+            ln1_rstd,
+            u1,
+            q_tp,
+            k_tp,
+            v_tp,
+            q,
+            k,
+            v,
+            att,
+            ao,
+            o_tp,
+            ln2_xhat,
+            ln2_rstd,
+            u2,
+            fc1_tp,
+            f,
+            fc2_tp,
+        });
+    }
+    let gf = state.param("lnf.g")?;
+    let bf = state.param("lnf.b")?;
+    let (uf, lnf_xhat, lnf_rstd) = linalg::layernorm(&h, gf.data(), bf.data(), n, d);
+    let head = state.param("head.W")?;
+    let logits = linalg::matmul_nt(&uf, head.data(), n, d, vocab);
+    Ok((logits, FwdCache { blocks, lnf_xhat, lnf_rstd, uf }))
+}
+
+// --------------------------------------------------------------- backward
+
+/// Reverse walk from d(loss)/d(logits): per-slot gradients (layer order)
+/// plus the dense-extra gradients ([`dense_extra_layout`] order).
+fn run_backward(
+    cfg: &SpecConfig,
+    state: &TrainState,
+    fc: &FwdCache,
+    dz: &[f32],
+    nb: usize,
+    toks: &[i32],
+) -> Result<(Vec<LinGrads>, Vec<Vec<f32>>)> {
+    let (d, seq, vocab) = (cfg.d_model, cfg.seq, cfg.out_dim);
+    let n = nb * seq;
+    let head = state.param("head.W")?;
+    let d_head = linalg::matmul_tn(dz, &fc.uf, n, vocab, d);
+    let duf = linalg::matmul_nn(dz, head.data(), n, vocab, d);
+    let gf = state.param("lnf.g")?;
+    let (mut dh, dg_f, db_f) =
+        linalg::layernorm_backward(&duf, &fc.lnf_xhat, &fc.lnf_rstd, gf.data(), n, d);
+    let mut slot_grads: Vec<Option<LinGrads>> =
+        (0..cfg.layers.len()).map(|_| None).collect();
+    let mut extras: Vec<Vec<f32>> = vec![Vec::new(); 5 + 4 * cfg.depth];
+    extras[2 + 4 * cfg.depth] = dg_f;
+    extras[3 + 4 * cfg.depth] = db_f;
+    extras[4 + 4 * cfg.depth] = d_head;
+    for i in (0..cfg.depth).rev() {
+        let base = i * 6;
+        let bc = &fc.blocks[i];
+        // FFN branch: dh feeds both the residual and fc2
+        let (g_fc2, df) =
+            layers::linear_backward(cfg, state, &cfg.layers[base + 5], &bc.f, &bc.fc2_tp, &dh, n, true)?;
+        let mut df = df.expect("fc2 backward with need_dx");
+        linalg::relu_backward(&mut df, &bc.f);
+        let (g_fc1, du2) =
+            layers::linear_backward(cfg, state, &cfg.layers[base + 4], &bc.u2, &bc.fc1_tp, &df, n, true)?;
+        let du2 = du2.expect("fc1 backward with need_dx");
+        let g2 = state.param(&format!("b{i}.ln2.g"))?;
+        let (dx2, dg2, db2) =
+            linalg::layernorm_backward(&du2, &bc.ln2_xhat, &bc.ln2_rstd, g2.data(), n, d);
+        for (hv, xv) in dh.iter_mut().zip(&dx2) {
+            *hv += xv;
+        }
+        // attention branch
+        let (g_o, dao) =
+            layers::linear_backward(cfg, state, &cfg.layers[base + 3], &bc.ao, &bc.o_tp, &dh, n, true)?;
+        let dao = dao.expect("o backward with need_dx");
+        let (dq, dk, dv) =
+            attention_backward(&dao, &bc.q, &bc.k, &bc.v, &bc.att, nb, seq, cfg.heads, d);
+        let (g_q, du1q) =
+            layers::linear_backward(cfg, state, &cfg.layers[base], &bc.u1, &bc.q_tp, &dq, n, true)?;
+        let (g_k, du1k) =
+            layers::linear_backward(cfg, state, &cfg.layers[base + 1], &bc.u1, &bc.k_tp, &dk, n, true)?;
+        let (g_v, du1v) =
+            layers::linear_backward(cfg, state, &cfg.layers[base + 2], &bc.u1, &bc.v_tp, &dv, n, true)?;
+        let mut du1 = du1q.expect("q backward with need_dx");
+        let du1k = du1k.expect("k backward with need_dx");
+        let du1v = du1v.expect("v backward with need_dx");
+        for ((a, b), c) in du1.iter_mut().zip(&du1k).zip(&du1v) {
+            *a += b + c;
+        }
+        let g1 = state.param(&format!("b{i}.ln1.g"))?;
+        let (dx1, dg1, db1) =
+            linalg::layernorm_backward(&du1, &bc.ln1_xhat, &bc.ln1_rstd, g1.data(), n, d);
+        for (hv, xv) in dh.iter_mut().zip(&dx1) {
+            *hv += xv;
+        }
+        slot_grads[base] = Some(g_q);
+        slot_grads[base + 1] = Some(g_k);
+        slot_grads[base + 2] = Some(g_v);
+        slot_grads[base + 3] = Some(g_o);
+        slot_grads[base + 4] = Some(g_fc1);
+        slot_grads[base + 5] = Some(g_fc2);
+        extras[2 + 4 * i] = dg1;
+        extras[3 + 4 * i] = db1;
+        extras[4 + 4 * i] = dg2;
+        extras[5 + 4 * i] = db2;
+    }
+    // embedding scatter: each residual-stream row gradient accumulates
+    // into its token's E row and its position's P row
+    let mut de = vec![0.0f32; vocab * d];
+    let mut dp = vec![0.0f32; seq * d];
+    for r in 0..n {
+        let tok = toks[r] as usize;
+        let src = &dh[r * d..(r + 1) * d];
+        let dst = &mut de[tok * d..(tok + 1) * d];
+        for (dv, &sv) in dst.iter_mut().zip(src) {
+            *dv += sv;
+        }
+    }
+    for r in 0..n {
+        let t = r % seq;
+        let src = &dh[r * d..(r + 1) * d];
+        let dst = &mut dp[t * d..(t + 1) * d];
+        for (dv, &sv) in dst.iter_mut().zip(src) {
+            *dv += sv;
+        }
+    }
+    extras[0] = de;
+    extras[1] = dp;
+    Ok((layers::collect_grads(cfg, slot_grads)?, extras))
+}
+
+// ------------------------------------------------------------- step paths
+
+/// The one copy of the transformer update: slot leaves through
+/// [`layers::apply_slots`] (method-specific prox/mask updates, metric
+/// assembly), then plain SGD/momentum on every dense extra.
+fn apply(
+    cfg: &SpecConfig,
+    state: &mut TrainState,
+    slots: Vec<LinGrads>,
+    extras: &[Vec<f32>],
+    ce_mean: f32,
+    acc_frac: f32,
+    h: &Hyper,
+) -> Result<Vec<f32>> {
+    let out = layers::apply_slots(cfg, state, slots, ce_mean, acc_frac, h)?;
+    for ((name, len), g) in dense_extra_layout(cfg).iter().zip(extras) {
+        debug_assert_eq!(g.len(), *len, "extra '{name}' gradient length");
+        let pi = super::pidx(state, name)?;
+        let vi = super::oidx(state, &format!("{name}.m"))?;
+        super::sgd_momentum(
+            state.params[pi].data_mut(),
+            state.opt[vi].data_mut(),
+            g,
+            h.lr,
+            cfg.momentum,
+        );
+    }
+    Ok(out)
+}
+
+/// One fused training step on a token batch. Metrics follow the mlp
+/// layout: `[loss, ce, acc]` (token-level, CE per token), KPD adds the
+/// whole-model `s_l1` plus per-slot `s_l1_{slot}`, RigL the unnamed
+/// gradient-norm tail.
+pub(super) fn train_step(
+    cfg: &SpecConfig,
+    state: &mut TrainState,
+    toks: &[i32],
+    nb: usize,
+    targets: &[i32],
+    h: &Hyper,
+) -> Result<Vec<f32>> {
+    let (z, fc) = run_forward(cfg, state, toks, nb)?;
+    let sm = linalg::softmax_ce(&z, targets, nb * cfg.seq, cfg.out_dim)?;
+    let (slots, extras) = run_backward(cfg, state, &fc, &sm.dz, nb, toks)?;
+    apply(cfg, state, slots, &extras, sm.ce_mean, sm.acc_frac, h)
+}
+
+/// Gradient half for data-parallel sharding: per-*sequence* gradient sums
+/// (examples are sequences, matching the batch axis the shard planner
+/// splits), flattened slots-then-extras. `correct` is reported in
+/// fractional sequence-equivalents (`correct_tokens / seq`) so the
+/// reducer's `correct / examples` is exactly token-level accuracy.
+pub(super) fn grad_step(
+    cfg: &SpecConfig,
+    state: &TrainState,
+    toks: &[i32],
+    nb: usize,
+    targets: &[i32],
+) -> Result<GradOut> {
+    let (z, fc) = run_forward(cfg, state, toks, nb)?;
+    let mut sm = linalg::softmax_ce(&z, targets, nb * cfg.seq, cfg.out_dim)?;
+    super::scale_to_sum(&mut sm.dz, nb);
+    let (slots, extras) = run_backward(cfg, state, &fc, &sm.dz, nb, toks)?;
+    let mut grad_sum = Vec::new();
+    for g in slots {
+        match g {
+            LinGrads::Kpd(g) => {
+                grad_sum.extend(g.gs);
+                grad_sum.extend(g.ga);
+                grad_sum.extend(g.gb);
+            }
+            LinGrads::Dense(gw) => grad_sum.extend(gw),
+        }
+    }
+    for g in extras {
+        grad_sum.extend(g);
+    }
+    Ok(GradOut {
+        grad_sum,
+        ce_sum: sm.ce_mean * nb as f32,
+        correct: sm.correct / cfg.seq as f32,
+        examples: nb,
+    })
+}
+
+/// Update half for a reduced flat mean-gradient buffer: split at the slot
+/// boundary, unflatten each side, run the shared [`apply`].
+pub(super) fn apply_update(
+    cfg: &SpecConfig,
+    state: &mut TrainState,
+    grad: &[f32],
+    ce_mean: f32,
+    acc_frac: f32,
+    h: &Hyper,
+) -> Result<Vec<f32>> {
+    let slot_total: usize = layers::grad_layout(cfg).iter().map(|(_, l)| l).sum();
+    if grad.len() < slot_total {
+        bail!("transformer gradient buffer shorter than its slot section");
+    }
+    let (sg, eg) = grad.split_at(slot_total);
+    let slots = layers::unflatten(cfg, sg)?;
+    let mut extras = Vec::new();
+    let mut off = 0usize;
+    for (name, len) in dense_extra_layout(cfg) {
+        if off + len > eg.len() {
+            bail!("gradient buffer too short for extra '{name}'");
+        }
+        extras.push(eg[off..off + len].to_vec());
+        off += len;
+    }
+    if off != eg.len() {
+        bail!("gradient buffer has {} extra values, layout wants {off}", eg.len());
+    }
+    apply(cfg, state, slots, &extras, ce_mean, acc_frac, h)
+}
+
+/// `[per-token mean CE, correct token count]` — the trainer's evaluate
+/// divides the count by examples·seq (the token axis) for accuracy.
+pub(super) fn eval_step(
+    cfg: &SpecConfig,
+    state: &TrainState,
+    toks: &[i32],
+    nb: usize,
+    targets: &[i32],
+) -> Result<Vec<f32>> {
+    let (z, _) = run_forward(cfg, state, toks, nb)?;
+    let sm = linalg::softmax_ce(&z, targets, nb * cfg.seq, cfg.out_dim)?;
+    Ok(vec![sm.ce_mean, sm.correct])
+}
+
+/// Next-token logits (`[nb·seq, vocab]`) of a token batch — the eval/FD
+/// entry point.
+pub fn forward_logits(
+    cfg: &SpecConfig,
+    state: &TrainState,
+    toks: &[i32],
+    nb: usize,
+) -> Result<Vec<f32>> {
+    Ok(run_forward(cfg, state, toks, nb)?.0)
+}
+
+/// Mean token CE and the raw analytic gradients of *every* leaf — slots
+/// (`b0.q.S`/`b0.q.W`, ...) and dense extras (`emb.E`, `b0.ln1.g`,
+/// `head.W`, ...) by name. Gradients are of the unregularized CE
+/// objective, exactly what central differences of [`forward_logits`]+CE
+/// measure; the property suite drives LayerNorm, attention and embedding
+/// backward through this.
+pub fn loss_and_grads(
+    cfg: &SpecConfig,
+    state: &TrainState,
+    toks: &[i32],
+    nb: usize,
+    targets: &[i32],
+) -> Result<(f32, BTreeMap<String, Vec<f32>>)> {
+    let (z, fc) = run_forward(cfg, state, toks, nb)?;
+    let sm = linalg::softmax_ce(&z, targets, nb * cfg.seq, cfg.out_dim)?;
+    let (slots, extras) = run_backward(cfg, state, &fc, &sm.dz, nb, toks)?;
+    let mut out = BTreeMap::new();
+    for (lc, g) in cfg.layers.iter().zip(slots) {
+        match g {
+            LinGrads::Kpd(g) => {
+                out.insert(layers::p(lc, "S"), g.gs);
+                out.insert(layers::p(lc, "A"), g.ga);
+                out.insert(layers::p(lc, "B"), g.gb);
+            }
+            LinGrads::Dense(gw) => {
+                out.insert(layers::p(lc, "W"), gw);
+            }
+        }
+    }
+    for ((name, _), g) in dense_extra_layout(cfg).iter().zip(extras) {
+        out.insert(name.clone(), g);
+    }
+    Ok((sm.ce_mean, out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+    use crate::backend::Backend;
+    use crate::tensor::HostValue;
+
+    fn tiny(method: &str) -> SpecConfig {
+        // vocab 12, seq 4, d 8, 2 heads, d_ff 16, 2 blocks, 2×2 blocks
+        SpecConfig::transformer("tt", "lm_tiny", method, 12, 4, 8, 2, 16, 2, 2, 2, 2, 4)
+    }
+
+    fn token_batch(cfg: &SpecConfig, nb: usize, seed: u64) -> (Vec<i32>, Vec<i32>) {
+        let mut rng = Rng::new(seed);
+        let n = nb * cfg.seq;
+        let toks: Vec<i32> =
+            (0..n).map(|_| (rng.normal().abs() * 37.0) as i32 % cfg.out_dim as i32).collect();
+        let targets: Vec<i32> = (0..n).map(|i| toks[(i + 1) % n]).collect();
+        (toks, targets)
+    }
+
+    #[test]
+    fn extra_layout_and_init_cover_every_dense_leaf() {
+        let cfg = tiny("kpd");
+        let be = NativeBackend::from_spec(cfg.clone()).unwrap();
+        let state = be.init_state("tt", 3).unwrap();
+        for (name, len) in dense_extra_layout(&cfg) {
+            let t = state.param(&name).unwrap();
+            assert_eq!(t.len(), len, "{name}");
+            assert!(state.opt_names.iter().any(|n| *n == format!("{name}.m")), "{name}.m");
+        }
+        // gains start at one, biases at zero, S at one
+        assert!(state.param("b0.ln1.g").unwrap().data().iter().all(|&v| v == 1.0));
+        assert!(state.param("lnf.b").unwrap().data().iter().all(|&v| v == 0.0));
+        assert!(state.param("b0.q.S").unwrap().data().iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn forward_is_causal() {
+        // changing a future token must not change any earlier position's
+        // logits (the causal mask is the whole point of the LM head)
+        let cfg = tiny("dense");
+        let be = NativeBackend::from_spec(cfg.clone()).unwrap();
+        let state = be.init_state("tt", 7).unwrap();
+        let (mut toks, _) = token_batch(&cfg, 1, 11);
+        let z0 = forward_logits(&cfg, &state, &toks, 1).unwrap();
+        let last = cfg.seq - 1;
+        toks[last] = (toks[last] + 1) % cfg.out_dim as i32;
+        let z1 = forward_logits(&cfg, &state, &toks, 1).unwrap();
+        let vocab = cfg.out_dim;
+        assert_eq!(
+            &z0[..last * vocab],
+            &z1[..last * vocab],
+            "future token leaked into earlier logits"
+        );
+        assert_ne!(&z0[last * vocab..], &z1[last * vocab..], "embedding had no effect");
+    }
+
+    #[test]
+    fn every_method_steps_and_evals() {
+        for method in ["kpd", "group_lasso", "elastic_gl", "rigl_block", "dense"] {
+            let cfg = tiny(method);
+            let be = NativeBackend::from_spec(cfg.clone()).unwrap();
+            let entry = be.spec("tt").unwrap().clone();
+            let mut state = be.init_state("tt", 0).unwrap();
+            let (toks, targets) = token_batch(&cfg, 4, 5);
+            let bx = HostValue::I32 { shape: vec![4, cfg.seq], data: toks };
+            let by = HostValue::I32 { shape: vec![4, cfg.seq], data: targets };
+            let hyper: Vec<f32> = entry
+                .hyper
+                .iter()
+                .map(|h| match h.as_str() {
+                    "lr" => 0.05,
+                    "lambda2" => 1e-4,
+                    _ => 0.01,
+                })
+                .collect();
+            let m = be.train_step(&mut state, &bx, &by, &hyper).unwrap();
+            let gn = be.gnorm_len("tt").unwrap();
+            assert_eq!(m.len(), entry.metrics.len() + gn, "{method}");
+            assert!(m.iter().all(|v| v.is_finite()), "{method}: {m:?}");
+            let e = be.eval_step(&state, &bx, &by).unwrap();
+            assert_eq!(e.len(), 2, "{method}");
+            assert!(e[0].is_finite(), "{method}");
+            assert!((0.0..=(4 * cfg.seq) as f32).contains(&e[1]), "{method}");
+        }
+    }
+
+    #[test]
+    fn grad_apply_matches_fused_step() {
+        // one shard covering the whole (power-of-two) batch: grad_step's
+        // ×nb sum then apply_update's ×1/nb mean are exact in f32, so the
+        // separated path must land bit-identical to the fused step
+        for method in ["dense", "kpd"] {
+            let cfg = tiny(method);
+            let be = NativeBackend::from_spec(cfg.clone()).unwrap();
+            let entry = be.spec("tt").unwrap().clone();
+            let (toks, targets) = token_batch(&cfg, 4, 9);
+            let bx = HostValue::I32 { shape: vec![4, cfg.seq], data: toks };
+            let by = HostValue::I32 { shape: vec![4, cfg.seq], data: targets };
+            let hyper: Vec<f32> =
+                entry.hyper.iter().map(|h| if h == "lr" { 0.05 } else { 0.01 }).collect();
+            let mut fused = be.init_state("tt", 2).unwrap();
+            let mf = be.train_step(&mut fused, &bx, &by, &hyper).unwrap();
+            let mut split = be.init_state("tt", 2).unwrap();
+            let go = be.grad_step(&split, &bx, &by).unwrap();
+            assert_eq!(go.grad_sum.len(), be.grad_len("tt").unwrap(), "{method}");
+            let inv = 1.0 / go.examples as f32;
+            let grad: Vec<f32> = go.grad_sum.iter().map(|v| v * inv).collect();
+            let ms = be
+                .apply_update(&mut split, grad, go.ce_sum * inv, go.correct * inv, &hyper)
+                .unwrap();
+            assert_eq!(mf, ms, "{method}: metrics diverged");
+            for (n, t) in fused.param_names.iter().zip(&fused.params) {
+                assert_eq!(t.data(), split.param(n).unwrap().data(), "{method}: '{n}'");
+            }
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss_on_a_fixed_batch() {
+        let cfg = tiny("dense");
+        let be = NativeBackend::from_spec(cfg.clone()).unwrap();
+        let mut state = be.init_state("tt", 1).unwrap();
+        let (toks, targets) = token_batch(&cfg, 4, 3);
+        let bx = HostValue::I32 { shape: vec![4, cfg.seq], data: toks };
+        let by = HostValue::I32 { shape: vec![4, cfg.seq], data: targets };
+        let first = be.train_step(&mut state, &bx, &by, &[0.1]).unwrap()[1];
+        let mut last = first;
+        for _ in 0..30 {
+            last = be.train_step(&mut state, &bx, &by, &[0.1]).unwrap()[1];
+        }
+        assert!(
+            last < first * 0.9,
+            "30 steps did not reduce CE: {first} -> {last}"
+        );
+    }
+
+    #[test]
+    fn rejects_out_of_range_tokens() {
+        let cfg = tiny("dense");
+        let be = NativeBackend::from_spec(cfg.clone()).unwrap();
+        let state = be.init_state("tt", 0).unwrap();
+        let mut toks = vec![0i32; cfg.seq];
+        toks[1] = cfg.out_dim as i32; // one past the vocabulary
+        assert!(forward_logits(&cfg, &state, &toks, 1).is_err());
+        toks[1] = -1;
+        assert!(forward_logits(&cfg, &state, &toks, 1).is_err());
+    }
+}

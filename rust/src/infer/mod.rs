@@ -35,7 +35,6 @@ use anyhow::{bail, Context, Result};
 use crate::backend::{Backend, TrainState};
 use crate::checkpoint::{crc32, wire};
 use crate::flops::block_sparse_infer_flops;
-use crate::tensor::DType;
 use crate::util::rng::Rng;
 
 const MAGIC: &[u8; 4] = b"BSRM";
@@ -366,13 +365,13 @@ impl BsrModel {
 /// Export a trained state to a packed BSR model: `materialize` every slot
 /// to its (block-wise sparse) dense W, then pack at the spec's per-slot
 /// block shape. Slots without a declared block shape (iterative pruning,
-/// dense, pattern survivors) pack at 1×1 — element-level CSR.
+/// dense, pattern survivors) pack at 1×1 — element-level CSR. Transformer
+/// specs export their q/k/v/o/FFN projection stack (the block-sparse
+/// weights; embeddings, LayerNorm gains and the LM head are dense extras
+/// that live in the training checkpoint, not in the BSR pack) — the stack
+/// chains because fc2 emits d_model again, so `BsrModel::validate` holds.
 pub fn export(be: &dyn Backend, state: &TrainState) -> Result<BsrModel> {
     let spec = be.spec(&state.spec)?;
-    if spec.input_dtype != DType::F32 {
-        bail!("spec '{}' is not an f32 feature model; BSR export covers linear/mlp stacks",
-              spec.key);
-    }
     let ws = be.materialize(state)?;
     if ws.is_empty() {
         bail!("spec '{}' materialized no slots", spec.key);

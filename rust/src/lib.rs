@@ -20,13 +20,18 @@
 //!
 //! * [`backend::native::NativeBackend`] — the **default**: a pure-Rust,
 //!   multi-threaded engine implementing the paper's methods (factorized
-//!   KPD forward/backward, ℓ1-on-S proximal update, joint multi-pattern
-//!   block-size selection — `backend::native::pattern`, Eq. 7 / Figure 3
-//!   — group-LASSO prox, blockwise RigL, magnitude pruning, SGD/momentum)
-//!   on single linear slots *and* on sequential multi-layer stacks
-//!   (`backend::native::layers`, the `mlp` family behind the Table-2
-//!   `t2_*` specs: per-slot block sizes, ReLU between slots, activation
-//!   caching and dZ chaining through `kpd::backward_dx`).
+//!   KPD forward/backward, ℓ1-on-S proximal update, group-LASSO prox,
+//!   blockwise RigL, magnitude pruning, SGD/momentum) on **one
+//!   composable layer graph** (`backend::native::layers`: named linear
+//!   slots with per-slot block sizes, method-dispatched
+//!   forward/backward, fused apply, flat grad layouts). All native
+//!   model families are thin drivers over those slot primitives —
+//!   single-slot linear, the `mlp` stacks behind the Table-2 `t2_*`
+//!   specs, joint multi-pattern block-size selection
+//!   (`backend::native::pattern`, Eq. 7 / Figure 3), and the `t3_*`
+//!   pre-LN causal transformers (`backend::native::transformer`:
+//!   block-sparse q/k/v/o/FFN projection slots plus dense
+//!   embedding/LayerNorm/head extras, Table 3).
 //!   It is manifest-free and hermetic, so `cargo build && cargo test` and
 //!   the benches run offline with no python, artifacts, or PJRT plugin.
 //! * `backend::pjrt::PjrtBackend` — the AOT path (`--features pjrt`):

@@ -160,10 +160,29 @@ impl<'a> DataParallelTrainer<'a> {
     }
 }
 
-/// Rows `[lo, lo + len)` of an `(x, y)` image batch as an owned shard
-/// batch (the `HostValue`-level twin of `data::assemble_batch` on
-/// contiguous rows).
+/// Rows `[lo, lo + len)` of an `(x, y)` batch as an owned shard batch
+/// (the `HostValue`-level twin of `data::assemble_batch` on contiguous
+/// rows). Feature batches are f32 rows with i32 class ids; transformer
+/// token batches are i32 `[rows, seq]` grids on both sides.
 fn slice_batch(x: &HostValue, y: &HostValue, lo: usize, len: usize) -> Result<Batch> {
+    if let HostValue::I32 { shape, data } = x {
+        let seq = match shape.as_slice() {
+            [_, seq] => *seq,
+            other => bail!("shard slicing wants a 2-D token grid, got {other:?}"),
+        };
+        let xs = data[lo * seq..(lo + len) * seq].to_vec();
+        let ys = match y {
+            HostValue::I32 { shape, data } if shape.len() == 2 && shape[1] == seq => {
+                data[lo * seq..(lo + len) * seq].to_vec()
+            }
+            _ => bail!("shard slicing wants i32 targets of shape [rows, {seq}]"),
+        };
+        return Ok(Batch {
+            x: HostValue::I32 { shape: vec![len, seq], data: xs },
+            y: HostValue::I32 { shape: vec![len, seq], data: ys },
+            size: len,
+        });
+    }
     let xt = x.as_f32()?;
     let f = match xt.shape() {
         [_, cols] => *cols,

@@ -4,7 +4,7 @@
 //! Eq. 5 optimality, FLOPs formula consistency, sparsity measurement,
 //! config/json round-trips, batcher coverage, checkpoint round-trip.
 
-use blocksparse::backend::native::{layers, linalg, NativeBackend, SpecConfig};
+use blocksparse::backend::native::{layers, linalg, transformer, NativeBackend, SpecConfig};
 use blocksparse::backend::Backend;
 use blocksparse::blockopt;
 use blocksparse::checkpoint::Checkpoint;
@@ -373,6 +373,128 @@ fn prop_grad_step_linear_in_shards_all_mlp_slots() {
                 close(ma, mb, 1e-5, 1e-4),
                 "mean grad[{i}]: full {ma} vs sharded {mb} (splits {cuts:?})"
             );
+        }
+        Ok(())
+    });
+}
+
+/// Central-finite-difference check of the transformer backward chain: the
+/// analytic gradients of [`transformer::loss_and_grads`] must match
+/// central differences of CE(forward_logits) on a tiny two-block encoder.
+/// The probed leaves are chosen to drive every new backward primitive:
+/// `emb.E`/`emb.P` exercise the embedding scatter, the `ln*` gains/biases
+/// and `head.W` exercise the LayerNorm backward (pre-LN and final), and
+/// the `q`/`v` S-factors only see loss through the softmax-attention
+/// backward. The FD-stability skip rule and ≥ 70% coverage floor are the
+/// same as the MLP FD property above (the FFN ReLU contributes kinks).
+#[test]
+fn prop_transformer_fd_gradients_ln_attention_embedding() {
+    prop_check("transformer fd gradients", 3, |g| {
+        let (vocab, seq, d, heads, d_ff, depth) = (10usize, 4usize, 8usize, 2usize, 12usize, 2usize);
+        let nb = 2usize;
+        let cfg = SpecConfig::transformer(
+            "fd_tf", "lm_tiny", "kpd", vocab, seq, d, heads, d_ff, depth, 2, 2, 2, nb,
+        );
+        let be = NativeBackend::from_spec(cfg.clone()).map_err(|e| e.to_string())?;
+        let mut state = be.init_state("fd_tf", g.case as u32).map_err(|e| e.to_string())?;
+        let toks: Vec<i32> = (0..nb * seq).map(|_| g.usize_in(0, vocab - 1) as i32).collect();
+        let y: Vec<i32> = (0..nb * seq).map(|_| g.usize_in(0, vocab - 1) as i32).collect();
+
+        let ce = |state: &blocksparse::backend::TrainState| -> Result<f32, String> {
+            let z = transformer::forward_logits(&cfg, state, &toks, nb)
+                .map_err(|e| e.to_string())?;
+            let sm = linalg::softmax_ce(&z, &y, nb * seq, vocab).map_err(|e| e.to_string())?;
+            Ok(sm.ce_mean)
+        };
+        let (ce0, grads) =
+            transformer::loss_and_grads(&cfg, &state, &toks, nb, &y).map_err(|e| e.to_string())?;
+        prop_assert!(close(ce0, ce(&state)?, 1e-5, 1e-5), "loss_and_grads CE disagrees");
+
+        let leaves = [
+            "emb.E", "emb.P", "b0.ln1.g", "b0.ln1.b", "b1.ln2.g", "lnf.g", "lnf.b",
+            "head.W", "b0.q.S", "b0.v.S", "b1.fc1.S",
+        ];
+        let mut checked = 0usize;
+        let mut skipped = 0usize;
+        for name in leaves {
+            let gvec = grads.get(name).ok_or(format!("missing analytic grad for {name}"))?;
+            let orig = state.param_tensor(name).map_err(|e| e.to_string())?;
+            for idx in 0..gvec.len() {
+                let mut fd_at = |h: f32| -> Result<f32, String> {
+                    let mut tp = orig.clone();
+                    tp.data_mut()[idx] += h;
+                    state.set_param(name, tp).map_err(|e| e.to_string())?;
+                    let lp = ce(&state)?;
+                    let mut tm = orig.clone();
+                    tm.data_mut()[idx] -= h;
+                    state.set_param(name, tm).map_err(|e| e.to_string())?;
+                    let lm = ce(&state)?;
+                    Ok((lp - lm) / (2.0 * h))
+                };
+                let fd1 = fd_at(1e-2)?;
+                let fd2 = fd_at(2e-2)?;
+                state.set_param(name, orig.clone()).map_err(|e| e.to_string())?;
+                if (fd1 - fd2).abs() > 0.2 * fd1.abs().max(fd2.abs()).max(5e-3) {
+                    skipped += 1; // ReLU kink / curvature inside the bracket
+                    continue;
+                }
+                let analytic = gvec[idx];
+                prop_assert!(
+                    (fd1 - analytic).abs() < 2e-2 + 5e-2 * fd1.abs(),
+                    "{name}[{idx}]: fd {fd1} vs analytic {analytic}"
+                );
+                checked += 1;
+            }
+        }
+        prop_assert!(
+            checked * 10 >= (checked + skipped) * 7,
+            "too many FD-unstable entries: {checked} checked, {skipped} skipped"
+        );
+        Ok(())
+    });
+}
+
+/// Transformer training state round-trips through the checkpoint
+/// container bit-exactly — slots, dense extras and momentum buffers all
+/// restore into a differently-seeded state, for every method family.
+#[test]
+fn prop_transformer_checkpoint_roundtrip() {
+    use blocksparse::tensor::HostValue;
+    prop_check("transformer checkpoint roundtrip", 5, |g| {
+        let method = *g.pick(&["kpd", "group_lasso", "elastic_gl", "rigl_block", "dense"]);
+        let (vocab, seq, nb) = (10usize, 4usize, 4usize);
+        let cfg = SpecConfig::transformer(
+            "ck_tf", "lm_tiny", method, vocab, seq, 8, 2, 12, 2, 2, 2, 2, nb,
+        );
+        let be = NativeBackend::from_spec(cfg).map_err(|e| e.to_string())?;
+        let spec = be.spec("ck_tf").map_err(|e| e.to_string())?.clone();
+        let mut state = be.init_state("ck_tf", g.case as u32).map_err(|e| e.to_string())?;
+        // a couple of real steps so momentum buffers are non-trivial
+        let toks: Vec<i32> = (0..nb * seq).map(|_| g.usize_in(0, vocab - 1) as i32).collect();
+        let y: Vec<i32> = (0..nb * seq).map(|_| g.usize_in(0, vocab - 1) as i32).collect();
+        let bx = HostValue::I32 { shape: vec![nb, seq], data: toks };
+        let by = HostValue::I32 { shape: vec![nb, seq], data: y };
+        let hyper: Vec<f32> = spec
+            .hyper
+            .iter()
+            .map(|h| if h == "lr" { 0.05 } else { 0.01 })
+            .collect();
+        for _ in 0..2 {
+            be.train_step(&mut state, &bx, &by, &hyper).map_err(|e| e.to_string())?;
+        }
+
+        let dir = std::env::temp_dir().join("bs_prop_tf_ckpt");
+        let path = dir.join(format!("c{}.bsck", g.case));
+        Checkpoint::from_state(&state).save(&path).map_err(|e| e.to_string())?;
+        let back = Checkpoint::load(&path).map_err(|e| e.to_string())?;
+        let mut other = be.init_state("ck_tf", g.case as u32 + 999).map_err(|e| e.to_string())?;
+        back.restore_state(&mut other).map_err(|e| e.to_string())?;
+        for (n, t) in state.param_names.iter().zip(&state.params) {
+            let o = other.param(n).map_err(|e| e.to_string())?;
+            prop_assert!(t.data() == o.data(), "param '{n}' did not round-trip ({method})");
+        }
+        for ((n, t), o) in state.opt_names.iter().zip(&state.opt).zip(&other.opt) {
+            prop_assert!(t.data() == o.data(), "opt slot '{n}' did not round-trip ({method})");
         }
         Ok(())
     });
