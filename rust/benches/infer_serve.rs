@@ -1,7 +1,7 @@
 //! Inference serving bench — the train→export→serve payoff, measured.
 //! Emits `BENCH_infer.json` (default; `--json <path>` overrides).
 //!
-//! Two panels, both fully native (never SKIP):
+//! Four panels, all fully native (never SKIP):
 //!
 //! 1. **kernels** — dense `matmul_nt` vs masked `block_sparse_matmul_nt`
 //!    vs packed BSR forward on the Table-2 fc1 shape (304×784, 8×16
@@ -11,6 +11,14 @@
 //! 2. **serving** — the batched engine on a 784→304→100→10 BSR stack at
 //!    75% block sparsity: per-request p50/p95/p99 latency and throughput
 //!    across (micro-batch cap, client count) operating points.
+//! 3. **overload** — sustained overload at 4× the engine's resident
+//!    capacity with a small admission bound: shed rate, accepted-request
+//!    percentiles, peak queue depth. Gates: the peak depth never exceeds
+//!    the bound, the shed rate is a real number in (0, 1], and the
+//!    accepted p99 is finite — bounded admission is what keeps it so.
+//! 4. **hotswap** — atomic model swaps under live traffic: swap cost
+//!    (one validate + `Arc` swap) and zero dropped requests across the
+//!    swaps.
 
 use std::collections::BTreeMap;
 
@@ -141,7 +149,8 @@ fn main() -> anyhow::Result<()> {
     {
         let engine = Engine::new(
             model.clone(),
-            EngineOpts { max_batch, workers: 4 },
+            // the closed-loop panel must never shed: bound >> clients
+            EngineOpts { max_batch, workers: 4, queue_depth: 1024 },
         )?;
         let sw = Stopwatch::start();
         let lat_ms = drive_synthetic(&engine, requests, clients, 0xBEE)?;
@@ -173,6 +182,106 @@ fn main() -> anyhow::Result<()> {
     }
     stable.print();
 
+    // ---- panel 3: sustained overload with bounded admission -------------
+    let (o_depth, o_workers, o_batch) = (8usize, 2usize, 4usize);
+    let o_engine = Engine::new(
+        model.clone(),
+        EngineOpts { max_batch: o_batch, workers: o_workers, queue_depth: o_depth },
+    )?;
+    // 4× the resident capacity, zero think time: the queue must saturate
+    // and the excess must shed — the bug this panel guards against is the
+    // old unbounded queue absorbing all of it
+    let o_clients = 4 * o_engine.capacity();
+    let o_per_client = 32usize;
+    let sw = Stopwatch::start();
+    let rep = blocksparse::infer::engine::drive_overload(&o_engine, o_per_client, o_clients, 0xD05)?;
+    let o_wall = sw.elapsed_secs();
+    let o_sum = latency_summary(&rep.accepted_lat_ms);
+    assert!(
+        rep.peak_depth <= o_depth,
+        "admission bound breached: peak depth {} > {}",
+        rep.peak_depth,
+        o_depth
+    );
+    assert_eq!(rep.accepted + rep.shed, rep.offered, "requests unaccounted for");
+    println!(
+        "overload: {o_clients} clients vs capacity {} ({:.1}x offered) — \
+         {} offered, {} accepted, {} shed ({:.1}%) in {o_wall:.2}s; \
+         accepted p99 {:.3} ms; peak queue depth {}/{o_depth}",
+        rep.capacity,
+        rep.offered_ratio,
+        rep.offered,
+        rep.accepted,
+        rep.shed,
+        100.0 * rep.shed_rate(),
+        o_sum.p99_ms,
+        rep.peak_depth
+    );
+    let mut overload = BTreeMap::new();
+    overload.insert("queue_depth".to_string(), Json::Num(o_depth as f64));
+    overload.insert("workers".to_string(), Json::Num(o_workers as f64));
+    overload.insert("max_batch".to_string(), Json::Num(o_batch as f64));
+    overload.insert("clients".to_string(), Json::Num(o_clients as f64));
+    overload.insert("capacity".to_string(), Json::Num(rep.capacity as f64));
+    overload.insert("offered_ratio".to_string(), Json::Num(rep.offered_ratio));
+    overload.insert("offered".to_string(), Json::Num(rep.offered as f64));
+    overload.insert("accepted".to_string(), Json::Num(rep.accepted as f64));
+    overload.insert("shed".to_string(), Json::Num(rep.shed as f64));
+    overload.insert("shed_rate".to_string(), Json::Num(rep.shed_rate()));
+    overload.insert("accepted_p50_ms".to_string(), Json::num_or_null(o_sum.p50_ms));
+    overload.insert("accepted_p95_ms".to_string(), Json::num_or_null(o_sum.p95_ms));
+    overload.insert("accepted_p99_ms".to_string(), Json::num_or_null(o_sum.p99_ms));
+    overload.insert("peak_depth".to_string(), Json::Num(rep.peak_depth as f64));
+    overload.insert("wall_s".to_string(), Json::Num(o_wall));
+    gate.insert("overload_peak_depth".to_string(), Json::Num(rep.peak_depth as f64));
+    gate.insert("overload_shed_rate".to_string(), Json::Num(rep.shed_rate()));
+    gate.insert("overload_p99_ms".to_string(), Json::num_or_null(o_sum.p99_ms));
+
+    // ---- panel 4: atomic hot-swap under live traffic --------------------
+    let replacement = serve_model(&mut rng, 0.25);
+    let h_engine = Engine::new(
+        model.clone(),
+        EngineOpts { max_batch: 8, workers: 4, queue_depth: 1024 },
+    )?;
+    let h_requests = 512usize;
+    let mut swap_ms: Vec<f64> = Vec::new();
+    let h_lat: Vec<f64> = std::thread::scope(|s| -> anyhow::Result<Vec<f64>> {
+        let engine_ref = &h_engine;
+        let traffic = s.spawn(move || drive_synthetic(engine_ref, h_requests, 8, 0x5A4B));
+        // alternate the two same-shape models while the traffic flows;
+        // each swap is one validate + one Arc swap
+        let variants = [&replacement, &model];
+        for variant in variants.iter().cycle().take(8) {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            let sw = Stopwatch::start();
+            h_engine.swap_model(BsrModel::clone(*variant))?;
+            swap_ms.push(sw.elapsed_secs() * 1e3);
+        }
+        traffic.join().expect("hot-swap traffic thread panicked")
+    })?;
+    let swaps = swap_ms.len();
+    let swap_mean = swap_ms.iter().sum::<f64>() / swaps.max(1) as f64;
+    let swap_max = swap_ms.iter().fold(0.0f64, |a, &b| a.max(b));
+    assert_eq!(h_lat.len(), h_requests, "a request was dropped across a hot-swap");
+    println!(
+        "hotswap: {swaps} swaps under {h_requests} live requests — \
+         swap {swap_mean:.3} ms mean / {swap_max:.3} ms max, 0 dropped \
+         (generation {})",
+        h_engine.generation()
+    );
+    let mut hotswap = BTreeMap::new();
+    hotswap.insert("swaps".to_string(), Json::Num(swaps as f64));
+    hotswap.insert("swap_ms_mean".to_string(), Json::num_or_null(swap_mean));
+    hotswap.insert("swap_ms_max".to_string(), Json::num_or_null(swap_max));
+    hotswap.insert("requests".to_string(), Json::Num(h_requests as f64));
+    hotswap.insert("requests_ok".to_string(), Json::Num(h_lat.len() as f64));
+    hotswap.insert("generation".to_string(), Json::Num(h_engine.generation() as f64));
+    gate.insert("hotswap_swaps".to_string(), Json::Num(swaps as f64));
+    gate.insert(
+        "hotswap_dropped".to_string(),
+        Json::Num((h_requests - h_lat.len()) as f64),
+    );
+
     let mut root = BTreeMap::new();
     root.insert("backend".to_string(), Json::Str("native-cpu".to_string()));
     root.insert(
@@ -181,6 +290,8 @@ fn main() -> anyhow::Result<()> {
     );
     root.insert("kernels".to_string(), Json::Obj(kernels));
     root.insert("serve".to_string(), Json::Obj(serve));
+    root.insert("overload".to_string(), Json::Obj(overload));
+    root.insert("hotswap".to_string(), Json::Obj(hotswap));
     root.insert("gate".to_string(), Json::Obj(gate));
     // this bench always writes its JSON — an absent flag means the default
     let path = json_arg(&args, "BENCH_infer.json")

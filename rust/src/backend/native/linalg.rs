@@ -22,14 +22,11 @@ const PAR_THRESHOLD: usize = 1 << 21;
 fn max_threads() -> usize {
     static CACHED: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
     *CACHED.get_or_init(|| {
-        if let Ok(v) = std::env::var("BS_NATIVE_THREADS") {
-            if let Ok(n) = v.parse::<usize>() {
-                // same 1..=16 bound as autodetect: a stray huge value must
-                // not spawn thousands of scoped threads per kernel call
-                return n.clamp(1, 16);
-            }
-        }
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(1, 16)
+        // the 1..=MAX_WORKERS bound is shared with BS_SERVE_WORKERS and
+        // the pool defaults (crate::util): a stray huge value must not
+        // spawn thousands of scoped threads per kernel call
+        let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        crate::util::env_workers("BS_NATIVE_THREADS", auto)
     })
 }
 

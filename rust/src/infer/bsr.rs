@@ -9,7 +9,7 @@
 //! made on the *occupied* work so sparse layers are not taxed with spawn
 //! overhead; cost therefore scales with occupancy, not the dense shape.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::backend::native::linalg::{par_rows, threads_for};
 use crate::backend::native::simd::{self, SimdKind};
@@ -117,9 +117,13 @@ pub fn model_forward(model: &BsrModel, x: &[f32], nb: usize) -> Result<Vec<f32>>
     // the kind is resolved once for the whole stack
     let kind = simd::active();
     let last = model.layers.len() - 1;
-    let mut cur = forward_impl(kind, x, nb, &model.layers[0], last != 0)?;
+    // each layer error is wrapped with the model/layer coordinates: the
+    // serving engine forwards this chain verbatim to every waiter of a
+    // failed micro-batch, so the client log alone locates the bad slot
+    let at = |i: usize| format!("model '{}' layer {i} ('{}')", model.spec, model.layers[i].name);
+    let mut cur = forward_impl(kind, x, nb, &model.layers[0], last != 0).with_context(|| at(0))?;
     for (i, l) in model.layers.iter().enumerate().skip(1) {
-        cur = forward_impl(kind, &cur, nb, l, i < last)?;
+        cur = forward_impl(kind, &cur, nb, l, i < last).with_context(|| at(i))?;
     }
     Ok(cur)
 }

@@ -1,28 +1,90 @@
-//! Batched serving engine: a request queue with dynamic micro-batching.
+//! Batched serving engine v2: bounded admission, dynamic micro-batching,
+//! typed load-shed, and atomic hot-swap.
 //!
-//! Clients call [`Engine::predict`] (blocking). A dispatcher thread drains
-//! the queue into micro-batches — whatever is waiting, capped at
-//! `max_batch`, with no artificial fill delay — and submits each batch to
-//! a `util::pool::ThreadPool`, keeping at most one batch in flight per
-//! pool worker. Under light load a request rides alone (lowest latency);
-//! under sustained load the in-flight bound makes the backlog accumulate
-//! while workers are busy, so later batches genuinely fill toward
-//! `max_batch` (highest throughput) — the classic dynamic-batching trade
-//! handled without tuning knobs beyond `max_batch` and the worker count.
+//! Clients call [`Engine::predict`] (blocking). Admission is **bounded**:
+//! the request queue holds at most `queue_depth` requests, and a predict
+//! arriving at a full queue fails fast with the typed
+//! [`EngineError::Overloaded`] instead of queueing forever — under
+//! sustained overload the backlog (and client-visible latency) is capped
+//! by configuration, and the excess is shed at the door where the client
+//! can retry elsewhere. A dispatcher thread drains admitted requests into
+//! micro-batches — whatever is waiting, capped at `max_batch`, with no
+//! artificial fill delay — and submits each batch to a
+//! `util::pool::ThreadPool`, keeping at most one batch in flight per pool
+//! worker. Under light load a request rides alone (lowest latency); under
+//! sustained load the in-flight bound makes the backlog accumulate while
+//! workers are busy, so later batches genuinely fill toward `max_batch`
+//! (highest throughput).
 //!
-//! Every response carries per-request latency (enqueue → logits ready) and
-//! the micro-batch size it rode in, which is exactly what the serving
-//! bench aggregates into p50/p95/p99.
+//! Failures propagate: a micro-batch whose forward errors sends the
+//! root-cause message to **every** waiter as
+//! [`EngineError::BatchFailed`] — no dropped senders, no fabricated
+//! guess at the cause.
+//!
+//! Models hot-swap atomically ([`Engine::swap_model`]): the replacement
+//! is installed with a single `Arc` pointer swap, new micro-batches route
+//! to it immediately, and batches already formed finish on the model they
+//! started with — one request never mixes logits from two models. Each
+//! [`Prediction`] carries the `generation` that served it. The on-disk
+//! half of the same discipline is `BsrModel::save`'s write-then-rename
+//! publish (uv-style), so a reader never observes a torn artifact.
+//!
+//! Every response carries per-request latency (enqueue → logits ready)
+//! and the micro-batch size it rode in; [`Engine::stats`] exposes the
+//! accepted/shed/completed/failed counters and the peak queue depth the
+//! overload bench gates on.
 
 use std::collections::VecDeque;
+use std::fmt;
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, Result};
 
 use crate::util::pool::ThreadPool;
 
 use super::{bsr, BsrModel};
+
+/// Typed serving errors — [`Engine::predict`]'s error type. Implements
+/// `std::error::Error`, so `?` converts it into `anyhow::Error` at call
+/// sites that just propagate, while load-shedding callers (and tests)
+/// match on the variant directly (the vendored anyhow has no downcast).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EngineError {
+    /// The admission queue is at its configured depth: the request was
+    /// load-shed without queueing. Fail-fast by design — retry against
+    /// another replica or back off.
+    Overloaded {
+        /// the configured admission bound that was hit
+        depth: usize,
+    },
+    /// The engine has shut down (or tore down while the request waited).
+    ShutDown,
+    /// The request itself is malformed (feature-count mismatch).
+    BadRequest(String),
+    /// The micro-batch carrying this request failed; the message is the
+    /// actual forward error, chain included.
+    BatchFailed(String),
+    /// [`Engine::swap_model`] refused the replacement model.
+    SwapRejected(String),
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::Overloaded { depth } => write!(
+                f,
+                "engine overloaded: admission queue at its bound of {depth} requests (load shed)"
+            ),
+            EngineError::ShutDown => write!(f, "engine is shut down"),
+            EngineError::BadRequest(m) => write!(f, "bad request: {m}"),
+            EngineError::BatchFailed(m) => write!(f, "micro-batch failed: {m}"),
+            EngineError::SwapRejected(m) => write!(f, "hot-swap rejected: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
 
 /// One served prediction.
 #[derive(Clone, Debug)]
@@ -35,12 +97,22 @@ pub struct Prediction {
     pub latency: Duration,
     /// size of the micro-batch this request rode in
     pub batch_size: usize,
+    /// which deployed model served it: 0 for the construction model,
+    /// bumped by every [`Engine::swap_model`]
+    pub generation: u64,
 }
 
 struct Pending {
     x: Vec<f32>,
     enqueued: Instant,
-    tx: mpsc::Sender<Prediction>,
+    tx: mpsc::Sender<Result<Prediction, EngineError>>,
+}
+
+/// The model a micro-batch is pinned to: swapped as one `Arc`, so a batch
+/// either sees (old model, old generation) or (new, new) — never a mix.
+struct Deployed {
+    model: Arc<BsrModel>,
+    generation: u64,
 }
 
 struct QueueState {
@@ -51,6 +123,15 @@ struct QueueState {
     /// `max_batch` instead of racing through one-by-one
     in_flight: usize,
     shutdown: bool,
+    /// dispatch hold: admitted requests stay queued (maintenance drains,
+    /// deterministic tests). Admission — and therefore shedding at the
+    /// bound — continues while paused.
+    paused: bool,
+    accepted: u64,
+    shed: u64,
+    completed: u64,
+    failed: u64,
+    peak_depth: usize,
 }
 
 struct Queue {
@@ -58,65 +139,187 @@ struct Queue {
     cv: Condvar,
 }
 
+/// Counter snapshot from [`Engine::stats`].
+#[derive(Clone, Debug)]
+pub struct EngineStats {
+    /// requests admitted into the queue since construction
+    pub accepted: u64,
+    /// requests load-shed at the admission bound
+    pub shed: u64,
+    /// requests answered with logits
+    pub completed: u64,
+    /// requests answered with a batch failure
+    pub failed: u64,
+    /// maximum queue depth ever observed (≤ the configured bound)
+    pub peak_depth: usize,
+    /// current queue depth
+    pub depth: usize,
+    /// generation of the currently deployed model
+    pub generation: u64,
+}
+
 /// Engine sizing.
+#[derive(Clone, Debug)]
 pub struct EngineOpts {
     /// micro-batch cap: the dispatcher never packs more rows than this
     pub max_batch: usize,
     /// pool workers executing micro-batches concurrently
     pub workers: usize,
+    /// admission bound: a predict arriving with this many requests queued
+    /// is load-shed with [`EngineError::Overloaded`]
+    pub queue_depth: usize,
 }
 
 impl Default for EngineOpts {
     fn default() -> Self {
         let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-        EngineOpts { max_batch: 32, workers: cores.saturating_sub(1).clamp(1, 8) }
+        EngineOpts {
+            max_batch: 32,
+            // shared crate-wide clamp (1..=util::MAX_WORKERS) — the old
+            // 1..=8 here silently disagreed with the kernels' 1..=16
+            workers: crate::util::env_workers("BS_SERVE_WORKERS", cores.saturating_sub(1)),
+            queue_depth: 256,
+        }
     }
 }
 
-/// A running inference engine over one [`BsrModel`].
+/// A running inference engine over a hot-swappable [`BsrModel`].
 pub struct Engine {
-    model: Arc<BsrModel>,
+    current: Arc<Mutex<Arc<Deployed>>>,
     queue: Arc<Queue>,
+    in_dim: usize,
+    out_dim: usize,
+    opts: EngineOpts,
     dispatcher: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Engine {
     pub fn new(model: BsrModel, opts: EngineOpts) -> Result<Engine> {
         model.validate()?;
-        let model = Arc::new(model);
+        let (in_dim, out_dim) = (model.in_dim, model.out_dim);
+        let opts = EngineOpts {
+            max_batch: opts.max_batch.max(1),
+            workers: crate::util::clamp_workers(opts.workers),
+            queue_depth: opts.queue_depth.max(1),
+        };
+        let current = Arc::new(Mutex::new(Arc::new(Deployed {
+            model: Arc::new(model),
+            generation: 0,
+        })));
         let queue = Arc::new(Queue {
             state: Mutex::new(QueueState {
                 q: VecDeque::new(),
                 in_flight: 0,
                 shutdown: false,
+                paused: false,
+                accepted: 0,
+                shed: 0,
+                completed: 0,
+                failed: 0,
+                peak_depth: 0,
             }),
             cv: Condvar::new(),
         });
-        let max_batch = opts.max_batch.max(1);
-        let workers = opts.workers.max(1);
-        let pool = ThreadPool::new(workers);
-        let (qc, mc) = (queue.clone(), model.clone());
+        let pool = ThreadPool::new(opts.workers);
+        let (qc, cc) = (queue.clone(), current.clone());
+        let (max_batch, workers) = (opts.max_batch, opts.workers);
         let dispatcher = std::thread::Builder::new()
             .name("bsr-dispatch".to_string())
-            .spawn(move || dispatch_loop(qc, mc, pool, max_batch, workers))
+            .spawn(move || dispatch_loop(qc, cc, pool, max_batch, workers))
             .map_err(|e| anyhow!("spawning engine dispatcher: {e}"))?;
-        Ok(Engine { model, queue, dispatcher: Some(dispatcher) })
+        Ok(Engine { current, queue, in_dim, out_dim, opts, dispatcher: Some(dispatcher) })
     }
 
-    pub fn model(&self) -> &BsrModel {
-        &self.model
+    /// The currently deployed model (the next micro-batch's model; an
+    /// in-flight batch may still be on the previous one).
+    pub fn model(&self) -> Arc<BsrModel> {
+        self.current.lock().unwrap().model.clone()
+    }
+
+    /// Generation of the currently deployed model (0 at construction,
+    /// +1 per [`Engine::swap_model`]).
+    pub fn generation(&self) -> u64 {
+        self.current.lock().unwrap().generation
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.opts.max_batch
+    }
+
+    pub fn workers(&self) -> usize {
+        self.opts.workers
+    }
+
+    /// The configured admission bound.
+    pub fn queue_depth(&self) -> usize {
+        self.opts.queue_depth
+    }
+
+    /// Resident-request capacity: queued (`queue_depth`) plus executing
+    /// (`workers · max_batch`). Offered concurrency beyond this sheds.
+    pub fn capacity(&self) -> usize {
+        self.opts.queue_depth + self.opts.workers * self.opts.max_batch
+    }
+
+    /// Counter snapshot (monotonic since construction, except `depth`).
+    pub fn stats(&self) -> EngineStats {
+        let (accepted, shed, completed, failed, peak_depth, depth) = {
+            let st = self.queue.state.lock().unwrap();
+            (st.accepted, st.shed, st.completed, st.failed, st.peak_depth, st.q.len())
+        };
+        // generation is read after the queue lock is released — the two
+        // locks are never held together anywhere in the engine
+        EngineStats { accepted, shed, completed, failed, peak_depth, depth, generation: self.generation() }
+    }
+
+    /// Hold dispatch: admitted requests stay queued until [`Engine::resume`].
+    /// Admission (and shedding at the bound) continues. Maintenance /
+    /// deterministic-test hook; dropping the engine drains regardless.
+    pub fn pause(&self) {
+        self.queue.state.lock().unwrap().paused = true;
+    }
+
+    /// Resume dispatch after [`Engine::pause`].
+    pub fn resume(&self) {
+        self.queue.state.lock().unwrap().paused = false;
+        self.queue.cv.notify_all();
+    }
+
+    /// Atomically deploy `model`: one `Arc` swap in memory. New
+    /// micro-batches route to it immediately; batches already formed
+    /// finish on the model they started with, so a request never mixes
+    /// generations. The replacement must validate and match the engine's
+    /// (in_dim, out_dim) — queued requests were admitted against those
+    /// shapes. Returns the new generation. O(1) beyond validation: no
+    /// engine teardown, no thread respawn, no queue disturbance.
+    pub fn swap_model(&self, model: BsrModel) -> Result<u64, EngineError> {
+        if let Err(e) = model.validate() {
+            return Err(EngineError::SwapRejected(format!("{e:#}")));
+        }
+        if model.in_dim != self.in_dim || model.out_dim != self.out_dim {
+            return Err(EngineError::SwapRejected(format!(
+                "model '{}' is {}->{}, engine serves {}->{}",
+                model.spec, model.in_dim, model.out_dim, self.in_dim, self.out_dim
+            )));
+        }
+        let mut cur = self.current.lock().unwrap();
+        let generation = cur.generation + 1;
+        *cur = Arc::new(Deployed { model: Arc::new(model), generation });
+        Ok(generation)
     }
 
     /// Blocking single-request predict: enqueue, wait for the micro-batch
     /// carrying this request to finish, return logits + argmax + latency.
     /// Safe to call from many client threads at once — that is what fills
-    /// the micro-batches.
-    pub fn predict(&self, x: &[f32]) -> Result<Prediction> {
-        if x.len() != self.model.in_dim {
-            bail!(
-                "request has {} features, model '{}' wants {}",
-                x.len(), self.model.spec, self.model.in_dim
-            );
+    /// the micro-batches. Fails fast with [`EngineError::Overloaded`]
+    /// when the admission queue is at its bound.
+    pub fn predict(&self, x: &[f32]) -> Result<Prediction, EngineError> {
+        if x.len() != self.in_dim {
+            return Err(EngineError::BadRequest(format!(
+                "request has {} features, engine wants {}",
+                x.len(),
+                self.in_dim
+            )));
         }
         let (tx, rx) = mpsc::channel();
         // the payload copy is per-request-private: build it before taking
@@ -125,12 +328,26 @@ impl Engine {
         {
             let mut st = self.queue.state.lock().unwrap();
             if st.shutdown {
-                bail!("engine is shut down");
+                return Err(EngineError::ShutDown);
+            }
+            if st.q.len() >= self.opts.queue_depth {
+                // bounded admission: shed at the door, O(1), queue unread
+                st.shed += 1;
+                return Err(EngineError::Overloaded { depth: self.opts.queue_depth });
             }
             st.q.push_back(pending);
+            st.accepted += 1;
+            if st.q.len() > st.peak_depth {
+                st.peak_depth = st.q.len();
+            }
         }
         self.queue.cv.notify_one();
-        rx.recv().map_err(|_| anyhow!("engine dropped the request (batch failed?)"))
+        match rx.recv() {
+            Ok(res) => res,
+            // the sender was dropped without a response: only engine
+            // teardown does that (run_batch always answers)
+            Err(_) => Err(EngineError::ShutDown),
+        }
     }
 }
 
@@ -141,8 +358,9 @@ impl Drop for Engine {
             st.shutdown = true;
         }
         self.queue.cv.notify_all();
-        // the dispatcher drains what is still queued, then its pool drop
-        // joins the in-flight micro-batches — no request is abandoned
+        // the dispatcher drains what is still queued (shutdown overrides
+        // pause), then its pool drop joins the in-flight micro-batches —
+        // no admitted request is abandoned
         if let Some(h) = self.dispatcher.take() {
             let _ = h.join();
         }
@@ -151,7 +369,7 @@ impl Drop for Engine {
 
 fn dispatch_loop(
     queue: Arc<Queue>,
-    model: Arc<BsrModel>,
+    current: Arc<Mutex<Arc<Deployed>>>,
     pool: ThreadPool,
     max_batch: usize,
     workers: usize,
@@ -163,8 +381,11 @@ fn dispatch_loop(
                 // bounded in-flight: only form a batch when a pool worker
                 // can take it, so a sustained backlog fills later batches
                 // toward max_batch instead of flooding the pool queue with
-                // size-1 batches
-                if !st.q.is_empty() && st.in_flight < workers {
+                // size-1 batches. A pause holds dispatch (not admission)
+                // until resume — or shutdown, which always drains.
+                let dispatchable =
+                    !st.q.is_empty() && st.in_flight < workers && (!st.paused || st.shutdown);
+                if dispatchable {
                     let take = st.q.len().min(max_batch);
                     st.in_flight += 1;
                     break st.q.drain(..take).collect();
@@ -175,7 +396,13 @@ fn dispatch_loop(
                 st = queue.cv.wait(st).unwrap();
             }
         };
-        let (m, q) = (model.clone(), queue.clone());
+        // the model is pinned per micro-batch *after* the batch is formed
+        // and *outside* the queue lock: a swap between batches routes the
+        // later batch to the new model; a swap during a batch leaves that
+        // batch on the model it started with — one request never mixes
+        // generations
+        let deployed: Arc<Deployed> = current.lock().unwrap().clone();
+        let q = queue.clone();
         pool.submit(move || {
             // the pool catch_unwind's jobs and keeps its workers alive, so
             // the slot release must survive a panicking batch too — a drop
@@ -192,20 +419,24 @@ fn dispatch_loop(
                     self.0.cv.notify_all();
                 }
             }
-            let _slot = SlotGuard(q);
-            run_batch(&m, batch);
+            let _slot = SlotGuard(q.clone());
+            run_batch(&deployed, &q, batch);
         });
     }
 }
 
-fn run_batch(model: &BsrModel, batch: Vec<Pending>) {
+fn run_batch(deployed: &Deployed, queue: &Queue, batch: Vec<Pending>) {
+    let model = &deployed.model;
     let nb = batch.len();
     let mut xs = Vec::with_capacity(nb * model.in_dim);
     for p in &batch {
         xs.extend_from_slice(&p.x);
     }
+    // counters bump BEFORE the responses go out: once a client's predict
+    // has returned, `stats()` is guaranteed to already count that request
     match bsr::model_forward(model, &xs, nb) {
         Ok(z) => {
+            queue.state.lock().unwrap().completed += nb as u64;
             let classes = model.out_dim;
             let preds = bsr::argmax_rows(&z, nb, classes);
             for (i, p) in batch.into_iter().enumerate() {
@@ -214,14 +445,22 @@ fn run_batch(model: &BsrModel, batch: Vec<Pending>) {
                     class: preds[i],
                     latency: p.enqueued.elapsed(),
                     batch_size: nb,
+                    generation: deployed.generation,
                 };
                 // a client that gave up (dropped rx) is not an engine error
-                let _ = p.tx.send(resp);
+                let _ = p.tx.send(Ok(resp));
             }
         }
         Err(e) => {
-            // dropping the senders wakes every waiter with a recv error
-            crate::warn_!("micro-batch of {nb} failed: {e:#}");
+            queue.state.lock().unwrap().failed += nb as u64;
+            // every waiter gets the actual forward error — the senders
+            // are answered, not dropped, so clients see the root cause
+            // instead of a fabricated "batch failed?" guess
+            let msg = format!("{e:#}");
+            crate::warn_!("micro-batch of {nb} failed: {msg}");
+            for p in batch {
+                let _ = p.tx.send(Err(EngineError::BatchFailed(msg.clone())));
+            }
         }
     }
 }
@@ -230,9 +469,11 @@ fn run_batch(model: &BsrModel, batch: Vec<Pending>) {
 /// concurrent threads issue `requests` predicts in total (quota split
 /// evenly, remainder to the first threads), each with its own
 /// seed-derived RNG. Returns every request's latency in milliseconds —
-/// feed to [`latency_summary`]. Shared by the `infer` CLI subcommand and
-/// `benches/infer_serve.rs` so the measured traffic shape cannot diverge
-/// between them.
+/// feed to [`latency_summary`]. Closed-loop: each client has one request
+/// outstanding, so with `queue_depth ≥ clients` nothing sheds. Shared by
+/// the `infer` CLI subcommand and `benches/infer_serve.rs` so the
+/// measured traffic shape cannot diverge between them; the overload
+/// variant is [`drive_overload`].
 pub fn drive_synthetic(
     engine: &Engine,
     requests: usize,
@@ -269,6 +510,105 @@ pub fn drive_synthetic(
         out.extend(r?);
     }
     Ok(out)
+}
+
+/// What [`drive_overload`] measured.
+#[derive(Clone, Debug)]
+pub struct OverloadReport {
+    /// total requests issued (accepted + shed)
+    pub offered: usize,
+    /// requests that got logits
+    pub accepted: usize,
+    /// requests load-shed with [`EngineError::Overloaded`]
+    pub shed: usize,
+    /// per-accepted-request latency in milliseconds
+    pub accepted_lat_ms: Vec<f64>,
+    /// maximum queue depth the engine ever observed
+    pub peak_depth: usize,
+    /// the configured admission bound
+    pub queue_depth: usize,
+    /// resident capacity: queue_depth + workers·max_batch
+    pub capacity: usize,
+    /// offered concurrency (clients) over resident capacity
+    pub offered_ratio: f64,
+}
+
+impl OverloadReport {
+    /// shed / offered ∈ [0, 1].
+    pub fn shed_rate(&self) -> f64 {
+        self.shed as f64 / self.offered.max(1) as f64
+    }
+}
+
+/// Sustained-overload load test: `clients` threads each issue
+/// `per_client` predicts back-to-back with zero think time. Sized with
+/// `clients` well above [`Engine::capacity`] (the bench drives ≥ 4×),
+/// the admission queue saturates and the excess load-sheds: shed
+/// requests fail fast with the typed [`EngineError::Overloaded`] and are
+/// counted (the client yields and moves to its next request); accepted
+/// ones contribute latency samples. Any other error aborts the drive.
+/// Use a fresh engine per drive — `peak_depth` reads engine-lifetime
+/// stats.
+pub fn drive_overload(
+    engine: &Engine,
+    per_client: usize,
+    clients: usize,
+    seed: u64,
+) -> Result<OverloadReport> {
+    let per_client = per_client.max(1);
+    let clients = clients.max(1);
+    let in_dim = engine.model().in_dim;
+    let per: Vec<Result<(Vec<f64>, usize)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                s.spawn(move || -> Result<(Vec<f64>, usize)> {
+                    let mut rng = crate::util::rng::Rng::new(
+                        seed ^ (c as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                    );
+                    let mut lat = Vec::new();
+                    let mut shed = 0usize;
+                    for _ in 0..per_client {
+                        let x: Vec<f32> = (0..in_dim).map(|_| rng.normal()).collect();
+                        match engine.predict(&x) {
+                            Ok(p) => lat.push(p.latency.as_secs_f64() * 1e3),
+                            Err(EngineError::Overloaded { .. }) => {
+                                shed += 1;
+                                // an aggressive client retries immediately
+                                // with its next request; the yield keeps
+                                // the shed path from starving admitted
+                                // work of a core
+                                std::thread::yield_now();
+                            }
+                            Err(e) => return Err(e.into()),
+                        }
+                    }
+                    Ok((lat, shed))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("overload client panicked"))
+            .collect()
+    });
+    let mut accepted_lat_ms = Vec::new();
+    let mut shed = 0usize;
+    for r in per {
+        let (l, s) = r?;
+        accepted_lat_ms.extend(l);
+        shed += s;
+    }
+    let stats = engine.stats();
+    Ok(OverloadReport {
+        offered: per_client * clients,
+        accepted: accepted_lat_ms.len(),
+        shed,
+        accepted_lat_ms,
+        peak_depth: stats.peak_depth,
+        queue_depth: engine.queue_depth(),
+        capacity: engine.capacity(),
+        offered_ratio: clients as f64 / engine.capacity() as f64,
+    })
 }
 
 // ----------------------------------------------------------- aggregation
@@ -334,12 +674,15 @@ mod tests {
         (model, w1, w2)
     }
 
+    fn opts(max_batch: usize, workers: usize, queue_depth: usize) -> EngineOpts {
+        EngineOpts { max_batch, workers, queue_depth }
+    }
+
     #[test]
     fn predict_matches_direct_forward() {
         let (model, _, _) = tiny_model(41);
         let reference = model.clone();
-        let engine =
-            Engine::new(model, EngineOpts { max_batch: 4, workers: 2 }).unwrap();
+        let engine = Engine::new(model, opts(4, 2, 64)).unwrap();
         let mut rng = Rng::new(42);
         for _ in 0..10 {
             let x: Vec<f32> = (0..8).map(|_| rng.normal()).collect();
@@ -348,15 +691,19 @@ mod tests {
             assert_eq!(p.logits, want);
             assert_eq!(p.class, bsr::argmax_rows(&want, 1, 4)[0]);
             assert!(p.batch_size >= 1 && p.batch_size <= 4);
+            assert_eq!(p.generation, 0);
         }
+        let st = engine.stats();
+        assert_eq!(st.accepted, 10);
+        assert_eq!(st.completed, 10);
+        assert_eq!((st.shed, st.failed), (0, 0));
     }
 
     #[test]
     fn concurrent_clients_all_get_their_own_answer() {
         let (model, _, _) = tiny_model(43);
         let reference = model.clone();
-        let engine =
-            Engine::new(model, EngineOpts { max_batch: 8, workers: 3 }).unwrap();
+        let engine = Engine::new(model, opts(8, 3, 64)).unwrap();
         let results: Vec<(Vec<f32>, Prediction)> = std::thread::scope(|s| {
             let handles: Vec<_> = (0..16)
                 .map(|c| {
@@ -382,26 +729,198 @@ mod tests {
     fn predict_rejects_wrong_feature_count() {
         let (model, _, _) = tiny_model(44);
         let engine = Engine::new(model, EngineOpts::default()).unwrap();
-        assert!(engine.predict(&[0.0; 7]).is_err());
+        assert!(matches!(engine.predict(&[0.0; 7]), Err(EngineError::BadRequest(_))));
         assert!(engine.predict(&[0.0; 8]).is_ok());
     }
 
     #[test]
     fn drop_with_idle_engine_does_not_hang() {
         let (model, _, _) = tiny_model(45);
-        let engine = Engine::new(model, EngineOpts { max_batch: 2, workers: 1 }).unwrap();
+        let engine = Engine::new(model, opts(2, 1, 8)).unwrap();
         drop(engine);
     }
 
     #[test]
     fn drive_synthetic_collects_every_request() {
         let (model, _, _) = tiny_model(46);
-        let engine =
-            Engine::new(model, EngineOpts { max_batch: 4, workers: 2 }).unwrap();
+        let engine = Engine::new(model, opts(4, 2, 64)).unwrap();
         // 10 requests over 3 clients: quotas 4/3/3, all latencies returned
         let lat = drive_synthetic(&engine, 10, 3, 7).unwrap();
         assert_eq!(lat.len(), 10);
         assert!(lat.iter().all(|&v| v >= 0.0 && v.is_finite()));
+    }
+
+    /// Deterministic shed: with dispatch paused the queue cannot drain,
+    /// so filling it to the bound makes the next predict fail fast with
+    /// the typed Overloaded error — and the engine recovers on resume.
+    #[test]
+    fn full_queue_sheds_with_typed_overload_error() {
+        let (model, _, _) = tiny_model(47);
+        let engine = Engine::new(model, opts(4, 1, 2)).unwrap();
+        engine.pause();
+        let blocked: Vec<Result<Prediction, EngineError>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..2)
+                .map(|_| {
+                    let engine = &engine;
+                    s.spawn(move || engine.predict(&[0.5; 8]))
+                })
+                .collect();
+            // wait until both requests are actually queued
+            while engine.stats().depth < 2 {
+                std::thread::yield_now();
+            }
+            // the queue is at its bound: the next predict sheds, O(1),
+            // without blocking
+            match engine.predict(&[0.5; 8]) {
+                Err(EngineError::Overloaded { depth }) => assert_eq!(depth, 2),
+                other => panic!("wanted Overloaded, got {other:?}"),
+            }
+            engine.resume();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for r in blocked {
+            r.expect("queued requests complete after resume");
+        }
+        let st = engine.stats();
+        assert_eq!(st.shed, 1);
+        assert_eq!(st.accepted, 2);
+        assert_eq!(st.completed, 2);
+        assert!(st.peak_depth <= 2, "queue depth {} exceeded the bound", st.peak_depth);
+    }
+
+    /// A failing forward must answer every waiter with the root-cause
+    /// error — the old code dropped the senders and clients saw a
+    /// fabricated "batch failed?" recv error.
+    #[test]
+    fn run_batch_sends_root_cause_to_every_waiter() {
+        let (model, _, _) = tiny_model(48);
+        let mut broken = model;
+        // passes Engine-level shape checks at build time but the kernel's
+        // own validation rejects it: payload out of sync with the index
+        broken.layers[0].blocks.pop();
+        let deployed = Deployed { model: Arc::new(broken), generation: 3 };
+        let queue = Queue {
+            state: Mutex::new(QueueState {
+                q: VecDeque::new(),
+                in_flight: 0,
+                shutdown: false,
+                paused: false,
+                accepted: 0,
+                shed: 0,
+                completed: 0,
+                failed: 0,
+                peak_depth: 0,
+            }),
+            cv: Condvar::new(),
+        };
+        let mut rxs = Vec::new();
+        let batch: Vec<Pending> = (0..3)
+            .map(|_| {
+                let (tx, rx) = mpsc::channel();
+                rxs.push(rx);
+                Pending { x: vec![0.0; 8], enqueued: Instant::now(), tx }
+            })
+            .collect();
+        run_batch(&deployed, &queue, batch);
+        for rx in rxs {
+            match rx.recv().expect("waiter must be answered, not dropped") {
+                Err(EngineError::BatchFailed(msg)) => {
+                    assert!(
+                        msg.contains("block values") && msg.contains("fc1"),
+                        "root cause lost: {msg}"
+                    );
+                }
+                other => panic!("wanted BatchFailed, got {other:?}"),
+            }
+        }
+        assert_eq!(queue.state.lock().unwrap().failed, 3);
+    }
+
+    /// A client that gave up (dropped its receiver) must not take down
+    /// the batch — the other waiters still get their answers.
+    #[test]
+    fn run_batch_survives_dropped_waiter() {
+        let (model, _, _) = tiny_model(49);
+        let deployed = Deployed { model: Arc::new(model), generation: 0 };
+        let queue = Queue {
+            state: Mutex::new(QueueState {
+                q: VecDeque::new(),
+                in_flight: 0,
+                shutdown: false,
+                paused: false,
+                accepted: 0,
+                shed: 0,
+                completed: 0,
+                failed: 0,
+                peak_depth: 0,
+            }),
+            cv: Condvar::new(),
+        };
+        let (tx_gone, rx_gone) = mpsc::channel();
+        drop(rx_gone); // this client raced away (timeout / disconnect)
+        let (tx_live, rx_live) = mpsc::channel();
+        let batch = vec![
+            Pending { x: vec![0.1; 8], enqueued: Instant::now(), tx: tx_gone },
+            Pending { x: vec![0.2; 8], enqueued: Instant::now(), tx: tx_live },
+        ];
+        run_batch(&deployed, &queue, batch);
+        let got = rx_live.recv().unwrap().unwrap();
+        assert_eq!(got.batch_size, 2);
+        assert_eq!(queue.state.lock().unwrap().completed, 2);
+    }
+
+    #[test]
+    fn hot_swap_routes_new_requests_and_tags_generations() {
+        let (a, _, _) = tiny_model(50);
+        let (b, _, _) = tiny_model(51);
+        let (ref_a, ref_b) = (a.clone(), b.clone());
+        let engine = Engine::new(a, opts(4, 2, 64)).unwrap();
+        let x: Vec<f32> = (0..8).map(|i| i as f32 * 0.25 - 1.0).collect();
+        let p0 = engine.predict(&x).unwrap();
+        assert_eq!(p0.generation, 0);
+        assert_eq!(p0.logits, bsr::model_forward(&ref_a, &x, 1).unwrap());
+        let generation = engine.swap_model(b).unwrap();
+        assert_eq!(generation, 1);
+        assert_eq!(engine.generation(), 1);
+        let p1 = engine.predict(&x).unwrap();
+        assert_eq!(p1.generation, 1);
+        assert_eq!(p1.logits, bsr::model_forward(&ref_b, &x, 1).unwrap());
+        // a mismatched replacement is rejected: queued requests were
+        // admitted against the engine's shapes
+        let mut rng = Rng::new(52);
+        let w: Vec<f32> = (0..4 * 6).map(|_| rng.normal()).collect();
+        let mismatched = BsrModel {
+            spec: "other".into(),
+            method: "dense".into(),
+            in_dim: 6,
+            out_dim: 4,
+            layers: vec![BsrLayer::from_dense("fc", &w, 4, 6, 2, 2).unwrap()],
+        };
+        assert!(matches!(engine.swap_model(mismatched), Err(EngineError::SwapRejected(_))));
+        // an invalid replacement is rejected before the swap
+        let (mut corrupt, _, _) = tiny_model(53);
+        corrupt.layers[1].col_idx[0] = 99;
+        assert!(matches!(engine.swap_model(corrupt), Err(EngineError::SwapRejected(_))));
+        assert_eq!(engine.generation(), 1, "rejected swaps must not bump the generation");
+    }
+
+    #[test]
+    fn drive_overload_accounts_every_request() {
+        let (model, _, _) = tiny_model(54);
+        let engine = Engine::new(model, opts(2, 1, 2)).unwrap();
+        assert_eq!(engine.capacity(), 2 + 2);
+        let rep = drive_overload(&engine, 8, 8, 11).unwrap();
+        assert_eq!(rep.offered, 64);
+        assert_eq!(rep.accepted + rep.shed, rep.offered);
+        assert_eq!(rep.accepted_lat_ms.len(), rep.accepted);
+        assert!(rep.accepted >= 1, "a drive must accept something");
+        assert!(rep.peak_depth <= rep.queue_depth, "the bound was breached");
+        assert!((rep.offered_ratio - 2.0).abs() < 1e-12);
+        assert!(rep.shed_rate() >= 0.0 && rep.shed_rate() <= 1.0);
+        // engine counters agree with the report
+        let st = engine.stats();
+        assert_eq!(st.shed, rep.shed as u64);
+        assert_eq!(st.accepted, rep.accepted as u64);
     }
 
     #[test]

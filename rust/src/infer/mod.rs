@@ -12,20 +12,32 @@
 //!   little-endian container (`"BSRM"`) framed with the same
 //!   `checkpoint::wire` helpers and trailing CRC-32 guard as the
 //!   checkpoint container, so corruption fails identically loudly.
+//!   `save` publishes atomically (write a temp sibling, fsync, rename) —
+//!   a reader or hot-swap watcher never observes a torn artifact — and
+//!   [`BsrModel::peek`] probes a file's header ([`BsrMeta`]) in O(header)
+//!   without reading the payload.
 //! * **kernels** ([`bsr`]): gather-free block-GEMM forward over the stored
 //!   blocks only (plus a ReLU-fused variant), built on the same threading
 //!   substrate as `backend::native::linalg` — inference cost scales with
 //!   occupancy, not the dense shape.
-//! * **engine** ([`engine`]): a multi-threaded serving engine with a
-//!   request queue and dynamic micro-batching over `util::pool::ThreadPool`,
-//!   exposing a blocking `predict` with per-request latency accounting.
+//! * **engine** ([`engine`]): a multi-threaded serving engine with
+//!   **bounded admission** (a full queue load-sheds with the typed
+//!   [`engine::EngineError::Overloaded`] instead of queueing forever),
+//!   dynamic micro-batching over `util::pool::ThreadPool`, root-cause
+//!   error propagation to every waiter of a failed batch, and atomic
+//!   model hot-swap (one `Arc` swap; in-flight batches finish on the
+//!   model they started with).
+//! * **registry** ([`registry`]): named multi-model serving — deploy /
+//!   hot-swap / undeploy engines by model name, from memory or disk.
 //!
 //! `blocksparse export` / `blocksparse infer` drive this from the CLI;
-//! `benches/infer_serve.rs` measures the dense-vs-BSR speedup and the
-//! serving latency distribution into `BENCH_infer.json`.
+//! `benches/infer_serve.rs` measures the dense-vs-BSR speedup, the
+//! serving latency distribution, the sustained-overload shed behaviour
+//! and the hot-swap cost into `BENCH_infer.json`.
 
 pub mod bsr;
 pub mod engine;
+pub mod registry;
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -224,6 +236,20 @@ pub struct BsrModel {
     pub layers: Vec<BsrLayer>,
 }
 
+/// Header metadata of a saved artifact, from [`BsrModel::peek`]: enough
+/// to route/validate a deployment (shape fit, layer count, artifact
+/// size) without loading the block payload.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BsrMeta {
+    pub spec: String,
+    pub method: String,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub num_layers: usize,
+    /// total artifact size on disk (magic + body + CRC)
+    pub file_bytes: u64,
+}
+
 impl BsrModel {
     /// Inference FLOPs for one example over the whole stack.
     pub fn infer_flops_per_example(&self) -> u64 {
@@ -279,6 +305,13 @@ impl BsrModel {
 
     /// Serialize: `"BSRM"` | body | crc32(body), body framed with the
     /// shared `checkpoint::wire` helpers.
+    ///
+    /// The publish is **atomic**: the artifact is fully written and
+    /// fsynced to a temp sibling, then `rename`d over `path` (atomic
+    /// within a directory on POSIX). A concurrent reader — a hot-swap
+    /// watcher re-`load`ing the same path mid-save — sees either the old
+    /// complete file or the new complete file, never a torn prefix; this
+    /// is the on-disk half of the engine's in-memory `Arc` swap.
     pub fn save(&self, path: &Path) -> Result<()> {
         self.validate()?;
         if let Some(dir) = path.parent() {
@@ -303,12 +336,72 @@ impl BsrModel {
             wire::put_f32s(&mut body, &l.blocks);
         }
         let crc = crc32(&body);
-        let mut f = std::fs::File::create(path)
-            .with_context(|| format!("creating BSR model {path:?}"))?;
-        f.write_all(MAGIC)?;
-        f.write_all(&body)?;
-        f.write_all(&crc.to_le_bytes())?;
-        Ok(())
+        // pid + process-wide counter keep concurrent savers (even of the
+        // same destination) on distinct temp files; the dot prefix keeps
+        // half-written temps out of naive directory globs
+        static TMP_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let seq = TMP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let file_name = path
+            .file_name()
+            .and_then(|s| s.to_str())
+            .unwrap_or("model.bsm");
+        let tmp = path.with_file_name(format!(
+            ".{file_name}.{}.{seq}.tmp",
+            std::process::id()
+        ));
+        let publish = (|| -> Result<()> {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating BSR model temp {tmp:?}"))?;
+            f.write_all(MAGIC)?;
+            f.write_all(&body)?;
+            f.write_all(&crc.to_le_bytes())?;
+            // the rename only publishes bytes that are durably on disk
+            f.sync_all()?;
+            drop(f);
+            std::fs::rename(&tmp, path)
+                .with_context(|| format!("publishing BSR model {path:?}"))?;
+            Ok(())
+        })();
+        if publish.is_err() {
+            // a failed publish leaves no temp litter; `path` still holds
+            // whatever complete artifact it held before
+            let _ = std::fs::remove_file(&tmp);
+        }
+        publish
+    }
+
+    /// Probe a saved artifact's header without reading (or CRC-checking)
+    /// the block payload: O(header) work no matter how large the model
+    /// is. This is what a registry or startup scan uses to answer "what
+    /// is this file and does it fit my engine?" before paying for
+    /// [`BsrModel::load`]. The CRC trails the body, so `peek` cannot
+    /// detect payload corruption — the full `load` still guards that.
+    pub fn peek(path: &Path) -> Result<BsrMeta> {
+        let file_bytes = std::fs::metadata(path)
+            .with_context(|| format!("probing BSR model {path:?}"))?
+            .len();
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening BSR model {path:?}"))?;
+        // the fixed-size fields and the two name strings land well inside
+        // 4 KiB (wire strings are length-prefixed and short); take() keeps
+        // a multi-MB payload out of memory entirely
+        let mut head = Vec::with_capacity(4096);
+        f.by_ref().take(4096).read_to_end(&mut head)?;
+        if head.len() < 12 || &head[..4] != MAGIC {
+            bail!("not a BSRM block-sparse model");
+        }
+        let body = &head[4..];
+        let mut off = 0usize;
+        let version = wire::get_u32(body, &mut off).context("reading BSR model header")?;
+        if version != VERSION {
+            bail!("unsupported BSR model version {version}");
+        }
+        let spec = wire::get_str(body, &mut off)?;
+        let method = wire::get_str(body, &mut off)?;
+        let in_dim = wire::get_u32(body, &mut off)? as usize;
+        let out_dim = wire::get_u32(body, &mut off)? as usize;
+        let num_layers = wire::get_u32(body, &mut off)? as usize;
+        Ok(BsrMeta { spec, method, in_dim, out_dim, num_layers, file_bytes })
     }
 
     /// Load and fully validate a [`BsrModel::save`] artifact. The CRC is
@@ -591,5 +684,56 @@ mod tests {
         std::fs::write(&path, &bytes).unwrap();
         let err = BsrModel::load(&path).unwrap_err();
         assert!(format!("{err:#}").contains("not a BSRM"), "{err:#}");
+    }
+
+    #[test]
+    fn save_publishes_atomically_over_an_existing_artifact() {
+        let (w, m, n) = dense_with_holes();
+        let mk = |spec: &str| BsrModel {
+            spec: spec.into(),
+            method: "kpd".into(),
+            in_dim: n,
+            out_dim: m,
+            layers: vec![BsrLayer::from_dense("fc", &w, m, n, 2, 3).unwrap()],
+        };
+        let dir = std::env::temp_dir().join("bs_bsrm_atomic_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.bsm");
+        mk("old").save(&path).unwrap();
+        mk("new").save(&path).unwrap(); // overwrite via temp + rename
+        assert_eq!(BsrModel::load(&path).unwrap().spec, "new");
+        // no temp litter survives a successful publish
+        let stray: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+            .collect();
+        assert!(stray.is_empty(), "leftover temp files: {stray:?}");
+    }
+
+    #[test]
+    fn peek_reads_header_without_payload() {
+        let (w, m, n) = dense_with_holes();
+        let model = BsrModel {
+            spec: "tiny".into(),
+            method: "group_lasso".into(),
+            in_dim: n,
+            out_dim: m,
+            layers: vec![BsrLayer::from_dense("fc", &w, m, n, 2, 3).unwrap()],
+        };
+        let dir = std::env::temp_dir().join("bs_bsrm_peek_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.bsm");
+        model.save(&path).unwrap();
+        let meta = BsrModel::peek(&path).unwrap();
+        assert_eq!(meta.spec, "tiny");
+        assert_eq!(meta.method, "group_lasso");
+        assert_eq!(meta.in_dim, n);
+        assert_eq!(meta.out_dim, m);
+        assert_eq!(meta.num_layers, 1);
+        assert_eq!(meta.file_bytes, std::fs::metadata(&path).unwrap().len());
+        // peek shares the magic guard with load
+        std::fs::write(&path, b"XXXX12345678").unwrap();
+        assert!(BsrModel::peek(&path).is_err());
     }
 }

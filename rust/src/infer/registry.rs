@@ -1,0 +1,208 @@
+//! Named multi-model serving: a registry of [`Engine`]s keyed by model
+//! name, with atomic hot-swap deployment.
+//!
+//! One process serves many models; each name owns one engine (its own
+//! admission queue, worker pool and stats). [`ModelRegistry::deploy`]
+//! routes a replacement model through [`Engine::swap_model`] when the
+//! engine's request shapes still fit — a single `Arc` swap, O(1) beyond
+//! validation, no queue disturbance, no thread respawn; in-flight
+//! micro-batches finish on the model they started with. A replacement
+//! with *different* shapes cannot reuse the queue (queued requests were
+//! admitted against the old shapes), so deploy builds a fresh engine and
+//! retires the old one — handed-out `Arc<Engine>`s keep serving until
+//! their holders drop them, then the old engine drains and joins.
+//!
+//! [`ModelRegistry::deploy_from_path`] pairs with the artifact side of
+//! the same discipline: `BsrModel::save` publishes write-then-rename, so
+//! a deploy watching a path never loads a torn file, and
+//! `BsrModel::peek` lets a scan route artifacts without paying a full
+//! load.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use super::engine::{Engine, EngineError, EngineOpts};
+use super::BsrModel;
+
+/// A name → [`Engine`] map; every engine is built with the registry's
+/// [`EngineOpts`]. All methods take `&self` — the registry is shared
+/// behind an `Arc` between deployers and request routers.
+pub struct ModelRegistry {
+    opts: EngineOpts,
+    engines: Mutex<BTreeMap<String, Arc<Engine>>>,
+}
+
+impl ModelRegistry {
+    pub fn new(opts: EngineOpts) -> Self {
+        Self { opts, engines: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Deploy `model` under `name`: first deploy creates an engine
+    /// (generation 0); a redeploy hot-swaps in place when the shapes
+    /// still fit, and otherwise replaces the engine (generation restarts
+    /// at 0). Returns the serving generation. An invalid model is
+    /// rejected before anything existing is touched.
+    pub fn deploy(&self, name: &str, model: BsrModel) -> Result<u64> {
+        // try the in-place swap first, outside any new-engine work
+        {
+            let engines = self.engines.lock().unwrap();
+            if let Some(engine) = engines.get(name) {
+                match engine.swap_model(model.clone()) {
+                    Ok(generation) => return Ok(generation),
+                    // shape mismatch falls through to engine replacement;
+                    // an *invalid* model must not replace a live engine
+                    Err(EngineError::SwapRejected(msg)) if model.validate().is_err() => {
+                        return Err(EngineError::SwapRejected(msg))
+                            .with_context(|| format!("deploying '{name}'"));
+                    }
+                    Err(_) => {}
+                }
+            }
+        }
+        // build the replacement engine without holding the map lock (it
+        // validates and spawns threads), then install it with one map write
+        let engine = Arc::new(
+            Engine::new(model, self.opts.clone())
+                .with_context(|| format!("deploying '{name}'"))?,
+        );
+        let generation = engine.generation();
+        let old = self.engines.lock().unwrap().insert(name.to_string(), engine);
+        // the old engine (if any) drains outside the lock when its last
+        // Arc drops — possibly right here
+        drop(old);
+        Ok(generation)
+    }
+
+    /// [`ModelRegistry::deploy`] from a saved artifact. Pairs with the
+    /// atomic `BsrModel::save`: a path being re-published concurrently
+    /// always loads as one complete artifact.
+    pub fn deploy_from_path(&self, name: &str, path: &Path) -> Result<u64> {
+        let model = BsrModel::load(path)
+            .with_context(|| format!("deploying '{name}' from {path:?}"))?;
+        self.deploy(name, model)
+    }
+
+    /// The engine serving `name`, if deployed. The returned `Arc` stays
+    /// valid across later deploys — a router holding it keeps getting
+    /// answers (from the engine it resolved, at whatever generation that
+    /// engine serves) until it re-resolves.
+    pub fn get(&self, name: &str) -> Option<Arc<Engine>> {
+        self.engines.lock().unwrap().get(name).cloned()
+    }
+
+    /// Remove `name`. Returns whether it was deployed. The engine drains
+    /// and joins when the last outstanding `Arc` drops.
+    pub fn undeploy(&self, name: &str) -> bool {
+        self.engines.lock().unwrap().remove(name).is_some()
+    }
+
+    /// Deployed names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.engines.lock().unwrap().keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::BsrLayer;
+    use crate::util::rng::Rng;
+
+    fn model(seed: u64, in_dim: usize, out_dim: usize) -> BsrModel {
+        let mut rng = Rng::new(seed);
+        let hidden = 6;
+        let w1: Vec<f32> = (0..hidden * in_dim).map(|_| rng.normal()).collect();
+        let w2: Vec<f32> = (0..out_dim * hidden).map(|_| rng.normal()).collect();
+        BsrModel {
+            spec: format!("reg{seed}"),
+            method: "dense".into(),
+            in_dim,
+            out_dim,
+            layers: vec![
+                BsrLayer::from_dense("fc1", &w1, hidden, in_dim, 2, 2).unwrap(),
+                BsrLayer::from_dense("fc2", &w2, out_dim, hidden, 2, 2).unwrap(),
+            ],
+        }
+    }
+
+    fn opts() -> EngineOpts {
+        EngineOpts { max_batch: 4, workers: 2, queue_depth: 16 }
+    }
+
+    #[test]
+    fn deploy_get_undeploy_lifecycle() {
+        let reg = ModelRegistry::new(opts());
+        assert!(reg.get("a").is_none());
+        assert_eq!(reg.deploy("a", model(1, 8, 4)).unwrap(), 0);
+        assert_eq!(reg.deploy("b", model(2, 8, 4)).unwrap(), 0);
+        assert_eq!(reg.names(), vec!["a".to_string(), "b".to_string()]);
+        let engine = reg.get("a").unwrap();
+        assert!(engine.predict(&[0.1; 8]).is_ok());
+        assert!(reg.undeploy("a"));
+        assert!(!reg.undeploy("a"));
+        assert!(reg.get("a").is_none());
+        // the held Arc outlives the undeploy and still serves
+        assert!(engine.predict(&[0.2; 8]).is_ok());
+    }
+
+    #[test]
+    fn redeploy_same_shapes_hot_swaps_in_place() {
+        let reg = ModelRegistry::new(opts());
+        reg.deploy("m", model(3, 8, 4)).unwrap();
+        let engine_before = reg.get("m").unwrap();
+        let generation = reg.deploy("m", model(4, 8, 4)).unwrap();
+        assert_eq!(generation, 1);
+        // same engine object: the queue and its stats survived the swap
+        assert!(Arc::ptr_eq(&engine_before, &reg.get("m").unwrap()));
+        assert_eq!(engine_before.generation(), 1);
+        assert_eq!(engine_before.predict(&[0.3; 8]).unwrap().generation, 1);
+    }
+
+    #[test]
+    fn redeploy_new_shapes_replaces_the_engine() {
+        let reg = ModelRegistry::new(opts());
+        reg.deploy("m", model(5, 8, 4)).unwrap();
+        let old = reg.get("m").unwrap();
+        // 12-feature replacement cannot reuse an 8-feature queue
+        let generation = reg.deploy("m", model(6, 12, 4)).unwrap();
+        assert_eq!(generation, 0);
+        let new = reg.get("m").unwrap();
+        assert!(!Arc::ptr_eq(&old, &new));
+        assert!(new.predict(&[0.1; 12]).is_ok());
+        assert!(old.predict(&[0.1; 8]).is_ok(), "retired engine serves until dropped");
+    }
+
+    #[test]
+    fn deploying_an_invalid_model_rejects_and_keeps_the_old() {
+        let reg = ModelRegistry::new(opts());
+        reg.deploy("m", model(7, 8, 4)).unwrap();
+        let mut corrupt = model(8, 8, 4);
+        corrupt.layers[0].col_idx[0] = 99;
+        assert!(reg.deploy("m", corrupt.clone()).is_err());
+        assert_eq!(reg.get("m").unwrap().generation(), 0);
+        // also rejected as a *first* deploy (Engine::new validates)
+        assert!(reg.deploy("fresh", corrupt).is_err());
+        assert!(reg.get("fresh").is_none());
+    }
+
+    #[test]
+    fn deploy_from_path_round_trips() {
+        let dir = std::env::temp_dir().join("bs_registry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.bsm");
+        let m = model(9, 8, 4);
+        m.save(&path).unwrap();
+        let reg = ModelRegistry::new(opts());
+        assert_eq!(reg.deploy_from_path("disk", &path).unwrap(), 0);
+        let p = reg.get("disk").unwrap().predict(&[0.4; 8]).unwrap();
+        let want = crate::infer::bsr::model_forward(&m, &[0.4; 8], 1).unwrap();
+        assert_eq!(p.logits, want);
+        // republish (atomic save) + redeploy = hot swap
+        m.save(&path).unwrap();
+        assert_eq!(reg.deploy_from_path("disk", &path).unwrap(), 1);
+        assert!(reg.deploy_from_path("gone", &dir.join("missing.bsm")).is_err());
+    }
+}

@@ -50,11 +50,14 @@
 //!
 //! Past training, the [`infer`] subsystem closes the loop on the paper's
 //! inference claim: `infer::export` packs any trained spec into a BSR
-//! (block-sparse-row) model artifact (versioned, CRC-guarded on disk),
-//! `infer::bsr` runs gather-free block-GEMM forward kernels whose cost
-//! scales with occupancy, and `infer::engine` serves them behind a
-//! request queue with dynamic micro-batching — the CLI's `export` /
-//! `infer` subcommands and `benches/infer_serve.rs` drive it.
+//! (block-sparse-row) model artifact (versioned, CRC-guarded,
+//! atomically published on disk), `infer::bsr` runs gather-free
+//! block-GEMM forward kernels whose cost scales with occupancy,
+//! `infer::engine` serves them behind a **bounded** admission queue with
+//! dynamic micro-batching, typed load-shed under overload and atomic
+//! model hot-swap, and `infer::registry` keys engines by model name —
+//! the CLI's `export` / `infer` subcommands and
+//! `benches/infer_serve.rs` drive it.
 //!
 //! See `rust/README.md` for the backend/feature matrix and offline
 //! test/bench instructions.

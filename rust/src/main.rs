@@ -67,6 +67,8 @@ fn arg_spec() -> ArgSpec {
             ("model", true, "BSR model artifact to serve (infer)"),
             ("requests", true, "total requests to issue (infer, default 256)"),
             ("clients", true, "concurrent client threads (infer, default 4)"),
+            ("queue-depth", true, "admission queue bound; full queue load-sheds (infer)"),
+            ("overload", false, "sustained-overload load test: drive clients >> capacity (infer)"),
             ("csv", true, "write per-step series to this CSV file"),
             ("quiet", false, "warnings and errors only"),
             ("verbose", false, "debug logging"),
@@ -277,16 +279,26 @@ fn cmd_export(args: &Args) -> Result<()> {
 }
 
 /// Serve a BSR artifact through the batched engine with synthetic traffic
-/// and report the latency distribution + throughput.
+/// and report the latency distribution + throughput. With `--overload`,
+/// drive sustained overload instead (clients >> engine capacity) and
+/// report the load-shed behaviour: shed rate, accepted-request
+/// percentiles, peak queue depth vs the admission bound.
 fn cmd_infer(args: &Args) -> Result<()> {
-    use blocksparse::infer::engine::{drive_synthetic, latency_summary, Engine, EngineOpts};
+    use blocksparse::infer::engine::{
+        drive_overload, drive_synthetic, latency_summary, Engine, EngineOpts,
+    };
     let path = args
         .opt("model")
         .ok_or_else(|| anyhow!("infer needs --model <file.bsm> (see `blocksparse export`)"))?;
     let model = blocksparse::infer::BsrModel::load(std::path::Path::new(path))?;
-    let max_batch = args.opt_usize("batch", 32)?;
-    let requests = args.opt_usize("requests", 256)?.max(1);
-    let clients = args.opt_usize("clients", 4)?.max(1);
+    let overload = args.has_flag("overload");
+    // overload defaults keep the test small and the ratio honest; the
+    // plain path keeps the old serve defaults
+    let defaults = EngineOpts::default();
+    let max_batch = args.opt_usize("batch", if overload { 4 } else { 32 })?;
+    let queue_depth =
+        args.opt_usize("queue-depth", if overload { 8 } else { defaults.queue_depth })?;
+    let workers = if overload { 2 } else { defaults.workers };
     println!(
         "model {} ({}, {} layers): {} -> {}, block sparsity {:.1}%, {} params, {} FLOPs/example",
         model.spec,
@@ -298,7 +310,40 @@ fn cmd_infer(args: &Args) -> Result<()> {
         human_count(model.nnz_params() as f64),
         human_count(model.infer_flops_per_example() as f64),
     );
-    let engine = Engine::new(model, EngineOpts { max_batch, ..EngineOpts::default() })?;
+    let engine = Engine::new(model, EngineOpts { max_batch, workers, queue_depth })?;
+    if overload {
+        // default: 4× the engine's resident capacity, zero think time
+        let clients = args.opt_usize("clients", 4 * engine.capacity())?.max(1);
+        let per_client = args.opt_usize("requests", 32 * engine.capacity())?.max(1) / clients.max(1);
+        let sw = blocksparse::util::Stopwatch::start();
+        let rep = drive_overload(&engine, per_client.max(1), clients, 0xD05)?;
+        let wall = sw.elapsed_secs();
+        let s = latency_summary(&rep.accepted_lat_ms);
+        println!(
+            "overload: {clients} clients vs capacity {} (queue {queue_depth} + {} workers x batch {max_batch}) = {:.1}x offered",
+            rep.capacity,
+            engine.workers(),
+            rep.offered_ratio
+        );
+        println!(
+            "offered {}  accepted {}  shed {} ({:.1}% shed rate) in {wall:.2}s",
+            rep.offered,
+            rep.accepted,
+            rep.shed,
+            100.0 * rep.shed_rate()
+        );
+        println!(
+            "accepted latency ms: p50 {:.3}  p95 {:.3}  p99 {:.3}  mean {:.3}  max {:.3}",
+            s.p50_ms, s.p95_ms, s.p99_ms, s.mean_ms, s.max_ms
+        );
+        println!(
+            "peak queue depth {} (bound {queue_depth}): backlog stayed bounded",
+            rep.peak_depth
+        );
+        return Ok(());
+    }
+    let requests = args.opt_usize("requests", 256)?.max(1);
+    let clients = args.opt_usize("clients", 4)?.max(1);
     let sw = blocksparse::util::Stopwatch::start();
     let lat_ms = drive_synthetic(&engine, requests, clients, 0xC11E47)?;
     let wall = sw.elapsed_secs();

@@ -138,9 +138,11 @@ impl<'a> DataParallelTrainer<'a> {
         let snapshot: &TrainState = state;
         // `scoped_map` returns results in shard order no matter which
         // replica finishes first, so the reduction below is deterministic.
+        // The pool is owned by this trainer, so the only way to see its
+        // typed shutdown error here is a bug — propagate it loudly.
         let outs: Vec<Result<GradOut>> = self.pool.scoped_map(shards.len(), |i| {
             linalg::with_thread_cap(cap, || be.grad_step(snapshot, &shards[i].x, &shards[i].y))
-        });
+        })?;
         let mut parts = Vec::with_capacity(outs.len());
         for o in outs {
             parts.push(o?);

@@ -5,6 +5,31 @@ pub mod log;
 pub mod pool;
 pub mod rng;
 
+/// Hard cap on every worker/thread-count knob in the crate. Shared by the
+/// kernel row-threading autodetect (`BS_NATIVE_THREADS`), the serving
+/// engine's worker sizing (`BS_SERVE_WORKERS`) and the pool defaults, so
+/// the clamps cannot drift apart per subsystem (they used to: the engine
+/// capped at 8 while the kernels capped at 16).
+pub const MAX_WORKERS: usize = 16;
+
+/// Pull a worker count into the crate-wide 1..=[`MAX_WORKERS`] range.
+pub fn clamp_workers(n: usize) -> usize {
+    n.clamp(1, MAX_WORKERS)
+}
+
+/// Resolve a worker-count environment knob: a parseable value of `var`
+/// wins, anything else falls back to `default`; both are clamped to
+/// 1..=[`MAX_WORKERS`] so a stray huge value can never spawn that many
+/// threads.
+pub fn env_workers(var: &str, default: usize) -> usize {
+    if let Ok(v) = std::env::var(var) {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return clamp_workers(n);
+        }
+    }
+    clamp_workers(default)
+}
+
 /// Wall-clock stopwatch used by the coordinator and the bench harness.
 #[derive(Debug)]
 pub struct Stopwatch {
@@ -79,6 +104,16 @@ mod tests {
         let (m1, s1) = mean_std(&[5.0]);
         assert_eq!(m1, 5.0);
         assert_eq!(s1, 0.0);
+    }
+
+    #[test]
+    fn worker_clamp_is_shared() {
+        assert_eq!(clamp_workers(0), 1);
+        assert_eq!(clamp_workers(7), 7);
+        assert_eq!(clamp_workers(10_000), MAX_WORKERS);
+        // unset / unparseable env values fall back to the clamped default
+        assert_eq!(env_workers("BS_TEST_NO_SUCH_VAR", 4), 4);
+        assert_eq!(env_workers("BS_TEST_NO_SUCH_VAR", 99), MAX_WORKERS);
     }
 
     #[test]

@@ -4,21 +4,51 @@
 //! `scope_for` parallel-for used by the data pipeline (batch assembly) and
 //! the bench harness (multi-seed sweeps). Work items are boxed closures;
 //! results come back over a channel in submission order.
+//!
+//! Shutdown has two shapes:
+//! * dropping the pool is *graceful*: workers drain every queued job, then
+//!   exit (fire-and-forget `submit` work is never lost);
+//! * [`ThreadPool::shutdown_now`] is *immediate*: queued-but-unstarted
+//!   jobs are dropped, workers exit after their current job, and any
+//!   in-progress [`ThreadPool::map`]/[`ThreadPool::scoped_map`] call
+//!   observes the dropped jobs as a clean [`PoolShutdown`] error instead
+//!   of hanging or panicking with a misleading message.
 
+use std::fmt;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-struct Shared {
-    queue: Mutex<std::collections::VecDeque<Job>>,
-    cv: Condvar,
-    shutdown: Mutex<bool>,
-    active: AtomicUsize,
+/// The queue and the shutdown flag live under ONE mutex: the worker loop
+/// takes a single lock per iteration, so there is no lock-order hazard
+/// between "is there work" and "are we shutting down" (the old layout
+/// took a second `shutdown` mutex while holding the queue lock).
+struct Inner {
+    queue: std::collections::VecDeque<Job>,
+    shutdown: bool,
 }
+
+struct Shared {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+/// A `map`/`scoped_map` call was interrupted by pool shutdown before all
+/// of its jobs could run. Implements `std::error::Error`, so `?` converts
+/// it into `anyhow::Error` at call sites that just propagate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PoolShutdown;
+
+impl fmt::Display for PoolShutdown {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "thread pool shut down before all jobs completed")
+    }
+}
+
+impl std::error::Error for PoolShutdown {}
 
 /// Fixed-size worker pool.
 pub struct ThreadPool {
@@ -30,10 +60,11 @@ impl ThreadPool {
     pub fn new(threads: usize) -> Self {
         let threads = threads.max(1);
         let shared = Arc::new(Shared {
-            queue: Mutex::new(std::collections::VecDeque::new()),
+            inner: Mutex::new(Inner {
+                queue: std::collections::VecDeque::new(),
+                shutdown: false,
+            }),
             cv: Condvar::new(),
-            shutdown: Mutex::new(false),
-            active: AtomicUsize::new(0),
         });
         let workers = (0..threads)
             .map(|i| {
@@ -47,10 +78,11 @@ impl ThreadPool {
         Self { shared, workers }
     }
 
-    /// Pool sized to the machine (leaving one core for the main thread).
+    /// Pool sized to the machine (leaving one core for the main thread,
+    /// capped at the crate-wide `util::MAX_WORKERS`).
     pub fn default_size() -> Self {
         let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-        Self::new(n.saturating_sub(1).max(1))
+        Self::new(crate::util::clamp_workers(n.saturating_sub(1)))
     }
 
     pub fn threads(&self) -> usize {
@@ -62,9 +94,40 @@ impl ThreadPool {
     }
 
     fn submit_boxed(&self, job: Job) {
-        let mut q = self.shared.queue.lock().unwrap();
-        q.push_back(job);
-        self.shared.cv.notify_one();
+        let rejected = {
+            let mut inner = self.shared.inner.lock().unwrap();
+            if inner.shutdown {
+                // workers are gone (or leaving): queueing would strand the
+                // job forever — drop it outside the lock instead
+                Some(job)
+            } else {
+                inner.queue.push_back(job);
+                None
+            }
+        };
+        match rejected {
+            Some(job) => {
+                crate::warn_!("job submitted after pool shutdown was dropped");
+                drop(job); // drops its result sender → waiters see disconnect
+            }
+            None => self.shared.cv.notify_one(),
+        }
+    }
+
+    /// Immediate shutdown: drop every queued-but-unstarted job and tell
+    /// workers to exit after their current job. In-progress `map` /
+    /// `scoped_map` calls get a clean [`PoolShutdown`] error for the
+    /// dropped jobs. Idempotent; `Drop` still joins the workers.
+    pub fn shutdown_now(&self) {
+        let dropped: Vec<Job> = {
+            let mut inner = self.shared.inner.lock().unwrap();
+            inner.shutdown = true;
+            inner.queue.drain(..).collect()
+        };
+        self.shared.cv.notify_all();
+        // job closures (and the result senders they captured) drop outside
+        // the lock: their Drop code must not be able to deadlock the pool
+        drop(dropped);
     }
 
     /// Run `f(i)` for i in 0..n on the pool, returning results in order.
@@ -72,8 +135,10 @@ impl ThreadPool {
     /// If any job panics, the panic is re-raised *on the caller* with its
     /// original payload once all jobs have drained — the pool's workers
     /// survive (see `worker_loop`), so a panicking closure cannot shrink
-    /// the pool for the rest of the process.
-    pub fn map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    /// the pool for the rest of the process. If the pool is shut down
+    /// before every job ran (see [`ThreadPool::shutdown_now`]), the call
+    /// returns [`PoolShutdown`] instead of panicking on a missing result.
+    pub fn map<T, F>(&self, n: usize, f: F) -> Result<Vec<T>, PoolShutdown>
     where
         T: Send + 'static,
         F: Fn(usize) -> T + Send + Sync + 'static,
@@ -105,7 +170,7 @@ impl ThreadPool {
         if let Some(payload) = first_panic {
             resume_unwind(payload);
         }
-        results.into_iter().map(|v| v.expect("pool job dropped its result")).collect()
+        collect_or_shutdown(results)
     }
 
     /// Like [`ThreadPool::map`], but the closure — and its results — may
@@ -113,15 +178,17 @@ impl ThreadPool {
     /// `grad_step(&state, &shard)` on the pool this way, with no cloning
     /// and no per-step thread spawns).
     ///
-    /// Panics in jobs propagate to the caller exactly like [`ThreadPool::map`].
-    pub fn scoped_map<'env, T, F>(&self, n: usize, f: F) -> Vec<T>
+    /// Panics in jobs propagate to the caller exactly like
+    /// [`ThreadPool::map`]; pool shutdown mid-call surfaces as
+    /// [`PoolShutdown`].
+    pub fn scoped_map<'env, T, F>(&self, n: usize, f: F) -> Result<Vec<T>, PoolShutdown>
     where
         T: Send + 'env,
         F: Fn(usize) -> T + Sync + 'env,
     {
         type Panic = Box<dyn std::any::Any + Send + 'static>;
         if n == 0 {
-            return Vec::new();
+            return Ok(Vec::new());
         }
         let (tx, rx) = mpsc::channel::<(usize, Result<T, Panic>)>();
         {
@@ -172,27 +239,42 @@ impl ThreadPool {
         if let Some(payload) = first_panic {
             resume_unwind(payload);
         }
-        results.into_iter().map(|v| v.expect("pool job dropped its result")).collect()
+        collect_or_shutdown(results)
     }
+}
+
+/// All results present → the ordered vector; any hole means unexecuted
+/// job closures were dropped by pool shutdown → the typed error (never
+/// the old misleading "pool job dropped its result" panic).
+fn collect_or_shutdown<T>(results: Vec<Option<T>>) -> Result<Vec<T>, PoolShutdown> {
+    let mut out = Vec::with_capacity(results.len());
+    for r in results {
+        match r {
+            Some(v) => out.push(v),
+            None => return Err(PoolShutdown),
+        }
+    }
+    Ok(out)
 }
 
 fn worker_loop(sh: Arc<Shared>) {
     loop {
+        // one lock per iteration: work and the shutdown flag live in the
+        // same state, so there is no nested-lock window
         let job = {
-            let mut q = sh.queue.lock().unwrap();
+            let mut inner = sh.inner.lock().unwrap();
             loop {
-                if let Some(j) = q.pop_front() {
+                if let Some(j) = inner.queue.pop_front() {
                     break Some(j);
                 }
-                if *sh.shutdown.lock().unwrap() {
+                if inner.shutdown {
                     break None;
                 }
-                q = sh.cv.wait(q).unwrap();
+                inner = sh.cv.wait(inner).unwrap();
             }
         };
         match job {
             Some(j) => {
-                sh.active.fetch_add(1, Ordering::SeqCst);
                 // a panicking job must not take the worker down with it —
                 // that would silently shrink the pool for the rest of the
                 // process. `map` re-raises its own payload on the caller
@@ -206,7 +288,6 @@ fn worker_loop(sh: Arc<Shared>) {
                         .unwrap_or("<non-string panic payload>");
                     crate::warn_!("thread-pool job panicked: {msg}");
                 }
-                sh.active.fetch_sub(1, Ordering::SeqCst);
             }
             None => return,
         }
@@ -215,7 +296,8 @@ fn worker_loop(sh: Arc<Shared>) {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        *self.shared.shutdown.lock().unwrap() = true;
+        // graceful: flag only — workers drain the remaining queue first
+        self.shared.inner.lock().unwrap().shutdown = true;
         self.shared.cv.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -226,12 +308,12 @@ impl Drop for ThreadPool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicU64;
+    use std::sync::atomic::{AtomicU64, Ordering};
 
     #[test]
     fn map_in_order() {
         let pool = ThreadPool::new(4);
-        let out = pool.map(100, |i| i * i);
+        let out = pool.map(100, |i| i * i).unwrap();
         assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
     }
 
@@ -245,14 +327,14 @@ mod tests {
                 c.fetch_add(1, Ordering::SeqCst);
             });
         }
-        drop(pool); // join on drop
+        drop(pool); // graceful join on drop: every queued job still runs
         assert_eq!(counter.load(Ordering::SeqCst), 50);
     }
 
     #[test]
     fn single_thread_pool() {
         let pool = ThreadPool::new(1);
-        let out = pool.map(10, |i| i + 1);
+        let out = pool.map(10, |i| i + 1).unwrap();
         assert_eq!(out[9], 10);
     }
 
@@ -276,7 +358,7 @@ mod tests {
         assert!(msg.contains("job 3 exploded"), "payload lost: {msg}");
         // the worker that ran the panicking job is still alive: a pool of 2
         // threads must still complete more jobs than 1 thread could block on
-        let out = pool.map(32, |i| i * 2);
+        let out = pool.map(32, |i| i * 2).unwrap();
         assert_eq!(out, (0..32).map(|i| i * 2).collect::<Vec<_>>());
     }
 
@@ -284,10 +366,10 @@ mod tests {
     fn scoped_map_borrows_stack_data() {
         let pool = ThreadPool::new(4);
         let data: Vec<u64> = (0..64).collect(); // stack-owned, not 'static
-        let doubled = pool.scoped_map(data.len(), |i| data[i] * 2);
+        let doubled = pool.scoped_map(data.len(), |i| data[i] * 2).unwrap();
         assert_eq!(doubled, data.iter().map(|v| v * 2).collect::<Vec<_>>());
         // results may borrow too
-        let refs = pool.scoped_map(4, |i| &data[i]);
+        let refs = pool.scoped_map(4, |i| &data[i]).unwrap();
         assert_eq!(refs, vec![&0, &1, &2, &3]);
     }
 
@@ -305,7 +387,7 @@ mod tests {
         }));
         assert!(caught.is_err(), "panic must propagate");
         // pool and borrows both survive
-        let out = pool.scoped_map(data.len(), |i| data[i] + 1);
+        let out = pool.scoped_map(data.len(), |i| data[i] + 1).unwrap();
         assert_eq!(out, vec![2, 3, 4, 5]);
     }
 
@@ -314,7 +396,56 @@ mod tests {
         let pool = ThreadPool::new(1);
         pool.submit(|| panic!("fire-and-forget panic"));
         // the sole worker must survive to run this
-        let out = pool.map(4, |i| i + 1);
+        let out = pool.map(4, |i| i + 1).unwrap();
         assert_eq!(out, vec![1, 2, 3, 4]);
+    }
+
+    /// Shutdown racing an in-progress `scoped_map` must surface the typed
+    /// [`PoolShutdown`] error — not hang, and not die on the old
+    /// misleading "pool job dropped its result" expect.
+    #[test]
+    fn shutdown_mid_scoped_map_is_a_clean_error() {
+        let pool = ThreadPool::new(1);
+        let (go_tx, go_rx) = mpsc::channel::<()>();
+        let go_rx = Mutex::new(go_rx); // Receiver is Send but not Sync
+        let res = thread::scope(|s| {
+            let pool = &pool;
+            let go_rx = &go_rx;
+            let h = s.spawn(move || {
+                pool.scoped_map(4, |_| {
+                    // the single worker parks in job 0 until the main
+                    // thread has shut the pool down; jobs 1..=3 stay queued
+                    let _ = go_rx.lock().unwrap().recv();
+                    1u32
+                })
+            });
+            // wait for the worker to actually be inside job 0 (queue len 3)
+            loop {
+                let queued = pool.shared.inner.lock().unwrap().queue.len();
+                if queued <= 3 {
+                    break;
+                }
+                thread::yield_now();
+            }
+            pool.shutdown_now(); // drops the 3 queued job closures
+            go_tx.send(()).unwrap(); // release job 0
+            h.join().unwrap()
+        });
+        assert_eq!(res, Err(PoolShutdown));
+        assert_eq!(format!("{PoolShutdown}"), "thread pool shut down before all jobs completed");
+    }
+
+    /// After `shutdown_now`, new maps fail cleanly instead of hanging on a
+    /// queue no worker will ever drain.
+    #[test]
+    fn map_after_shutdown_errors_instead_of_hanging() {
+        let pool = ThreadPool::new(2);
+        assert_eq!(pool.map(4, |i| i).unwrap(), vec![0, 1, 2, 3]);
+        pool.shutdown_now();
+        assert_eq!(pool.map(4, |i| i), Err(PoolShutdown));
+        let data = vec![1, 2, 3];
+        assert_eq!(pool.scoped_map(3, |i| data[i]), Err(PoolShutdown));
+        // shutdown_now is idempotent
+        pool.shutdown_now();
     }
 }

@@ -68,7 +68,8 @@ fn t2_mlp_round_trip_matches_eval_step() {
     }
 
     // serve every example through the engine from concurrent clients
-    let engine = Engine::new(model, EngineOpts { max_batch: 8, workers: 2 }).unwrap();
+    let engine =
+        Engine::new(model, EngineOpts { max_batch: 8, workers: 2, queue_depth: 64 }).unwrap();
     let served: Vec<(usize, Vec<f32>)> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..4)
             .map(|c| {

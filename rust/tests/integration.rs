@@ -381,7 +381,7 @@ fn thread_pool_map_survives_a_panicking_job() {
         .unwrap_or("<non-str payload>");
     assert!(msg.contains("integration boom"), "payload lost: {msg}");
     // the pool still has all its workers: further maps complete normally
-    let out = pool.map(20, |i| i + 1);
+    let out = pool.map(20, |i| i + 1).unwrap();
     assert_eq!(out, (1..=20).collect::<Vec<_>>());
 }
 

@@ -1,0 +1,179 @@
+//! Serving-engine robustness end-to-end: bounded admission with typed
+//! load-shed, sustained-overload accounting, and atomic hot-swap under
+//! concurrent clients — logits from two model generations must never mix
+//! within a request, and no request may be dropped across a swap.
+
+use std::sync::Arc;
+
+use blocksparse::infer::engine::{drive_overload, Engine, EngineError, EngineOpts};
+use blocksparse::infer::registry::ModelRegistry;
+use blocksparse::infer::{bsr, BsrLayer, BsrModel};
+use blocksparse::util::rng::Rng;
+
+/// A small 16→12→6 stack (2×2 blocks) — big enough to batch, cheap
+/// enough to hammer from 64 threads.
+fn model(seed: u64) -> BsrModel {
+    let mut rng = Rng::new(seed);
+    let w1: Vec<f32> = (0..12 * 16).map(|_| rng.normal()).collect();
+    let w2: Vec<f32> = (0..6 * 12).map(|_| rng.normal()).collect();
+    BsrModel {
+        spec: format!("serve{seed}"),
+        method: "dense".into(),
+        in_dim: 16,
+        out_dim: 6,
+        layers: vec![
+            BsrLayer::from_dense("fc1", &w1, 12, 16, 2, 2).unwrap(),
+            BsrLayer::from_dense("fc2", &w2, 6, 12, 2, 2).unwrap(),
+        ],
+    }
+}
+
+#[test]
+fn full_queue_sheds_typed_and_recovers() {
+    let engine = Engine::new(
+        model(1),
+        EngineOpts { max_batch: 4, workers: 1, queue_depth: 2 },
+    )
+    .unwrap();
+    engine.pause();
+    let queued: Vec<Result<_, EngineError>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let engine = &engine;
+                s.spawn(move || engine.predict(&[0.5; 16]))
+            })
+            .collect();
+        while engine.stats().depth < 2 {
+            std::thread::yield_now();
+        }
+        // at the bound: shed synchronously with the typed error, never block
+        match engine.predict(&[0.5; 16]) {
+            Err(EngineError::Overloaded { depth }) => assert_eq!(depth, 2),
+            other => panic!("wanted Overloaded, got {other:?}"),
+        }
+        engine.resume();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for r in queued {
+        r.expect("queued requests must complete after resume");
+    }
+    let st = engine.stats();
+    assert_eq!((st.accepted, st.shed, st.completed, st.failed), (2, 1, 2, 0));
+    assert!(st.peak_depth <= 2);
+}
+
+#[test]
+fn sustained_overload_stays_bounded_and_accounts_every_request() {
+    let engine = Engine::new(
+        model(2),
+        EngineOpts { max_batch: 4, workers: 2, queue_depth: 8 },
+    )
+    .unwrap();
+    assert_eq!(engine.capacity(), 8 + 2 * 4);
+    // 4× capacity, zero think time
+    let rep = drive_overload(&engine, 16, 4 * engine.capacity(), 0xACE).unwrap();
+    assert_eq!(rep.offered, 16 * 64);
+    assert_eq!(rep.accepted + rep.shed, rep.offered, "requests unaccounted for");
+    assert_eq!(rep.accepted_lat_ms.len(), rep.accepted);
+    assert!(rep.accepted > 0, "an overloaded engine must still serve");
+    assert!(rep.shed > 0, "64 zero-think clients vs capacity 16 must shed");
+    assert!(
+        rep.peak_depth <= rep.queue_depth,
+        "backlog breached the admission bound: {} > {}",
+        rep.peak_depth,
+        rep.queue_depth
+    );
+    assert!((rep.offered_ratio - 4.0).abs() < 1e-12);
+    assert!(rep.accepted_lat_ms.iter().all(|&v| v.is_finite() && v >= 0.0));
+    let st = engine.stats();
+    assert_eq!(st.accepted, rep.accepted as u64);
+    assert_eq!(st.shed, rep.shed as u64);
+    assert_eq!(st.completed, rep.accepted as u64);
+}
+
+/// Hot-swap under concurrent clients: every response must carry logits
+/// that exactly match the generation it claims — engine forwards are
+/// bitwise-equal to `bsr::model_forward(model, x, 1)` regardless of
+/// batching, so any old/new interleave within a request is detectable as
+/// an exact mismatch. And no request may be dropped across the swaps.
+#[test]
+fn hot_swap_never_mixes_generations_and_drops_nothing() {
+    let a = model(3);
+    let b = model(4);
+    let (ref_a, ref_b) = (a.clone(), b.clone());
+    let engine = Arc::new(
+        Engine::new(a, EngineOpts { max_batch: 8, workers: 4, queue_depth: 256 }).unwrap(),
+    );
+    let swaps = 6usize;
+    let clients = 8usize;
+    let per_client = 40usize;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let engine = engine.clone();
+                let (ref_a, ref_b) = (&ref_a, &ref_b);
+                s.spawn(move || {
+                    let mut rng = Rng::new(0x500 + c as u64);
+                    for _ in 0..per_client {
+                        let x: Vec<f32> = (0..16).map(|_| rng.normal()).collect();
+                        let p = engine.predict(&x).expect("no request may be dropped");
+                        // generations alternate a, b, a, b, ... from 0
+                        let expect_model = if p.generation % 2 == 0 { ref_a } else { ref_b };
+                        let want = bsr::model_forward(expect_model, &x, 1).unwrap();
+                        assert_eq!(
+                            p.logits, want,
+                            "logits do not match generation {} exactly",
+                            p.generation
+                        );
+                    }
+                })
+            })
+            .collect();
+        // swap back and forth while the clients hammer the engine
+        for i in 0..swaps {
+            std::thread::sleep(std::time::Duration::from_millis(3));
+            let variant = if i % 2 == 0 { ref_b.clone() } else { ref_a.clone() };
+            let generation = engine.swap_model(variant).unwrap();
+            assert_eq!(generation, i as u64 + 1);
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    let st = engine.stats();
+    assert_eq!(st.accepted, (clients * per_client) as u64);
+    assert_eq!(st.completed, st.accepted);
+    assert_eq!((st.shed, st.failed), (0, 0));
+    assert_eq!(engine.generation(), swaps as u64);
+}
+
+/// Registry + atomic on-disk publish: deploy from a path, republish the
+/// artifact in place (save is write-then-rename), redeploy, and the name
+/// hot-swaps to the new weights on the same engine.
+#[test]
+fn registry_redeploys_from_republished_artifact() {
+    let dir = std::env::temp_dir().join("bs_serve_registry_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("live.bsm");
+    let a = model(5);
+    let b = model(6);
+    a.save(&path).unwrap();
+    let reg = ModelRegistry::new(EngineOpts { max_batch: 4, workers: 2, queue_depth: 32 });
+    assert_eq!(reg.deploy_from_path("live", &path).unwrap(), 0);
+    let engine = reg.get("live").unwrap();
+    let x = [0.3f32; 16];
+    assert_eq!(
+        engine.predict(&x).unwrap().logits,
+        bsr::model_forward(&a, &x, 1).unwrap()
+    );
+    // republish the same path (atomic overwrite), redeploy under the name
+    b.save(&path).unwrap();
+    assert_eq!(reg.deploy_from_path("live", &path).unwrap(), 1);
+    // the engine object survived: same queue, new weights
+    assert!(Arc::ptr_eq(&engine, &reg.get("live").unwrap()));
+    let p = engine.predict(&x).unwrap();
+    assert_eq!(p.generation, 1);
+    assert_eq!(p.logits, bsr::model_forward(&b, &x, 1).unwrap());
+    assert_eq!(reg.names(), vec!["live".to_string()]);
+    assert!(reg.undeploy("live"));
+}
