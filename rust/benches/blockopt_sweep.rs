@@ -1,0 +1,291 @@
+//! Hardware-in-the-loop block-size search bench — the blockopt v2 payoff,
+//! measured. Emits `BENCH_blockopt.json` (default; `--json <path>`
+//! overrides).
+//!
+//! One end-to-end pass over the Figure-3a candidate grid:
+//!
+//! 1. **calibrate** — time the BSR forward across the spec's candidate
+//!    block shapes × occupancies and fit the per-shape cost model.
+//! 2. **sweep** — one short joint `pattern_kpd` training run measures
+//!    retention / accuracy / S occupancy per candidate; the cost model
+//!    prices each; the (retention ↑, predicted latency ↓) Pareto front
+//!    comes out, with the unconstrained pick (= the Figure-3 survivor)
+//!    and the pick under a tight budget (the cheapest front member's
+//!    predicted latency).
+//! 3. **verify** — the budgeted pick and the most expensive front member
+//!    are *re-measured* on the real kernels at their measured
+//!    occupancies. Gate: whenever the model predicts the budgeted pick is
+//!    ≥ 1.3× faster than the worst front member, the measured timings
+//!    must confirm ≥ 1.3× — the cost model's ordering claims have to
+//!    survive contact with the hardware.
+//!
+//! Scale knobs: BS_STEPS / BS_TRAIN_N / BS_TEST_N (see bench::driver).
+
+use std::collections::BTreeMap;
+
+use blocksparse::backend::native::simd;
+use blocksparse::bench::driver::BenchEnv;
+use blocksparse::bench::json_arg;
+use blocksparse::blockopt::cost::{self, CostModel};
+use blocksparse::blockopt::sweep::{self, Measured, SweepOutcome};
+use blocksparse::coordinator::probe;
+use blocksparse::infer::{bsr, synth_block_sparse_weights, BsrLayer};
+use blocksparse::util::json::Json;
+use blocksparse::util::rng::Rng;
+
+const SPEC: &str = "f3a_pattern";
+const BATCH: usize = 32;
+/// the gate threshold: predicted ordering gaps at least this wide must
+/// reproduce on the hardware
+const SPEEDUP_GATE: f64 = 1.3;
+
+/// Re-measure one candidate's slot stack on the real BSR kernels at its
+/// measured occupancy: summed p50 across slots, in ms.
+fn measure_stack_p50_ms(m: &Measured, nb: usize, rng: &mut Rng) -> anyhow::Result<f64> {
+    let mut total_ns = 0.0;
+    for &(sm, sn, m2, n2) in &m.slots {
+        let (w, _) = synth_block_sparse_weights(rng, sm, sn, m2, n2, m.occupancy);
+        let layer = BsrLayer::from_dense("slot", &w, sm, sn, m2, n2)?;
+        let x: Vec<f32> = (0..nb * sn).map(|_| rng.normal()).collect();
+        total_ns += bsr::time_layer(&x, nb, &layer)?.p50_ns;
+    }
+    Ok(total_ns / 1e6)
+}
+
+fn candidate_json(out: &SweepOutcome) -> Json {
+    let mut arr = Vec::with_capacity(out.candidates.len());
+    for c in &out.candidates {
+        let mut o = BTreeMap::new();
+        o.insert("pattern".to_string(), Json::Num(c.pattern as f64));
+        o.insert("block".to_string(), Json::Str(format!("{}x{}", c.m2, c.n2)));
+        o.insert("rank".to_string(), Json::Num(c.rank as f64));
+        o.insert("retention".to_string(), Json::num_or_null(c.retention));
+        o.insert("accuracy".to_string(), Json::num_or_null(c.accuracy));
+        o.insert("occupancy".to_string(), Json::num_or_null(c.occupancy));
+        o.insert("pred_latency_ms".to_string(), Json::num_or_null(c.pred_latency_ms));
+        arr.push(Json::Obj(o));
+    }
+    Json::Arr(arr)
+}
+
+fn front_json(out: &SweepOutcome) -> Json {
+    let mut arr = Vec::with_capacity(out.front.len());
+    for p in &out.front {
+        let mut o = BTreeMap::new();
+        o.insert("index".to_string(), Json::Num(p.index as f64));
+        o.insert("retention".to_string(), Json::num_or_null(p.retention));
+        o.insert("latency_ms".to_string(), Json::num_or_null(p.latency_ms));
+        arr.push(Json::Obj(o));
+    }
+    Json::Arr(arr)
+}
+
+fn pick_json(m: &Measured, pred_ms: f64, measured_p50_ms: Option<f64>) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("index".to_string(), Json::Num(m.pattern as f64));
+    o.insert("block".to_string(), Json::Str(format!("{}x{}", m.m2, m.n2)));
+    o.insert("occupancy".to_string(), Json::num_or_null(m.occupancy));
+    o.insert("pred_latency_ms".to_string(), Json::num_or_null(pred_ms));
+    o.insert(
+        "measured_p50_ms".to_string(),
+        measured_p50_ms.map(Json::num_or_null).unwrap_or(Json::Null),
+    );
+    Json::Obj(o)
+}
+
+fn main() -> anyhow::Result<()> {
+    blocksparse::util::log::set_level(blocksparse::util::log::Level::Warn);
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let be = blocksparse::backend::open_default()?;
+    if be.spec(SPEC).is_err() {
+        println!("SKIP {SPEC}: not available on backend '{}'", be.name());
+        return Ok(());
+    }
+    let env = BenchEnv::from_env(240, 1, 6144, 1024);
+    let cfg = env.config(be.as_ref(), SPEC)?;
+    let spec = be.spec(SPEC)?.clone();
+    let nb = BATCH;
+
+    // ---- phase 1: calibrate the cost model on this host -----------------
+    let shapes = sweep::candidate_shapes(&spec)?;
+    let model: CostModel = cost::calibrate(&shapes, &cost::DEFAULT_OCCUPANCIES, nb)?;
+    println!(
+        "calibrated {} candidate shapes on simd '{}' (batch {nb}):",
+        model.entries.len(),
+        model.simd
+    );
+    let mut calib = BTreeMap::new();
+    for e in model.entries.values() {
+        println!("  {:>2}x{:<3} a = {:.4} ns/MAC  c = {:.0} ns", e.m2, e.n2, e.a_ns, e.c_ns);
+        let mut o = BTreeMap::new();
+        o.insert("a_ns".to_string(), Json::num_or_null(e.a_ns));
+        o.insert("c_ns".to_string(), Json::num_or_null(e.c_ns));
+        o.insert("points".to_string(), Json::Num(e.points.len() as f64));
+        calib.insert(cost::shape_key(e.m2, e.n2), Json::Obj(o));
+    }
+
+    // ---- phase 2: one training pass, scored twice -----------------------
+    let measured = sweep::measure_candidates(be.as_ref(), &cfg)?;
+    let unconstrained = sweep::score(&measured, &model, nb, None)?;
+    // the tight budget: only the cheapest front member fits
+    let budget_ms = unconstrained.front[0].latency_ms;
+    let budgeted = sweep::score(&measured, &model, nb, Some(budget_ms))?;
+
+    println!(
+        "\n== block-size sweep: {SPEC} ({} candidates, {} steps) ==",
+        unconstrained.candidates.len(),
+        cfg.steps
+    );
+    for c in &unconstrained.candidates {
+        let on_front = unconstrained.front.iter().any(|p| p.index == c.pattern);
+        println!(
+            "  k={} {:>2}x{:<3} retention {:.3}  acc {:.2}%  occupancy {:.3}  pred {:.4} ms{}",
+            c.pattern,
+            c.m2,
+            c.n2,
+            c.retention,
+            c.accuracy,
+            c.occupancy,
+            c.pred_latency_ms,
+            if on_front { "  [front]" } else { "" }
+        );
+    }
+    println!("figure-3 survivor (max retention): k={}", unconstrained.survivor);
+    println!("unconstrained recommendation: k={}", unconstrained.recommended);
+    println!(
+        "budgeted recommendation ({budget_ms:.4} ms): k={}",
+        budgeted.recommended
+    );
+    let rets: Vec<f64> = unconstrained.candidates.iter().map(|c| c.retention).collect();
+    let lats: Vec<f64> =
+        unconstrained.candidates.iter().map(|c| c.pred_latency_ms).collect();
+    let blend = probe::pattern_survivor_cost_aware(&rets, &lats, 0.5)?;
+    let cost_aware = unconstrained.candidates[blend].pattern;
+    println!("cost-aware survivor (alpha=0.5): k={cost_aware}");
+
+    // ---- phase 3: re-measure the picks on the real kernels --------------
+    let by_pattern = |idx: usize| -> &Measured {
+        measured.iter().find(|m| m.pattern == idx).expect("scored candidate exists")
+    };
+    let pred_of = |idx: usize| -> f64 {
+        unconstrained
+            .candidates
+            .iter()
+            .find(|c| c.pattern == idx)
+            .map(|c| c.pred_latency_ms)
+            .expect("scored candidate exists")
+    };
+    let rec = by_pattern(budgeted.recommended);
+    let worst_point = *unconstrained.front.last().expect("front is non-empty");
+    let worst = by_pattern(worst_point.index);
+    let mut rng = Rng::new(0x5EEB);
+    let (rec_ms, worst_ms, measured_speedup) = if rec.pattern == worst.pattern {
+        let ms = measure_stack_p50_ms(rec, nb, &mut rng)?;
+        (Some(ms), Some(ms), None)
+    } else {
+        let rec_ms = measure_stack_p50_ms(rec, nb, &mut rng)?;
+        let worst_ms = measure_stack_p50_ms(worst, nb, &mut rng)?;
+        let speedup = worst_ms / rec_ms.max(1e-12);
+        (Some(rec_ms), Some(worst_ms), Some(speedup))
+    };
+    let predicted_speedup = worst_point.latency_ms / pred_of(rec.pattern).max(1e-12);
+    println!(
+        "budgeted pick {}x{} measured p50 {:.4} ms; worst front member {}x{} \
+         measured p50 {:.4} ms (predicted {predicted_speedup:.2}x apart)",
+        rec.m2,
+        rec.n2,
+        rec_ms.unwrap_or(f64::NAN),
+        worst.m2,
+        worst.n2,
+        worst_ms.unwrap_or(f64::NAN)
+    );
+    if let Some(s) = measured_speedup {
+        println!("measured speedup (worst front / budgeted pick): {s:.2}x");
+    }
+
+    // ---- the gate -------------------------------------------------------
+    let front_len = unconstrained.front.len();
+    let recommended_on_front =
+        unconstrained.front.iter().any(|p| p.index == budgeted.recommended);
+    let max_ret = rets.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    // value comparison, not index: argmax tie-breaking must not fail this
+    let unc_ret = unconstrained
+        .candidates
+        .iter()
+        .find(|c| c.pattern == unconstrained.recommended)
+        .map(|c| c.retention)
+        .unwrap_or(f64::NEG_INFINITY);
+    let retention_ok = unc_ret >= max_ret - 1e-12;
+    // the model's ordering claim only binds when it predicts a gap at
+    // least as wide as the gate threshold
+    let pass = recommended_on_front
+        && retention_ok
+        && (front_len < 2
+            || predicted_speedup < SPEEDUP_GATE
+            || measured_speedup.map(|s| s >= SPEEDUP_GATE).unwrap_or(false));
+    println!(
+        "gate: front_len={front_len} recommended_on_front={recommended_on_front} \
+         retention_ok={retention_ok} predicted_speedup={predicted_speedup:.2} \
+         measured_speedup={measured_speedup:?} -> pass={pass}"
+    );
+
+    let mut gate = BTreeMap::new();
+    gate.insert("front_len".to_string(), Json::Num(front_len as f64));
+    gate.insert("recommended_on_front".to_string(), Json::Bool(recommended_on_front));
+    gate.insert(
+        "unconstrained_matches_survivor".to_string(),
+        Json::Bool(retention_ok),
+    );
+    gate.insert("retention_ok".to_string(), Json::Bool(retention_ok));
+    gate.insert("speedup_gate".to_string(), Json::Num(SPEEDUP_GATE));
+    gate.insert("predicted_speedup".to_string(), Json::num_or_null(predicted_speedup));
+    gate.insert(
+        "measured_speedup".to_string(),
+        measured_speedup.map(Json::num_or_null).unwrap_or(Json::Null),
+    );
+    gate.insert("pass".to_string(), Json::Bool(pass));
+
+    let mut unc = BTreeMap::new();
+    unc.insert(
+        "recommended_index".to_string(),
+        Json::Num(unconstrained.recommended as f64),
+    );
+    let mut root = BTreeMap::new();
+    root.insert("backend".to_string(), Json::Str(be.name()));
+    root.insert("simd".to_string(), Json::Str(simd::dispatched().label().to_string()));
+    root.insert("spec".to_string(), Json::Str(SPEC.to_string()));
+    root.insert("batch".to_string(), Json::Num(nb as f64));
+    root.insert("steps".to_string(), Json::Num(cfg.steps as f64));
+    root.insert("calibration".to_string(), Json::Obj(calib));
+    root.insert("candidates".to_string(), candidate_json(&unconstrained));
+    root.insert("front".to_string(), front_json(&unconstrained));
+    root.insert("survivor_index".to_string(), Json::Num(unconstrained.survivor as f64));
+    root.insert("cost_aware_survivor".to_string(), Json::Num(cost_aware as f64));
+    root.insert("unconstrained".to_string(), Json::Obj(unc));
+    root.insert("budget_ms".to_string(), Json::num_or_null(budget_ms));
+    root.insert(
+        "recommended".to_string(),
+        pick_json(rec, pred_of(rec.pattern), rec_ms),
+    );
+    root.insert(
+        "worst_front".to_string(),
+        pick_json(worst, worst_point.latency_ms, worst_ms),
+    );
+    root.insert("gate".to_string(), Json::Obj(gate));
+
+    let path = json_arg(&args, "BENCH_blockopt.json")
+        .unwrap_or_else(|| "BENCH_blockopt.json".to_string());
+    std::fs::write(&path, Json::Obj(root).to_string_pretty())?;
+    println!(
+        "recommended block size: k={} ({}x{}) predicted {:.3} ms",
+        budgeted.recommended,
+        rec.m2,
+        rec.n2,
+        pred_of(rec.pattern)
+    );
+    println!("wrote {path}");
+    if !pass {
+        anyhow::bail!("blockopt sweep gate failed (see BENCH_blockopt.json gate object)");
+    }
+    Ok(())
+}

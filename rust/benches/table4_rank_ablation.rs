@@ -18,6 +18,7 @@ fn main() -> anyhow::Result<()> {
 
     let env_lin = BenchEnv::from_env(600, 2, 8192, 2048);
     let mut accs = Vec::new();
+    let mut rows = 0usize;
     for (i, r) in [1usize, 2, 4, 6].iter().enumerate() {
         let Some(res) = driver::run_row_or_skip(be.as_ref(), &env_lin,
                                                 &format!("t4_linear_r{r}"))? else {
@@ -27,6 +28,7 @@ fn main() -> anyhow::Result<()> {
         accs.push(res.acc_mean);
         table.row(driver::cells(&format!("linear r={r}"), "kpd", &res,
                                 Some(paper_linear[i])));
+        rows += 1;
     }
     for (tag, paper, steps) in [("vit_t", &paper_vit, 150usize),
                                 ("swin_t", &paper_swin, 100)] {
@@ -39,9 +41,13 @@ fn main() -> anyhow::Result<()> {
             driver::record_row("table4", &format!("{tag} r={r}"), &res)?;
             table.row(driver::cells(&format!("{tag} r={r}"), "kpd", &res,
                                     Some(paper[i])));
+            rows += 1;
         }
     }
     table.print();
+    // an all-SKIP run prints an empty table that scrolls past silently —
+    // the count makes "nothing actually ran" visible in CI logs
+    println!("rows emitted: {rows}");
     let monotone = accs.windows(2).filter(|w| w[1] >= w[0] - 1.0).count();
     println!("shape checks:");
     println!("  - linear accuracy rises with rank: {accs:?} ({monotone}/3 steps non-decreasing)");

@@ -1,7 +1,7 @@
-//! Block-size optimization sweep (paper §4 Eq. 5 + §5 enumeration).
+//! Block-size optimization landscape (paper §4 Eq. 5 + §5 enumeration).
 //!
 //! ```bash
-//! cargo run --release --offline --example blockopt_sweep
+//! cargo run --release --offline --example blockopt_landscape
 //! ```
 //!
 //! For every weight shape in the paper's models, solve the Eq. 5 integer
@@ -25,8 +25,8 @@ fn main() {
     ];
     let nb = 128u64;
     for (name, m, n) in shapes {
-        let opt = optimal_block_r1(*m, *n);
-        let blocks = enumerate_blocks(*m, *n);
+        let opt = optimal_block_r1(*m, *n).expect("shape table has positive dims");
+        let blocks = enumerate_blocks(*m, *n).expect("shape table has positive dims");
         println!("\n{name}: W {m}x{n} (dense params {})", human_count((m * n) as f64));
         println!("  Eq.5 optimum: grid {}x{} block {}x{} -> {} params",
                  opt.m1, opt.n1, opt.m2, opt.n2,

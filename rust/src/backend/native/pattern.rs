@@ -363,6 +363,42 @@ pub fn survivor(state: &TrainState, dims: &[KpdDims]) -> Result<usize> {
     Ok(crate::util::argmax(&retention(state, dims)?))
 }
 
+/// Cost-aware survivor: blend normalized retention against modeled
+/// serving latency. Both axes are min-max normalized over the candidate
+/// set, then scored `(1−α)·retention̂ − α·latencŷ` — α = 0 recovers the
+/// pure Figure-3 max-retention criterion, α = 1 picks the cheapest
+/// candidate outright. The span guard keeps an all-equal axis from
+/// dividing by zero (it then contributes nothing, which is the right
+/// reading of "no signal on this axis"). Shared with
+/// `coordinator::probe::pattern_survivor_cost_aware` and the `blockopt`
+/// CLI, so every cost-aware selection in the repo scores identically.
+pub fn survivor_cost_aware(retention: &[f64], latency_ms: &[f64], alpha: f64) -> Result<usize> {
+    if retention.is_empty() {
+        bail!("cost-aware survivor wants at least one candidate");
+    }
+    if retention.len() != latency_ms.len() {
+        bail!(
+            "cost-aware survivor: {} retentions but {} latencies",
+            retention.len(),
+            latency_ms.len()
+        );
+    }
+    let alpha = alpha.clamp(0.0, 1.0);
+    let span_of = |xs: &[f64]| -> (f64, f64) {
+        let lo = xs.iter().copied().fold(f64::INFINITY, f64::min);
+        let hi = xs.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        (lo, (hi - lo).max(f64::EPSILON))
+    };
+    let (rlo, rspan) = span_of(retention);
+    let (llo, lspan) = span_of(latency_ms);
+    let scores: Vec<f64> = retention
+        .iter()
+        .zip(latency_ms)
+        .map(|(&r, &l)| (1.0 - alpha) * ((r - rlo) / rspan) - alpha * ((l - llo) / lspan))
+        .collect();
+    Ok(crate::util::argmax(&scores))
+}
+
 /// Survivor extraction: reconstruct the dense W of the max-retention
 /// pattern (the model one would deploy after the joint run).
 pub fn materialize_survivor(state: &TrainState, dims: &[KpdDims]) -> Result<(usize, Tensor)> {
@@ -499,5 +535,26 @@ mod tests {
         let (p, w) = materialize_survivor(&st, &dims).unwrap();
         assert_eq!(p, 1);
         assert_eq!(w.shape(), &[4, 8]);
+    }
+
+    #[test]
+    fn cost_aware_survivor_blend() {
+        let ret = [0.9, 0.5, 0.2];
+        let lat = [3.0, 1.0, 0.5];
+        // α = 0 is the pure Figure-3 criterion
+        assert_eq!(survivor_cost_aware(&ret, &lat, 0.0).unwrap(), 0);
+        // α = 1 picks the cheapest candidate outright
+        assert_eq!(survivor_cost_aware(&ret, &lat, 1.0).unwrap(), 2);
+        // α = 0.6: hand-computed normalized scores are
+        // [0.4 − 0.6, 0.4·(0.3/0.7) − 0.6·0.2, 0.0] ≈ [−0.2, 0.051, 0.0]
+        // — the middle candidate's trade-off wins
+        assert_eq!(survivor_cost_aware(&ret, &lat, 0.6).unwrap(), 1);
+        // out-of-range α clamps instead of flipping the objective
+        assert_eq!(survivor_cost_aware(&ret, &lat, -3.0).unwrap(), 0);
+        // an all-equal axis contributes nothing (no division blow-up)
+        assert_eq!(survivor_cost_aware(&ret, &[2.0, 2.0, 2.0], 0.9).unwrap(), 0);
+        // degenerate inputs are typed errors, not panics
+        assert!(survivor_cost_aware(&[], &[], 0.5).is_err());
+        assert!(survivor_cost_aware(&ret, &lat[..2], 0.5).is_err());
     }
 }

@@ -1,0 +1,497 @@
+//! Hardware cost model for BSR inference, calibrated from measurement.
+//!
+//! `calibrate()` runs the `infer::bsr` block-GEMM forward (via
+//! [`crate::infer::bsr::time_layer`]) across a grid of block shapes ×
+//! occupancies on synthetic weights, then fits, per shape, an affine
+//! model of p50 latency in the *occupied work*
+//!
+//!   t_ns ≈ a_ns · (nb · nnz_blocks · m2 · n2) + c_ns
+//!
+//! — the slope is the per-MAC cost the kernel achieves at that block
+//! shape (small blocks pay more per value: shorter dot products, more
+//! index traffic), the intercept is the batch/dispatch overhead. Within
+//! one shape the occupied work is proportional to nnz_blocks, so the
+//! occupancy grid identifies exactly these two coefficients; anything
+//! richer would be collinear.
+//!
+//! The fitted model serializes to a small versioned JSON artifact
+//! (magic `"BSCM"`, same framing discipline as the binary containers:
+//! magic + version checked before any field parsing, atomic
+//! write-temp-then-rename publish) so a calibration run on the serving
+//! hardware can be reused across sweeps without re-measuring.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::backend::native::simd;
+use crate::infer::{bsr, synth_block_sparse_weights, BsrLayer};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+pub const COST_MODEL_MAGIC: &str = "BSCM";
+pub const COST_MODEL_VERSION: usize = 1;
+
+/// Calibration macro-layers are (m2·CALIB_GRID) × (n2·CALIB_GRID): the
+/// same 16×16 block grid for every shape, so per-shape measurements span
+/// the same nnz range and the fits are comparable.
+pub const CALIB_GRID: usize = 16;
+
+/// Default occupancy levels: enough spread to identify slope + intercept
+/// without turning calibration into a long bench run.
+pub const DEFAULT_OCCUPANCIES: [f64; 3] = [1.0, 0.5, 0.25];
+
+/// Default shape grid: the f3a candidate blocks plus a square and a
+/// narrow shape, so `recommend` has coverage beyond one aspect ratio.
+pub const DEFAULT_SHAPES: [(usize, usize); 6] =
+    [(1, 4), (2, 2), (2, 4), (2, 8), (2, 16), (4, 4)];
+
+/// Canonical per-shape key in the artifact: `"{m2}x{n2}"`.
+pub fn shape_key(m2: usize, n2: usize) -> String {
+    format!("{m2}x{n2}")
+}
+
+/// One measured (occupancy, latency) sample for a shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CalibPoint {
+    pub occupancy: f64,
+    pub nnz_blocks: usize,
+    /// occupied MAC volume of the timed forward: nb · nnz · m2 · n2
+    pub work: u64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub iters: usize,
+}
+
+/// Fitted affine latency model for one block shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShapeModel {
+    pub m2: usize,
+    pub n2: usize,
+    /// ns per occupied MAC
+    pub a_ns: f64,
+    /// fixed per-call overhead, ns
+    pub c_ns: f64,
+    pub points: Vec<CalibPoint>,
+}
+
+/// The full calibrated model: per-shape fits plus the conditions they
+/// were measured under (SIMD kind, grid, batch), so a prediction made
+/// from a stale or foreign artifact is at least attributable.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CostModel {
+    /// SIMD kind active during calibration (`scalar`/`avx2`/`neon`)
+    pub simd: String,
+    pub grid: usize,
+    /// batch size the calibration forwards ran at
+    pub batch: usize,
+    pub entries: BTreeMap<String, ShapeModel>,
+}
+
+/// Least squares for `t ≈ a·work + c` over the occupancy levels, with
+/// both coefficients clamped non-negative (a negative slope or intercept
+/// is measurement noise, and would let `predict` report sparser = slower
+/// or negative latency). Degenerate samples — a single occupancy level,
+/// or noise driving a coefficient negative — fall back to the
+/// through-origin fit `a = Σw·t / Σw²`.
+fn fit(points: &[CalibPoint]) -> (f64, f64) {
+    let n = points.len() as f64;
+    let sw: f64 = points.iter().map(|p| p.work as f64).sum();
+    let st: f64 = points.iter().map(|p| p.p50_ns).sum();
+    let sww: f64 = points.iter().map(|p| (p.work as f64) * (p.work as f64)).sum();
+    let swt: f64 = points.iter().map(|p| (p.work as f64) * p.p50_ns).sum();
+    let denom = n * sww - sw * sw;
+    if denom > 1e-9 * n * sww.max(1.0) {
+        let a = (n * swt - sw * st) / denom;
+        let c = (st - a * sw) / n;
+        if a >= 0.0 && c >= 0.0 && a.is_finite() && c.is_finite() {
+            return (a, c);
+        }
+    }
+    let a = if sww > 0.0 { (swt / sww).max(0.0) } else { 0.0 };
+    (a, 0.0)
+}
+
+/// Measure and fit every shape in `shapes` at every occupancy in
+/// `occupancies`, batch `nb`. Duplicate shapes are measured once. Weights
+/// and inputs are seeded per shape, so calibration is reproducible on a
+/// given host.
+pub fn calibrate(shapes: &[(usize, usize)], occupancies: &[f64], nb: usize) -> Result<CostModel> {
+    if shapes.is_empty() {
+        bail!("calibration wants at least one block shape");
+    }
+    if occupancies.is_empty() {
+        bail!("calibration wants at least one occupancy level");
+    }
+    if nb == 0 {
+        bail!("calibration batch must be ≥ 1");
+    }
+    let mut entries: BTreeMap<String, ShapeModel> = BTreeMap::new();
+    for &(m2, n2) in shapes {
+        if m2 == 0 || n2 == 0 {
+            bail!("calibration shape {m2}x{n2} has a zero dimension");
+        }
+        let key = shape_key(m2, n2);
+        if entries.contains_key(&key) {
+            continue;
+        }
+        let (m, n) = (m2 * CALIB_GRID, n2 * CALIB_GRID);
+        let mut rng = Rng::new(0xB10C0 ^ ((m2 as u64) << 16) ^ n2 as u64);
+        let x: Vec<f32> = (0..nb * n).map(|_| rng.normal()).collect();
+        let mut points = Vec::with_capacity(occupancies.len());
+        for &occ in occupancies {
+            if !(0.0..=1.0).contains(&occ) {
+                bail!("calibration occupancy {occ} outside [0, 1]");
+            }
+            let (w, _) = synth_block_sparse_weights(&mut rng, m, n, m2, n2, occ);
+            let layer = BsrLayer::from_dense("calib", &w, m, n, m2, n2)?;
+            let stats = bsr::time_layer(&x, nb, &layer)
+                .with_context(|| format!("calibrating shape {key}"))?;
+            points.push(CalibPoint {
+                occupancy: occ,
+                nnz_blocks: layer.nnz_blocks(),
+                work: (nb * layer.nnz_blocks() * m2 * n2) as u64,
+                p50_ns: stats.p50_ns,
+                p95_ns: stats.p95_ns,
+                iters: stats.iters,
+            });
+        }
+        let (a_ns, c_ns) = fit(&points);
+        entries.insert(key, ShapeModel { m2, n2, a_ns, c_ns, points });
+    }
+    Ok(CostModel {
+        simd: simd::active().label().to_string(),
+        grid: CALIB_GRID,
+        batch: nb,
+        entries,
+    })
+}
+
+fn req_f64(j: &Json, key: &str) -> Result<f64> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("missing numeric field '{key}'"))
+}
+
+impl CostModel {
+    /// The fit for an exact shape, else the nearest calibrated shape by
+    /// block area — a sweep over spec-declared blocks must not require
+    /// every one to have been calibrated. BTreeMap iteration order makes
+    /// the nearest-area tie-break deterministic.
+    pub fn entry_for(&self, m2: usize, n2: usize) -> Result<&ShapeModel> {
+        if let Some(e) = self.entries.get(&shape_key(m2, n2)) {
+            return Ok(e);
+        }
+        let target = (m2 * n2) as i64;
+        self.entries
+            .values()
+            .min_by_key(|e| ((e.m2 * e.n2) as i64 - target).abs())
+            .ok_or_else(|| anyhow!("cost model has no calibrated shapes"))
+    }
+
+    /// Predicted forward latency (ns) of one (m×n) slot at block
+    /// (m2×n2), batch `nb`, with `occupancy` of its blocks live — the
+    /// same nnz rounding convention as `synth_block_sparse_weights`, so
+    /// predictions line up with what the bench actually builds.
+    pub fn predict_ns(
+        &self,
+        m: usize,
+        n: usize,
+        m2: usize,
+        n2: usize,
+        nb: usize,
+        occupancy: f64,
+    ) -> Result<f64> {
+        if m == 0 || n == 0 || m2 == 0 || n2 == 0 || m % m2 != 0 || n % n2 != 0 {
+            bail!("block ({m2},{n2}) does not tile ({m},{n})");
+        }
+        if nb == 0 {
+            bail!("prediction batch must be ≥ 1");
+        }
+        if !(0.0..=1.0).contains(&occupancy) {
+            bail!("occupancy {occupancy} outside [0, 1]");
+        }
+        let e = self.entry_for(m2, n2)?;
+        let total = (m / m2) * (n / n2);
+        let nnz = ((occupancy * total as f64).round() as usize).clamp(1, total);
+        let work = (nb * nnz * m2 * n2) as f64;
+        Ok(e.a_ns * work + e.c_ns)
+    }
+
+    pub fn predict_ms(
+        &self,
+        m: usize,
+        n: usize,
+        m2: usize,
+        n2: usize,
+        nb: usize,
+        occupancy: f64,
+    ) -> Result<f64> {
+        self.predict_ns(m, n, m2, n2, nb, occupancy).map(|ns| ns / 1e6)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut entries = BTreeMap::new();
+        for (k, e) in &self.entries {
+            let mut pts = Vec::with_capacity(e.points.len());
+            for p in &e.points {
+                let mut o = BTreeMap::new();
+                o.insert("occupancy".into(), Json::num_or_null(p.occupancy));
+                o.insert("nnz_blocks".into(), Json::Num(p.nnz_blocks as f64));
+                o.insert("work".into(), Json::Num(p.work as f64));
+                o.insert("p50_ns".into(), Json::num_or_null(p.p50_ns));
+                o.insert("p95_ns".into(), Json::num_or_null(p.p95_ns));
+                o.insert("iters".into(), Json::Num(p.iters as f64));
+                pts.push(Json::Obj(o));
+            }
+            let mut so = BTreeMap::new();
+            so.insert("m2".into(), Json::Num(e.m2 as f64));
+            so.insert("n2".into(), Json::Num(e.n2 as f64));
+            so.insert("a_ns".into(), Json::num_or_null(e.a_ns));
+            so.insert("c_ns".into(), Json::num_or_null(e.c_ns));
+            so.insert("points".into(), Json::Arr(pts));
+            entries.insert(k.clone(), Json::Obj(so));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("magic".into(), Json::Str(COST_MODEL_MAGIC.into()));
+        root.insert("version".into(), Json::Num(COST_MODEL_VERSION as f64));
+        root.insert("simd".into(), Json::Str(self.simd.clone()));
+        root.insert("grid".into(), Json::Num(self.grid as f64));
+        root.insert("batch".into(), Json::Num(self.batch as f64));
+        root.insert("entries".into(), Json::Obj(entries));
+        Json::Obj(root)
+    }
+
+    /// Magic and version are checked before any field parsing — the same
+    /// guard order as the binary containers, so a foreign or future JSON
+    /// fails with "not a cost model", never a confusing field error.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let magic = j.req_str("magic")?;
+        if magic != COST_MODEL_MAGIC {
+            bail!("not a {COST_MODEL_MAGIC} cost model (magic '{magic}')");
+        }
+        let version = j.req_usize("version")?;
+        if version != COST_MODEL_VERSION {
+            bail!("unsupported cost model version {version}");
+        }
+        let simd = j.req_str("simd")?.to_string();
+        let grid = j.req_usize("grid")?;
+        let batch = j.req_usize("batch")?;
+        let raw = j
+            .get("entries")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("missing object field 'entries'"))?;
+        if raw.is_empty() {
+            bail!("cost model has no calibrated shapes");
+        }
+        let mut entries = BTreeMap::new();
+        for (k, e) in raw {
+            let m2 = e.req_usize("m2")?;
+            let n2 = e.req_usize("n2")?;
+            if shape_key(m2, n2) != *k {
+                bail!("entry '{k}' declares mismatched shape {m2}x{n2}");
+            }
+            let a_ns = req_f64(e, "a_ns")?;
+            let c_ns = req_f64(e, "c_ns")?;
+            if !a_ns.is_finite() || !c_ns.is_finite() || a_ns < 0.0 || c_ns < 0.0 {
+                bail!("entry '{k}' has invalid coefficients a={a_ns} c={c_ns}");
+            }
+            let mut points = Vec::new();
+            for p in e.req_arr("points")? {
+                points.push(CalibPoint {
+                    occupancy: req_f64(p, "occupancy")?,
+                    nnz_blocks: p.req_usize("nnz_blocks")?,
+                    work: p.req_usize("work")? as u64,
+                    p50_ns: req_f64(p, "p50_ns")?,
+                    p95_ns: req_f64(p, "p95_ns")?,
+                    iters: p.req_usize("iters")?,
+                });
+            }
+            entries.insert(k.clone(), ShapeModel { m2, n2, a_ns, c_ns, points });
+        }
+        Ok(CostModel { simd, grid, batch, entries })
+    }
+
+    /// Atomic publish: full write + fsync to a dot-prefixed temp sibling,
+    /// then rename — the same discipline as `BsrModel::save`, so a reader
+    /// re-loading the artifact mid-save never sees a torn file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if self.entries.is_empty() {
+            bail!("refusing to save a cost model with no calibrated shapes");
+        }
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        static TMP_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let seq = TMP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let file_name = path
+            .file_name()
+            .and_then(|s| s.to_str())
+            .unwrap_or("cost_model.json");
+        let tmp = path.with_file_name(format!(".{file_name}.{}.{seq}.tmp", std::process::id()));
+        let publish = (|| -> Result<()> {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating cost model temp {tmp:?}"))?;
+            f.write_all(self.to_json().to_string_pretty().as_bytes())?;
+            f.write_all(b"\n")?;
+            f.sync_all()?;
+            drop(f);
+            std::fs::rename(&tmp, path)
+                .with_context(|| format!("publishing cost model {path:?}"))?;
+            Ok(())
+        })();
+        if publish.is_err() {
+            let _ = std::fs::remove_file(&tmp);
+        }
+        publish
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let s = std::fs::read_to_string(path)
+            .with_context(|| format!("opening cost model {path:?}"))?;
+        let j = Json::parse(&s).map_err(|e| anyhow!("parsing cost model {path:?}: {e}"))?;
+        Self::from_json(&j).with_context(|| format!("loading cost model {path:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(work: u64, p50_ns: f64) -> CalibPoint {
+        CalibPoint { occupancy: 1.0, nnz_blocks: work as usize, work, p50_ns, p95_ns: p50_ns, iters: 10 }
+    }
+
+    fn shape(m2: usize, n2: usize, a_ns: f64, c_ns: f64) -> ShapeModel {
+        ShapeModel { m2, n2, a_ns, c_ns, points: vec![pt(100, a_ns * 100.0 + c_ns)] }
+    }
+
+    fn model(shapes: Vec<ShapeModel>) -> CostModel {
+        CostModel {
+            simd: "scalar".into(),
+            grid: CALIB_GRID,
+            batch: 8,
+            entries: shapes.into_iter().map(|s| (shape_key(s.m2, s.n2), s)).collect(),
+        }
+    }
+
+    #[test]
+    fn fit_recovers_exact_linear_coefficients() {
+        // samples on t = 3·w + 50 exactly → the fit must return (3, 50)
+        let pts: Vec<CalibPoint> = [100u64, 200, 400].iter().map(|&w| pt(w, 3.0 * w as f64 + 50.0)).collect();
+        let (a, c) = fit(&pts);
+        assert!((a - 3.0).abs() < 1e-9, "a = {a}");
+        assert!((c - 50.0).abs() < 1e-6, "c = {c}");
+    }
+
+    #[test]
+    fn fit_degenerate_falls_back_through_origin() {
+        // one occupancy level: slope unidentifiable with an intercept
+        let (a, c) = fit(&[pt(100, 250.0)]);
+        assert!((a - 2.5).abs() < 1e-9, "a = {a}");
+        assert_eq!(c, 0.0);
+        // noise implying a negative intercept: clamped fallback, never < 0
+        let pts = vec![pt(100, 50.0), pt(200, 250.0)];
+        let (a, c) = fit(&pts);
+        assert!(a >= 0.0 && c >= 0.0, "a = {a}, c = {c}");
+    }
+
+    #[test]
+    fn json_round_trip_is_exact() {
+        let m = model(vec![shape(2, 4, 1.25, 80.0), shape(2, 16, 0.75, 120.0)]);
+        let back = CostModel::from_json(&Json::parse(&m.to_json().to_string_pretty()).unwrap()).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn save_load_round_trip_and_rejection() {
+        let m = model(vec![shape(2, 4, 1.25, 80.0)]);
+        let dir = std::env::temp_dir().join("bs_cost_model_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cm.json");
+        m.save(&path).unwrap();
+        assert_eq!(CostModel::load(&path).unwrap(), m);
+        // no temp litter after a successful publish
+        let stray: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+            .collect();
+        assert!(stray.is_empty(), "leftover temp files: {stray:?}");
+        // wrong magic and future version both fail before field parsing
+        let good = m.to_json().to_string_pretty();
+        let err = CostModel::from_json(&Json::parse(&good.replace("BSCM", "XXXX")).unwrap())
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("not a BSCM"), "{err:#}");
+        let err = CostModel::from_json(
+            &Json::parse(&good.replace("\"version\": 1", "\"version\": 2")).unwrap(),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("version"), "{err:#}");
+        // a corrupted entry key is caught by the shape cross-check
+        let err = CostModel::from_json(&Json::parse(&good.replace("\"2x4\"", "\"3x4\"")).unwrap())
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("mismatched shape"), "{err:#}");
+        std::fs::write(&path, "not json").unwrap();
+        assert!(CostModel::load(&path).is_err());
+    }
+
+    #[test]
+    fn nearest_shape_fallback_by_block_area() {
+        let m = model(vec![shape(2, 2, 2.0, 10.0), shape(2, 16, 0.5, 10.0)]);
+        // exact hit
+        assert_eq!(m.entry_for(2, 2).unwrap().a_ns, 2.0);
+        // 2x4 (area 8): nearer to 2x2 (area 4, diff 4) than 2x16 (area 32)
+        assert_eq!(m.entry_for(2, 4).unwrap().a_ns, 2.0);
+        // 4x8 (area 32): exact area match on the 2x16 entry
+        assert_eq!(m.entry_for(4, 8).unwrap().a_ns, 0.5);
+        let empty = CostModel {
+            simd: "scalar".into(),
+            grid: CALIB_GRID,
+            batch: 8,
+            entries: BTreeMap::new(),
+        };
+        assert!(empty.entry_for(2, 2).is_err());
+    }
+
+    #[test]
+    fn predict_validates_and_scales_with_occupancy() {
+        let m = model(vec![shape(2, 4, 2.0, 100.0)]);
+        // 8×16 at 2×4 → grid 4×4 = 16 blocks; occupancy 0.5 → 8 live
+        // blocks → work = 8·8·2·4 = 512 → 2·512 + 100 = 1124 ns
+        let half = m.predict_ns(8, 16, 2, 4, 8, 0.5).unwrap();
+        assert!((half - 1124.0).abs() < 1e-9, "{half}");
+        let full = m.predict_ns(8, 16, 2, 4, 8, 1.0).unwrap();
+        assert!(full > half, "denser must predict slower: {full} vs {half}");
+        let ms = m.predict_ms(8, 16, 2, 4, 8, 0.5).unwrap();
+        assert!((ms - half / 1e6).abs() < 1e-15, "{ms}");
+        // occupancy 0 still predicts ≥ one block of work plus overhead
+        assert!(m.predict_ns(8, 16, 2, 4, 8, 0.0).unwrap() > 100.0);
+        // validation: non-tiling block, zero batch, bad occupancy
+        assert!(m.predict_ns(8, 15, 2, 4, 8, 0.5).is_err());
+        assert!(m.predict_ns(8, 16, 3, 4, 8, 0.5).is_err());
+        assert!(m.predict_ns(8, 16, 2, 4, 0, 0.5).is_err());
+        assert!(m.predict_ns(8, 16, 2, 4, 8, 1.5).is_err());
+    }
+
+    #[test]
+    fn calibrate_smoke_fits_a_real_shape() {
+        // one shape × one occupancy: a single ~300 ms quick_bench
+        let m = calibrate(&[(2, 4), (2, 4)], &[0.5], 8).unwrap();
+        assert_eq!(m.entries.len(), 1, "duplicate shapes must be measured once");
+        let e = &m.entries[&shape_key(2, 4)];
+        assert_eq!((e.m2, e.n2), (2, 4));
+        assert!(e.a_ns >= 0.0 && e.c_ns >= 0.0);
+        assert_eq!(e.points.len(), 1);
+        assert!(e.points[0].p50_ns > 0.0);
+        assert!(m.predict_ms(8, 16, 2, 4, 8, 0.5).unwrap() >= 0.0);
+        // invalid grids are rejected up front
+        assert!(calibrate(&[], &[0.5], 8).is_err());
+        assert!(calibrate(&[(2, 4)], &[], 8).is_err());
+        assert!(calibrate(&[(2, 4)], &[1.5], 8).is_err());
+        assert!(calibrate(&[(0, 4)], &[0.5], 8).is_err());
+        assert!(calibrate(&[(2, 4)], &[0.5], 0).is_err());
+    }
+}

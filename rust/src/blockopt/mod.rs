@@ -1,18 +1,59 @@
-//! Block-size optimization — the paper's Eq. 5 integer program.
+//! Block-size optimization: from the paper's Eq. 5 integer program to a
+//! hardware-in-the-loop search subsystem.
 //!
-//!   min_{m1,n1,m2,n2}  2·m1·n1 + m2·n2   s.t.  m1·m2 = m, n1·n2 = n
+//! This module root holds the analytic half — the Eq. 5 objective
+//! (generalized to rank r)
 //!
-//! The continuous optimum is m1·n1 = sqrt(mn/2); because the feasible set
-//! is the (finite) divisor grid we solve it exactly with branch-and-bound
-//! over divisor pairs (with the sqrt bound used for pruning), and also
-//! expose the §5 pattern enumeration (the "14 block sizes for a 10×10
-//! matrix" counting).
+//!   min_{m1,n1,m2,n2}  2·r·m1·n1 + r·m2·n2   s.t.  m1·m2 = m, n1·n2 = n
+//!
+//! solved exactly by branch-and-bound over the divisor grid, plus the §5
+//! pattern enumeration (the "14 block sizes for a 10×10 matrix" count).
+//! The submodules close the loop against real hardware:
+//!
+//! * [`cost`]   — a per-block-shape latency model calibrated by timing
+//!   the `infer::bsr` kernels, serialized to a versioned JSON artifact;
+//! * [`sweep`]  — the search driver: one short joint `pattern_kpd`
+//!   training run measures retention/accuracy/occupancy per candidate,
+//!   then the cost model prices each and the Pareto front picks the
+//!   survivor under a latency budget;
+//! * [`pareto`] — deterministic dominance/front extraction shared by the
+//!   sweep, the CLI and the `blockopt_sweep` bench.
+
+pub mod cost;
+pub mod pareto;
+pub mod sweep;
+
+use std::fmt;
 
 use crate::flops::KpdDims;
 
-/// All positive divisors, ascending.
-pub fn divisors(x: usize) -> Vec<usize> {
-    assert!(x > 0);
+/// Typed failure of the analytic solvers — a zero dimension or rank is a
+/// caller bug worth a real error, not a panic inside a library call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlockOptError {
+    /// a matrix dimension (or divisor argument) was 0
+    ZeroDim,
+    /// the KPD rank was 0
+    ZeroRank,
+}
+
+impl fmt::Display for BlockOptError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BlockOptError::ZeroDim => write!(f, "block-size search wants dimensions ≥ 1"),
+            BlockOptError::ZeroRank => write!(f, "block-size search wants rank ≥ 1"),
+        }
+    }
+}
+
+impl std::error::Error for BlockOptError {}
+
+/// All positive divisors of `x`, ascending. `x = 0` has no divisors and
+/// errors instead of looping or panicking.
+pub fn divisors(x: usize) -> Result<Vec<usize>, BlockOptError> {
+    if x == 0 {
+        return Err(BlockOptError::ZeroDim);
+    }
     let mut small = Vec::new();
     let mut large = Vec::new();
     let mut d = 1;
@@ -27,67 +68,87 @@ pub fn divisors(x: usize) -> Vec<usize> {
     }
     large.reverse();
     small.extend(large);
-    small
+    Ok(small)
 }
 
-/// Eq. 5 objective for r = 1.
+/// Eq. 5 objective at rank r: parameters of the rank-r KPD factorization,
+/// 2·r·m1·n1 for the r dense (A, S) factor pairs plus r·m2·n2 for the B
+/// factors. r = 1 recovers the paper's 2·m1·n1 + m2·n2.
+pub fn eq5_cost_r(m1: usize, n1: usize, m2: usize, n2: usize, r: usize) -> u64 {
+    2 * (r * m1 * n1) as u64 + (r * m2 * n2) as u64
+}
+
+/// Eq. 5 objective for r = 1 (the paper's stated form).
 pub fn eq5_cost(m1: usize, n1: usize, m2: usize, n2: usize) -> u64 {
-    2 * (m1 * n1) as u64 + (m2 * n2) as u64
+    eq5_cost_r(m1, n1, m2, n2, 1)
 }
 
-/// Exact minimizer of Eq. 5 via branch-and-bound over the divisor grid.
+/// Exact minimizer of the rank-r Eq. 5 objective via branch-and-bound
+/// over the divisor grid.
 ///
-/// Branching: fix m1 (divisor of m); bound: for fixed m1 the inner problem
-/// over n1 has cost ≥ 2·sqrt(2·m1·(n·m/m1)) ... we use the simpler valid
-/// bound cost ≥ m2·n2 ≥ m/m1 (n2 ≥ 1) plus 2·m1 (n1 ≥ 1) to prune branches
-/// that cannot beat the incumbent.
-pub fn optimal_block_r1(m: usize, n: usize) -> KpdDims {
+/// Branching: fix m1 (divisor of m); bound: for fixed m1 every n1 has
+/// cost ≥ 2·r·m1·1 + r·(m/m1)·1 (n1 ≥ 1, n2 ≥ 1), which prunes branches
+/// that cannot beat the incumbent. r scales both terms equally, so the
+/// optimal *shape* is rank-invariant — but callers get the true rank-r
+/// cost and a `KpdDims` carrying their r.
+pub fn optimal_block(m: usize, n: usize, r: usize) -> Result<KpdDims, BlockOptError> {
+    if r == 0 {
+        return Err(BlockOptError::ZeroRank);
+    }
+    let n_divs = divisors(n)?;
     let mut best: Option<KpdDims> = None;
     let mut best_cost = u64::MAX;
-    for &m1 in &divisors(m) {
+    for &m1 in &divisors(m)? {
         let m2 = m / m1;
-        // lower bound over all n1 for this m1: 2·m1·1 + m2·1
-        let lb = 2 * m1 as u64 + m2 as u64;
+        let lb = 2 * (r * m1) as u64 + (r * m2) as u64;
         if lb >= best_cost {
             continue;
         }
-        for &n1 in &divisors(n) {
+        for &n1 in &n_divs {
             let n2 = n / n1;
-            let c = eq5_cost(m1, n1, m2, n2);
+            let c = eq5_cost_r(m1, n1, m2, n2, r);
             if c < best_cost {
                 best_cost = c;
-                best = Some(KpdDims { m1, n1, m2, n2, r: 1 });
+                best = Some(KpdDims { m1, n1, m2, n2, r });
             }
         }
     }
-    best.expect("non-empty divisor grid")
+    Ok(best.expect("non-empty divisor grid"))
+}
+
+/// [`optimal_block`] at the paper's r = 1.
+pub fn optimal_block_r1(m: usize, n: usize) -> Result<KpdDims, BlockOptError> {
+    optimal_block(m, n, 1)
 }
 
 /// Brute-force reference (used by the property tests to validate pruning).
-pub fn optimal_block_r1_brute(m: usize, n: usize) -> u64 {
+pub fn optimal_block_brute(m: usize, n: usize, r: usize) -> Result<u64, BlockOptError> {
+    if r == 0 {
+        return Err(BlockOptError::ZeroRank);
+    }
     let mut best = u64::MAX;
-    for &m1 in &divisors(m) {
-        for &n1 in &divisors(n) {
-            best = best.min(eq5_cost(m1, n1, m / m1, n / n1));
+    for &m1 in &divisors(m)? {
+        for &n1 in &divisors(n)? {
+            best = best.min(eq5_cost_r(m1, n1, m / m1, n / n1, r));
         }
     }
-    best
+    Ok(best)
 }
 
 /// §5 pattern enumeration: all (m2, n2) block sizes for an m×n matrix,
 /// excluding the trivial 1×1 and m×n entries (matches the paper's count of
 /// 14 for a 10×10 matrix).
-pub fn enumerate_blocks(m: usize, n: usize) -> Vec<(usize, usize)> {
+pub fn enumerate_blocks(m: usize, n: usize) -> Result<Vec<(usize, usize)>, BlockOptError> {
     let mut out = Vec::new();
-    for &m2 in &divisors(m) {
-        for &n2 in &divisors(n) {
+    for &m2 in &divisors(m)? {
+        for &n2 in &divisors(n)? {
             if (m2, n2) == (1, 1) || (m2, n2) == (m, n) {
                 continue;
             }
             out.push((m2, n2));
         }
     }
-    out
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -96,16 +157,55 @@ mod tests {
 
     #[test]
     fn divisor_basics() {
-        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
-        assert_eq!(divisors(1), vec![1]);
-        assert_eq!(divisors(13), vec![1, 13]);
+        assert_eq!(divisors(12).unwrap(), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(1).unwrap(), vec![1]);
+        assert_eq!(divisors(13).unwrap(), vec![1, 13]);
+    }
+
+    #[test]
+    fn zero_inputs_error_instead_of_panicking() {
+        assert_eq!(divisors(0).unwrap_err(), BlockOptError::ZeroDim);
+        assert_eq!(optimal_block(0, 5, 1).unwrap_err(), BlockOptError::ZeroDim);
+        assert_eq!(optimal_block(5, 0, 1).unwrap_err(), BlockOptError::ZeroDim);
+        assert_eq!(optimal_block(5, 5, 0).unwrap_err(), BlockOptError::ZeroRank);
+        assert_eq!(optimal_block_brute(5, 5, 0).unwrap_err(), BlockOptError::ZeroRank);
+        assert!(enumerate_blocks(0, 10).is_err());
+        // the error is a real std error with a readable message
+        let msg = format!("{}", BlockOptError::ZeroDim);
+        assert!(msg.contains("≥ 1"), "{msg}");
+    }
+
+    #[test]
+    fn prime_dims_have_only_trivial_factorizations() {
+        // prime × prime: the divisor grid is {1, p} × {1, q}
+        let d = optimal_block_r1(7, 13).unwrap();
+        assert_eq!(
+            eq5_cost(d.m1, d.n1, d.m2, d.n2),
+            optimal_block_brute(7, 13, 1).unwrap()
+        );
+        assert_eq!(d.m1 * d.m2, 7);
+        assert_eq!(d.n1 * d.n2, 13);
+        // 2 prime divisors each → 4 grid points, 2 trivial → 2 patterns
+        assert_eq!(enumerate_blocks(7, 13).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn unit_dims_are_legal() {
+        // x = 1: a 1×n (or m×1) matrix still solves — m1 = m2 = 1
+        let d = optimal_block_r1(1, 100).unwrap();
+        assert_eq!((d.m1, d.m2), (1, 1));
+        assert_eq!(d.n1 * d.n2, 100);
+        let d = optimal_block_r1(1, 1).unwrap();
+        assert_eq!(eq5_cost(d.m1, d.n1, d.m2, d.n2), 3); // 2·1·1 + 1·1
+        // 1×1 has exactly one block size and it is the trivial one
+        assert!(enumerate_blocks(1, 1).unwrap().is_empty());
     }
 
     #[test]
     fn example1_optimum() {
         // Paper Example 1: m=8, n=256 → m1·n1 = sqrt(0.5·2048) = 32,
         // cost = 2·32 + 64 = 128.
-        let d = optimal_block_r1(8, 256);
+        let d = optimal_block_r1(8, 256).unwrap();
         assert_eq!(d.m1 * d.n1, 32);
         assert_eq!(eq5_cost(d.m1, d.n1, d.m2, d.n2), 128);
     }
@@ -113,27 +213,49 @@ mod tests {
     #[test]
     fn bnb_matches_brute_force() {
         for &(m, n) in &[(10, 784), (120, 400), (84, 120), (7, 13), (64, 64), (1, 100)] {
-            let d = optimal_block_r1(m, n);
-            assert_eq!(
-                eq5_cost(d.m1, d.n1, d.m2, d.n2),
-                optimal_block_r1_brute(m, n),
-                "mismatch at ({m},{n})"
-            );
-            assert_eq!(d.m1 * d.m2, m);
-            assert_eq!(d.n1 * d.n2, n);
+            for r in [1usize, 2, 4] {
+                let d = optimal_block(m, n, r).unwrap();
+                assert_eq!(
+                    eq5_cost_r(d.m1, d.n1, d.m2, d.n2, r),
+                    optimal_block_brute(m, n, r).unwrap(),
+                    "mismatch at ({m},{n}) r={r}"
+                );
+                assert_eq!(d.m1 * d.m2, m);
+                assert_eq!(d.n1 * d.n2, n);
+                assert_eq!(d.r, r);
+            }
         }
+    }
+
+    #[test]
+    fn rank_scales_cost_but_not_shape() {
+        // both Eq. 5 terms scale linearly in r, so the optimal shape is
+        // rank-invariant while the optimal cost is exactly r× the r=1 one
+        for &(m, n) in &[(8, 256), (10, 784), (84, 120)] {
+            let d1 = optimal_block(m, n, 1).unwrap();
+            for r in [2usize, 3, 8] {
+                let dr = optimal_block(m, n, r).unwrap();
+                assert_eq!((dr.m1, dr.n1, dr.m2, dr.n2), (d1.m1, d1.n1, d1.m2, d1.n2));
+                assert_eq!(
+                    eq5_cost_r(dr.m1, dr.n1, dr.m2, dr.n2, r),
+                    r as u64 * eq5_cost(d1.m1, d1.n1, d1.m2, d1.n2)
+                );
+            }
+        }
+        // and the r-scaling identity holds pointwise, not just at the opt
+        assert_eq!(eq5_cost_r(3, 4, 5, 6, 7), 7 * eq5_cost(3, 4, 5, 6));
     }
 
     #[test]
     fn paper_pattern_count_10x10() {
         // §5: "if the size of W is 10 by 10, then there are 14 possible
         // block sizes" — divisor grid 4×4 = 16 minus the two trivial ones.
-        assert_eq!(enumerate_blocks(10, 10).len(), 14);
+        assert_eq!(enumerate_blocks(10, 10).unwrap().len(), 14);
     }
 
     #[test]
     fn optimum_beats_dense() {
-        let d = optimal_block_r1(10, 784);
+        let d = optimal_block_r1(10, 784).unwrap();
         assert!(eq5_cost(d.m1, d.n1, d.m2, d.n2) < 7840);
     }
 }

@@ -1,0 +1,226 @@
+//! Pareto dominance / front extraction for the block-size search.
+//!
+//! Candidates live in a two-objective space: `retention` (the Figure-3
+//! ‖S‖₁ survival score — higher is better) against `latency_ms` (the cost
+//! model's predicted serving time — lower is better). The front and the
+//! recommendation are fully deterministic: ties resolve by latency, then
+//! by the smallest candidate index, so results are reproducible under
+//! shuffled candidate order and replica counts.
+
+/// One candidate in (retention ↑, latency ↓) objective space. `index`
+/// points back into the caller's candidate list and is carried through
+/// the front so callers can map recommendations back.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Point {
+    pub retention: f64,
+    pub latency_ms: f64,
+    pub index: usize,
+}
+
+/// Weak Pareto dominance: `a` dominates `b` iff it is at least as good on
+/// both axes and strictly better on at least one.
+pub fn dominates(a: &Point, b: &Point) -> bool {
+    (a.retention >= b.retention && a.latency_ms < b.latency_ms)
+        || (a.retention > b.retention && a.latency_ms <= b.latency_ms)
+}
+
+/// The non-dominated subset, sorted by latency ascending (retention is
+/// therefore strictly ascending along the front). Non-finite coordinates
+/// are excluded up front — a NaN score must not poison the whole sweep.
+/// Duplicate (retention, latency) pairs keep the smallest index, so the
+/// result is independent of input order.
+pub fn pareto_front(points: &[Point]) -> Vec<Point> {
+    let mut sorted: Vec<Point> = points
+        .iter()
+        .filter(|p| p.retention.is_finite() && p.latency_ms.is_finite())
+        .copied()
+        .collect();
+    sorted.sort_by(|a, b| {
+        a.latency_ms
+            .total_cmp(&b.latency_ms)
+            .then(b.retention.total_cmp(&a.retention))
+            .then(a.index.cmp(&b.index))
+    });
+    let mut front: Vec<Point> = Vec::new();
+    let mut best = f64::NEG_INFINITY;
+    for p in sorted {
+        if p.retention > best {
+            front.push(p);
+            best = p.retention;
+        }
+    }
+    front
+}
+
+/// Pick the configuration to serve off the front. Unconstrained: the
+/// max-retention point (ties: cheaper, then smaller index). With a
+/// budget: the max-retention point whose latency fits; when nothing
+/// fits, the cheapest front point — a non-empty front never yields an
+/// empty recommendation.
+pub fn recommend(front: &[Point], budget_ms: Option<f64>) -> Option<Point> {
+    if front.is_empty() {
+        return None;
+    }
+    let better = |a: &Point, b: &Point| -> bool {
+        if a.retention != b.retention {
+            return a.retention > b.retention;
+        }
+        if a.latency_ms != b.latency_ms {
+            return a.latency_ms < b.latency_ms;
+        }
+        a.index < b.index
+    };
+    let mut pick: Option<Point> = None;
+    for p in front {
+        let within = match budget_ms {
+            Some(b) => p.latency_ms <= b,
+            None => true,
+        };
+        if !within {
+            continue;
+        }
+        let take = match &pick {
+            None => true,
+            Some(cur) => better(p, cur),
+        };
+        if take {
+            pick = Some(*p);
+        }
+    }
+    pick.or_else(|| {
+        front
+            .iter()
+            .copied()
+            .min_by(|a, b| a.latency_ms.total_cmp(&b.latency_ms).then(a.index.cmp(&b.index)))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testutil::prop_check;
+
+    fn pt(retention: f64, latency_ms: f64, index: usize) -> Point {
+        Point { retention, latency_ms, index }
+    }
+
+    #[test]
+    fn dominance_cases() {
+        let a = pt(0.9, 1.0, 0);
+        assert!(dominates(&a, &pt(0.9, 2.0, 1))); // equal retention, slower
+        assert!(dominates(&a, &pt(0.5, 1.0, 1))); // equal latency, lower retention
+        assert!(dominates(&a, &pt(0.5, 2.0, 1))); // worse on both
+        assert!(!dominates(&a, &a)); // never self-dominates
+        assert!(!dominates(&a, &pt(0.95, 0.5, 1))); // better on both
+        assert!(!dominates(&a, &pt(0.95, 2.0, 1))); // trade-off: incomparable
+    }
+
+    #[test]
+    fn golden_two_candidate_front() {
+        // hand-computed mini sweep: candidate 0 retains 0.9 at 2.0 ms,
+        // candidate 1 retains 0.4 at 0.5 ms — a pure trade-off, so both
+        // are on the front, sorted by latency
+        let pts = [pt(0.9, 2.0, 0), pt(0.4, 0.5, 1)];
+        let front = pareto_front(&pts);
+        assert_eq!(front.len(), 2);
+        assert_eq!(front[0].index, 1);
+        assert_eq!(front[1].index, 0);
+        // unconstrained → max retention; a 1 ms budget → the cheap one
+        assert_eq!(recommend(&front, None).unwrap().index, 0);
+        assert_eq!(recommend(&front, Some(1.0)).unwrap().index, 1);
+        // a budget below everything still recommends the cheapest point
+        assert_eq!(recommend(&front, Some(0.1)).unwrap().index, 1);
+    }
+
+    #[test]
+    fn dominated_points_dropped() {
+        let pts = [pt(0.5, 1.0, 0), pt(0.9, 0.5, 1), pt(0.9, 0.7, 2)];
+        let front = pareto_front(&pts);
+        assert_eq!(front.len(), 1);
+        assert_eq!(front[0].index, 1);
+    }
+
+    #[test]
+    fn duplicates_keep_smallest_index() {
+        let pts = [pt(0.7, 1.0, 3), pt(0.7, 1.0, 1), pt(0.7, 1.0, 2)];
+        let front = pareto_front(&pts);
+        assert_eq!(front.len(), 1);
+        assert_eq!(front[0].index, 1);
+    }
+
+    #[test]
+    fn non_finite_points_excluded() {
+        let pts = [pt(f64::NAN, 1.0, 0), pt(0.5, f64::INFINITY, 1), pt(0.2, 1.0, 2)];
+        let front = pareto_front(&pts);
+        assert_eq!(front.len(), 1);
+        assert_eq!(front[0].index, 2);
+        assert!(pareto_front(&[pt(f64::NAN, 1.0, 0)]).is_empty());
+        assert!(recommend(&[], None).is_none());
+    }
+
+    #[test]
+    fn prop_front_has_no_dominated_point() {
+        prop_check("pareto non-dominated", 200, |g| {
+            let n = g.usize_in(1, 24);
+            let pts: Vec<Point> = (0..n)
+                .map(|i| pt(g.f32_in(0.0, 1.0) as f64, g.f32_in(0.1, 10.0) as f64, i))
+                .collect();
+            let front = pareto_front(&pts);
+            prop_assert!(!front.is_empty(), "front empty for {n} finite points");
+            for f in &front {
+                for p in &pts {
+                    prop_assert!(!dominates(p, f), "{p:?} dominates front member {f:?}");
+                }
+            }
+            // completeness: every excluded candidate is dominated by some
+            // front member (or is a duplicate of one)
+            for p in &pts {
+                if front.iter().any(|f| f.index == p.index) {
+                    continue;
+                }
+                prop_assert!(
+                    front.iter().any(|f| dominates(f, p)
+                        || (f.retention == p.retention && f.latency_ms == p.latency_ms)),
+                    "excluded {p:?} but no front member dominates it"
+                );
+            }
+            // the front is monotone: latency strictly ascending implies
+            // retention strictly ascending
+            for w in front.windows(2) {
+                prop_assert!(
+                    w[0].latency_ms < w[1].latency_ms && w[0].retention < w[1].retention,
+                    "front not monotone: {:?} then {:?}",
+                    w[0],
+                    w[1]
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_front_deterministic_under_shuffle() {
+        prop_check("pareto shuffle determinism", 150, |g| {
+            let n = g.usize_in(1, 16);
+            // quantized coordinates so exact duplicates actually occur
+            let pts: Vec<Point> = (0..n)
+                .map(|i| pt(g.usize_in(0, 5) as f64 / 5.0, g.usize_in(1, 5) as f64, i))
+                .collect();
+            let mut shuffled = pts.clone();
+            for i in (1..shuffled.len()).rev() {
+                let j = g.usize_in(0, i);
+                shuffled.swap(i, j);
+            }
+            let a = pareto_front(&pts);
+            let b = pareto_front(&shuffled);
+            prop_assert!(a == b, "front depends on candidate order:\n{a:?}\n{b:?}");
+            prop_assert!(
+                recommend(&a, None) == recommend(&b, None)
+                    && recommend(&a, Some(3.0)) == recommend(&b, Some(3.0)),
+                "recommendation depends on candidate order"
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,323 @@
+//! Block-size sweep driver: hardware-in-the-loop pattern selection.
+//!
+//! The Figure-3 reproduction trains K block-size candidates jointly
+//! (Eq. 7) and keeps the max-‖S‖₁-retention survivor — a criterion that
+//! knows nothing about what each block shape costs to *serve*. This
+//! module closes the loop: [`measure_candidates`] runs one short
+//! `pattern_kpd` training pass and reads, per candidate, the retention,
+//! per-pattern accuracy and the measured S occupancy; [`score`] prices
+//! each candidate's slot stack with a calibrated [`CostModel`] and
+//! extracts the (retention ↑, predicted latency ↓) Pareto front plus a
+//! recommendation under an optional latency budget. `measure` is the
+//! only training-cost step — `score` is pure, so one measurement pass
+//! can be re-scored against many cost models or budgets.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::backend::Backend;
+use crate::blockopt::cost::CostModel;
+use crate::blockopt::pareto::{self, Point};
+use crate::config::TrainConfig;
+use crate::coordinator::{self, probe, Trainer};
+use crate::manifest::SpecEntry;
+use crate::sparsity::{self, DEFAULT_EPS_REL};
+
+/// What one training pass measured for one pattern candidate. `m2`/`n2`
+/// are the first slot's block (the headline shape); `slots` carries the
+/// full per-slot `(slot_m, slot_n, m2, n2)` stack for pricing.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Measured {
+    pub pattern: usize,
+    pub m2: usize,
+    pub n2: usize,
+    pub rank: usize,
+    /// ‖S‖₁ retention (final / initial) — the Figure-3 survival score
+    pub retention: f64,
+    /// per-pattern test accuracy, percent
+    pub accuracy: f64,
+    /// measured live fraction of the candidate's S entries
+    pub occupancy: f64,
+    pub slots: Vec<(usize, usize, usize, usize)>,
+}
+
+/// A measured candidate plus its modeled serving latency.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Candidate {
+    pub pattern: usize,
+    pub m2: usize,
+    pub n2: usize,
+    pub rank: usize,
+    pub retention: f64,
+    pub accuracy: f64,
+    pub occupancy: f64,
+    /// predicted forward latency of the full slot stack, ms
+    pub pred_latency_ms: f64,
+}
+
+/// The sweep verdict: all scored candidates (pattern order), the Pareto
+/// front (latency order), and two selections — `survivor` is the pure
+/// Figure-3 max-retention pick, `recommended` is the front pick under
+/// `budget_ms`. Unconstrained, the two agree whenever the max-retention
+/// candidate is on the front (it always is: nothing dominates it on the
+/// retention axis).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepOutcome {
+    pub candidates: Vec<Candidate>,
+    pub front: Vec<Point>,
+    /// pattern index picked off the front under the budget
+    pub recommended: usize,
+    /// pattern index of the max-retention (Figure-3) survivor
+    pub survivor: usize,
+    pub budget_ms: Option<f64>,
+}
+
+/// Per-pattern slot stacks `(slot_m, slot_n, m2, n2)` from the spec's
+/// pattern grid — the same parse (and the same malformed-artifact bails)
+/// as `probe::pattern_retention`.
+pub fn pattern_slot_blocks(spec: &SpecEntry) -> Result<Vec<Vec<(usize, usize, usize, usize)>>> {
+    let pats = spec
+        .info
+        .get("patterns")
+        .and_then(|j| j.as_arr())
+        .ok_or_else(|| anyhow!("spec {} has no pattern grid info", spec.key))?;
+    if pats.is_empty() {
+        bail!("spec {} declares an empty pattern grid", spec.key);
+    }
+    let mut out = Vec::with_capacity(pats.len());
+    for (p, pat) in pats.iter().enumerate() {
+        let mut slots = Vec::with_capacity(spec.slots.len());
+        for slot in &spec.slots {
+            let b = pat
+                .get(&slot.name)
+                .and_then(|j| j.as_arr())
+                .ok_or_else(|| {
+                    anyhow!("pattern {p} of spec {} lacks slot '{}'", spec.key, slot.name)
+                })?;
+            let (m2, n2) = match (b.first().and_then(|v| v.as_usize()),
+                                  b.get(1).and_then(|v| v.as_usize())) {
+                (Some(m2), Some(n2)) if m2 > 0 && n2 > 0 => (m2, n2),
+                _ => bail!(
+                    "pattern {p} of spec {}: malformed block entry for slot '{}'",
+                    spec.key,
+                    slot.name
+                ),
+            };
+            if slot.m % m2 != 0 || slot.n % n2 != 0 {
+                bail!(
+                    "pattern {p} of spec {}: block ({m2},{n2}) does not tile \
+                     slot '{}' ({}x{})",
+                    spec.key,
+                    slot.name,
+                    slot.m,
+                    slot.n
+                );
+            }
+            slots.push((slot.m, slot.n, m2, n2));
+        }
+        if slots.is_empty() {
+            bail!("spec {} has no slots", spec.key);
+        }
+        out.push(slots);
+    }
+    Ok(out)
+}
+
+/// The unique block shapes a spec's pattern grid uses, in first-seen
+/// order — what a calibration pass should measure before sweeping it.
+pub fn candidate_shapes(spec: &SpecEntry) -> Result<Vec<(usize, usize)>> {
+    let mut out: Vec<(usize, usize)> = Vec::new();
+    for slots in pattern_slot_blocks(spec)? {
+        for (_, _, m2, n2) in slots {
+            if !out.contains(&(m2, n2)) {
+                out.push((m2, n2));
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// One short joint training run on `cfg` (first seed only — a sweep
+/// probe, not a paper table), then per-candidate retention, accuracy and
+/// measured S occupancy. The expensive half of [`sweep`].
+pub fn measure_candidates(be: &dyn Backend, cfg: &TrainConfig) -> Result<Vec<Measured>> {
+    let spec = be.spec(&cfg.spec)?.clone();
+    let k = spec
+        .num_patterns()
+        .ok_or_else(|| anyhow!("spec '{}' is not a pattern-selection spec", spec.key))?;
+    let grids = pattern_slot_blocks(&spec)?;
+    if grids.len() != k {
+        bail!("spec '{}': {} pattern entries but num_patterns = {k}", spec.key, grids.len());
+    }
+    let (train, test) =
+        coordinator::dataset_for(&spec, cfg.data_seed, cfg.train_examples, cfg.test_examples)?;
+    let seed = cfg.seeds.first().copied().unwrap_or(0);
+    let outcome = Trainer::new(be, cfg).run(seed, &train, &test)?;
+    let retention = probe::pattern_retention_measured(&spec, &outcome.state, &outcome.history)?;
+    let rank = spec.rank().unwrap_or(1);
+    let mut out = Vec::with_capacity(k);
+    for (p, slots) in grids.into_iter().enumerate() {
+        let mut parts: Vec<(f64, usize)> = Vec::with_capacity(spec.slots.len());
+        for slot in &spec.slots {
+            let s = outcome.state.param_tensor(&format!("p{p}.{}.S", slot.name))?;
+            parts.push((sparsity::element_sparsity(&s, DEFAULT_EPS_REL), s.len()));
+        }
+        let occupancy = (1.0 - sparsity::aggregate(&parts)).clamp(0.0, 1.0);
+        let accuracy = outcome.pattern_accs.get(p).copied().unwrap_or(outcome.test_acc);
+        let (m2, n2) = (slots[0].2, slots[0].3);
+        out.push(Measured {
+            pattern: p,
+            m2,
+            n2,
+            rank,
+            retention: retention[p],
+            accuracy,
+            occupancy,
+            slots,
+        });
+    }
+    Ok(out)
+}
+
+/// Price every measured candidate with the cost model at batch `nb` and
+/// extract the front + recommendation. Pure — re-scoring against a
+/// different model or budget costs nothing. Candidate order in the input
+/// does not matter: everything is keyed by pattern index.
+pub fn score(
+    measured: &[Measured],
+    model: &CostModel,
+    nb: usize,
+    budget_ms: Option<f64>,
+) -> Result<SweepOutcome> {
+    if measured.is_empty() {
+        bail!("sweep has no measured candidates");
+    }
+    let mut candidates = Vec::with_capacity(measured.len());
+    let mut points = Vec::with_capacity(measured.len());
+    for m in measured {
+        if m.slots.is_empty() {
+            bail!("candidate {} has no slots to price", m.pattern);
+        }
+        let mut lat = 0.0;
+        for &(sm, sn, m2, n2) in &m.slots {
+            lat += model.predict_ms(sm, sn, m2, n2, nb, m.occupancy)?;
+        }
+        candidates.push(Candidate {
+            pattern: m.pattern,
+            m2: m.m2,
+            n2: m.n2,
+            rank: m.rank,
+            retention: m.retention,
+            accuracy: m.accuracy,
+            occupancy: m.occupancy,
+            pred_latency_ms: lat,
+        });
+        points.push(Point { retention: m.retention, latency_ms: lat, index: m.pattern });
+    }
+    candidates.sort_by_key(|c| c.pattern);
+    if candidates.windows(2).any(|w| w[0].pattern == w[1].pattern) {
+        bail!("duplicate pattern index in measured candidates");
+    }
+    let front = pareto::pareto_front(&points);
+    let rec = pareto::recommend(&front, budget_ms)
+        .ok_or_else(|| anyhow!("Pareto front is empty — every candidate scored non-finite"))?;
+    // the Figure-3 survivor: max retention over candidates in pattern
+    // order, through the same shared criterion as the CLI and benches
+    let rets: Vec<f64> = candidates.iter().map(|c| c.retention).collect();
+    let survivor = candidates[probe::pattern_survivor(&rets)].pattern;
+    Ok(SweepOutcome { candidates, front, recommended: rec.index, survivor, budget_ms })
+}
+
+/// The full loop: measure once, score once.
+pub fn sweep(
+    be: &dyn Backend,
+    cfg: &TrainConfig,
+    model: &CostModel,
+    nb: usize,
+    budget_ms: Option<f64>,
+) -> Result<SweepOutcome> {
+    let measured = measure_candidates(be, cfg)?;
+    score(&measured, model, nb, budget_ms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blockopt::cost::{shape_key, ShapeModel, CALIB_GRID};
+    use std::collections::BTreeMap;
+
+    fn toy_model() -> CostModel {
+        // hand-built coefficients, zero intercepts, so every prediction
+        // below is hand-computable
+        let mk = |m2: usize, n2: usize, a_ns: f64| ShapeModel {
+            m2,
+            n2,
+            a_ns,
+            c_ns: 0.0,
+            points: vec![],
+        };
+        let mut entries = BTreeMap::new();
+        entries.insert(shape_key(2, 2), mk(2, 2, 2.0));
+        entries.insert(shape_key(2, 8), mk(2, 8, 0.5));
+        CostModel { simd: "scalar".into(), grid: CALIB_GRID, batch: 1, entries }
+    }
+
+    fn measured(pattern: usize, m2: usize, n2: usize, retention: f64, occupancy: f64) -> Measured {
+        Measured {
+            pattern,
+            m2,
+            n2,
+            rank: 1,
+            retention,
+            accuracy: 90.0,
+            occupancy,
+            slots: vec![(8, 16, m2, n2)],
+        }
+    }
+
+    #[test]
+    fn golden_two_candidate_score() {
+        // slot 8×16, nb = 1.
+        // candidate 0: block 2×2, occupancy 1.0 → 32 blocks live,
+        //   work = 32·4 = 128 MACs → 2.0·128 = 256 ns
+        // candidate 1: block 2×8, occupancy 0.5 → grid 8, nnz 4,
+        //   work = 4·16 = 64 MACs → 0.5·64 = 32 ns
+        let ms = [measured(0, 2, 2, 0.9, 1.0), measured(1, 2, 8, 0.4, 0.5)];
+        let out = score(&ms, &toy_model(), 1, None).unwrap();
+        assert!((out.candidates[0].pred_latency_ms - 256.0 / 1e6).abs() < 1e-12);
+        assert!((out.candidates[1].pred_latency_ms - 32.0 / 1e6).abs() < 1e-12);
+        // pure trade-off: both on the front, latency ascending
+        assert_eq!(out.front.len(), 2);
+        assert_eq!(out.front[0].index, 1);
+        assert_eq!(out.front[1].index, 0);
+        // unconstrained, the recommendation IS the Figure-3 survivor
+        assert_eq!(out.survivor, 0);
+        assert_eq!(out.recommended, 0);
+        // a 100 ns budget only fits candidate 1
+        let tight = score(&ms, &toy_model(), 1, Some(100.0 / 1e6)).unwrap();
+        assert_eq!(tight.recommended, 1);
+        assert_eq!(tight.survivor, 0);
+    }
+
+    #[test]
+    fn score_is_order_independent() {
+        let ms = [measured(0, 2, 2, 0.9, 1.0), measured(1, 2, 8, 0.4, 0.5)];
+        let swapped = [ms[1].clone(), ms[0].clone()];
+        let a = score(&ms, &toy_model(), 1, None).unwrap();
+        let b = score(&swapped, &toy_model(), 1, None).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn score_rejects_degenerate_input() {
+        assert!(score(&[], &toy_model(), 1, None).is_err());
+        let dup = [measured(0, 2, 2, 0.9, 1.0), measured(0, 2, 8, 0.4, 0.5)];
+        assert!(score(&dup, &toy_model(), 1, None).is_err());
+        let mut bad = measured(0, 2, 2, 0.9, 1.0);
+        bad.slots.clear();
+        assert!(score(&[bad], &toy_model(), 1, None).is_err());
+        // a non-tiling slot block surfaces the predict error
+        let mut bad = measured(0, 3, 5, 0.9, 1.0);
+        bad.slots = vec![(8, 16, 3, 5)];
+        assert!(score(&[bad], &toy_model(), 1, None).is_err());
+    }
+}

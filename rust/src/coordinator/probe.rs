@@ -249,3 +249,16 @@ pub fn pattern_retention_measured(
 pub fn pattern_survivor(retention: &[f64]) -> usize {
     crate::util::argmax(retention)
 }
+
+/// Cost-aware survivor criterion: `(1−α)·retention̂ − α·latencŷ` over
+/// min-max-normalized axes. A thin delegation to
+/// [`crate::backend::native::pattern::survivor_cost_aware`] — one scoring
+/// definition for the CLI, the sweep bench and the native backend, the
+/// same single-criterion discipline as [`pattern_survivor`].
+pub fn pattern_survivor_cost_aware(
+    retention: &[f64],
+    latency_ms: &[f64],
+    alpha: f64,
+) -> Result<usize> {
+    crate::backend::native::pattern::survivor_cost_aware(retention, latency_ms, alpha)
+}

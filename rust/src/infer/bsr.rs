@@ -99,6 +99,25 @@ fn forward_impl(kind: SimdKind, x: &[f32], nb: usize, l: &BsrLayer, relu: bool) 
     Ok(out)
 }
 
+/// Time one layer's forward on a fixed batch with the repo-standard
+/// microbench settings — the single-layer timing hook the `blockopt` cost
+/// model calibrates from. The layer is validated (and the result shape
+/// exercised) once up front so a malformed layer fails loudly here
+/// instead of panicking mid-sample; the timed closure then runs the same
+/// `forward_impl` the serving path dispatches to, under the SIMD kind
+/// active at call time.
+pub fn time_layer(x: &[f32], nb: usize, layer: &BsrLayer) -> Result<crate::bench::BenchStats> {
+    let kind = simd::active();
+    forward_impl(kind, x, nb, layer, false)
+        .with_context(|| format!("timing layer '{}'", layer.name))?;
+    let name = format!("bsr.{}x{}_b{}x{}", layer.m, layer.n, layer.m2, layer.n2);
+    Ok(crate::bench::quick_bench(&name, || {
+        std::hint::black_box(
+            forward_impl(kind, std::hint::black_box(x), nb, layer, false).unwrap(),
+        );
+    }))
+}
+
 /// Logits of the full stack on a flat batch (N × in_dim): ReLU fused into
 /// every hidden layer, none after the logits — the serving mirror of
 /// `backend::native::layers::forward_logits`.
@@ -318,6 +337,24 @@ mod tests {
         // wrong input length is rejected
         assert!(model_forward(&model, &x[..7], 1).is_err());
         assert!(model_forward(&model, &x, 0).is_err());
+    }
+
+    #[test]
+    fn time_layer_samples_and_validates() {
+        let mut rng = Rng::new(36);
+        let (nb, m, n, m2, n2) = (4usize, 8usize, 16usize, 2usize, 4usize);
+        let x = rand_vec(&mut rng, nb * n);
+        let w = holey_weights(&mut rng, m, n, m2, n2, 2);
+        let l = BsrLayer::from_dense("fc", &w, m, n, m2, n2).unwrap();
+        let stats = time_layer(&x, nb, &l).unwrap();
+        assert!(stats.iters >= 10, "{stats:?}");
+        assert!(stats.p50_ns > 0.0 && stats.p50_ns <= stats.p95_ns, "{stats:?}");
+        assert_eq!(stats.name, "bsr.8x16_b2x4");
+        // a malformed layer errors up front, never panics mid-sample
+        let mut bad = l.clone();
+        bad.n2 = 3;
+        assert!(time_layer(&x, nb, &bad).is_err());
+        assert!(time_layer(&x[..7], nb, &l).is_err());
     }
 
     #[test]

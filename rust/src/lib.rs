@@ -59,6 +59,19 @@
 //! the CLI's `export` / `infer` subcommands and
 //! `benches/infer_serve.rs` drive it.
 //!
+//! The [`blockopt`] subsystem closes the paper's *other* loop — choosing
+//! the block size against real hardware. Its root holds the analytic
+//! Eq. 5 solver (rank-generalized, exact branch-and-bound over the
+//! divisor grid) and the §5 pattern enumeration; `blockopt::cost`
+//! calibrates a per-block-shape latency model by timing the `infer::bsr`
+//! kernels (serialized to a versioned `BSCM` JSON artifact);
+//! `blockopt::sweep` runs one short joint `pattern_kpd` training pass,
+//! prices every candidate's slot stack, and extracts the (retention ↑,
+//! predicted latency ↓) Pareto front (`blockopt::pareto`) with a
+//! recommendation under a latency budget. The CLI's `blockopt
+//! calibrate | sweep | recommend` sub-verbs and
+//! `benches/blockopt_sweep.rs` (gated in CI) drive it.
+//!
 //! See `rust/README.md` for the backend/feature matrix and offline
 //! test/bench instructions.
 

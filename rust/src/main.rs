@@ -10,7 +10,15 @@
 //!   infer    --model F.bsm [...]      serve the artifact through the
 //!                                     batched engine; latency percentiles
 //!   flops    --spec KEY | --m --n..   Prop. 2/3 accounting
-//!   blockopt --m M --n N              Eq. 5 optimal block size
+//!   blockopt --m M --n N [--rank R]   Eq. 5 optimal block size
+//!   blockopt calibrate [...]          time the BSR kernels across block
+//!                                     shapes × occupancies, fit + save
+//!                                     the hardware cost model artifact
+//!   blockopt sweep [--spec KEY ..]    hardware-in-the-loop search: short
+//!                                     joint training run + cost model →
+//!                                     Pareto front, pick under --budget-ms
+//!   blockopt recommend --cost-model F design-space recommendation for
+//!                                     --m/--n from a saved cost model
 //!   bench-step --spec KEY             one-step latency microbench
 //!
 //! Backend selection: `--backend native|pjrt`, default auto (PJRT when the
@@ -28,6 +36,9 @@
 //!   blocksparse export --spec t2_kpd_16x8_8x4_4x2 --steps 300 --out t2.bsm
 //!   blocksparse infer --model t2.bsm --batch 16 --requests 512 --clients 8
 //!   blocksparse blockopt --m 8 --n 256
+//!   blocksparse blockopt calibrate --out cost_model.json
+//!   blocksparse blockopt sweep --spec f3a_pattern --budget-ms 0.5
+//!   blocksparse blockopt recommend --cost-model cost_model.json --m 10 --n 784
 
 use anyhow::{anyhow, bail, Result};
 
@@ -59,9 +70,12 @@ fn arg_spec() -> ArgSpec {
             ("artifacts", true, "artifact directory (default: artifacts)"),
             ("m", true, "matrix rows (flops/blockopt)"),
             ("n", true, "matrix cols (flops/blockopt)"),
-            ("block", true, "block size m2xn2, e.g. 2x16"),
+            ("block", true, "block size m2xn2, e.g. 2x16 (comma list for blockopt calibrate)"),
             ("rank", true, "KPD rank"),
-            ("batch", true, "batch size (flops accounting / infer micro-batch cap)"),
+            ("batch", true, "batch size (flops accounting / infer micro-batch cap / blockopt)"),
+            ("budget-ms", true, "latency budget for the blockopt front pick (default: none)"),
+            ("cost-model", true, "calibrated cost model JSON (blockopt sweep/recommend)"),
+            ("occupancy", true, "assumed live-block fraction (blockopt recommend, default 0.25)"),
             ("out", true, "output path for the BSR model artifact (export)"),
             ("ckpt", true, "restore training state from this checkpoint (export)"),
             ("model", true, "BSR model artifact to serve (infer)"),
@@ -77,14 +91,20 @@ fn arg_spec() -> ArgSpec {
 }
 
 fn build_cfg(args: &Args) -> Result<TrainConfig> {
+    let spec = args
+        .opt("spec")
+        .ok_or_else(|| anyhow!("--spec is required (see `blocksparse list`)"))?;
+    build_cfg_for(args, spec)
+}
+
+/// [`build_cfg`] with the spec key supplied by the caller — for
+/// subcommands with a default spec (`blockopt sweep`).
+fn build_cfg_for(args: &Args, spec: &str) -> Result<TrainConfig> {
     let mut cfg = match args.opt("config") {
         Some(path) => Config::load(std::path::Path::new(path))?,
         None => Config::default(),
     };
     cfg.apply_overrides(&args.overrides())?;
-    let spec = args
-        .opt("spec")
-        .ok_or_else(|| anyhow!("--spec is required (see `blocksparse list`)"))?;
     let mut tc = TrainConfig::from_config(&cfg, spec);
     if let Some(s) = args.opt("steps") {
         tc.steps = s.parse()?;
@@ -403,19 +423,196 @@ fn cmd_flops(args: &Args) -> Result<()> {
 }
 
 fn cmd_blockopt(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        None => cmd_blockopt_eq5(args),
+        Some("calibrate") => cmd_blockopt_calibrate(args),
+        Some("sweep") => cmd_blockopt_sweep(args),
+        Some("recommend") => cmd_blockopt_recommend(args),
+        Some(other) => bail!(
+            "unknown blockopt verb '{other}' (expected calibrate | sweep | recommend, \
+             or no verb for the Eq.5 solver)"
+        ),
+    }
+}
+
+/// The analytic path: exact Eq. 5 minimizer for one weight shape.
+fn cmd_blockopt_eq5(args: &Args) -> Result<()> {
     let m = args.opt_usize("m", 0)?;
     let n = args.opt_usize("n", 0)?;
     if m == 0 || n == 0 {
-        bail!("blockopt needs --m and --n");
+        bail!("blockopt needs --m and --n (or a verb: calibrate | sweep | recommend)");
     }
-    let d = blocksparse::blockopt::optimal_block_r1(m, n);
+    let r = args.opt_usize("rank", 1)?;
+    let d = blocksparse::blockopt::optimal_block(m, n, r)?;
     println!(
-        "Eq.5 optimum for {m}x{n}: grid {}x{} block {}x{} -> {} params (dense {})",
+        "Eq.5 optimum for {m}x{n} r={r}: grid {}x{} block {}x{} -> {} params (dense {})",
         d.m1, d.n1, d.m2, d.n2,
-        blocksparse::blockopt::eq5_cost(d.m1, d.n1, d.m2, d.n2),
+        blocksparse::blockopt::eq5_cost_r(d.m1, d.n1, d.m2, d.n2, r),
         m * n
     );
-    println!("legal blocks: {}", blocksparse::blockopt::enumerate_blocks(m, n).len());
+    println!("legal blocks: {}", blocksparse::blockopt::enumerate_blocks(m, n)?.len());
+    Ok(())
+}
+
+/// `--budget-ms` is tri-state: absent means unconstrained, present must
+/// parse.
+fn budget_arg(args: &Args) -> Result<Option<f64>> {
+    match args.opt("budget-ms") {
+        None => Ok(None),
+        Some(_) => {
+            let b = args.opt_f64("budget-ms", 0.0)?;
+            if !b.is_finite() || b <= 0.0 {
+                bail!("--budget-ms wants a positive latency in ms, got {b}");
+            }
+            Ok(Some(b))
+        }
+    }
+}
+
+/// Time the BSR kernels on this host, fit the per-shape cost model and
+/// publish it as a JSON artifact.
+fn cmd_blockopt_calibrate(args: &Args) -> Result<()> {
+    use blocksparse::blockopt::cost;
+    let shapes: Vec<(usize, usize)> = match args.opt("block") {
+        Some(list) => list
+            .split(',')
+            .map(|s| parse_block(s.trim()))
+            .collect::<Result<Vec<_>>>()?,
+        None => cost::DEFAULT_SHAPES.to_vec(),
+    };
+    let nb = args.opt_usize("batch", 32)?;
+    let out = std::path::PathBuf::from(args.opt_or("out", "cost_model.json"));
+    let model = cost::calibrate(&shapes, &cost::DEFAULT_OCCUPANCIES, nb)?;
+    println!(
+        "calibrated {} block shapes on simd '{}' (batch {nb}, {}x{} block grid):",
+        model.entries.len(),
+        model.simd,
+        model.grid,
+        model.grid
+    );
+    for e in model.entries.values() {
+        println!("  {:>2}x{:<3} a = {:.4} ns/MAC  c = {:.0} ns", e.m2, e.n2, e.a_ns, e.c_ns);
+    }
+    model.save(&out)?;
+    println!("wrote cost model {}", out.display());
+    Ok(())
+}
+
+/// The hardware-in-the-loop search: one short joint pattern training run,
+/// each candidate priced by the cost model, Pareto front + budget pick.
+fn cmd_blockopt_sweep(args: &Args) -> Result<()> {
+    use blocksparse::blockopt::{cost, sweep};
+    let be = open_backend(args)?;
+    let mut cfg = build_cfg_for(args, args.opt_or("spec", "f3a_pattern"))?;
+    cfg.seeds.truncate(1); // a sweep probe, not a paper table
+    maybe_calibrate_pattern(args, be.as_ref(), &mut cfg)?;
+    let spec = be.spec(&cfg.spec)?.clone();
+    let nb = args.opt_usize("batch", 32)?;
+    let budget_ms = budget_arg(args)?;
+    let model = match args.opt("cost-model") {
+        Some(p) => cost::CostModel::load(std::path::Path::new(p))?,
+        None => {
+            let shapes = sweep::candidate_shapes(&spec)?;
+            info!(
+                "no --cost-model: calibrating {} candidate shapes in-process",
+                shapes.len()
+            );
+            cost::calibrate(&shapes, &cost::DEFAULT_OCCUPANCIES, nb)?
+        }
+    };
+    let out = sweep::sweep(be.as_ref(), &cfg, &model, nb, budget_ms)?;
+    let mut table = bench::TableWriter::new(
+        &format!("block-size sweep: {} (batch {nb}, cost model '{}')", cfg.spec, model.simd),
+        &["k", "block", "retention", "acc %", "occupancy", "pred ms", "front"],
+    );
+    for c in &out.candidates {
+        let on_front = out.front.iter().any(|p| p.index == c.pattern);
+        table.row(vec![
+            c.pattern.to_string(),
+            format!("{}x{}", c.m2, c.n2),
+            format!("{:.3}", c.retention),
+            format!("{:.2}", c.accuracy),
+            format!("{:.3}", c.occupancy),
+            format!("{:.4}", c.pred_latency_ms),
+            if on_front { "*".into() } else { String::new() },
+        ]);
+    }
+    table.print();
+    println!("figure-3 survivor (max retention): k={}", out.survivor);
+    let rets: Vec<f64> = out.candidates.iter().map(|c| c.retention).collect();
+    let lats: Vec<f64> = out.candidates.iter().map(|c| c.pred_latency_ms).collect();
+    let blend = probe::pattern_survivor_cost_aware(&rets, &lats, 0.5)?;
+    println!("cost-aware survivor (alpha=0.5): k={}", out.candidates[blend].pattern);
+    if let Some(b) = budget_ms {
+        println!("latency budget: {b:.3} ms");
+    }
+    let rec = out
+        .candidates
+        .iter()
+        .find(|c| c.pattern == out.recommended)
+        .ok_or_else(|| anyhow!("recommended pattern {} not among candidates", out.recommended))?;
+    println!(
+        "recommended block size: k={} ({}x{}) predicted {:.3} ms",
+        rec.pattern, rec.m2, rec.n2, rec.pred_latency_ms
+    );
+    Ok(())
+}
+
+/// Design-space recommendation without a training run: every legal block
+/// size of an m×n slot, Eq. 5 param compression vs predicted latency.
+fn cmd_blockopt_recommend(args: &Args) -> Result<()> {
+    use blocksparse::blockopt::{self, cost, pareto};
+    let path = args.opt("cost-model").ok_or_else(|| {
+        anyhow!("recommend needs --cost-model <file.json> (see `blocksparse blockopt calibrate`)")
+    })?;
+    let model = cost::CostModel::load(std::path::Path::new(path))?;
+    let m = args.opt_usize("m", 0)?;
+    let n = args.opt_usize("n", 0)?;
+    if m == 0 || n == 0 {
+        bail!("recommend needs --m and --n");
+    }
+    let r = args.opt_usize("rank", 1)?;
+    if r == 0 {
+        bail!("--rank must be ≥ 1");
+    }
+    let nb = args.opt_usize("batch", model.batch)?;
+    let occ = args.opt_f64("occupancy", 0.25)?;
+    let budget_ms = budget_arg(args)?;
+    let blocks = blockopt::enumerate_blocks(m, n)?;
+    if blocks.is_empty() {
+        bail!("{m}x{n} has no non-trivial block sizes");
+    }
+    let mut points = Vec::with_capacity(blocks.len());
+    for (i, &(m2, n2)) in blocks.iter().enumerate() {
+        // the "retention" axis of the design-space front is the Eq. 5
+        // param compression ratio — higher is better, like retention
+        let compression =
+            (m * n) as f64 / blockopt::eq5_cost_r(m / m2, n / n2, m2, n2, r) as f64;
+        let lat = model.predict_ms(m, n, m2, n2, nb, occ)?;
+        points.push(pareto::Point { retention: compression, latency_ms: lat, index: i });
+    }
+    let front = pareto::pareto_front(&points);
+    let mut table = bench::TableWriter::new(
+        &format!("design-space front: {m}x{n} r={r} (batch {nb}, occupancy {occ:.2})"),
+        &["block", "params", "compression", "pred ms"],
+    );
+    for p in &front {
+        let (m2, n2) = blocks[p.index];
+        table.row(vec![
+            format!("{m2}x{n2}"),
+            blockopt::eq5_cost_r(m / m2, n / n2, m2, n2, r).to_string(),
+            format!("{:.2}x", p.retention),
+            format!("{:.4}", p.latency_ms),
+        ]);
+    }
+    table.print();
+    let rec = pareto::recommend(&front, budget_ms)
+        .ok_or_else(|| anyhow!("design-space front is empty — every point scored non-finite"))?;
+    let (m2, n2) = blocks[rec.index];
+    println!(
+        "recommended block size: {m2}x{n2} — {:.2}x param compression, predicted {:.3} ms",
+        rec.retention, rec.latency_ms
+    );
     Ok(())
 }
 

@@ -45,7 +45,7 @@ impl Gen {
 
     /// Pick a divisor of x uniformly.
     pub fn divisor_of(&mut self, x: usize) -> usize {
-        let ds = crate::blockopt::divisors(x);
+        let ds = crate::blockopt::divisors(x).expect("divisor_of wants x ≥ 1");
         ds[self.rng.below(ds.len())]
     }
 

@@ -1,0 +1,172 @@
+//! Block-size search (`blockopt`) integration tests: the ISSUE-9
+//! acceptance criteria, end-to-end on the native backend.
+//!
+//! * the cost-model artifact round-trips through a real file and prices
+//!   uncalibrated shapes through the nearest-area fallback;
+//! * one short joint pattern training run + a hand-built cost model that
+//!   makes the max-retention survivor the most expensive shape: the
+//!   unconstrained recommendation must equal the Figure-3 survivor, and a
+//!   tight latency budget must switch the recommendation to a strictly
+//!   cheaper shape — the subsystem's two headline behaviours, pinned.
+
+use blocksparse::backend::native::simd::{self, SimdKind};
+use blocksparse::backend::native::{NativeBackend, SpecConfig};
+use blocksparse::blockopt::cost::{shape_key, CostModel, ShapeModel, CALIB_GRID};
+use blocksparse::blockopt::pareto;
+use blocksparse::blockopt::sweep::{self, Measured};
+use blocksparse::config::{Config, TrainConfig};
+use blocksparse::coordinator::probe;
+
+/// All tests pin the scalar kernels (the pin is process-wide and every
+/// test pins the same kind, so concurrent test threads cannot race) —
+/// sweep measurements must not depend on the host's SIMD tier.
+fn backend() -> NativeBackend {
+    simd::force(SimdKind::Scalar);
+    NativeBackend::from_spec(SpecConfig::pattern(
+        "bo_pattern",
+        64,
+        8,
+        &[(2, 2), (2, 4), (2, 8), (2, 16)],
+        1,
+        32,
+    ))
+    .expect("bo_pattern spec is valid")
+}
+
+fn quick_cfg(steps: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::from_config(&Config::default(), "bo_pattern");
+    cfg.steps = steps;
+    cfg.seeds = vec![0];
+    cfg.eval_every = 0;
+    cfg.train_examples = 1024;
+    cfg.test_examples = 256;
+    blocksparse::backend::native::pattern::calibrate_lambda(&mut cfg, "native-cpu");
+    cfg
+}
+
+fn shape(m2: usize, n2: usize, a_ns: f64) -> ShapeModel {
+    ShapeModel { m2, n2, a_ns, c_ns: 50.0, points: vec![] }
+}
+
+fn model_of(shapes: Vec<ShapeModel>) -> CostModel {
+    CostModel {
+        simd: "scalar".into(),
+        grid: CALIB_GRID,
+        batch: 32,
+        entries: shapes.into_iter().map(|s| (shape_key(s.m2, s.n2), s)).collect(),
+    }
+}
+
+#[test]
+fn cost_model_file_round_trip_and_fallback_pricing() {
+    let _ = backend(); // pin SIMD like every other test in this binary
+    let m = model_of(vec![shape(2, 2, 2.0), shape(2, 16, 0.5)]);
+    let dir = std::env::temp_dir().join("bs_blockopt_itest");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cost_model.json");
+    m.save(&path).unwrap();
+    let back = CostModel::load(&path).unwrap();
+    assert_eq!(back, m);
+    // 2x4 (area 8) is uncalibrated: priced through the nearest-area
+    // entry (2x2, area 4) rather than failing the sweep
+    let priced = back.predict_ms(8, 64, 2, 4, 32, 0.5).unwrap();
+    assert!(priced > 0.0);
+    let exact = back.predict_ms(8, 64, 2, 2, 32, 0.5).unwrap();
+    assert!(exact > 0.0);
+}
+
+/// The acceptance run: measure once, then score the same measurement
+/// against a cost model rigged so the Figure-3 survivor is the most
+/// expensive candidate. Unconstrained → survivor wins; tight budget →
+/// the recommendation switches to a strictly cheaper block shape.
+#[test]
+fn sweep_matches_survivor_unconstrained_and_switches_under_budget() {
+    let be = backend();
+    let cfg = quick_cfg(150);
+    let nb = 32usize;
+    let measured = sweep::measure_candidates(&be, &cfg).unwrap();
+    assert_eq!(measured.len(), 4);
+    for m in &measured {
+        assert!(m.retention.is_finite() && m.retention >= 0.0, "retention {m:?}");
+        assert!((0.0..=1.0).contains(&m.occupancy), "occupancy {m:?}");
+        assert_eq!(m.slots, vec![(8, 64, m.m2, m.n2)]);
+    }
+    let rets: Vec<f64> = measured.iter().map(|m| m.retention).collect();
+    let survivor = probe::pattern_survivor(&rets);
+    let surv_shape = (measured[survivor].m2, measured[survivor].n2);
+
+    // the rigged model: the survivor's shape costs 500-1000× per MAC
+    let shapes: Vec<ShapeModel> = measured
+        .iter()
+        .map(|m| {
+            let a_ns = if (m.m2, m.n2) == surv_shape { 1000.0 } else { 2.0 };
+            shape(m.m2, m.n2, a_ns)
+        })
+        .collect();
+    let model = model_of(shapes);
+
+    let out = sweep::score(&measured, &model, nb, None).unwrap();
+    assert_eq!(out.survivor, survivor, "score must reuse the shared survivor criterion");
+    assert_eq!(
+        out.recommended, out.survivor,
+        "unconstrained, the front pick is the Figure-3 survivor"
+    );
+    // the front is sorted by latency and contains no dominated point
+    for w in out.front.windows(2) {
+        assert!(w[0].latency_ms < w[1].latency_ms);
+        assert!(w[0].retention < w[1].retention);
+    }
+    for a in &out.front {
+        for b in &out.front {
+            assert!(!pareto::dominates(b, a), "{b:?} dominates front member {a:?}");
+        }
+    }
+
+    // a budget that only admits the cheapest candidate forces the switch
+    let min_lat = out
+        .candidates
+        .iter()
+        .map(|c| c.pred_latency_ms)
+        .fold(f64::INFINITY, f64::min);
+    let surv_lat = out
+        .candidates
+        .iter()
+        .find(|c| c.pattern == out.survivor)
+        .unwrap()
+        .pred_latency_ms;
+    assert!(surv_lat > min_lat, "the rigged model must make the survivor expensive");
+    let tight = sweep::score(&measured, &model, nb, Some(min_lat)).unwrap();
+    assert_eq!(tight.survivor, survivor, "the budget must not change the survivor");
+    assert_ne!(tight.recommended, tight.survivor, "the budget must switch the pick");
+    let rec_lat = tight
+        .candidates
+        .iter()
+        .find(|c| c.pattern == tight.recommended)
+        .unwrap()
+        .pred_latency_ms;
+    assert!(rec_lat <= min_lat + 1e-12, "the pick must respect the budget");
+    assert!(rec_lat < surv_lat, "the pick must be strictly cheaper than the survivor");
+
+    // scoring is deterministic under a shuffled measurement order
+    let mut shuffled: Vec<Measured> = measured.clone();
+    shuffled.reverse();
+    assert_eq!(sweep::score(&shuffled, &model, nb, None).unwrap(), out);
+
+    // and the cost-aware blend interpolates between the two picks:
+    // alpha 0 is retention-only (the survivor), alpha 1 latency-only
+    let lats: Vec<f64> = out.candidates.iter().map(|c| c.pred_latency_ms).collect();
+    assert_eq!(probe::pattern_survivor_cost_aware(&rets, &lats, 0.0).unwrap(), survivor);
+    let cheapest = probe::pattern_survivor_cost_aware(&rets, &lats, 1.0).unwrap();
+    assert!((lats[cheapest] - min_lat).abs() < 1e-12);
+}
+
+/// `candidate_shapes` reads the spec's declared pattern grid in
+/// first-seen order — what both the CLI's in-process calibration and the
+/// bench calibrate against.
+#[test]
+fn candidate_shapes_come_from_the_spec_grid() {
+    let be = backend();
+    let spec = blocksparse::backend::Backend::spec(&be, "bo_pattern").unwrap().clone();
+    let shapes = sweep::candidate_shapes(&spec).unwrap();
+    assert_eq!(shapes, vec![(2, 2), (2, 4), (2, 8), (2, 16)]);
+}

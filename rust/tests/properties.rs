@@ -66,14 +66,16 @@ fn prop_eq5_bnb_is_optimal() {
     prop_check("eq5 optimal", 80, |g| {
         let m = g.usize_in(1, 300);
         let n = g.usize_in(1, 300);
-        let d = blockopt::optimal_block_r1(m, n);
-        let best = blockopt::optimal_block_r1_brute(m, n);
+        let r = g.usize_in(1, 4);
+        let d = blockopt::optimal_block(m, n, r).map_err(|e| e.to_string())?;
+        let best = blockopt::optimal_block_brute(m, n, r).map_err(|e| e.to_string())?;
         prop_assert!(
-            blockopt::eq5_cost(d.m1, d.n1, d.m2, d.n2) == best,
-            "bnb {} != brute {best} at ({m},{n})",
-            blockopt::eq5_cost(d.m1, d.n1, d.m2, d.n2)
+            blockopt::eq5_cost_r(d.m1, d.n1, d.m2, d.n2, r) == best,
+            "bnb {} != brute {best} at ({m},{n}) r={r}",
+            blockopt::eq5_cost_r(d.m1, d.n1, d.m2, d.n2, r)
         );
         prop_assert!(d.m1 * d.m2 == m && d.n1 * d.n2 == n, "factorization broken");
+        prop_assert!(d.r == r, "rank not carried through");
         Ok(())
     });
 }
