@@ -1,7 +1,7 @@
 //! Inference serving bench — the train→export→serve payoff, measured.
 //! Emits `BENCH_infer.json` (default; `--json <path>` overrides).
 //!
-//! Four panels, all fully native (never SKIP):
+//! Six panels, all fully native (never SKIP):
 //!
 //! 1. **kernels** — dense `matmul_nt` vs masked `block_sparse_matmul_nt`
 //!    vs packed BSR forward on the Table-2 fc1 shape (304×784, 8×16
@@ -19,19 +19,50 @@
 //! 4. **hotswap** — atomic model swaps under live traffic: swap cost
 //!    (one validate + `Arc` swap) and zero dropped requests across the
 //!    swaps.
+//! 5. **async** — the completion-slot request path: `drive_async` (one
+//!    driver thread, a bounded handle window) vs the blocking path at
+//!    equal in-flight load, plus a 4×-overload async run whose process
+//!    thread count is recorded (the tentpole claim: N in-flight requests
+//!    cost N queue slots, not N threads). Gate: async p99 within 1.25×
+//!    of blocking p99.
+//! 6. **int8** — per-block-row symmetric W8A32 quantization: q8 vs f32
+//!    BSR kernel throughput at 75% block sparsity and full-stack logit
+//!    MAE. Gate: speedup ≥ 1.5× where SIMD int8 kernels exist (waived on
+//!    scalar hosts — recorded, not asserted); the MAE bound always holds.
 
 use std::collections::BTreeMap;
 
 use blocksparse::backend::native::{linalg, simd};
 use blocksparse::bench::{json_arg, quick_bench, BenchStats, TableWriter};
-use blocksparse::infer::engine::{drive_synthetic, latency_summary, Engine, EngineOpts};
-use blocksparse::infer::{bsr, synth_block_sparse_weights, BsrLayer, BsrModel};
+use blocksparse::infer::engine::{
+    drive_async, drive_synthetic, latency_summary, Engine, EngineOpts,
+};
+use blocksparse::infer::{bsr, quant, synth_block_sparse_weights, BsrLayer, BsrModel};
 use blocksparse::util::json::Json;
 use blocksparse::util::rng::Rng;
 use blocksparse::util::Stopwatch;
 
 fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
     (0..n).map(|_| rng.normal()).collect()
+}
+
+/// Live thread count of this process (`/proc/self/status` `Threads:`),
+/// `None` off Linux — the async panel records it to pin the "N in-flight
+/// requests ≠ N threads" claim.
+#[cfg(target_os = "linux")]
+fn proc_thread_count() -> Option<usize> {
+    let s = std::fs::read_to_string("/proc/self/status").ok()?;
+    s.lines()
+        .find(|l| l.starts_with("Threads:"))?
+        .split_whitespace()
+        .nth(1)?
+        .parse()
+        .ok()
+}
+
+#[cfg(not(target_os = "linux"))]
+fn proc_thread_count() -> Option<usize> {
+    None
 }
 
 fn max_diff(a: &[f32], b: &[f32]) -> f32 {
@@ -282,6 +313,138 @@ fn main() -> anyhow::Result<()> {
         Json::Num((h_requests - h_lat.len()) as f64),
     );
 
+    // panels 3/4 engines are done — drop them so the async panel's
+    // process thread count measures only its own engine
+    drop(o_engine);
+    drop(h_engine);
+
+    // ---- panel 5: completion-slot async path ----------------------------
+    // equal in-flight load: 16 blocking client threads vs one driver
+    // thread holding 16 handles, same engine sizing, same request count
+    let (a_requests, a_window) = (512usize, 16usize);
+    let b_engine = Engine::new(
+        model.clone(),
+        EngineOpts { max_batch: 8, workers: 4, queue_depth: 1024 },
+    )?;
+    let sw = Stopwatch::start();
+    let b_lat = drive_synthetic(&b_engine, a_requests, a_window, 0xA11)?;
+    let b_wall = sw.elapsed_secs();
+    let b_sum = latency_summary(&b_lat);
+    drop(b_engine);
+    let a_engine = Engine::new(
+        model.clone(),
+        EngineOpts { max_batch: 8, workers: 4, queue_depth: 1024 },
+    )?;
+    let sw = Stopwatch::start();
+    let a_rep = drive_async(&a_engine, a_requests, a_window, 0xA11)?;
+    let a_wall = sw.elapsed_secs();
+    let a_sum = latency_summary(&a_rep.accepted_lat_ms);
+    assert_eq!(a_rep.shed, 0, "equal-load async run must not shed (bound 1024)");
+    assert_eq!(a_rep.accepted, a_requests, "async run lost a request");
+    drop(a_engine);
+    // 4×-overload through one driver thread: same load shape as panel 3's
+    // 56 client threads, at zero extra threads — record the process
+    // thread count mid-drive conditions to prove it
+    let ao_engine = Engine::new(
+        model.clone(),
+        EngineOpts { max_batch: o_batch, workers: o_workers, queue_depth: o_depth },
+    )?;
+    let ao_window = 4 * ao_engine.capacity();
+    let ao_rep = drive_async(&ao_engine, 32 * ao_engine.capacity(), ao_window, 0xA12)?;
+    let ao_threads = proc_thread_count();
+    assert_eq!(ao_rep.accepted + ao_rep.shed, ao_rep.offered, "async requests unaccounted");
+    drop(ao_engine);
+    let p99_ratio = a_sum.p99_ms / b_sum.p99_ms;
+    println!(
+        "async: {} requests, window {a_window} — p99 {:.3} ms vs blocking {:.3} ms \
+         ({p99_ratio:.2}x), {:.0} vs {:.0} req/s; 4x-overload window {ao_window}: \
+         {:.1}% shed, {} process threads",
+        a_rep.offered,
+        a_sum.p99_ms,
+        b_sum.p99_ms,
+        a_rep.accepted as f64 / a_wall.max(1e-9),
+        a_requests as f64 / b_wall.max(1e-9),
+        100.0 * ao_rep.shed_rate(),
+        ao_threads.map(|t| t.to_string()).unwrap_or_else(|| "?".to_string()),
+    );
+    let mut async_panel = BTreeMap::new();
+    async_panel.insert("requests".to_string(), Json::Num(a_requests as f64));
+    async_panel.insert("window".to_string(), Json::Num(a_window as f64));
+    async_panel.insert("async_p50_ms".to_string(), Json::num_or_null(a_sum.p50_ms));
+    async_panel.insert("async_p99_ms".to_string(), Json::num_or_null(a_sum.p99_ms));
+    async_panel.insert("blocking_p50_ms".to_string(), Json::num_or_null(b_sum.p50_ms));
+    async_panel.insert("blocking_p99_ms".to_string(), Json::num_or_null(b_sum.p99_ms));
+    async_panel.insert(
+        "async_throughput_rps".to_string(),
+        Json::Num(a_rep.accepted as f64 / a_wall.max(1e-9)),
+    );
+    async_panel.insert(
+        "blocking_throughput_rps".to_string(),
+        Json::Num(a_requests as f64 / b_wall.max(1e-9)),
+    );
+    async_panel.insert("overload_window".to_string(), Json::Num(ao_window as f64));
+    async_panel.insert("overload_offered".to_string(), Json::Num(ao_rep.offered as f64));
+    async_panel.insert("overload_accepted".to_string(), Json::Num(ao_rep.accepted as f64));
+    async_panel.insert("overload_shed_rate".to_string(), Json::Num(ao_rep.shed_rate()));
+    async_panel.insert(
+        "overload_threads".to_string(),
+        ao_threads.map(|t| Json::Num(t as f64)).unwrap_or(Json::Null),
+    );
+    gate.insert("async_p99_ratio".to_string(), Json::num_or_null(p99_ratio));
+    gate.insert(
+        "async_overload_threads".to_string(),
+        ao_threads.map(|t| Json::Num(t as f64)).unwrap_or(Json::Null),
+    );
+
+    // ---- panel 6: int8-quantized BSR ------------------------------------
+    let qmodel = quant::quantize_model(&model)?;
+    let f32_fc1 = &model.layers[0]; // 304×784, 8×16 blocks, 75% sparse
+    let q_fc1 = quant::quantize_layer(f32_fc1);
+    // fidelity before timing: full-stack logits, f32 vs int8
+    let xm = rand_vec(&mut rng, 64 * 784);
+    let zf = bsr::model_forward(&model, &xm, 64)?;
+    let zq = quant::model_forward_q8(&qmodel, &xm, 64)?;
+    let mae = zf.iter().zip(&zq).map(|(a, b)| (a - b).abs() as f64).sum::<f64>()
+        / zf.len() as f64;
+    let rms = (zf.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>() / zf.len() as f64)
+        .sqrt();
+    let mae_bound = 0.05 * rms + 1e-3;
+    assert!(
+        mae <= mae_bound,
+        "int8 logits drifted: MAE {mae:.5} > bound {mae_bound:.5} (rms {rms:.4})"
+    );
+    let xq = rand_vec(&mut rng, nb * 784);
+    let f32_t = quick_bench("infer.bsr_f32.sp75", || {
+        std::hint::black_box(bsr::bsr_forward(&xq, nb, f32_fc1).expect("f32 shapes"));
+    });
+    let q8_t = quick_bench("infer.bsr_int8.sp75", || {
+        std::hint::black_box(quant::q8_forward(&xq, nb, &q_fc1).expect("q8 shapes"));
+    });
+    let int8_speedup = f32_t.mean_ns / q8_t.mean_ns;
+    // the ≥1.5× claim is about the SIMD int8 microkernels; a scalar host
+    // has no vector int8 path to beat f32 with, so the gate is recorded
+    // as waived there instead of failing the bench
+    let int8_waived = simd::dispatched().label() == "scalar";
+    println!(
+        "int8: {int8_speedup:.2}x f32 BSR at 75% block sparsity \
+         (f32 {:.3} ms, int8 {:.3} ms), logit MAE {mae:.5} ≤ {mae_bound:.5}{}",
+        f32_t.mean_ns / 1e6,
+        q8_t.mean_ns / 1e6,
+        if int8_waived { " [speedup gate waived: scalar SIMD]" } else { "" },
+    );
+    let mut int8 = BTreeMap::new();
+    int8.insert("f32".to_string(), stat_obj(&f32_t));
+    int8.insert("int8".to_string(), stat_obj(&q8_t));
+    int8.insert("speedup".to_string(), Json::Num(int8_speedup));
+    int8.insert("logit_mae".to_string(), Json::num_or_null(mae));
+    int8.insert("logit_rms".to_string(), Json::num_or_null(rms));
+    int8.insert("mae_bound".to_string(), Json::num_or_null(mae_bound));
+    int8.insert("waived".to_string(), Json::Bool(int8_waived));
+    gate.insert("int8_speedup".to_string(), Json::Num(int8_speedup));
+    gate.insert("int8_logit_mae".to_string(), Json::num_or_null(mae));
+    gate.insert("int8_mae_bound".to_string(), Json::num_or_null(mae_bound));
+    gate.insert("int8_gate_waived".to_string(), Json::Bool(int8_waived));
+
     let mut root = BTreeMap::new();
     root.insert("backend".to_string(), Json::Str("native-cpu".to_string()));
     root.insert(
@@ -292,6 +455,8 @@ fn main() -> anyhow::Result<()> {
     root.insert("serve".to_string(), Json::Obj(serve));
     root.insert("overload".to_string(), Json::Obj(overload));
     root.insert("hotswap".to_string(), Json::Obj(hotswap));
+    root.insert("async".to_string(), Json::Obj(async_panel));
+    root.insert("int8".to_string(), Json::Obj(int8));
     root.insert("gate".to_string(), Json::Obj(gate));
     // this bench always writes its JSON — an absent flag means the default
     let path = json_arg(&args, "BENCH_infer.json")

@@ -1,9 +1,10 @@
 //! Runtime-dispatched SIMD microkernels: the one place in the crate that
 //! touches `std::arch`.
 //!
-//! Every matmul-family kernel (`linalg`, `kpd`, `infer::bsr`) is written
-//! against four tiny primitives — [`dot`], [`dot4`], [`axpy`], [`axpy2`] —
-//! each taking an explicit [`SimdKind`]. The kind is resolved **once per
+//! Every matmul-family kernel (`linalg`, `kpd`, `infer::bsr`,
+//! `infer::quant`) is written against a handful of tiny primitives —
+//! [`dot`], [`dot4`], [`axpy`], [`axpy2`], and the int8-weight
+//! [`dot_q8`] — each taking an explicit [`SimdKind`]. The kind is resolved **once per
 //! kernel call** on the calling thread (see [`active`]) and captured into
 //! the row closures, so every worker thread of a `par_rows` split runs the
 //! same code path and each output element's accumulation order depends
@@ -129,6 +130,14 @@ fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
     acc
 }
 
+fn dot_q8_scalar(q: &[i8], x: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (qv, xv) in q.iter().zip(x) {
+        acc += *qv as f32 * xv;
+    }
+    acc
+}
+
 fn axpy_scalar(alpha: f32, x: &[f32], y: &mut [f32]) {
     for (o, &xv) in y.iter_mut().zip(x) {
         *o += alpha * xv;
@@ -153,6 +162,23 @@ pub fn dot(kind: SimdKind, a: &[f32], b: &[f32]) -> f32 {
         #[cfg(target_arch = "aarch64")]
         SimdKind::Neon => unsafe { arm::dot(a, b) },
         _ => dot_scalar(a, b),
+    }
+}
+
+/// acc = Σ qᵢ·xᵢ with i8 weights widened to f32 in-register before the
+/// FMA — the W8A32 inner product of the int8 BSR path (`infer::quant`).
+/// Accumulation is f32 with the same fixed lane/tail structure as
+/// [`dot`], so a given (kind, length) pair is bit-deterministic and the
+/// only difference from an f32 dot over dequantized weights is which
+/// side pays the widening.
+pub fn dot_q8(kind: SimdKind, q: &[i8], x: &[f32]) -> f32 {
+    debug_assert_eq!(q.len(), x.len());
+    match kind {
+        #[cfg(target_arch = "x86_64")]
+        SimdKind::Avx2 => unsafe { x86::dot_q8(q, x) },
+        #[cfg(target_arch = "aarch64")]
+        SimdKind::Neon => unsafe { arm::dot_q8(q, x) },
+        _ => dot_q8_scalar(q, x),
     }
 }
 
@@ -243,6 +269,42 @@ mod x86 {
         let mut out = hsum(_mm256_add_ps(acc0, acc1));
         while i < n {
             out += a[i] * b[i];
+            i += 1;
+        }
+        out
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot_q8(q: &[i8], x: &[f32]) -> f32 {
+        let n = q.len();
+        let (qp, xp) = (q.as_ptr(), x.as_ptr());
+        // widen 8 i8 → 8 i32 → 8 f32 per lane group; two accumulators
+        // combined in a fixed order, scalar tail — same determinism
+        // structure as `dot`
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let q0 = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(_mm_loadl_epi64(
+                qp.add(i) as *const __m128i
+            )));
+            let q1 = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(_mm_loadl_epi64(
+                qp.add(i + 8) as *const __m128i
+            )));
+            acc0 = _mm256_fmadd_ps(q0, _mm256_loadu_ps(xp.add(i)), acc0);
+            acc1 = _mm256_fmadd_ps(q1, _mm256_loadu_ps(xp.add(i + 8)), acc1);
+            i += 16;
+        }
+        if i + 8 <= n {
+            let q0 = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(_mm_loadl_epi64(
+                qp.add(i) as *const __m128i
+            )));
+            acc0 = _mm256_fmadd_ps(q0, _mm256_loadu_ps(xp.add(i)), acc0);
+            i += 8;
+        }
+        let mut out = hsum(_mm256_add_ps(acc0, acc1));
+        while i < n {
+            out += q[i] as f32 * x[i];
             i += 1;
         }
         out
@@ -350,6 +412,30 @@ mod arm {
     }
 
     #[target_feature(enable = "neon")]
+    pub unsafe fn dot_q8(q: &[i8], x: &[f32]) -> f32 {
+        let n = q.len();
+        let (qp, xp) = (q.as_ptr(), x.as_ptr());
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            // 8 i8 → 8 i16 → 2×4 i32 → 2×4 f32
+            let q16 = vmovl_s8(vld1_s8(qp.add(i)));
+            let lo = vcvtq_f32_s32(vmovl_s16(vget_low_s16(q16)));
+            let hi = vcvtq_f32_s32(vmovl_s16(vget_high_s16(q16)));
+            acc0 = vfmaq_f32(acc0, lo, vld1q_f32(xp.add(i)));
+            acc1 = vfmaq_f32(acc1, hi, vld1q_f32(xp.add(i + 4)));
+            i += 8;
+        }
+        let mut out = vaddvq_f32(vaddq_f32(acc0, acc1));
+        while i < n {
+            out += q[i] as f32 * x[i];
+            i += 1;
+        }
+        out
+    }
+
+    #[target_feature(enable = "neon")]
     pub unsafe fn dot4(a: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> [f32; 4] {
         let n = a.len();
         let ap = a.as_ptr();
@@ -450,6 +536,16 @@ mod tests {
                     "{k:?} dot len {len}: {got} vs {want}"
                 );
             }
+            // dot_q8 against an f64 reference over the widened weights
+            let q: Vec<i8> = (0..len).map(|_| (rng.normal() * 40.0) as i8).collect();
+            let want_q: f64 = q.iter().zip(&b).map(|(qv, x)| *qv as f64 * *x as f64).sum();
+            for &k in &kinds {
+                let got = dot_q8(k, &q, &b);
+                assert!(
+                    close(got, want_q as f32, 1e-5),
+                    "{k:?} dot_q8 len {len}: {got} vs {want_q}"
+                );
+            }
             // dot4 against four independent dots
             let (b0, b1, b2, b3) = (
                 rand_vec(&mut rng, len),
@@ -493,10 +589,13 @@ mod tests {
         let mut rng = Rng::new(72);
         let a = rand_vec(&mut rng, 133);
         let b = rand_vec(&mut rng, 133);
+        let q: Vec<i8> = (0..133).map(|i| ((i * 37) % 255) as i8).collect();
         for &k in &[SimdKind::Scalar, detect()] {
             let first = dot(k, &a, &b);
+            let first_q = dot_q8(k, &q, &b);
             for _ in 0..5 {
                 assert_eq!(first.to_bits(), dot(k, &a, &b).to_bits(), "{k:?}");
+                assert_eq!(first_q.to_bits(), dot_q8(k, &q, &b).to_bits(), "{k:?} q8");
             }
         }
     }

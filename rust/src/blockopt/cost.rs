@@ -32,7 +32,14 @@ use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 pub const COST_MODEL_MAGIC: &str = "BSCM";
-pub const COST_MODEL_VERSION: usize = 1;
+/// v2 adds the `dtype` field ("f32" / "int8"): the kernel calibrated is
+/// part of the measurement conditions — int8 per-MAC costs differ from
+/// f32 and must not silently price an f32 sweep (or vice versa). v1
+/// artifacts still load and mean dtype "f32" (the only kernel v1 had).
+pub const COST_MODEL_VERSION: usize = 2;
+
+/// Payload dtypes [`calibrate_dtype`] accepts.
+pub const COST_MODEL_DTYPES: [&str; 2] = ["f32", "int8"];
 
 /// Calibration macro-layers are (m2·CALIB_GRID) × (n2·CALIB_GRID): the
 /// same 16×16 block grid for every shape, so per-shape measurements span
@@ -78,12 +85,15 @@ pub struct ShapeModel {
 }
 
 /// The full calibrated model: per-shape fits plus the conditions they
-/// were measured under (SIMD kind, grid, batch), so a prediction made
-/// from a stale or foreign artifact is at least attributable.
+/// were measured under (SIMD kind, payload dtype, grid, batch), so a
+/// prediction made from a stale or foreign artifact is at least
+/// attributable.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CostModel {
     /// SIMD kind active during calibration (`scalar`/`avx2`/`neon`)
     pub simd: String,
+    /// payload dtype the timed kernel ran on (`f32`/`int8`)
+    pub dtype: String,
     pub grid: usize,
     /// batch size the calibration forwards ran at
     pub batch: usize,
@@ -115,10 +125,26 @@ fn fit(points: &[CalibPoint]) -> (f64, f64) {
 }
 
 /// Measure and fit every shape in `shapes` at every occupancy in
-/// `occupancies`, batch `nb`. Duplicate shapes are measured once. Weights
-/// and inputs are seeded per shape, so calibration is reproducible on a
-/// given host.
+/// `occupancies`, batch `nb`, on the f32 kernel. Duplicate shapes are
+/// measured once. Weights and inputs are seeded per shape, so calibration
+/// is reproducible on a given host.
 pub fn calibrate(shapes: &[(usize, usize)], occupancies: &[f64], nb: usize) -> Result<CostModel> {
+    calibrate_dtype(shapes, occupancies, nb, "f32")
+}
+
+/// [`calibrate`] with an explicit payload dtype: `"f32"` times the
+/// `bsr` forward, `"int8"` quantizes each synthetic layer and times the
+/// W8A32 forward — the two kernels have genuinely different per-MAC
+/// costs, so a sweep pricing int8 serving needs its own fits.
+pub fn calibrate_dtype(
+    shapes: &[(usize, usize)],
+    occupancies: &[f64],
+    nb: usize,
+    dtype: &str,
+) -> Result<CostModel> {
+    if !COST_MODEL_DTYPES.contains(&dtype) {
+        bail!("unsupported calibration dtype '{dtype}' (have: {COST_MODEL_DTYPES:?})");
+    }
     if shapes.is_empty() {
         bail!("calibration wants at least one block shape");
     }
@@ -147,8 +173,14 @@ pub fn calibrate(shapes: &[(usize, usize)], occupancies: &[f64], nb: usize) -> R
             }
             let (w, _) = synth_block_sparse_weights(&mut rng, m, n, m2, n2, occ);
             let layer = BsrLayer::from_dense("calib", &w, m, n, m2, n2)?;
-            let stats = bsr::time_layer(&x, nb, &layer)
-                .with_context(|| format!("calibrating shape {key}"))?;
+            let stats = if dtype == "int8" {
+                let qlayer = crate::infer::quant::quantize_layer(&layer);
+                crate::infer::quant::time_layer_q8(&x, nb, &qlayer)
+                    .with_context(|| format!("calibrating shape {key} (int8)"))?
+            } else {
+                bsr::time_layer(&x, nb, &layer)
+                    .with_context(|| format!("calibrating shape {key}"))?
+            };
             points.push(CalibPoint {
                 occupancy: occ,
                 nnz_blocks: layer.nnz_blocks(),
@@ -163,6 +195,7 @@ pub fn calibrate(shapes: &[(usize, usize)], occupancies: &[f64], nb: usize) -> R
     }
     Ok(CostModel {
         simd: simd::active().label().to_string(),
+        dtype: dtype.to_string(),
         grid: CALIB_GRID,
         batch: nb,
         entries,
@@ -258,6 +291,7 @@ impl CostModel {
         root.insert("magic".into(), Json::Str(COST_MODEL_MAGIC.into()));
         root.insert("version".into(), Json::Num(COST_MODEL_VERSION as f64));
         root.insert("simd".into(), Json::Str(self.simd.clone()));
+        root.insert("dtype".into(), Json::Str(self.dtype.clone()));
         root.insert("grid".into(), Json::Num(self.grid as f64));
         root.insert("batch".into(), Json::Num(self.batch as f64));
         root.insert("entries".into(), Json::Obj(entries));
@@ -273,10 +307,20 @@ impl CostModel {
             bail!("not a {COST_MODEL_MAGIC} cost model (magic '{magic}')");
         }
         let version = j.req_usize("version")?;
-        if version != COST_MODEL_VERSION {
+        if version == 0 || version > COST_MODEL_VERSION {
             bail!("unsupported cost model version {version}");
         }
         let simd = j.req_str("simd")?.to_string();
+        // v1 predates the dtype field: every v1 fit timed the f32 kernel
+        let dtype = if version >= 2 {
+            let d = j.req_str("dtype")?.to_string();
+            if !COST_MODEL_DTYPES.contains(&d.as_str()) {
+                bail!("unsupported cost model dtype '{d}'");
+            }
+            d
+        } else {
+            "f32".to_string()
+        };
         let grid = j.req_usize("grid")?;
         let batch = j.req_usize("batch")?;
         let raw = j
@@ -311,7 +355,7 @@ impl CostModel {
             }
             entries.insert(k.clone(), ShapeModel { m2, n2, a_ns, c_ns, points });
         }
-        Ok(CostModel { simd, grid, batch, entries })
+        Ok(CostModel { simd, dtype, grid, batch, entries })
     }
 
     /// Atomic publish: full write + fsync to a dot-prefixed temp sibling,
@@ -371,6 +415,7 @@ mod tests {
     fn model(shapes: Vec<ShapeModel>) -> CostModel {
         CostModel {
             simd: "scalar".into(),
+            dtype: "f32".into(),
             grid: CALIB_GRID,
             batch: 8,
             entries: shapes.into_iter().map(|s| (shape_key(s.m2, s.n2), s)).collect(),
@@ -405,6 +450,23 @@ mod tests {
         assert_eq!(back, m);
     }
 
+    /// v1 artifacts (no dtype field) still load and mean dtype "f32" —
+    /// a calibration run from before the version bump stays usable.
+    #[test]
+    fn v1_artifacts_load_as_f32() {
+        let m = model(vec![shape(2, 4, 1.25, 80.0)]);
+        let v1 = m
+            .to_json()
+            .to_string_pretty()
+            .replace("\"version\": 2", "\"version\": 1")
+            .replace("\"dtype\": \"f32\",\n", "")
+            .replace("\"dtype\": \"f32\",", "");
+        assert!(!v1.contains("dtype"), "v1 fixture must not carry the field: {v1}");
+        let back = CostModel::from_json(&Json::parse(&v1).unwrap()).unwrap();
+        assert_eq!(back.dtype, "f32");
+        assert_eq!(back.entries, m.entries);
+    }
+
     #[test]
     fn save_load_round_trip_and_rejection() {
         let m = model(vec![shape(2, 4, 1.25, 80.0)]);
@@ -426,10 +488,16 @@ mod tests {
             .unwrap_err();
         assert!(format!("{err:#}").contains("not a BSCM"), "{err:#}");
         let err = CostModel::from_json(
-            &Json::parse(&good.replace("\"version\": 1", "\"version\": 2")).unwrap(),
+            &Json::parse(&good.replace("\"version\": 2", "\"version\": 3")).unwrap(),
         )
         .unwrap_err();
         assert!(format!("{err:#}").contains("version"), "{err:#}");
+        // a foreign dtype is rejected, not silently priced as f32
+        let err = CostModel::from_json(
+            &Json::parse(&good.replace("\"dtype\": \"f32\"", "\"dtype\": \"fp4\"")).unwrap(),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("dtype"), "{err:#}");
         // a corrupted entry key is caught by the shape cross-check
         let err = CostModel::from_json(&Json::parse(&good.replace("\"2x4\"", "\"3x4\"")).unwrap())
             .unwrap_err();
@@ -449,6 +517,7 @@ mod tests {
         assert_eq!(m.entry_for(4, 8).unwrap().a_ns, 0.5);
         let empty = CostModel {
             simd: "scalar".into(),
+            dtype: "f32".into(),
             grid: CALIB_GRID,
             batch: 8,
             entries: BTreeMap::new(),
@@ -480,6 +549,7 @@ mod tests {
     fn calibrate_smoke_fits_a_real_shape() {
         // one shape × one occupancy: a single ~300 ms quick_bench
         let m = calibrate(&[(2, 4), (2, 4)], &[0.5], 8).unwrap();
+        assert_eq!(m.dtype, "f32");
         assert_eq!(m.entries.len(), 1, "duplicate shapes must be measured once");
         let e = &m.entries[&shape_key(2, 4)];
         assert_eq!((e.m2, e.n2), (2, 4));
@@ -493,5 +563,19 @@ mod tests {
         assert!(calibrate(&[(2, 4)], &[1.5], 8).is_err());
         assert!(calibrate(&[(0, 4)], &[0.5], 8).is_err());
         assert!(calibrate(&[(2, 4)], &[0.5], 0).is_err());
+    }
+
+    #[test]
+    fn calibrate_int8_times_the_quantized_kernel() {
+        let m = calibrate_dtype(&[(2, 4)], &[0.5], 8, "int8").unwrap();
+        assert_eq!(m.dtype, "int8");
+        let e = &m.entries[&shape_key(2, 4)];
+        assert!(e.points[0].p50_ns > 0.0);
+        assert!(m.predict_ns(8, 16, 2, 4, 8, 0.5).unwrap() > 0.0);
+        // int8 fits survive the artifact round trip with their dtype
+        let back =
+            CostModel::from_json(&Json::parse(&m.to_json().to_string_pretty()).unwrap()).unwrap();
+        assert_eq!(back.dtype, "int8");
+        assert!(calibrate_dtype(&[(2, 4)], &[0.5], 8, "fp4").is_err());
     }
 }

@@ -258,7 +258,7 @@ mod tests {
         let mut entries = BTreeMap::new();
         entries.insert(shape_key(2, 2), mk(2, 2, 2.0));
         entries.insert(shape_key(2, 8), mk(2, 8, 0.5));
-        CostModel { simd: "scalar".into(), grid: CALIB_GRID, batch: 1, entries }
+        CostModel { simd: "scalar".into(), dtype: "f32".into(), grid: CALIB_GRID, batch: 1, entries }
     }
 
     fn measured(pattern: usize, m2: usize, n2: usize, retention: f64, occupancy: f64) -> Measured {

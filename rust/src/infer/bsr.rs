@@ -302,7 +302,8 @@ mod tests {
 
         // block payload length out of sync with the index
         let mut bad = good.clone();
-        bad.blocks.truncate(bad.blocks.len() - 1);
+        let cut = bad.blocks.len() - 1;
+        bad.blocks.to_mut().truncate(cut);
         assert!(bsr_forward(&x, 2, &bad).is_err());
     }
 

@@ -1,29 +1,43 @@
-//! Batched serving engine v2: bounded admission, dynamic micro-batching,
-//! typed load-shed, and atomic hot-swap.
+//! Batched serving engine v3: bounded admission, dynamic micro-batching,
+//! typed load-shed, atomic hot-swap — and a completion-slot async request
+//! path.
 //!
-//! Clients call [`Engine::predict`] (blocking). Admission is **bounded**:
-//! the request queue holds at most `queue_depth` requests, and a predict
-//! arriving at a full queue fails fast with the typed
-//! [`EngineError::Overloaded`] instead of queueing forever — under
-//! sustained overload the backlog (and client-visible latency) is capped
-//! by configuration, and the excess is shed at the door where the client
-//! can retry elsewhere. A dispatcher thread drains admitted requests into
-//! micro-batches — whatever is waiting, capped at `max_batch`, with no
-//! artificial fill delay — and submits each batch to a
-//! `util::pool::ThreadPool`, keeping at most one batch in flight per pool
-//! worker. Under light load a request rides alone (lowest latency); under
-//! sustained load the in-flight bound makes the backlog accumulate while
-//! workers are busy, so later batches genuinely fill toward `max_batch`
-//! (highest throughput).
+//! Clients call [`Engine::predict_async`], which admits the request and
+//! returns a [`PredictionHandle`] immediately: a completion-based future
+//! backed by a slot the executing micro-batch fills. The handle polls
+//! without a condvar ([`PredictionHandle::is_ready`] /
+//! [`PredictionHandle::try_take`] are one atomic load) and
+//! [`PredictionHandle::wait`] parks the calling thread only if the result
+//! is not in yet (batch completion unparks it) — so **N in-flight
+//! requests cost N queue slots, not N parked OS threads**: one driver
+//! thread can keep hundreds of requests in flight while the process runs
+//! `workers + constant` threads total. The blocking [`Engine::predict`]
+//! is a thin `predict_async(x)?.wait()` wrapper.
 //!
-//! Failures propagate: a micro-batch whose forward errors sends the
-//! root-cause message to **every** waiter as
-//! [`EngineError::BatchFailed`] — no dropped senders, no fabricated
-//! guess at the cause.
+//! Admission is **bounded**: the request queue holds at most
+//! `queue_depth` requests, and a request arriving at a full queue fails
+//! fast with the typed [`EngineError::Overloaded`] instead of queueing
+//! forever — under sustained overload the backlog (and client-visible
+//! latency) is capped by configuration, and the excess is shed at the
+//! door where the client can retry elsewhere. A dispatcher thread drains
+//! admitted requests into micro-batches — whatever is waiting, capped at
+//! `max_batch`, with no artificial fill delay — and submits each batch to
+//! a `util::pool::ThreadPool`, keeping at most one batch in flight per
+//! pool worker. Under light load a request rides alone (lowest latency);
+//! under sustained load the in-flight bound makes the backlog accumulate
+//! while workers are busy, so later batches genuinely fill toward
+//! `max_batch` (highest throughput).
 //!
-//! Models hot-swap atomically ([`Engine::swap_model`]): the replacement
-//! is installed with a single `Arc` pointer swap, new micro-batches route
-//! to it immediately, and batches already formed finish on the model they
+//! Failures propagate: a micro-batch whose forward errors completes
+//! **every** waiter's slot with the root-cause message as
+//! [`EngineError::BatchFailed`] — no abandoned slots, no fabricated guess
+//! at the cause. Every admitted slot is completed exactly once: by its
+//! batch, or by the shutdown drain.
+//!
+//! Models hot-swap atomically ([`Engine::swap_model`]): the replacement —
+//! any [`ServedModel`], f32 or int8, the engine is dtype-agnostic — is
+//! installed with a single `Arc` pointer swap, new micro-batches route to
+//! it immediately, and batches already formed finish on the model they
 //! started with — one request never mixes logits from two models. Each
 //! [`Prediction`] carries the `generation` that served it. The on-disk
 //! half of the same discipline is `BsrModel::save`'s write-then-rename
@@ -36,14 +50,15 @@
 
 use std::collections::VecDeque;
 use std::fmt;
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use crate::util::pool::ThreadPool;
 
-use super::{bsr, BsrModel};
+use super::{bsr, ServedModel};
 
 /// Typed serving errors — [`Engine::predict`]'s error type. Implements
 /// `std::error::Error`, so `?` converts it into `anyhow::Error` at call
@@ -102,16 +117,123 @@ pub struct Prediction {
     pub generation: u64,
 }
 
+// ------------------------------------------------------- completion slots
+
+/// Who to wake when a slot completes. `Thread` is a parked
+/// [`PredictionHandle::wait`] caller; `None` means the owner is polling
+/// (or has not started waiting yet) — completion just publishes the
+/// result.
+enum Waiter {
+    None,
+    Thread(std::thread::Thread),
+}
+
+struct SlotState {
+    result: Option<Result<Prediction, EngineError>>,
+    waiter: Waiter,
+}
+
+/// One request's completion slot. The executing micro-batch (or the
+/// shutdown drain) fills it exactly once; the [`PredictionHandle`] side
+/// polls `ready` lock-free and only touches the mutex to take the result
+/// or to register itself for a wakeup.
+struct Slot {
+    /// Acquire/Release flag mirroring `result.is_some()`: set *after* the
+    /// result is stored, so a handle that observes `ready == true` is
+    /// guaranteed to find the result under the lock.
+    ready: AtomicBool,
+    inner: Mutex<SlotState>,
+}
+
+impl Slot {
+    fn new() -> Arc<Slot> {
+        Arc::new(Slot {
+            ready: AtomicBool::new(false),
+            inner: Mutex::new(SlotState { result: None, waiter: Waiter::None }),
+        })
+    }
+
+    /// Publish the result and wake the waiter, if one is parked. Called
+    /// exactly once per slot.
+    fn complete(&self, res: Result<Prediction, EngineError>) {
+        let waiter = {
+            let mut st = self.inner.lock().unwrap();
+            debug_assert!(st.result.is_none(), "slot completed twice");
+            st.result = Some(res);
+            std::mem::replace(&mut st.waiter, Waiter::None)
+        };
+        // ready flips only after the result is in place (Release pairs
+        // with the Acquire load in is_ready/try_take)
+        self.ready.store(true, Ordering::Release);
+        if let Waiter::Thread(t) = waiter {
+            t.unpark();
+        }
+    }
+}
+
+/// A completion-based future for one admitted request — what
+/// [`Engine::predict_async`] returns. Holding a handle costs one queue
+/// slot and **zero threads**: poll it ([`PredictionHandle::is_ready`] /
+/// [`PredictionHandle::try_take`]) from any loop, or park this thread on
+/// it ([`PredictionHandle::wait`]). Dropping the handle abandons the
+/// response (the request still executes and is counted; nothing leaks
+/// and the batch never notices).
+pub struct PredictionHandle {
+    slot: Arc<Slot>,
+}
+
+impl PredictionHandle {
+    /// Whether the result is in — one atomic load, no lock, no syscall.
+    pub fn is_ready(&self) -> bool {
+        self.slot.ready.load(Ordering::Acquire)
+    }
+
+    /// Take the result if it is in (`None` = still in flight). After the
+    /// first `Some`, subsequent calls return `None` — the result moves
+    /// out exactly once.
+    pub fn try_take(&mut self) -> Option<Result<Prediction, EngineError>> {
+        if !self.is_ready() {
+            return None;
+        }
+        self.slot.inner.lock().unwrap().result.take()
+    }
+
+    /// Block until the result is in: park this thread, let the completing
+    /// micro-batch unpark it. Consumes the handle — the blocking
+    /// [`Engine::predict`] is exactly `predict_async(x)?.wait()`.
+    pub fn wait(mut self) -> Result<Prediction, EngineError> {
+        loop {
+            if let Some(res) = self.try_take() {
+                return res;
+            }
+            {
+                // register for a wakeup, then re-check under the same
+                // lock — a completion racing ahead of the registration
+                // would otherwise be a lost wakeup
+                let mut st = self.slot.inner.lock().unwrap();
+                if let Some(res) = st.result.take() {
+                    return res;
+                }
+                st.waiter = Waiter::Thread(std::thread::current());
+            }
+            // park() may return spuriously; the loop re-checks. An
+            // unpark() that raced in before this park() makes it return
+            // immediately (the park token).
+            std::thread::park();
+        }
+    }
+}
+
 struct Pending {
     x: Vec<f32>,
     enqueued: Instant,
-    tx: mpsc::Sender<Result<Prediction, EngineError>>,
+    slot: Arc<Slot>,
 }
 
 /// The model a micro-batch is pinned to: swapped as one `Arc`, so a batch
 /// either sees (old model, old generation) or (new, new) — never a mix.
 struct Deployed {
-    model: Arc<BsrModel>,
+    model: Arc<ServedModel>,
     generation: u64,
 }
 
@@ -137,6 +259,25 @@ struct QueueState {
 struct Queue {
     state: Mutex<QueueState>,
     cv: Condvar,
+}
+
+impl Queue {
+    fn new() -> Queue {
+        Queue {
+            state: Mutex::new(QueueState {
+                q: VecDeque::new(),
+                in_flight: 0,
+                shutdown: false,
+                paused: false,
+                accepted: 0,
+                shed: 0,
+                completed: 0,
+                failed: 0,
+                peak_depth: 0,
+            }),
+            cv: Condvar::new(),
+        }
+    }
 }
 
 /// Counter snapshot from [`Engine::stats`].
@@ -183,7 +324,8 @@ impl Default for EngineOpts {
     }
 }
 
-/// A running inference engine over a hot-swappable [`BsrModel`].
+/// A running inference engine over a hot-swappable [`ServedModel`]
+/// (f32 or int8 — the request path is dtype-agnostic).
 pub struct Engine {
     current: Arc<Mutex<Arc<Deployed>>>,
     queue: Arc<Queue>,
@@ -194,9 +336,10 @@ pub struct Engine {
 }
 
 impl Engine {
-    pub fn new(model: BsrModel, opts: EngineOpts) -> Result<Engine> {
+    pub fn new(model: impl Into<ServedModel>, opts: EngineOpts) -> Result<Engine> {
+        let model: ServedModel = model.into();
         model.validate()?;
-        let (in_dim, out_dim) = (model.in_dim, model.out_dim);
+        let (in_dim, out_dim) = (model.in_dim(), model.out_dim());
         let opts = EngineOpts {
             max_batch: opts.max_batch.max(1),
             workers: crate::util::clamp_workers(opts.workers),
@@ -206,20 +349,7 @@ impl Engine {
             model: Arc::new(model),
             generation: 0,
         })));
-        let queue = Arc::new(Queue {
-            state: Mutex::new(QueueState {
-                q: VecDeque::new(),
-                in_flight: 0,
-                shutdown: false,
-                paused: false,
-                accepted: 0,
-                shed: 0,
-                completed: 0,
-                failed: 0,
-                peak_depth: 0,
-            }),
-            cv: Condvar::new(),
-        });
+        let queue = Arc::new(Queue::new());
         let pool = ThreadPool::new(opts.workers);
         let (qc, cc) = (queue.clone(), current.clone());
         let (max_batch, workers) = (opts.max_batch, opts.workers);
@@ -232,7 +362,7 @@ impl Engine {
 
     /// The currently deployed model (the next micro-batch's model; an
     /// in-flight batch may still be on the previous one).
-    pub fn model(&self) -> Arc<BsrModel> {
+    pub fn model(&self) -> Arc<ServedModel> {
         self.current.lock().unwrap().model.clone()
     }
 
@@ -240,6 +370,17 @@ impl Engine {
     /// +1 per [`Engine::swap_model`]).
     pub fn generation(&self) -> u64 {
         self.current.lock().unwrap().generation
+    }
+
+    /// Feature count every request must carry (fixed at construction —
+    /// swaps must match it).
+    pub fn in_dim(&self) -> usize {
+        self.in_dim
+    }
+
+    /// Logit count every response carries.
+    pub fn out_dim(&self) -> usize {
+        self.out_dim
     }
 
     pub fn max_batch(&self) -> usize {
@@ -285,21 +426,35 @@ impl Engine {
         self.queue.cv.notify_all();
     }
 
+    /// Stop admission now: every subsequent predict fails fast with
+    /// [`EngineError::ShutDown`], while requests already admitted drain
+    /// normally (shutdown overrides pause) and their handles complete.
+    /// Idempotent, callable from any thread — racing it against live
+    /// traffic is safe and is exactly what the stress tests do. Dropping
+    /// the engine calls this and then joins the dispatcher.
+    pub fn shutdown(&self) {
+        self.queue.state.lock().unwrap().shutdown = true;
+        self.queue.cv.notify_all();
+    }
+
     /// Atomically deploy `model`: one `Arc` swap in memory. New
     /// micro-batches route to it immediately; batches already formed
     /// finish on the model they started with, so a request never mixes
     /// generations. The replacement must validate and match the engine's
     /// (in_dim, out_dim) — queued requests were admitted against those
-    /// shapes. Returns the new generation. O(1) beyond validation: no
-    /// engine teardown, no thread respawn, no queue disturbance.
-    pub fn swap_model(&self, model: BsrModel) -> Result<u64, EngineError> {
+    /// shapes; its dtype may differ (f32 → int8 swaps are how quantized
+    /// artifacts roll out). Returns the new generation. O(1) beyond
+    /// validation: no engine teardown, no thread respawn, no queue
+    /// disturbance.
+    pub fn swap_model(&self, model: impl Into<ServedModel>) -> Result<u64, EngineError> {
+        let model: ServedModel = model.into();
         if let Err(e) = model.validate() {
             return Err(EngineError::SwapRejected(format!("{e:#}")));
         }
-        if model.in_dim != self.in_dim || model.out_dim != self.out_dim {
+        if model.in_dim() != self.in_dim || model.out_dim() != self.out_dim {
             return Err(EngineError::SwapRejected(format!(
                 "model '{}' is {}->{}, engine serves {}->{}",
-                model.spec, model.in_dim, model.out_dim, self.in_dim, self.out_dim
+                model.spec(), model.in_dim(), model.out_dim(), self.in_dim, self.out_dim
             )));
         }
         let mut cur = self.current.lock().unwrap();
@@ -308,12 +463,12 @@ impl Engine {
         Ok(generation)
     }
 
-    /// Blocking single-request predict: enqueue, wait for the micro-batch
-    /// carrying this request to finish, return logits + argmax + latency.
-    /// Safe to call from many client threads at once — that is what fills
-    /// the micro-batches. Fails fast with [`EngineError::Overloaded`]
-    /// when the admission queue is at its bound.
-    pub fn predict(&self, x: &[f32]) -> Result<Prediction, EngineError> {
+    /// Admit one request and return a [`PredictionHandle`] immediately —
+    /// the completion-based request path. The handle costs one queue slot
+    /// and no thread; poll it or `wait()` on it. Fails fast with
+    /// [`EngineError::Overloaded`] at the admission bound and
+    /// [`EngineError::ShutDown`] after [`Engine::shutdown`].
+    pub fn predict_async(&self, x: &[f32]) -> Result<PredictionHandle, EngineError> {
         if x.len() != self.in_dim {
             return Err(EngineError::BadRequest(format!(
                 "request has {} features, engine wants {}",
@@ -321,10 +476,10 @@ impl Engine {
                 self.in_dim
             )));
         }
-        let (tx, rx) = mpsc::channel();
+        let slot = Slot::new();
         // the payload copy is per-request-private: build it before taking
         // the shared lock so concurrent clients don't serialize on it
-        let pending = Pending { x: x.to_vec(), enqueued: Instant::now(), tx };
+        let pending = Pending { x: x.to_vec(), enqueued: Instant::now(), slot: slot.clone() };
         {
             let mut st = self.queue.state.lock().unwrap();
             if st.shutdown {
@@ -342,25 +497,24 @@ impl Engine {
             }
         }
         self.queue.cv.notify_one();
-        match rx.recv() {
-            Ok(res) => res,
-            // the sender was dropped without a response: only engine
-            // teardown does that (run_batch always answers)
-            Err(_) => Err(EngineError::ShutDown),
-        }
+        Ok(PredictionHandle { slot })
+    }
+
+    /// Blocking single-request predict — a thin wrapper:
+    /// `predict_async(x)?.wait()`. Safe to call from many client threads
+    /// at once — that is what fills the micro-batches.
+    pub fn predict(&self, x: &[f32]) -> Result<Prediction, EngineError> {
+        self.predict_async(x)?.wait()
     }
 }
 
 impl Drop for Engine {
     fn drop(&mut self) {
-        {
-            let mut st = self.queue.state.lock().unwrap();
-            st.shutdown = true;
-        }
-        self.queue.cv.notify_all();
+        self.shutdown();
         // the dispatcher drains what is still queued (shutdown overrides
         // pause), then its pool drop joins the in-flight micro-batches —
-        // no admitted request is abandoned
+        // no admitted request is abandoned, every outstanding handle
+        // completes before the join returns
         if let Some(h) = self.dispatcher.take() {
             let _ = h.join();
         }
@@ -428,16 +582,16 @@ fn dispatch_loop(
 fn run_batch(deployed: &Deployed, queue: &Queue, batch: Vec<Pending>) {
     let model = &deployed.model;
     let nb = batch.len();
-    let mut xs = Vec::with_capacity(nb * model.in_dim);
+    let mut xs = Vec::with_capacity(nb * model.in_dim());
     for p in &batch {
         xs.extend_from_slice(&p.x);
     }
-    // counters bump BEFORE the responses go out: once a client's predict
-    // has returned, `stats()` is guaranteed to already count that request
-    match bsr::model_forward(model, &xs, nb) {
+    // counters bump BEFORE the slots complete: once a client's handle has
+    // resolved, `stats()` is guaranteed to already count that request
+    match model.forward(&xs, nb) {
         Ok(z) => {
             queue.state.lock().unwrap().completed += nb as u64;
-            let classes = model.out_dim;
+            let classes = model.out_dim();
             let preds = bsr::argmax_rows(&z, nb, classes);
             for (i, p) in batch.into_iter().enumerate() {
                 let resp = Prediction {
@@ -447,23 +601,26 @@ fn run_batch(deployed: &Deployed, queue: &Queue, batch: Vec<Pending>) {
                     batch_size: nb,
                     generation: deployed.generation,
                 };
-                // a client that gave up (dropped rx) is not an engine error
-                let _ = p.tx.send(Ok(resp));
+                // a client that dropped its handle is not an engine
+                // error — the slot just holds an unread result
+                p.slot.complete(Ok(resp));
             }
         }
         Err(e) => {
             queue.state.lock().unwrap().failed += nb as u64;
-            // every waiter gets the actual forward error — the senders
-            // are answered, not dropped, so clients see the root cause
+            // every waiter's slot completes with the actual forward
+            // error — never abandoned, so clients see the root cause
             // instead of a fabricated "batch failed?" guess
             let msg = format!("{e:#}");
             crate::warn_!("micro-batch of {nb} failed: {msg}");
             for p in batch {
-                let _ = p.tx.send(Err(EngineError::BatchFailed(msg.clone())));
+                p.slot.complete(Err(EngineError::BatchFailed(msg.clone())));
             }
         }
     }
 }
+
+// ----------------------------------------------------------------- drivers
 
 /// Drive an engine with synthetic random-normal traffic: `clients`
 /// concurrent threads issue `requests` predicts in total (quota split
@@ -473,7 +630,8 @@ fn run_batch(deployed: &Deployed, queue: &Queue, batch: Vec<Pending>) {
 /// outstanding, so with `queue_depth ≥ clients` nothing sheds. Shared by
 /// the `infer` CLI subcommand and `benches/infer_serve.rs` so the
 /// measured traffic shape cannot diverge between them; the overload
-/// variant is [`drive_overload`].
+/// variant is [`drive_overload`], the thread-free open-loop variant is
+/// [`drive_async`].
 pub fn drive_synthetic(
     engine: &Engine,
     requests: usize,
@@ -482,7 +640,7 @@ pub fn drive_synthetic(
 ) -> Result<Vec<f64>> {
     let requests = requests.max(1);
     let clients = clients.max(1);
-    let in_dim = engine.model().in_dim;
+    let in_dim = engine.in_dim();
     let per_client: Vec<Result<Vec<f64>>> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..clients)
             .map(|c| {
@@ -510,6 +668,88 @@ pub fn drive_synthetic(
         out.extend(r?);
     }
     Ok(out)
+}
+
+/// What [`drive_async`] measured.
+#[derive(Clone, Debug)]
+pub struct AsyncDriveReport {
+    /// total requests issued (accepted + shed)
+    pub offered: usize,
+    /// requests that got logits
+    pub accepted: usize,
+    /// requests load-shed with [`EngineError::Overloaded`]
+    pub shed: usize,
+    /// the in-flight handle window the driver held
+    pub window: usize,
+    /// per-accepted-request latency in milliseconds
+    pub accepted_lat_ms: Vec<f64>,
+}
+
+impl AsyncDriveReport {
+    /// shed / offered ∈ [0, 1].
+    pub fn shed_rate(&self) -> f64 {
+        self.shed as f64 / self.offered.max(1) as f64
+    }
+}
+
+/// Open-loop driver over [`Engine::predict_async`]: ONE thread keeps up
+/// to `window` requests in flight as [`PredictionHandle`]s — the
+/// many-clients load shape of [`drive_overload`] without its
+/// thread-per-client cost, which is the tentpole claim (N in-flight
+/// requests cost N queue slots, and the process thread count stays at
+/// `workers + constant` regardless of `window` — pinned by the stress
+/// suite's `/proc` accounting test). With `window` above
+/// [`Engine::capacity`], admission saturates and the excess sheds typed,
+/// exactly like the blocking path; [`EngineError::BatchFailed`] (or any
+/// non-overload error) aborts the drive. Use a fresh engine per drive
+/// when comparing reports against engine-lifetime stats.
+pub fn drive_async(
+    engine: &Engine,
+    requests: usize,
+    window: usize,
+    seed: u64,
+) -> Result<AsyncDriveReport> {
+    let requests = requests.max(1);
+    let window = window.max(1);
+    let in_dim = engine.in_dim();
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let mut inflight: VecDeque<PredictionHandle> = VecDeque::with_capacity(window);
+    let mut accepted_lat_ms = Vec::new();
+    let mut shed = 0usize;
+    let mut reap = |h: PredictionHandle, lat: &mut Vec<f64>| -> Result<()> {
+        let p = h.wait()?;
+        lat.push(p.latency.as_secs_f64() * 1e3);
+        Ok(())
+    };
+    for _ in 0..requests {
+        // keep the window bounded *before* admitting more: the driver
+        // holds at most `window` outstanding handles
+        while inflight.len() >= window {
+            let h = inflight.pop_front().unwrap();
+            reap(h, &mut accepted_lat_ms)?;
+        }
+        let x: Vec<f32> = (0..in_dim).map(|_| rng.normal()).collect();
+        match engine.predict_async(&x) {
+            Ok(h) => inflight.push_back(h),
+            Err(EngineError::Overloaded { .. }) => {
+                shed += 1;
+                // same back-off shape as drive_overload's aggressive
+                // clients: yield, then offer the next request
+                std::thread::yield_now();
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    for h in inflight {
+        reap(h, &mut accepted_lat_ms)?;
+    }
+    Ok(AsyncDriveReport {
+        offered: requests,
+        accepted: accepted_lat_ms.len(),
+        shed,
+        window,
+        accepted_lat_ms,
+    })
 }
 
 /// What [`drive_overload`] measured.
@@ -557,7 +797,7 @@ pub fn drive_overload(
 ) -> Result<OverloadReport> {
     let per_client = per_client.max(1);
     let clients = clients.max(1);
-    let in_dim = engine.model().in_dim;
+    let in_dim = engine.in_dim();
     let per: Vec<Result<(Vec<f64>, usize)>> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..clients)
             .map(|c| {
@@ -614,7 +854,11 @@ pub fn drive_overload(
 // ----------------------------------------------------------- aggregation
 
 /// Latency distribution summary (milliseconds) — shared by the `infer`
-/// CLI subcommand and `benches/infer_serve.rs`.
+/// CLI subcommand and `benches/infer_serve.rs`. An empty sample set is a
+/// first-class value ([`LatencySummary::empty`], `count == 0`, every
+/// statistic NaN): overload runs that shed 100% produce it, callers
+/// branch on [`LatencySummary::is_empty`] instead of sniffing NaNs, and
+/// the JSON writers map the NaNs to nulls (pinned in `util::json`).
 #[derive(Clone, Debug)]
 pub struct LatencySummary {
     pub count: usize,
@@ -625,19 +869,32 @@ pub struct LatencySummary {
     pub max_ms: f64,
 }
 
-/// Nearest-rank percentiles over per-request latencies in milliseconds
-/// (via the shared [`crate::bench::percentile`], so serving numbers stay
-/// comparable with the kernel benches).
-pub fn latency_summary(lat_ms: &[f64]) -> LatencySummary {
-    if lat_ms.is_empty() {
-        return LatencySummary {
+impl LatencySummary {
+    /// The typed zero-sample summary — what [`latency_summary`] returns
+    /// for an empty slice.
+    pub fn empty() -> LatencySummary {
+        LatencySummary {
             count: 0,
             mean_ms: f64::NAN,
             p50_ms: f64::NAN,
             p95_ms: f64::NAN,
             p99_ms: f64::NAN,
             max_ms: f64::NAN,
-        };
+        }
+    }
+
+    /// No samples — every statistic is NaN (null in JSON) by contract.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+}
+
+/// Nearest-rank percentiles over per-request latencies in milliseconds
+/// (via the shared [`crate::bench::percentile`], so serving numbers stay
+/// comparable with the kernel benches).
+pub fn latency_summary(lat_ms: &[f64]) -> LatencySummary {
+    if lat_ms.is_empty() {
+        return LatencySummary::empty();
     }
     let mut sorted = lat_ms.to_vec();
     sorted.sort_by(|a, b| a.total_cmp(b));
@@ -654,7 +911,7 @@ pub fn latency_summary(lat_ms: &[f64]) -> LatencySummary {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::infer::BsrLayer;
+    use crate::infer::{BsrLayer, BsrModel};
     use crate::util::rng::Rng;
 
     fn tiny_model(seed: u64) -> (BsrModel, Vec<f32>, Vec<f32>) {
@@ -683,6 +940,7 @@ mod tests {
         let (model, _, _) = tiny_model(41);
         let reference = model.clone();
         let engine = Engine::new(model, opts(4, 2, 64)).unwrap();
+        assert_eq!((engine.in_dim(), engine.out_dim()), (8, 4));
         let mut rng = Rng::new(42);
         for _ in 0..10 {
             let x: Vec<f32> = (0..8).map(|_| rng.normal()).collect();
@@ -697,6 +955,73 @@ mod tests {
         assert_eq!(st.accepted, 10);
         assert_eq!(st.completed, 10);
         assert_eq!((st.shed, st.failed), (0, 0));
+    }
+
+    #[test]
+    fn predict_async_polls_and_resolves_without_extra_threads() {
+        let (model, _, _) = tiny_model(60);
+        let reference = model.clone();
+        let engine = Engine::new(model, opts(4, 2, 64)).unwrap();
+        let x: Vec<f32> = (0..8).map(|i| i as f32 * 0.5 - 2.0).collect();
+        let mut h = engine.predict_async(&x).unwrap();
+        // poll to completion on this thread — no helper thread anywhere
+        let res = loop {
+            if let Some(r) = h.try_take() {
+                break r;
+            }
+            std::thread::yield_now();
+        };
+        let p = res.unwrap();
+        assert_eq!(p.logits, bsr::model_forward(&reference, &x, 1).unwrap());
+        // a handle that was polled dry stays dry
+        assert!(h.is_ready());
+        assert!(h.try_take().is_none(), "the result moves out exactly once");
+    }
+
+    #[test]
+    fn predict_async_wait_after_completion_returns_immediately() {
+        let (model, _, _) = tiny_model(61);
+        let engine = Engine::new(model, opts(4, 2, 64)).unwrap();
+        let h = engine.predict_async(&[0.25; 8]).unwrap();
+        // let the batch complete first, then wait() must not park forever
+        while !h.is_ready() {
+            std::thread::yield_now();
+        }
+        let p = h.wait().unwrap();
+        assert_eq!(p.generation, 0);
+        assert!(p.batch_size >= 1);
+    }
+
+    #[test]
+    fn dropped_handles_do_not_leak_or_wedge_the_engine() {
+        let (model, _, _) = tiny_model(62);
+        let engine = Engine::new(model, opts(4, 1, 64)).unwrap();
+        for _ in 0..8 {
+            // admit and immediately abandon: the batch still runs and the
+            // engine must keep serving
+            drop(engine.predict_async(&[0.1; 8]).unwrap());
+        }
+        let p = engine.predict(&[0.3; 8]).unwrap();
+        assert_eq!(p.logits.len(), 4);
+        // every admitted request is counted even if its handle was dropped
+        let st = engine.stats();
+        assert_eq!(st.accepted, 9);
+        assert_eq!(st.completed, 9);
+    }
+
+    #[test]
+    fn shutdown_rejects_new_requests_but_drains_admitted_ones() {
+        let (model, _, _) = tiny_model(63);
+        let engine = Engine::new(model, opts(4, 1, 64)).unwrap();
+        engine.pause();
+        let h = engine.predict_async(&[0.5; 8]).unwrap();
+        engine.shutdown(); // overrides pause: the queued request drains
+        assert!(matches!(engine.predict_async(&[0.5; 8]), Err(EngineError::ShutDown)));
+        assert!(matches!(engine.predict(&[0.5; 8]), Err(EngineError::ShutDown)));
+        let p = h.wait().expect("admitted before shutdown ⇒ must complete");
+        assert_eq!(p.logits.len(), 4);
+        // shutdown is idempotent
+        engine.shutdown();
     }
 
     #[test]
@@ -730,6 +1055,7 @@ mod tests {
         let (model, _, _) = tiny_model(44);
         let engine = Engine::new(model, EngineOpts::default()).unwrap();
         assert!(matches!(engine.predict(&[0.0; 7]), Err(EngineError::BadRequest(_))));
+        assert!(matches!(engine.predict_async(&[0.0; 9]), Err(EngineError::BadRequest(_))));
         assert!(engine.predict(&[0.0; 8]).is_ok());
     }
 
@@ -750,80 +1076,84 @@ mod tests {
         assert!(lat.iter().all(|&v| v >= 0.0 && v.is_finite()));
     }
 
+    #[test]
+    fn drive_async_accounts_every_request() {
+        let (model, _, _) = tiny_model(55);
+        let engine = Engine::new(model, opts(2, 1, 4)).unwrap();
+        // window well above capacity (4 + 2·1 = 6): some offers shed
+        let rep = drive_async(&engine, 200, 32, 13).unwrap();
+        assert_eq!(rep.offered, 200);
+        assert_eq!(rep.accepted + rep.shed, rep.offered);
+        assert_eq!(rep.accepted_lat_ms.len(), rep.accepted);
+        assert!(rep.accepted >= 1, "a drive must accept something");
+        assert_eq!(rep.window, 32);
+        // engine counters agree with the report
+        let st = engine.stats();
+        assert_eq!(st.accepted, rep.accepted as u64);
+        assert_eq!(st.shed, rep.shed as u64);
+        assert_eq!(st.completed + st.failed, st.accepted);
+        // the admission bound held under the async path too
+        assert!(st.peak_depth <= engine.queue_depth());
+    }
+
     /// Deterministic shed: with dispatch paused the queue cannot drain,
     /// so filling it to the bound makes the next predict fail fast with
     /// the typed Overloaded error — and the engine recovers on resume.
+    /// The waiting requests hold completion slots, not worker threads, so
+    /// the fill side uses handles and only two of them.
     #[test]
     fn full_queue_sheds_with_typed_overload_error() {
         let (model, _, _) = tiny_model(47);
         let engine = Engine::new(model, opts(4, 1, 2)).unwrap();
         engine.pause();
-        let blocked: Vec<Result<Prediction, EngineError>> = std::thread::scope(|s| {
-            let handles: Vec<_> = (0..2)
-                .map(|_| {
-                    let engine = &engine;
-                    s.spawn(move || engine.predict(&[0.5; 8]))
-                })
-                .collect();
-            // wait until both requests are actually queued
-            while engine.stats().depth < 2 {
-                std::thread::yield_now();
-            }
-            // the queue is at its bound: the next predict sheds, O(1),
-            // without blocking
-            match engine.predict(&[0.5; 8]) {
-                Err(EngineError::Overloaded { depth }) => assert_eq!(depth, 2),
-                other => panic!("wanted Overloaded, got {other:?}"),
-            }
-            engine.resume();
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        });
-        for r in blocked {
-            r.expect("queued requests complete after resume");
+        let h0 = engine.predict_async(&[0.5; 8]).unwrap();
+        let h1 = engine.predict_async(&[0.5; 8]).unwrap();
+        assert_eq!(engine.stats().depth, 2);
+        // the queue is at its bound: the next predict sheds, O(1),
+        // without blocking — on both request paths
+        match engine.predict(&[0.5; 8]) {
+            Err(EngineError::Overloaded { depth }) => assert_eq!(depth, 2),
+            other => panic!("wanted Overloaded, got {other:?}"),
         }
+        match engine.predict_async(&[0.5; 8]) {
+            Err(EngineError::Overloaded { depth }) => assert_eq!(depth, 2),
+            other => panic!("wanted Overloaded, got {other:?}"),
+        }
+        assert!(!h0.is_ready() && !h1.is_ready(), "paused queue must not dispatch");
+        engine.resume();
+        h0.wait().expect("queued requests complete after resume");
+        h1.wait().expect("queued requests complete after resume");
         let st = engine.stats();
-        assert_eq!(st.shed, 1);
+        assert_eq!(st.shed, 2);
         assert_eq!(st.accepted, 2);
         assert_eq!(st.completed, 2);
         assert!(st.peak_depth <= 2, "queue depth {} exceeded the bound", st.peak_depth);
     }
 
-    /// A failing forward must answer every waiter with the root-cause
-    /// error — the old code dropped the senders and clients saw a
-    /// fabricated "batch failed?" recv error.
+    /// A failing forward must complete every waiter's slot with the
+    /// root-cause error — never abandon a slot (the v2 engine pinned the
+    /// same contract for its channel senders).
     #[test]
-    fn run_batch_sends_root_cause_to_every_waiter() {
+    fn run_batch_completes_every_slot_with_the_root_cause() {
         let (model, _, _) = tiny_model(48);
         let mut broken = model;
         // passes Engine-level shape checks at build time but the kernel's
         // own validation rejects it: payload out of sync with the index
-        broken.layers[0].blocks.pop();
-        let deployed = Deployed { model: Arc::new(broken), generation: 3 };
-        let queue = Queue {
-            state: Mutex::new(QueueState {
-                q: VecDeque::new(),
-                in_flight: 0,
-                shutdown: false,
-                paused: false,
-                accepted: 0,
-                shed: 0,
-                completed: 0,
-                failed: 0,
-                peak_depth: 0,
-            }),
-            cv: Condvar::new(),
-        };
-        let mut rxs = Vec::new();
+        broken.layers[0].blocks.to_mut().pop();
+        let deployed = Deployed { model: Arc::new(broken.into()), generation: 3 };
+        let queue = Queue::new();
+        let mut handles = Vec::new();
         let batch: Vec<Pending> = (0..3)
             .map(|_| {
-                let (tx, rx) = mpsc::channel();
-                rxs.push(rx);
-                Pending { x: vec![0.0; 8], enqueued: Instant::now(), tx }
+                let slot = Slot::new();
+                handles.push(PredictionHandle { slot: slot.clone() });
+                Pending { x: vec![0.0; 8], enqueued: Instant::now(), slot }
             })
             .collect();
         run_batch(&deployed, &queue, batch);
-        for rx in rxs {
-            match rx.recv().expect("waiter must be answered, not dropped") {
+        for h in handles {
+            assert!(h.is_ready(), "slot abandoned");
+            match h.wait() {
                 Err(EngineError::BatchFailed(msg)) => {
                     assert!(
                         msg.contains("block values") && msg.contains("fc1"),
@@ -836,35 +1166,22 @@ mod tests {
         assert_eq!(queue.state.lock().unwrap().failed, 3);
     }
 
-    /// A client that gave up (dropped its receiver) must not take down
-    /// the batch — the other waiters still get their answers.
+    /// A client that gave up (dropped its handle) must not take down the
+    /// batch — the other waiters still get their answers.
     #[test]
     fn run_batch_survives_dropped_waiter() {
         let (model, _, _) = tiny_model(49);
-        let deployed = Deployed { model: Arc::new(model), generation: 0 };
-        let queue = Queue {
-            state: Mutex::new(QueueState {
-                q: VecDeque::new(),
-                in_flight: 0,
-                shutdown: false,
-                paused: false,
-                accepted: 0,
-                shed: 0,
-                completed: 0,
-                failed: 0,
-                peak_depth: 0,
-            }),
-            cv: Condvar::new(),
-        };
-        let (tx_gone, rx_gone) = mpsc::channel();
-        drop(rx_gone); // this client raced away (timeout / disconnect)
-        let (tx_live, rx_live) = mpsc::channel();
+        let deployed = Deployed { model: Arc::new(model.into()), generation: 0 };
+        let queue = Queue::new();
+        let gone = Slot::new(); // its handle raced away (timeout / disconnect)
+        let live = Slot::new();
+        let live_handle = PredictionHandle { slot: live.clone() };
         let batch = vec![
-            Pending { x: vec![0.1; 8], enqueued: Instant::now(), tx: tx_gone },
-            Pending { x: vec![0.2; 8], enqueued: Instant::now(), tx: tx_live },
+            Pending { x: vec![0.1; 8], enqueued: Instant::now(), slot: gone },
+            Pending { x: vec![0.2; 8], enqueued: Instant::now(), slot: live },
         ];
         run_batch(&deployed, &queue, batch);
-        let got = rx_live.recv().unwrap().unwrap();
+        let got = live_handle.wait().unwrap();
         assert_eq!(got.batch_size, 2);
         assert_eq!(queue.state.lock().unwrap().completed, 2);
     }
@@ -904,6 +1221,25 @@ mod tests {
         assert_eq!(engine.generation(), 1, "rejected swaps must not bump the generation");
     }
 
+    /// Swapping a quantized model into an f32 engine serves int8 logits
+    /// tagged with the new generation — how quantized artifacts roll out.
+    #[test]
+    fn hot_swap_crosses_dtypes() {
+        let (a, _, _) = tiny_model(56);
+        let q = crate::infer::quant::quantize_model(&a).unwrap();
+        let q_ref = q.clone();
+        let engine = Engine::new(a, opts(4, 2, 64)).unwrap();
+        assert_eq!(engine.model().dtype(), "f32");
+        let generation = engine.swap_model(q).unwrap();
+        assert_eq!(generation, 1);
+        assert_eq!(engine.model().dtype(), "int8");
+        let x: Vec<f32> = (0..8).map(|i| (i as f32 * 0.7).cos()).collect();
+        let p = engine.predict(&x).unwrap();
+        assert_eq!(p.generation, 1);
+        let want = crate::infer::quant::model_forward_q8(&q_ref, &x, 1).unwrap();
+        assert_eq!(p.logits, want);
+    }
+
     #[test]
     fn drive_overload_accounts_every_request() {
         let (model, _, _) = tiny_model(54);
@@ -929,16 +1265,27 @@ mod tests {
         // 50th sorted value, p95 the 95th, p99 the 99th, and p100 ≡ max
         let lat: Vec<f64> = (1..=100).map(|i| i as f64).collect();
         let s = latency_summary(&lat);
+        assert!(!s.is_empty());
         assert_eq!(s.count, 100);
         assert_eq!(s.p50_ms, 50.0);
         assert_eq!(s.p95_ms, 95.0);
         assert_eq!(s.p99_ms, 99.0);
         assert_eq!(s.max_ms, 100.0);
         assert!((s.mean_ms - 50.5).abs() < 1e-9);
-        // the empty summary is all-NaN (count 0) — the JSON writers must
-        // map those to nulls, pinned in util::json
+    }
+
+    /// Regression (PR-10 satellite): an all-shed overload run produces
+    /// zero samples — the summary must be the typed empty value, not a
+    /// panic or a caller-side NaN sniff.
+    #[test]
+    fn latency_summary_empty_is_typed() {
         let empty = latency_summary(&[]);
+        assert!(empty.is_empty());
         assert_eq!(empty.count, 0);
-        assert!(empty.mean_ms.is_nan() && empty.p99_ms.is_nan() && empty.max_ms.is_nan());
+        assert!(empty.mean_ms.is_nan() && empty.p50_ms.is_nan());
+        assert!(empty.p95_ms.is_nan() && empty.p99_ms.is_nan() && empty.max_ms.is_nan());
+        let direct = LatencySummary::empty();
+        assert!(direct.is_empty());
+        assert_eq!(direct.count, empty.count);
     }
 }

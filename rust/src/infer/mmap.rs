@@ -1,0 +1,437 @@
+//! Zero-copy artifact loading: mmap a version-2 `"BSRM"` container and
+//! serve its block payload straight from the page cache.
+//!
+//! [`open_model_mmap`] (and the typed [`open_bsr_mmap`] /
+//! [`open_quant_mmap`]) map the file read-only and build a model whose
+//! bulk arrays are [`BlockStore::Mapped`] windows into the mapping:
+//! start-up touches the prologue, the CRC-guarded header and the small
+//! CSR index arrays (which are copied out and validated eagerly — the
+//! kernels index by them without checks), but **never** the packed
+//! blocks. A multi-GB artifact therefore starts in O(header + index)
+//! time and resident memory; block pages fault in lazily as traffic
+//! actually reads them, and clean pages can be evicted under memory
+//! pressure for free. [`MapStats`] reports exactly that split, and the
+//! page-touch accounting test pins it: two artifacts with identical
+//! grids but 1000× different payloads must report identical
+//! `resident_bytes`.
+//!
+//! Integrity: the header CRC, padding and extent equation are verified at
+//! open (a corrupt header can never mis-drive the loader), but the
+//! payload CRC is **not** swept — touching every page would defeat the
+//! point. `BsrModel::load` remains the integrity checker of record;
+//! corruption inside a mapped block surfaces as wrong logits, not UB,
+//! because every offset/length was bounds- and alignment-checked against
+//! the mapping before a `BlockStore` was built.
+//!
+//! Portability: the mapping uses raw `mmap(2)`/`munmap(2)` (no libc
+//! crate in the offline vendor set) and is gated to little-endian unix —
+//! exactly the targets where reinterpreting mapped bytes as `f32`/`i8`
+//! matches the container's wire format. Everywhere else (and for
+//! version-1 artifacts, which interleave frame metadata with payload)
+//! these functions fall back to the owned read path and report
+//! `resident_bytes == file_bytes`.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::quant::{QBlockStore, QuantLayer, QuantModel};
+use super::{BlockStore, BsrLayer, BsrModel, ServedModel};
+
+/// What [`open_model_mmap`] touched: total artifact size versus the bytes
+/// actually read/copied at open time (prologue + header + padding + CSR
+/// index arrays). For a mapped open, `resident_bytes` is O(header +
+/// index) and independent of the block payload; the read-path fallback
+/// reports `resident_bytes == file_bytes`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MapStats {
+    pub file_bytes: u64,
+    pub resident_bytes: u64,
+}
+
+impl MapStats {
+    /// Whether the open was zero-copy (some payload bytes stayed
+    /// untouched) rather than the full-read fallback.
+    pub fn zero_copy(&self) -> bool {
+        self.resident_bytes < self.file_bytes
+    }
+}
+
+#[cfg(all(unix, target_endian = "little"))]
+mod sys {
+    use core::ffi::c_void;
+
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+}
+
+/// A read-only, whole-file memory mapping. The region owns the mapping
+/// (`munmap` on drop) and is shared behind an `Arc` by every
+/// `BlockStore::Mapped` carved out of it — the file stays mapped for as
+/// long as any layer (or clone of a layer, however the model was
+/// hot-swapped around) still references it.
+pub struct MmapRegion {
+    ptr: *mut u8,
+    len: usize,
+}
+
+// The mapping is read-only for its entire lifetime: shared references to
+// its bytes are safe to send and share across the serving threads.
+unsafe impl Send for MmapRegion {}
+unsafe impl Sync for MmapRegion {}
+
+impl MmapRegion {
+    #[cfg(all(unix, target_endian = "little"))]
+    fn map(f: &std::fs::File, len: usize) -> Result<Self> {
+        use std::os::unix::io::AsRawFd;
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                f.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr.is_null() || ptr as usize == usize::MAX {
+            bail!("mmap of {len} bytes failed");
+        }
+        Ok(MmapRegion { ptr: ptr as *mut u8, len })
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    /// `len` f32 values at byte offset `off`. Bounds and 4-byte alignment
+    /// were checked when the store was built (8-aligned offsets over a
+    /// page-aligned base); the debug asserts re-state the invariant.
+    pub(crate) fn f32s(&self, off: usize, len: usize) -> &[f32] {
+        debug_assert!(off + len * 4 <= self.len);
+        debug_assert_eq!((self.ptr as usize + off) % std::mem::align_of::<f32>(), 0);
+        unsafe { std::slice::from_raw_parts(self.ptr.add(off) as *const f32, len) }
+    }
+
+    /// `len` i8 values at byte offset `off`.
+    pub(crate) fn i8s(&self, off: usize, len: usize) -> &[i8] {
+        debug_assert!(off + len <= self.len);
+        unsafe { std::slice::from_raw_parts(self.ptr.add(off) as *const i8, len) }
+    }
+}
+
+impl Drop for MmapRegion {
+    fn drop(&mut self) {
+        #[cfg(all(unix, target_endian = "little"))]
+        unsafe {
+            sys::munmap(self.ptr as *mut core::ffi::c_void, self.len);
+        }
+    }
+}
+
+/// Map `path` if (and only if) it is a version-2 container on a platform
+/// with mmap support. `Ok(None)` means "use the read path" — version-1
+/// artifact, too-short file, or foreign magic (the read path then raises
+/// its own typed error).
+#[cfg(all(unix, target_endian = "little"))]
+fn map_v2(path: &Path) -> Result<Option<Arc<MmapRegion>>> {
+    use std::io::Read;
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening BSR model {path:?}"))?;
+    let len = f.metadata()?.len();
+    if len < super::PROLOGUE_LEN as u64 {
+        return Ok(None);
+    }
+    let mut head = [0u8; 8];
+    f.read_exact(&mut head)?;
+    if &head[..4] != super::MAGIC {
+        return Ok(None);
+    }
+    if u32::from_le_bytes(head[4..8].try_into().unwrap()) != 2 {
+        return Ok(None);
+    }
+    let len = usize::try_from(len).context("artifact larger than the address space")?;
+    Ok(Some(Arc::new(MmapRegion::map(&f, len)?)))
+}
+
+/// Zero-copy open of an f32 artifact. v1 / unsupported-platform fallback:
+/// [`BsrModel::load`] with `resident_bytes == file_bytes`.
+pub fn open_bsr_mmap(path: &Path) -> Result<(BsrModel, MapStats)> {
+    #[cfg(all(unix, target_endian = "little"))]
+    if let Some(region) = map_v2(path)? {
+        return mapped_bsr(&region);
+    }
+    let model = BsrModel::load(path)?;
+    let file_bytes = std::fs::metadata(path)?.len();
+    Ok((model, MapStats { file_bytes, resident_bytes: file_bytes }))
+}
+
+/// Zero-copy open of an int8 artifact (blocks **and** scales stay
+/// mapped). Same fallback contract as [`open_bsr_mmap`].
+pub fn open_quant_mmap(path: &Path) -> Result<(QuantModel, MapStats)> {
+    #[cfg(all(unix, target_endian = "little"))]
+    if let Some(region) = map_v2(path)? {
+        return mapped_quant(&region);
+    }
+    let model = QuantModel::load(path)?;
+    let file_bytes = std::fs::metadata(path)?.len();
+    Ok((model, MapStats { file_bytes, resident_bytes: file_bytes }))
+}
+
+/// Zero-copy open of an artifact of either dtype: one O(header) peek
+/// routes to the matching typed open. This is what the CLI's `--mmap`
+/// arm and a registry cold-start scan call.
+pub fn open_model_mmap(path: &Path) -> Result<(ServedModel, MapStats)> {
+    let meta = BsrModel::peek(path)?;
+    if meta.dtype == "int8" {
+        let (m, s) = open_quant_mmap(path)?;
+        Ok((m.into(), s))
+    } else {
+        let (m, s) = open_bsr_mmap(path)?;
+        Ok((m.into(), s))
+    }
+}
+
+#[cfg(all(unix, target_endian = "little"))]
+fn mapped_bsr(region: &Arc<MmapRegion>) -> Result<(BsrModel, MapStats)> {
+    let c = super::open_v2_bytes(region.bytes(), false)?;
+    if c.prologue.dtype != super::DTYPE_F32 {
+        bail!(
+            "artifact stores {} blocks — open it with `open_model_mmap`",
+            super::dtype_label(c.prologue.dtype)
+        );
+    }
+    let payload_base = c.prologue.payload_off as usize;
+    // every byte before the payload was read during open_v2_bytes
+    let mut resident = c.prologue.payload_off;
+    let mut layers = Vec::new();
+    for lh in &c.header.layers {
+        let m1 = lh.m / lh.m2;
+        let row_ptr = super::take_u32s(
+            c.payload, lh.row_ptr_off, (m1 + 1) as u64,
+            &format!("{}.row_ptr", lh.name),
+        )?;
+        let col_idx = super::take_u32s(
+            c.payload, lh.col_idx_off, lh.nnz as u64,
+            &format!("{}.col_idx", lh.name),
+        )?;
+        resident += (row_ptr.len() as u64 + col_idx.len() as u64) * 4;
+        let nvals = lh.block_values()?;
+        // bounds/alignment check only — the block pages stay untouched
+        let (off, _) = super::span(
+            c.payload.len(), lh.blocks_off, 4, nvals,
+            &format!("{}.blocks", lh.name),
+        )?;
+        layers.push(BsrLayer {
+            name: lh.name.clone(),
+            m: lh.m,
+            n: lh.n,
+            m2: lh.m2,
+            n2: lh.n2,
+            row_ptr,
+            col_idx,
+            blocks: BlockStore::Mapped {
+                region: region.clone(),
+                off: payload_base + off,
+                len: nvals as usize,
+            },
+        });
+    }
+    let model = BsrModel {
+        spec: c.header.spec.clone(),
+        method: c.header.method.clone(),
+        in_dim: c.header.in_dim,
+        out_dim: c.header.out_dim,
+        layers,
+    };
+    // validate reads the copied index arrays and the stores' lengths —
+    // no block page is faulted in
+    model.validate()?;
+    let stats = MapStats { file_bytes: region.len() as u64, resident_bytes: resident };
+    Ok((model, stats))
+}
+
+#[cfg(all(unix, target_endian = "little"))]
+fn mapped_quant(region: &Arc<MmapRegion>) -> Result<(QuantModel, MapStats)> {
+    let c = super::open_v2_bytes(region.bytes(), false)?;
+    if c.prologue.dtype != super::DTYPE_INT8 {
+        bail!(
+            "artifact stores {} blocks — open it with `open_model_mmap`",
+            super::dtype_label(c.prologue.dtype)
+        );
+    }
+    let payload_base = c.prologue.payload_off as usize;
+    let mut resident = c.prologue.payload_off;
+    let mut layers = Vec::new();
+    for lh in &c.header.layers {
+        let m1 = lh.m / lh.m2;
+        let row_ptr = super::take_u32s(
+            c.payload, lh.row_ptr_off, (m1 + 1) as u64,
+            &format!("{}.row_ptr", lh.name),
+        )?;
+        let col_idx = super::take_u32s(
+            c.payload, lh.col_idx_off, lh.nnz as u64,
+            &format!("{}.col_idx", lh.name),
+        )?;
+        resident += (row_ptr.len() as u64 + col_idx.len() as u64) * 4;
+        let nvals = lh.block_values()?;
+        let nscales = (lh.nnz as u64) * (lh.m2 as u64);
+        let (qoff, _) = super::span(
+            c.payload.len(), lh.blocks_off, 1, nvals,
+            &format!("{}.qblocks", lh.name),
+        )?;
+        let (soff, _) = super::span(
+            c.payload.len(), lh.scales_off, 4, nscales,
+            &format!("{}.scales", lh.name),
+        )?;
+        layers.push(QuantLayer {
+            name: lh.name.clone(),
+            m: lh.m,
+            n: lh.n,
+            m2: lh.m2,
+            n2: lh.n2,
+            row_ptr,
+            col_idx,
+            qblocks: QBlockStore::Mapped {
+                region: region.clone(),
+                off: payload_base + qoff,
+                len: nvals as usize,
+            },
+            scales: BlockStore::Mapped {
+                region: region.clone(),
+                off: payload_base + soff,
+                len: nscales as usize,
+            },
+        });
+    }
+    let model = QuantModel {
+        spec: c.header.spec.clone(),
+        method: c.header.method.clone(),
+        in_dim: c.header.in_dim,
+        out_dim: c.header.out_dim,
+        layers,
+    };
+    model.validate()?;
+    let stats = MapStats { file_bytes: region.len() as u64, resident_bytes: resident };
+    Ok((model, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{synth_block_sparse_weights, BsrLayer, BsrModel};
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Two single-layer models with the *same* block grid and nnz but
+    /// wildly different block sizes — same header/index footprint,
+    /// ~1000× different payload.
+    fn graded_models() -> (BsrModel, BsrModel) {
+        let mk = |m2: usize, n2: usize, seed: u64| {
+            let (m1, n1) = (8usize, 8usize);
+            let (m, n) = (m1 * m2, n1 * n2);
+            let mut rng = Rng::new(seed);
+            let (w, _) = synth_block_sparse_weights(&mut rng, m, n, m2, n2, 0.5);
+            BsrModel {
+                spec: "page-touch".into(),
+                method: "kpd".into(),
+                in_dim: n,
+                out_dim: m,
+                layers: vec![BsrLayer::from_dense("fc", &w, m, n, m2, n2).unwrap()],
+            }
+        };
+        (mk(2, 2, 9), mk(64, 64, 9))
+    }
+
+    #[test]
+    fn mmap_open_matches_read_open_bit_for_bit() {
+        let mut rng = Rng::new(77);
+        let (w, _) = synth_block_sparse_weights(&mut rng, 24, 32, 4, 8, 0.4);
+        let model = BsrModel {
+            spec: "mmap-parity".into(),
+            method: "kpd".into(),
+            in_dim: 32,
+            out_dim: 24,
+            layers: vec![BsrLayer::from_dense("fc", &w, 24, 32, 4, 8).unwrap()],
+        };
+        let dir = std::env::temp_dir().join("bs_mmap_parity_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.bsm");
+        model.save(&path).unwrap();
+        let read = BsrModel::load(&path).unwrap();
+        let (mapped, stats) = BsrModel::open_mmap(&path).unwrap();
+        // BlockStore::PartialEq compares values, so this is bitwise block
+        // equality across the two open paths
+        assert_eq!(mapped, read);
+        assert_eq!(stats.file_bytes, std::fs::metadata(&path).unwrap().len());
+        // and the logits agree bit for bit
+        let x: Vec<f32> = (0..2 * 32).map(|i| (i as f32 * 0.37).sin()).collect();
+        let a = crate::infer::bsr::model_forward(&read, &x, 2).unwrap();
+        let b = crate::infer::bsr::model_forward(&mapped, &x, 2).unwrap();
+        assert!(a.iter().zip(&b).all(|(p, q)| p.to_bits() == q.to_bits()));
+        #[cfg(all(unix, target_endian = "little"))]
+        {
+            assert!(mapped.layers[0].blocks.is_mapped());
+            assert!(stats.zero_copy(), "{stats:?}");
+        }
+    }
+
+    /// The page-touch accounting claim: open cost is O(header + index),
+    /// not O(payload). Same grid + nnz, 1024× the block bytes → identical
+    /// resident_bytes.
+    #[cfg(all(unix, target_endian = "little"))]
+    #[test]
+    fn mmap_open_resident_bytes_are_independent_of_payload_size() {
+        let (small, large) = graded_models();
+        let dir = std::env::temp_dir().join("bs_mmap_pages_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let (ps, pl) = (dir.join("small.bsm"), dir.join("large.bsm"));
+        small.save(&ps).unwrap();
+        large.save(&pl).unwrap();
+        let (_, st_small) = BsrModel::open_mmap(&ps).unwrap();
+        let (_, st_large) = BsrModel::open_mmap(&pl).unwrap();
+        assert!(
+            st_large.file_bytes > 500 * st_small.file_bytes,
+            "payloads must differ wildly: {st_small:?} vs {st_large:?}"
+        );
+        assert_eq!(
+            st_small.resident_bytes, st_large.resident_bytes,
+            "open touched payload pages: {st_small:?} vs {st_large:?}"
+        );
+        assert!(st_large.zero_copy());
+    }
+
+    #[test]
+    fn v1_artifacts_fall_back_to_the_read_path() {
+        let (small, _) = graded_models();
+        let dir = std::env::temp_dir().join("bs_mmap_v1_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("legacy.bsm");
+        small.save_v1(&path).unwrap();
+        let (model, stats) = BsrModel::open_mmap(&path).unwrap();
+        assert_eq!(model, small);
+        assert_eq!(stats.resident_bytes, stats.file_bytes);
+        assert!(!stats.zero_copy());
+        assert!(!model.layers[0].blocks.is_mapped());
+    }
+}

@@ -9,40 +9,50 @@
 //!   (block-sparse-row) form — only the blocks that survived training are
 //!   stored, so the artifact's memory *is* the occupancy.
 //! * **format** ([`BsrModel::save`] / [`BsrModel::load`]): a versioned
-//!   little-endian container (`"BSRM"`) framed with the same
-//!   `checkpoint::wire` helpers and trailing CRC-32 guard as the
-//!   checkpoint container, so corruption fails identically loudly.
+//!   little-endian container (`"BSRM"`). Version 2 (current) is an
+//!   **aligned** layout — a fixed 40-byte prologue, a CRC-guarded
+//!   wire-framed header holding per-layer metadata plus payload-relative
+//!   array offsets, and an 8-byte-aligned payload holding the bulk
+//!   arrays, each independently 8-aligned. That layout is what lets
+//!   [`mmap::open_model_mmap`] map an artifact and serve block data
+//!   zero-copy (start-up cost O(header + index), not O(file)). Version 1
+//!   (the PR-4 body+trailing-CRC frame) still loads via the read path.
 //!   `save` publishes atomically (write a temp sibling, fsync, rename) —
 //!   a reader or hot-swap watcher never observes a torn artifact — and
-//!   [`BsrModel::peek`] probes a file's header ([`BsrMeta`]) in O(header)
-//!   without reading the payload.
-//! * **kernels** ([`bsr`]): gather-free block-GEMM forward over the stored
-//!   blocks only (plus a ReLU-fused variant), built on the same threading
-//!   substrate as `backend::native::linalg` — inference cost scales with
-//!   occupancy, not the dense shape.
+//!   [`BsrModel::peek`] probes a file's header ([`BsrMeta`], now carrying
+//!   the container version and dtype) in O(header) without the payload.
+//! * **kernels** ([`bsr`], [`quant`]): gather-free block-GEMM forward over
+//!   the stored blocks only (plus a ReLU-fused variant), in f32 or
+//!   per-block-row symmetric int8 (f32 accumulate) — inference cost
+//!   scales with occupancy, not the dense shape, and the int8 path moves
+//!   4× less block memory.
 //! * **engine** ([`engine`]): a multi-threaded serving engine with
-//!   **bounded admission** (a full queue load-sheds with the typed
-//!   [`engine::EngineError::Overloaded`] instead of queueing forever),
-//!   dynamic micro-batching over `util::pool::ThreadPool`, root-cause
-//!   error propagation to every waiter of a failed batch, and atomic
-//!   model hot-swap (one `Arc` swap; in-flight batches finish on the
-//!   model they started with).
+//!   **bounded admission**, a completion-slot async request path
+//!   ([`engine::Engine::predict_async`] — N in-flight clients cost N
+//!   queue slots, not N parked OS threads), dynamic micro-batching over
+//!   `util::pool::ThreadPool`, root-cause error propagation and atomic
+//!   model hot-swap. It serves any [`ServedModel`] — f32 or int8.
 //! * **registry** ([`registry`]): named multi-model serving — deploy /
-//!   hot-swap / undeploy engines by model name, from memory or disk.
+//!   hot-swap / undeploy engines by model name, from memory or disk
+//!   (dtype resolved automatically via [`load_auto`]).
 //!
 //! `blocksparse export` / `blocksparse infer` drive this from the CLI;
-//! `benches/infer_serve.rs` measures the dense-vs-BSR speedup, the
-//! serving latency distribution, the sustained-overload shed behaviour
-//! and the hot-swap cost into `BENCH_infer.json`.
+//! `benches/infer_serve.rs` measures the dense-vs-BSR speedup, serving
+//! latency (blocking and async), overload shed behaviour, hot-swap cost
+//! and the int8-vs-f32 panel into `BENCH_infer.json`.
 
 pub mod bsr;
 pub mod engine;
+pub mod mmap;
+pub mod quant;
 pub mod registry;
 
 use std::io::{Read, Write};
+use std::ops::Deref;
 use std::path::Path;
+use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::backend::{Backend, TrainState};
 use crate::checkpoint::{crc32, wire};
@@ -50,7 +60,103 @@ use crate::flops::block_sparse_infer_flops;
 use crate::util::rng::Rng;
 
 const MAGIC: &[u8; 4] = b"BSRM";
-const VERSION: u32 = 1;
+/// Container version 1: `"BSRM" | wire body | crc32(body)` (PR 4).
+const VERSION_V1: u32 = 1;
+/// Container version 2: aligned prologue/header/payload (this file's
+/// layout comment on [`write_container`]). What [`BsrModel::save`] writes.
+const VERSION_V2: u32 = 2;
+/// Byte length of the fixed v2 prologue.
+pub(crate) const PROLOGUE_LEN: usize = 40;
+/// v2 dtype code: payload blocks are little-endian f32.
+pub const DTYPE_F32: u32 = 0;
+/// v2 dtype code: payload blocks are int8 with per-block-row f32 scales.
+pub const DTYPE_INT8: u32 = 1;
+
+/// Stable label for a dtype code ("f32" / "int8").
+pub(crate) fn dtype_label(code: u32) -> &'static str {
+    if code == DTYPE_INT8 {
+        "int8"
+    } else {
+        "f32"
+    }
+}
+
+// --------------------------------------------------------------- BlockStore
+
+/// Backing storage for a layer's bulk f32 array (packed blocks, or the
+/// int8 path's scales): either owned heap memory (`load`, `from_dense`)
+/// or a zero-copy window into an mmap'd artifact (`open_mmap`). Derefs to
+/// `&[f32]`, so every kernel reads it exactly like the `Vec<f32>` it
+/// replaced; `Clone` is cheap for the mapped variant (an `Arc` bump, not
+/// a payload copy), which is what keeps hot-swap and registry deploys
+/// O(1) for mmap-backed models.
+#[derive(Clone)]
+pub enum BlockStore {
+    Owned(Vec<f32>),
+    /// `off`/`len` were bounds- and alignment-checked against the region
+    /// when the store was built — the accessor does no per-read checks.
+    Mapped {
+        region: Arc<mmap::MmapRegion>,
+        /// byte offset into the region (8-aligned)
+        off: usize,
+        /// element count
+        len: usize,
+    },
+}
+
+impl BlockStore {
+    pub fn as_slice(&self) -> &[f32] {
+        match self {
+            BlockStore::Owned(v) => v,
+            BlockStore::Mapped { region, off, len } => region.f32s(*off, *len),
+        }
+    }
+
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, BlockStore::Mapped { .. })
+    }
+
+    /// Mutable access, copying a mapped store to owned memory first
+    /// (copy-on-write). Tests corrupt layers through this; the serving
+    /// path never writes blocks.
+    pub fn to_mut(&mut self) -> &mut Vec<f32> {
+        if self.is_mapped() {
+            *self = BlockStore::Owned(self.as_slice().to_vec());
+        }
+        match self {
+            BlockStore::Owned(v) => v,
+            BlockStore::Mapped { .. } => unreachable!("to_mut just copied to Owned"),
+        }
+    }
+}
+
+impl Deref for BlockStore {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<f32>> for BlockStore {
+    fn from(v: Vec<f32>) -> Self {
+        BlockStore::Owned(v)
+    }
+}
+
+impl PartialEq for BlockStore {
+    /// Value equality — an owned store and a mapped store holding the
+    /// same bits compare equal (what the mmap bit-identity tests assert).
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl std::fmt::Debug for BlockStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let kind = if self.is_mapped() { "mapped" } else { "owned" };
+        write!(f, "BlockStore<{kind}, {} f32>", self.len())
+    }
+}
 
 /// One linear slot in packed block-sparse-row form: Z = X·Wᵀ where only
 /// the occupied (m2×n2) blocks of W are stored. `row_ptr`/`col_idx` are
@@ -73,8 +179,9 @@ pub struct BsrLayer {
     pub row_ptr: Vec<u32>,
     /// block-column index j1 of every stored block, sorted within each row
     pub col_idx: Vec<u32>,
-    /// packed (m2×n2) blocks in `col_idx` order (length nnz·m2·n2)
-    pub blocks: Vec<f32>,
+    /// packed (m2×n2) blocks in `col_idx` order (length nnz·m2·n2) —
+    /// owned after `load`, zero-copy after `open_mmap`
+    pub blocks: BlockStore,
 }
 
 impl BsrLayer {
@@ -118,7 +225,7 @@ impl BsrLayer {
             }
             row_ptr.push(col_idx.len() as u32);
         }
-        Ok(Self { name: name.to_string(), m, n, m2, n2, row_ptr, col_idx, blocks })
+        Ok(Self { name: name.to_string(), m, n, m2, n2, row_ptr, col_idx, blocks: blocks.into() })
     }
 
     /// (m1, n1) block-grid shape.
@@ -237,8 +344,8 @@ pub struct BsrModel {
 }
 
 /// Header metadata of a saved artifact, from [`BsrModel::peek`]: enough
-/// to route/validate a deployment (shape fit, layer count, artifact
-/// size) without loading the block payload.
+/// to route/validate a deployment (shape fit, layer count, dtype,
+/// artifact size) without loading the block payload.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct BsrMeta {
     pub spec: String,
@@ -246,8 +353,350 @@ pub struct BsrMeta {
     pub in_dim: usize,
     pub out_dim: usize,
     pub num_layers: usize,
-    /// total artifact size on disk (magic + body + CRC)
+    /// container version on disk (1 = legacy frame, 2 = aligned layout)
+    pub version: u32,
+    /// block payload dtype: "f32" or "int8"
+    pub dtype: String,
+    /// total artifact size on disk
     pub file_bytes: u64,
+}
+
+// ------------------------------------------------------- v2 container core
+//
+// Byte layout of a version-2 artifact (all integers little-endian):
+//
+//   off  0  "BSRM"                      magic
+//   off  4  u32 version = 2             (same position as v1's wire version)
+//   off  8  u32 header_len              wire-framed header byte length
+//   off 12  u32 header_crc              crc32 over the header bytes
+//   off 16  u64 payload_off             8-aligned start of the payload
+//   off 24  u64 payload_len             payload byte length (EOF is exactly
+//                                       payload_off + payload_len)
+//   off 32  u32 payload_crc             crc32 over the payload bytes
+//   off 36  u32 dtype                   DTYPE_F32 | DTYPE_INT8
+//   off 40  header                      spec, method, dims, per-layer
+//                                       metadata + payload-relative u64
+//                                       array offsets (lengths are derived
+//                                       from the layer shape, never trusted
+//                                       from the file)
+//   ...     zero padding to payload_off
+//   payload_off  bulk arrays, each 8-aligned within the payload
+//
+// The header CRC covers every byte the loader *interprets*; the payload
+// CRC covers every byte the kernels *read*. The read path verifies both;
+// the mmap path verifies the header CRC only (touching the payload would
+// defeat the zero-copy point — the read path remains the integrity
+// checker of record, and `peek`'s docs carry the same caveat for v1).
+
+/// Parsed v2 prologue (the fixed 40 bytes).
+pub(crate) struct Prologue {
+    pub header_len: usize,
+    pub header_crc: u32,
+    pub payload_off: u64,
+    pub payload_len: u64,
+    pub payload_crc: u32,
+    pub dtype: u32,
+}
+
+pub(crate) fn read_prologue(bytes: &[u8]) -> Result<Prologue> {
+    if bytes.len() < PROLOGUE_LEN || &bytes[..4] != MAGIC {
+        bail!("not a BSRM block-sparse model");
+    }
+    let u32_at = |o: usize| u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap());
+    let u64_at = |o: usize| u64::from_le_bytes(bytes[o..o + 8].try_into().unwrap());
+    let version = u32_at(4);
+    if version != VERSION_V2 {
+        bail!("unsupported BSR model version {version}");
+    }
+    let p = Prologue {
+        header_len: u32_at(8) as usize,
+        header_crc: u32_at(12),
+        payload_off: u64_at(16),
+        payload_len: u64_at(24),
+        payload_crc: u32_at(32),
+        dtype: u32_at(36),
+    };
+    if p.dtype != DTYPE_F32 && p.dtype != DTYPE_INT8 {
+        bail!("unsupported BSRM dtype code {}", p.dtype);
+    }
+    if p.payload_off % 8 != 0 {
+        bail!("BSRM payload offset {} is not 8-byte aligned", p.payload_off);
+    }
+    if p.payload_off < (PROLOGUE_LEN + p.header_len) as u64 {
+        bail!("BSRM payload overlaps the header");
+    }
+    Ok(p)
+}
+
+/// One layer's header record: shape + payload-relative array offsets.
+/// Array *lengths* are always derived from (m, m2, n2, nnz) — a corrupt
+/// length field cannot exist, and a corrupt offset is caught by the
+/// bounds check in [`span`] before any allocation.
+pub(crate) struct LayerHeader {
+    pub name: String,
+    pub m: usize,
+    pub n: usize,
+    pub m2: usize,
+    pub n2: usize,
+    pub nnz: usize,
+    pub row_ptr_off: u64,
+    pub col_idx_off: u64,
+    pub blocks_off: u64,
+    /// int8 artifacts only (0 and unused for f32)
+    pub scales_off: u64,
+}
+
+impl LayerHeader {
+    /// nnz·m2·n2 with overflow guarded (header fields are attacker- /
+    /// corruption-controlled until the CRC is checked — and the fuzz
+    /// suite feeds this path unchecked combinations on purpose).
+    pub fn block_values(&self) -> Result<u64> {
+        (self.nnz as u64)
+            .checked_mul(self.m2 as u64)
+            .and_then(|v| v.checked_mul(self.n2 as u64))
+            .ok_or_else(|| anyhow!("slot '{}': block value count overflows", self.name))
+    }
+}
+
+pub(crate) struct HeaderV2 {
+    pub spec: String,
+    pub method: String,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub layers: Vec<LayerHeader>,
+}
+
+pub(crate) fn parse_header_v2(h: &[u8], dtype: u32) -> Result<HeaderV2> {
+    let mut off = 0usize;
+    let spec = wire::get_str(h, &mut off).context("reading BSRM header")?;
+    let method = wire::get_str(h, &mut off)?;
+    let in_dim = wire::get_u32(h, &mut off)? as usize;
+    let out_dim = wire::get_u32(h, &mut off)? as usize;
+    let num_layers = wire::get_u32(h, &mut off)? as usize;
+    // no with_capacity(num_layers): the count is untrusted until the
+    // records behind it actually parse
+    let mut layers = Vec::new();
+    for _ in 0..num_layers {
+        let name = wire::get_str(h, &mut off)?;
+        let m = wire::get_u32(h, &mut off)? as usize;
+        let n = wire::get_u32(h, &mut off)? as usize;
+        let m2 = wire::get_u32(h, &mut off)? as usize;
+        let n2 = wire::get_u32(h, &mut off)? as usize;
+        let nnz = wire::get_u32(h, &mut off)? as usize;
+        if m == 0 || n == 0 || m2 == 0 || n2 == 0 || m % m2 != 0 || n % n2 != 0 {
+            bail!("slot '{name}': block ({m2},{n2}) does not tile ({m},{n})");
+        }
+        let row_ptr_off = wire::get_u64(h, &mut off)?;
+        let col_idx_off = wire::get_u64(h, &mut off)?;
+        let blocks_off = wire::get_u64(h, &mut off)?;
+        let scales_off = if dtype == DTYPE_INT8 { wire::get_u64(h, &mut off)? } else { 0 };
+        layers.push(LayerHeader {
+            name, m, n, m2, n2, nnz, row_ptr_off, col_idx_off, blocks_off, scales_off,
+        });
+    }
+    if off != h.len() {
+        bail!("BSRM header has {} trailing bytes", h.len() - off);
+    }
+    Ok(HeaderV2 { spec, method, in_dim, out_dim, layers })
+}
+
+/// Bounds/alignment check one payload array before anything is allocated
+/// or read: returns the (byte offset, byte length) of `count` elements of
+/// `elem` bytes at payload-relative `off`. Every failure mode of a
+/// corrupt offset or an absurd derived count lands here as a typed error.
+pub(crate) fn span(
+    payload_len: usize,
+    off: u64,
+    elem: u64,
+    count: u64,
+    what: &str,
+) -> Result<(usize, usize)> {
+    if off % 8 != 0 {
+        bail!("BSRM array '{what}' at misaligned offset {off}");
+    }
+    let bytes = count
+        .checked_mul(elem)
+        .ok_or_else(|| anyhow!("BSRM array '{what}' byte size overflows"))?;
+    let end = off
+        .checked_add(bytes)
+        .ok_or_else(|| anyhow!("BSRM array '{what}' extent overflows"))?;
+    if end > payload_len as u64 {
+        bail!("BSRM array '{what}' runs past the payload ({end} > {payload_len} bytes)");
+    }
+    Ok((off as usize, bytes as usize))
+}
+
+pub(crate) fn take_u32s(payload: &[u8], off: u64, count: u64, what: &str) -> Result<Vec<u32>> {
+    let (o, b) = span(payload.len(), off, 4, count, what)?;
+    Ok(payload[o..o + b]
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+pub(crate) fn take_f32s(payload: &[u8], off: u64, count: u64, what: &str) -> Result<Vec<f32>> {
+    let (o, b) = span(payload.len(), off, 4, count, what)?;
+    Ok(payload[o..o + b]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+pub(crate) fn take_i8s(payload: &[u8], off: u64, count: u64, what: &str) -> Result<Vec<i8>> {
+    let (o, b) = span(payload.len(), off, 1, count, what)?;
+    Ok(payload[o..o + b].iter().map(|&v| v as i8).collect())
+}
+
+/// A fully-checked view of a v2 container over in-memory (or mapped)
+/// bytes. `verify_payload = false` is the mmap fast path: prologue,
+/// header CRC, padding and extents are still verified — only the
+/// payload-wide CRC sweep (which would touch every page) is skipped.
+pub(crate) struct ContainerV2<'a> {
+    pub prologue: Prologue,
+    pub header: HeaderV2,
+    pub payload: &'a [u8],
+}
+
+pub(crate) fn open_v2_bytes(all: &[u8], verify_payload: bool) -> Result<ContainerV2<'_>> {
+    let prologue = read_prologue(all)?;
+    let end = prologue
+        .payload_off
+        .checked_add(prologue.payload_len)
+        .ok_or_else(|| anyhow!("BSRM payload extent overflows"))?;
+    if end != all.len() as u64 {
+        bail!("BSRM extents say {end} bytes, file has {}", all.len());
+    }
+    // past here payload_off/header_end fit in usize: both ≤ all.len()
+    let header_end = PROLOGUE_LEN + prologue.header_len;
+    let header_bytes = &all[PROLOGUE_LEN..header_end];
+    if crc32(header_bytes) != prologue.header_crc {
+        bail!("BSRM header CRC mismatch (corrupt file)");
+    }
+    if all[header_end..prologue.payload_off as usize].iter().any(|&b| b != 0) {
+        bail!("BSRM header padding corrupt");
+    }
+    let payload = &all[prologue.payload_off as usize..];
+    if verify_payload && crc32(payload) != prologue.payload_crc {
+        bail!("BSRM payload CRC mismatch (corrupt file)");
+    }
+    let header = parse_header_v2(header_bytes, prologue.dtype)?;
+    Ok(ContainerV2 { prologue, header, payload })
+}
+
+/// Incrementally lay out the v2 payload: every array is zero-padded to an
+/// 8-byte boundary before being appended, and the returned offset is
+/// payload-relative — exactly what the header records store.
+pub(crate) struct PayloadWriter {
+    buf: Vec<u8>,
+}
+
+impl PayloadWriter {
+    pub fn new() -> Self {
+        Self { buf: Vec::new() }
+    }
+
+    fn align8(&mut self) -> u64 {
+        while self.buf.len() % 8 != 0 {
+            self.buf.push(0);
+        }
+        self.buf.len() as u64
+    }
+
+    pub fn put_u32s(&mut self, v: &[u32]) -> u64 {
+        let off = self.align8();
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+        off
+    }
+
+    pub fn put_f32s(&mut self, v: &[f32]) -> u64 {
+        let off = self.align8();
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+        off
+    }
+
+    pub fn put_i8s(&mut self, v: &[i8]) -> u64 {
+        let off = self.align8();
+        self.buf.extend(v.iter().map(|&x| x as u8));
+        off
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Atomically publish `parts` (concatenated) at `path`: write a temp
+/// sibling, fsync, rename. A concurrent reader — a hot-swap watcher
+/// re-loading the same path mid-save — sees either the old complete file
+/// or the new complete file, never a torn prefix; this is the on-disk
+/// half of the engine's in-memory `Arc` swap.
+pub(crate) fn atomic_publish(path: &Path, parts: &[&[u8]]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    // pid + process-wide counter keep concurrent savers (even of the
+    // same destination) on distinct temp files; the dot prefix keeps
+    // half-written temps out of naive directory globs
+    static TMP_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let seq = TMP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let file_name = path
+        .file_name()
+        .and_then(|s| s.to_str())
+        .unwrap_or("model.bsm");
+    let tmp = path.with_file_name(format!(
+        ".{file_name}.{}.{seq}.tmp",
+        std::process::id()
+    ));
+    let publish = (|| -> Result<()> {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating BSR model temp {tmp:?}"))?;
+        for p in parts {
+            f.write_all(p)?;
+        }
+        // the rename only publishes bytes that are durably on disk
+        f.sync_all()?;
+        drop(f);
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("publishing BSR model {path:?}"))?;
+        Ok(())
+    })();
+    if publish.is_err() {
+        // a failed publish leaves no temp litter; `path` still holds
+        // whatever complete artifact it held before
+        let _ = std::fs::remove_file(&tmp);
+    }
+    publish
+}
+
+/// Assemble and atomically publish a v2 container from a wire-framed
+/// header and a [`PayloadWriter`]-laid payload.
+pub(crate) fn write_container(
+    path: &Path,
+    dtype: u32,
+    header: &[u8],
+    payload: &[u8],
+) -> Result<()> {
+    if header.len() > u32::MAX as usize {
+        bail!("BSRM header of {} bytes exceeds the u32 frame", header.len());
+    }
+    let header_end = PROLOGUE_LEN + header.len();
+    let payload_off = header_end.div_ceil(8) * 8;
+    let mut pre = Vec::with_capacity(payload_off);
+    pre.extend_from_slice(MAGIC);
+    pre.extend_from_slice(&VERSION_V2.to_le_bytes());
+    pre.extend_from_slice(&(header.len() as u32).to_le_bytes());
+    pre.extend_from_slice(&crc32(header).to_le_bytes());
+    pre.extend_from_slice(&(payload_off as u64).to_le_bytes());
+    pre.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    pre.extend_from_slice(&crc32(payload).to_le_bytes());
+    pre.extend_from_slice(&dtype.to_le_bytes());
+    pre.extend_from_slice(header);
+    pre.resize(payload_off, 0);
+    atomic_publish(path, &[&pre, payload])
 }
 
 impl BsrModel {
@@ -303,22 +752,41 @@ impl BsrModel {
         Ok(())
     }
 
-    /// Serialize: `"BSRM"` | body | crc32(body), body framed with the
-    /// shared `checkpoint::wire` helpers.
-    ///
-    /// The publish is **atomic**: the artifact is fully written and
-    /// fsynced to a temp sibling, then `rename`d over `path` (atomic
-    /// within a directory on POSIX). A concurrent reader — a hot-swap
-    /// watcher re-`load`ing the same path mid-save — sees either the old
-    /// complete file or the new complete file, never a torn prefix; this
-    /// is the on-disk half of the engine's in-memory `Arc` swap.
+    /// Serialize to the current (version-2, aligned) container and
+    /// publish atomically — see [`write_container`] for the layout and
+    /// [`atomic_publish`] for the torn-artifact guarantee. The aligned
+    /// layout is what makes the artifact [`mmap`]-servable.
     pub fn save(&self, path: &Path) -> Result<()> {
         self.validate()?;
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
+        let mut pw = PayloadWriter::new();
+        let mut header = Vec::new();
+        wire::put_str(&mut header, &self.spec);
+        wire::put_str(&mut header, &self.method);
+        wire::put_u32(&mut header, self.in_dim as u32);
+        wire::put_u32(&mut header, self.out_dim as u32);
+        wire::put_u32(&mut header, self.layers.len() as u32);
+        for l in &self.layers {
+            wire::put_str(&mut header, &l.name);
+            wire::put_u32(&mut header, l.m as u32);
+            wire::put_u32(&mut header, l.n as u32);
+            wire::put_u32(&mut header, l.m2 as u32);
+            wire::put_u32(&mut header, l.n2 as u32);
+            wire::put_u32(&mut header, l.col_idx.len() as u32);
+            wire::put_u64(&mut header, pw.put_u32s(&l.row_ptr));
+            wire::put_u64(&mut header, pw.put_u32s(&l.col_idx));
+            wire::put_u64(&mut header, pw.put_f32s(&l.blocks));
         }
+        write_container(path, DTYPE_F32, &header, &pw.finish())
+    }
+
+    /// Serialize in the **legacy version-1** frame (`"BSRM"` | wire body |
+    /// crc32(body)). Kept so the corruption suite and old-artifact
+    /// compatibility tests can mint v1 files; [`BsrModel::load`] reads
+    /// both versions, new artifacts are always written v2.
+    pub fn save_v1(&self, path: &Path) -> Result<()> {
+        self.validate()?;
         let mut body = Vec::new();
-        wire::put_u32(&mut body, VERSION);
+        wire::put_u32(&mut body, VERSION_V1);
         wire::put_str(&mut body, &self.spec);
         wire::put_str(&mut body, &self.method);
         wire::put_u32(&mut body, self.in_dim as u32);
@@ -336,46 +804,15 @@ impl BsrModel {
             wire::put_f32s(&mut body, &l.blocks);
         }
         let crc = crc32(&body);
-        // pid + process-wide counter keep concurrent savers (even of the
-        // same destination) on distinct temp files; the dot prefix keeps
-        // half-written temps out of naive directory globs
-        static TMP_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
-        let seq = TMP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let file_name = path
-            .file_name()
-            .and_then(|s| s.to_str())
-            .unwrap_or("model.bsm");
-        let tmp = path.with_file_name(format!(
-            ".{file_name}.{}.{seq}.tmp",
-            std::process::id()
-        ));
-        let publish = (|| -> Result<()> {
-            let mut f = std::fs::File::create(&tmp)
-                .with_context(|| format!("creating BSR model temp {tmp:?}"))?;
-            f.write_all(MAGIC)?;
-            f.write_all(&body)?;
-            f.write_all(&crc.to_le_bytes())?;
-            // the rename only publishes bytes that are durably on disk
-            f.sync_all()?;
-            drop(f);
-            std::fs::rename(&tmp, path)
-                .with_context(|| format!("publishing BSR model {path:?}"))?;
-            Ok(())
-        })();
-        if publish.is_err() {
-            // a failed publish leaves no temp litter; `path` still holds
-            // whatever complete artifact it held before
-            let _ = std::fs::remove_file(&tmp);
-        }
-        publish
+        atomic_publish(path, &[MAGIC, &body, &crc.to_le_bytes()])
     }
 
     /// Probe a saved artifact's header without reading (or CRC-checking)
     /// the block payload: O(header) work no matter how large the model
     /// is. This is what a registry or startup scan uses to answer "what
     /// is this file and does it fit my engine?" before paying for
-    /// [`BsrModel::load`]. The CRC trails the body, so `peek` cannot
-    /// detect payload corruption — the full `load` still guards that.
+    /// [`BsrModel::load`]. Payload corruption is not detectable here —
+    /// the full `load` still guards that.
     pub fn peek(path: &Path) -> Result<BsrMeta> {
         let file_bytes = std::fs::metadata(path)
             .with_context(|| format!("probing BSR model {path:?}"))?
@@ -390,23 +827,46 @@ impl BsrModel {
         if head.len() < 12 || &head[..4] != MAGIC {
             bail!("not a BSRM block-sparse model");
         }
-        let body = &head[4..];
-        let mut off = 0usize;
-        let version = wire::get_u32(body, &mut off).context("reading BSR model header")?;
-        if version != VERSION {
-            bail!("unsupported BSR model version {version}");
+        let version = u32::from_le_bytes(head[4..8].try_into().unwrap());
+        match version {
+            VERSION_V1 => {
+                let body = &head[4..];
+                let mut off = 4usize; // past the wire version field
+                let spec = wire::get_str(body, &mut off).context("reading BSR model header")?;
+                let method = wire::get_str(body, &mut off)?;
+                let in_dim = wire::get_u32(body, &mut off)? as usize;
+                let out_dim = wire::get_u32(body, &mut off)? as usize;
+                let num_layers = wire::get_u32(body, &mut off)? as usize;
+                Ok(BsrMeta {
+                    spec, method, in_dim, out_dim, num_layers,
+                    version, dtype: "f32".into(), file_bytes,
+                })
+            }
+            VERSION_V2 => {
+                let p = read_prologue(&head)?;
+                // the top-level header fields sit at the front of the
+                // header frame — O(header) stays true even when the
+                // per-layer records run past the probe window
+                let h = &head[PROLOGUE_LEN..head.len().min(PROLOGUE_LEN + p.header_len)];
+                let mut off = 0usize;
+                let spec = wire::get_str(h, &mut off).context("reading BSRM header")?;
+                let method = wire::get_str(h, &mut off)?;
+                let in_dim = wire::get_u32(h, &mut off)? as usize;
+                let out_dim = wire::get_u32(h, &mut off)? as usize;
+                let num_layers = wire::get_u32(h, &mut off)? as usize;
+                Ok(BsrMeta {
+                    spec, method, in_dim, out_dim, num_layers,
+                    version, dtype: dtype_label(p.dtype).into(), file_bytes,
+                })
+            }
+            v => bail!("unsupported BSR model version {v}"),
         }
-        let spec = wire::get_str(body, &mut off)?;
-        let method = wire::get_str(body, &mut off)?;
-        let in_dim = wire::get_u32(body, &mut off)? as usize;
-        let out_dim = wire::get_u32(body, &mut off)? as usize;
-        let num_layers = wire::get_u32(body, &mut off)? as usize;
-        Ok(BsrMeta { spec, method, in_dim, out_dim, num_layers, file_bytes })
     }
 
-    /// Load and fully validate a [`BsrModel::save`] artifact. The CRC is
-    /// checked before any parsing, so a corrupt file fails with the same
-    /// loud guard as a corrupt checkpoint.
+    /// Load and fully validate a saved artifact, either container
+    /// version. Both CRCs (v2: header + payload; v1: whole body) are
+    /// checked before the payload is interpreted, so a corrupt file fails
+    /// with the same loud guard as a corrupt checkpoint.
     pub fn load(path: &Path) -> Result<Self> {
         let mut f = std::fs::File::open(path)
             .with_context(|| format!("opening BSR model {path:?}"))?;
@@ -415,6 +875,14 @@ impl BsrModel {
         if all.len() < 12 || &all[..4] != MAGIC {
             bail!("not a BSRM block-sparse model");
         }
+        match u32::from_le_bytes(all[4..8].try_into().unwrap()) {
+            VERSION_V1 => Self::load_v1(&all),
+            VERSION_V2 => Self::load_v2(&all),
+            v => bail!("unsupported BSR model version {v}"),
+        }
+    }
+
+    fn load_v1(all: &[u8]) -> Result<Self> {
         let body = &all[4..all.len() - 4];
         let stored_crc = u32::from_le_bytes(all[all.len() - 4..].try_into().unwrap());
         if crc32(body) != stored_crc {
@@ -422,7 +890,7 @@ impl BsrModel {
         }
         let mut off = 0usize;
         let version = wire::get_u32(body, &mut off).context("reading BSR model")?;
-        if version != VERSION {
+        if version != VERSION_V1 {
             bail!("unsupported BSR model version {version}");
         }
         let spec = wire::get_str(body, &mut off)?;
@@ -430,7 +898,7 @@ impl BsrModel {
         let in_dim = wire::get_u32(body, &mut off)? as usize;
         let out_dim = wire::get_u32(body, &mut off)? as usize;
         let num_layers = wire::get_u32(body, &mut off)? as usize;
-        let mut layers = Vec::with_capacity(num_layers);
+        let mut layers = Vec::new();
         for _ in 0..num_layers {
             let name = wire::get_str(body, &mut off)?;
             let m = wire::get_u32(body, &mut off)? as usize;
@@ -444,7 +912,7 @@ impl BsrModel {
             let row_ptr = wire::get_u32s(body, &mut off, m / m2 + 1)?;
             let col_idx = wire::get_u32s(body, &mut off, nnz)?;
             let blocks = wire::get_f32s(body, &mut off, nnz * m2 * n2)?;
-            layers.push(BsrLayer { name, m, n, m2, n2, row_ptr, col_idx, blocks });
+            layers.push(BsrLayer { name, m, n, m2, n2, row_ptr, col_idx, blocks: blocks.into() });
         }
         if off != body.len() {
             bail!("BSR model has {} trailing bytes", body.len() - off);
@@ -452,6 +920,184 @@ impl BsrModel {
         let model = BsrModel { spec, method, in_dim, out_dim, layers };
         model.validate()?;
         Ok(model)
+    }
+
+    fn load_v2(all: &[u8]) -> Result<Self> {
+        let c = open_v2_bytes(all, true)?;
+        if c.prologue.dtype != DTYPE_F32 {
+            bail!(
+                "artifact stores {} blocks — open it with `load_auto` or `QuantModel::load`",
+                dtype_label(c.prologue.dtype)
+            );
+        }
+        let mut layers = Vec::new();
+        for lh in &c.header.layers {
+            let m1 = lh.m / lh.m2;
+            let row_ptr = take_u32s(
+                c.payload, lh.row_ptr_off, (m1 + 1) as u64,
+                &format!("{}.row_ptr", lh.name),
+            )?;
+            let col_idx = take_u32s(
+                c.payload, lh.col_idx_off, lh.nnz as u64,
+                &format!("{}.col_idx", lh.name),
+            )?;
+            let blocks = take_f32s(
+                c.payload, lh.blocks_off, lh.block_values()?,
+                &format!("{}.blocks", lh.name),
+            )?;
+            layers.push(BsrLayer {
+                name: lh.name.clone(),
+                m: lh.m,
+                n: lh.n,
+                m2: lh.m2,
+                n2: lh.n2,
+                row_ptr,
+                col_idx,
+                blocks: blocks.into(),
+            });
+        }
+        let model = BsrModel {
+            spec: c.header.spec,
+            method: c.header.method,
+            in_dim: c.header.in_dim,
+            out_dim: c.header.out_dim,
+            layers,
+        };
+        model.validate()?;
+        Ok(model)
+    }
+
+    /// Zero-copy open: see [`mmap::open_bsr_mmap`]. Falls back to the
+    /// read path for v1 artifacts and on platforms without the mmap
+    /// support gate.
+    pub fn open_mmap(path: &Path) -> Result<(Self, mmap::MapStats)> {
+        mmap::open_bsr_mmap(path)
+    }
+}
+
+// ------------------------------------------------------------- ServedModel
+
+/// What the serving engine deploys: a packed model at either payload
+/// dtype. The engine, registry and CLI are dtype-agnostic — they route
+/// through this enum's accessors and [`ServedModel::forward`], so an int8
+/// artifact hot-swaps over an f32 one (and back) with no special casing.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServedModel {
+    F32(BsrModel),
+    Int8(quant::QuantModel),
+}
+
+impl ServedModel {
+    pub fn spec(&self) -> &str {
+        match self {
+            ServedModel::F32(m) => &m.spec,
+            ServedModel::Int8(m) => &m.spec,
+        }
+    }
+
+    pub fn method(&self) -> &str {
+        match self {
+            ServedModel::F32(m) => &m.method,
+            ServedModel::Int8(m) => &m.method,
+        }
+    }
+
+    pub fn in_dim(&self) -> usize {
+        match self {
+            ServedModel::F32(m) => m.in_dim,
+            ServedModel::Int8(m) => m.in_dim,
+        }
+    }
+
+    pub fn out_dim(&self) -> usize {
+        match self {
+            ServedModel::F32(m) => m.out_dim,
+            ServedModel::Int8(m) => m.out_dim,
+        }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        match self {
+            ServedModel::F32(m) => m.layers.len(),
+            ServedModel::Int8(m) => m.layers.len(),
+        }
+    }
+
+    /// Payload dtype label ("f32" / "int8") — what logs and benches tag
+    /// responses with.
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            ServedModel::F32(_) => "f32",
+            ServedModel::Int8(_) => "int8",
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            ServedModel::F32(m) => m.validate(),
+            ServedModel::Int8(m) => m.validate(),
+        }
+    }
+
+    /// Full-stack logits on a flat (nb × in_dim) batch — ReLU fused into
+    /// every hidden layer, none after the logits, whichever dtype.
+    pub fn forward(&self, x: &[f32], nb: usize) -> Result<Vec<f32>> {
+        match self {
+            ServedModel::F32(m) => bsr::model_forward(m, x, nb),
+            ServedModel::Int8(m) => quant::model_forward_q8(m, x, nb),
+        }
+    }
+
+    pub fn nnz_params(&self) -> u64 {
+        match self {
+            ServedModel::F32(m) => m.nnz_params(),
+            ServedModel::Int8(m) => m.nnz_params(),
+        }
+    }
+
+    pub fn block_sparsity(&self) -> f64 {
+        match self {
+            ServedModel::F32(m) => m.block_sparsity(),
+            ServedModel::Int8(m) => m.block_sparsity(),
+        }
+    }
+
+    pub fn infer_flops_per_example(&self) -> u64 {
+        match self {
+            ServedModel::F32(m) => m.infer_flops_per_example(),
+            ServedModel::Int8(m) => m.infer_flops_per_example(),
+        }
+    }
+
+    pub fn dense_flops_per_example(&self) -> u64 {
+        match self {
+            ServedModel::F32(m) => m.dense_flops_per_example(),
+            ServedModel::Int8(m) => m.dense_flops_per_example(),
+        }
+    }
+}
+
+impl From<BsrModel> for ServedModel {
+    fn from(m: BsrModel) -> Self {
+        ServedModel::F32(m)
+    }
+}
+
+impl From<quant::QuantModel> for ServedModel {
+    fn from(m: quant::QuantModel) -> Self {
+        ServedModel::Int8(m)
+    }
+}
+
+/// Load an artifact of either dtype: one O(header) [`BsrModel::peek`]
+/// routes to the matching loader. This is what `deploy_from_path`, the
+/// CLI and any artifact watcher call — they never hard-code a dtype.
+pub fn load_auto(path: &Path) -> Result<ServedModel> {
+    let meta = BsrModel::peek(path)?;
+    if meta.dtype == "int8" {
+        Ok(ServedModel::Int8(quant::QuantModel::load(path)?))
+    } else {
+        Ok(ServedModel::F32(BsrModel::load(path)?))
     }
 }
 
@@ -580,6 +1226,19 @@ mod tests {
     }
 
     #[test]
+    fn block_store_cow_and_equality() {
+        let owned: BlockStore = vec![1.0f32, 2.0, 3.0].into();
+        assert!(!owned.is_mapped());
+        assert_eq!(&owned[..], &[1.0, 2.0, 3.0]);
+        let mut copy = owned.clone();
+        copy.to_mut().push(4.0);
+        assert_eq!(copy.len(), 4);
+        assert_eq!(owned.len(), 3, "to_mut on a clone must not alias");
+        assert_ne!(owned, copy);
+        assert_eq!(owned, BlockStore::from(vec![1.0f32, 2.0, 3.0]));
+    }
+
+    #[test]
     fn validate_catches_structural_corruption() {
         let (w, m, n) = dense_with_holes();
         let good = BsrLayer::from_dense("fc", &w, m, n, 2, 3).unwrap();
@@ -590,7 +1249,7 @@ mod tests {
         bad.row_ptr[1] = 3; // beyond col_idx
         assert!(bad.validate().is_err());
         let mut bad = good.clone();
-        bad.blocks.pop();
+        bad.blocks.to_mut().pop();
         assert!(bad.validate().is_err());
         let mut bad = good;
         bad.row_ptr = vec![0, 2];
@@ -650,36 +1309,33 @@ mod tests {
         assert_eq!(mask0.iter().filter(|&&v| v == 1.0).count(), 1);
     }
 
-    #[test]
-    fn save_load_round_trip_and_crc_guard() {
+    fn tiny_model(spec: &str) -> BsrModel {
         let (w, m, n) = dense_with_holes();
-        let model = BsrModel {
-            spec: "tiny".into(),
+        BsrModel {
+            spec: spec.into(),
             method: "kpd".into(),
             in_dim: n,
             out_dim: m,
             layers: vec![BsrLayer::from_dense("fc", &w, m, n, 2, 3).unwrap()],
-        };
+        }
+    }
+
+    // NOTE: the hostile-input coverage (byte-flip/truncation sweeps over
+    // both container versions, read + mmap paths) lives in
+    // tests/corruption.rs — these tests pin the happy paths and the v2
+    // byte layout.
+
+    #[test]
+    fn save_load_round_trip_v2() {
+        let model = tiny_model("tiny");
         let dir = std::env::temp_dir().join("bs_bsrm_test");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("m.bsm");
         model.save(&path).unwrap();
         let back = BsrModel::load(&path).unwrap();
         assert_eq!(back, model);
-        // flip one body byte: the load must fail at the CRC guard — the
-        // same corruption contract as the checkpoint container
-        let clean = std::fs::read(&path).unwrap();
-        let mut bytes = clean.clone();
-        let mid = bytes.len() / 2;
-        bytes[mid] ^= 0xFF;
-        std::fs::write(&path, &bytes).unwrap();
-        let err = BsrModel::load(&path).unwrap_err();
-        assert!(format!("{err:#}").contains("CRC"), "wanted CRC error, got: {err:#}");
-        // truncation is caught too (CRC over a shorter body cannot match)
-        std::fs::write(&path, &clean[..clean.len() - 9]).unwrap();
-        assert!(BsrModel::load(&path).is_err());
-        // wrong magic
-        let mut bytes = clean;
+        // wrong magic fails the same loud way as always
+        let mut bytes = std::fs::read(&path).unwrap();
         bytes[0] = b'X';
         std::fs::write(&path, &bytes).unwrap();
         let err = BsrModel::load(&path).unwrap_err();
@@ -687,15 +1343,53 @@ mod tests {
     }
 
     #[test]
+    fn v2_layout_is_aligned_and_extent_checked() {
+        let model = tiny_model("layout");
+        let dir = std::env::temp_dir().join("bs_bsrm_layout_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.bsm");
+        model.save(&path).unwrap();
+        let all = std::fs::read(&path).unwrap();
+        let p = read_prologue(&all).unwrap();
+        assert_eq!(p.dtype, DTYPE_F32);
+        assert_eq!(p.payload_off % 8, 0);
+        assert_eq!(p.payload_off + p.payload_len, all.len() as u64);
+        let c = open_v2_bytes(&all, true).unwrap();
+        assert_eq!(c.header.spec, "layout");
+        for lh in &c.header.layers {
+            assert_eq!(lh.row_ptr_off % 8, 0);
+            assert_eq!(lh.col_idx_off % 8, 0);
+            assert_eq!(lh.blocks_off % 8, 0);
+        }
+        // a trailing byte breaks the extent equation — typed error, no
+        // trailing-garbage acceptance
+        let mut grown = all.clone();
+        grown.push(0);
+        std::fs::write(&path, &grown).unwrap();
+        assert!(BsrModel::load(&path).is_err());
+    }
+
+    #[test]
+    fn save_v1_round_trips_through_the_version_branch() {
+        let model = tiny_model("legacy");
+        let dir = std::env::temp_dir().join("bs_bsrm_v1_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.bsm");
+        model.save_v1(&path).unwrap();
+        assert_eq!(BsrModel::load(&path).unwrap(), model);
+        let meta = BsrModel::peek(&path).unwrap();
+        assert_eq!(meta.version, 1);
+        assert_eq!(meta.dtype, "f32");
+        // and the same model written v2 peeks as version 2
+        model.save(&path).unwrap();
+        let meta = BsrModel::peek(&path).unwrap();
+        assert_eq!(meta.version, 2);
+        assert_eq!(meta.dtype, "f32");
+    }
+
+    #[test]
     fn save_publishes_atomically_over_an_existing_artifact() {
-        let (w, m, n) = dense_with_holes();
-        let mk = |spec: &str| BsrModel {
-            spec: spec.into(),
-            method: "kpd".into(),
-            in_dim: n,
-            out_dim: m,
-            layers: vec![BsrLayer::from_dense("fc", &w, m, n, 2, 3).unwrap()],
-        };
+        let mk = tiny_model;
         let dir = std::env::temp_dir().join("bs_bsrm_atomic_test");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("m.bsm");
@@ -731,9 +1425,28 @@ mod tests {
         assert_eq!(meta.in_dim, n);
         assert_eq!(meta.out_dim, m);
         assert_eq!(meta.num_layers, 1);
+        assert_eq!(meta.version, 2);
+        assert_eq!(meta.dtype, "f32");
         assert_eq!(meta.file_bytes, std::fs::metadata(&path).unwrap().len());
         // peek shares the magic guard with load
         std::fs::write(&path, b"XXXX12345678").unwrap();
         assert!(BsrModel::peek(&path).is_err());
+    }
+
+    #[test]
+    fn load_auto_routes_f32() {
+        let model = tiny_model("auto");
+        let dir = std::env::temp_dir().join("bs_bsrm_auto_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.bsm");
+        model.save(&path).unwrap();
+        let served = load_auto(&path).unwrap();
+        assert_eq!(served.dtype(), "f32");
+        assert_eq!(served.spec(), "auto");
+        assert_eq!((served.in_dim(), served.out_dim()), (model.in_dim, model.out_dim));
+        match served {
+            ServedModel::F32(back) => assert_eq!(back, model),
+            other => panic!("wanted F32, got {other:?}"),
+        }
     }
 }

@@ -1,0 +1,665 @@
+//! Int8-quantized BSR: per-block-row symmetric quantization of the packed
+//! block payload, with f32 accumulation in the kernels (W8A32).
+//!
+//! Block-sparse inference at serving batch sizes is memory-bandwidth
+//! bound — the kernel streams every stored block once per batch row while
+//! the activations stay cache-hot. Storing blocks as i8 moves 4× less
+//! payload per block than f32, which is where the BENCH_infer int8 panel's
+//! ≥1.5× throughput gate comes from.
+//!
+//! Quantization granularity is one scale per **row of each stored
+//! block** (`scales[k·m2 + i2]`, f32): the inner kernel loop is a dot
+//! product between one block row and an n2-segment of the input, so a
+//! per-row scale folds into a single multiply *after* the integer dot —
+//! no per-element rescale on the hot path, and the error bound stays
+//! local: `|w − dq(q(w))| ≤ scale/2` with `scale = max|row|/127`
+//! (all-zero rows get scale 0 and round-trip exactly). Accumulation is
+//! f32 throughout ([`crate::backend::native::simd::dot_q8`] widens i8 →
+//! f32 and FMAs against the activations), so the only error source is the
+//! weight rounding itself.
+//!
+//! On disk a [`QuantModel`] is an ordinary version-2 `"BSRM"` container
+//! with `dtype = int8`: same header plus one extra payload offset per
+//! layer (`scales_off`), same 8-aligned payload rules, same atomic
+//! publish. [`super::load_auto`] routes on the dtype field;
+//! [`super::mmap::open_quant_mmap`] serves both qblocks and scales
+//! zero-copy.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::backend::native::linalg::{par_rows, threads_for};
+use crate::backend::native::simd::{self, SimdKind};
+use crate::checkpoint::wire;
+use crate::flops::block_sparse_infer_flops;
+
+use super::mmap::MmapRegion;
+use super::{BlockStore, BsrLayer, BsrModel, DTYPE_F32, DTYPE_INT8, MAGIC};
+
+// ------------------------------------------------------------ QBlockStore
+
+/// Where a layer's quantized block payload lives — the i8 twin of
+/// [`BlockStore`], with the same contract: owned after a read/quantize,
+/// a window into a shared mapping after `open_quant_mmap`, copy-on-write
+/// via [`QBlockStore::to_mut`].
+#[derive(Clone)]
+pub enum QBlockStore {
+    Owned(Vec<i8>),
+    Mapped {
+        region: Arc<MmapRegion>,
+        off: usize,
+        len: usize,
+    },
+}
+
+impl QBlockStore {
+    pub fn as_slice(&self) -> &[i8] {
+        match self {
+            QBlockStore::Owned(v) => v,
+            QBlockStore::Mapped { region, off, len } => region.i8s(*off, *len),
+        }
+    }
+
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, QBlockStore::Mapped { .. })
+    }
+
+    /// Mutable access, converting a mapped store to an owned copy first.
+    pub fn to_mut(&mut self) -> &mut Vec<i8> {
+        if let QBlockStore::Mapped { .. } = self {
+            *self = QBlockStore::Owned(self.as_slice().to_vec());
+        }
+        match self {
+            QBlockStore::Owned(v) => v,
+            QBlockStore::Mapped { .. } => unreachable!("converted to Owned above"),
+        }
+    }
+}
+
+impl std::ops::Deref for QBlockStore {
+    type Target = [i8];
+    fn deref(&self) -> &[i8] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<i8>> for QBlockStore {
+    fn from(v: Vec<i8>) -> Self {
+        QBlockStore::Owned(v)
+    }
+}
+
+impl PartialEq for QBlockStore {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl std::fmt::Debug for QBlockStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let kind = if self.is_mapped() { "mapped" } else { "owned" };
+        write!(f, "QBlockStore<{kind}, {} i8>", self.len())
+    }
+}
+
+// -------------------------------------------------------------- QuantLayer
+
+/// One int8 BSR slot: the same CSR index as [`BsrLayer`], i8 block
+/// payload, and one f32 scale per stored block row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantLayer {
+    pub name: String,
+    pub m: usize,
+    pub n: usize,
+    pub m2: usize,
+    pub n2: usize,
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    /// nnz · m2 · n2 quantized values, blocks contiguous in storage order
+    pub qblocks: QBlockStore,
+    /// nnz · m2 dequantization scales, `scales[k·m2 + i2]` for block k row i2
+    pub scales: BlockStore,
+}
+
+impl QuantLayer {
+    pub fn grid(&self) -> (usize, usize) {
+        (self.m / self.m2, self.n / self.n2)
+    }
+
+    pub fn nnz_blocks(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    pub fn occupancy(&self) -> f64 {
+        let (m1, n1) = self.grid();
+        self.nnz_blocks() as f64 / (m1 * n1) as f64
+    }
+
+    pub fn block_sparsity(&self) -> f64 {
+        1.0 - self.occupancy()
+    }
+
+    /// Stored parameter count (quantized values; scales excluded — they
+    /// are metadata, 1/n2 of the payload).
+    pub fn nnz_params(&self) -> u64 {
+        self.qblocks.len() as u64
+    }
+
+    /// Same FLOP convention as the f32 path: the int8 kernel does the
+    /// same multiply-adds, just against narrower storage.
+    pub fn infer_flops(&self) -> u64 {
+        block_sparse_infer_flops(1, self.m2 as u64, self.n2 as u64, self.nnz_blocks() as u64)
+    }
+
+    pub fn dense_flops(&self) -> u64 {
+        let (m1, n1) = self.grid();
+        block_sparse_infer_flops(1, self.m2 as u64, self.n2 as u64, (m1 * n1) as u64)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.m == 0 || self.n == 0 || self.m2 == 0 || self.n2 == 0 {
+            bail!("slot '{}': zero dimension", self.name);
+        }
+        if self.m % self.m2 != 0 || self.n % self.n2 != 0 {
+            bail!(
+                "slot '{}': block ({},{}) does not tile ({},{})",
+                self.name, self.m2, self.n2, self.m, self.n
+            );
+        }
+        let (m1, n1) = self.grid();
+        if self.row_ptr.len() != m1 + 1 {
+            bail!("slot '{}': row_ptr has {} entries, want {}", self.name, self.row_ptr.len(), m1 + 1);
+        }
+        if !self.row_ptr.windows(2).all(|w| w[0] <= w[1]) || self.row_ptr[0] != 0 {
+            bail!("slot '{}': row_ptr is not monotonically increasing from 0", self.name);
+        }
+        let nnz = self.row_ptr[m1] as usize;
+        if self.col_idx.len() != nnz {
+            bail!("slot '{}': {} col_idx for {nnz} stored blocks", self.name, self.col_idx.len());
+        }
+        if self.col_idx.iter().any(|&j| j as usize >= n1) {
+            bail!("slot '{}': col_idx out of range [0, {n1})", self.name);
+        }
+        if self.qblocks.len() != nnz * self.m2 * self.n2 {
+            bail!(
+                "slot '{}': {} quantized values for {nnz} stored blocks",
+                self.name,
+                self.qblocks.len()
+            );
+        }
+        if self.scales.len() != nnz * self.m2 {
+            bail!(
+                "slot '{}': {} scales for {nnz} stored blocks of {} rows",
+                self.name,
+                self.scales.len(),
+                self.m2
+            );
+        }
+        if self.scales.iter().any(|s| !s.is_finite() || *s < 0.0) {
+            bail!("slot '{}': scales must be finite and non-negative", self.name);
+        }
+        Ok(())
+    }
+}
+
+// -------------------------------------------------------------- QuantModel
+
+/// A full int8-quantized BSR stack — the serving artifact behind
+/// `export --quant int8`, deployed through [`super::ServedModel::Int8`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantModel {
+    pub spec: String,
+    pub method: String,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub layers: Vec<QuantLayer>,
+}
+
+impl QuantModel {
+    pub fn validate(&self) -> Result<()> {
+        if self.layers.is_empty() {
+            bail!("quantized BSR model '{}' has no layers", self.spec);
+        }
+        let mut prev = self.in_dim;
+        for l in &self.layers {
+            l.validate()?;
+            if l.n != prev {
+                bail!(
+                    "quantized model '{}': layer '{}' wants {} inputs, previous layer emits {prev}",
+                    self.spec, l.name, l.n
+                );
+            }
+            prev = l.m;
+        }
+        if prev != self.out_dim {
+            bail!(
+                "quantized model '{}': last layer emits {prev}, model declares {} outputs",
+                self.spec, self.out_dim
+            );
+        }
+        Ok(())
+    }
+
+    pub fn nnz_params(&self) -> u64 {
+        self.layers.iter().map(QuantLayer::nnz_params).sum()
+    }
+
+    pub fn block_sparsity(&self) -> f64 {
+        crate::sparsity::aggregate(
+            &self
+                .layers
+                .iter()
+                .map(|l| (l.block_sparsity(), l.m * l.n))
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    pub fn infer_flops_per_example(&self) -> u64 {
+        self.layers.iter().map(QuantLayer::infer_flops).sum()
+    }
+
+    pub fn dense_flops_per_example(&self) -> u64 {
+        self.layers.iter().map(QuantLayer::dense_flops).sum()
+    }
+
+    /// Serialize as a version-2 container with `dtype = int8`: identical
+    /// header layout to the f32 path plus one `scales_off` per layer.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.validate()?;
+        let mut pw = super::PayloadWriter::new();
+        let mut header = Vec::new();
+        wire::put_str(&mut header, &self.spec);
+        wire::put_str(&mut header, &self.method);
+        wire::put_u32(&mut header, self.in_dim as u32);
+        wire::put_u32(&mut header, self.out_dim as u32);
+        wire::put_u32(&mut header, self.layers.len() as u32);
+        for l in &self.layers {
+            wire::put_str(&mut header, &l.name);
+            wire::put_u32(&mut header, l.m as u32);
+            wire::put_u32(&mut header, l.n as u32);
+            wire::put_u32(&mut header, l.m2 as u32);
+            wire::put_u32(&mut header, l.n2 as u32);
+            wire::put_u32(&mut header, l.col_idx.len() as u32);
+            wire::put_u64(&mut header, pw.put_u32s(&l.row_ptr));
+            wire::put_u64(&mut header, pw.put_u32s(&l.col_idx));
+            wire::put_u64(&mut header, pw.put_i8s(&l.qblocks));
+            wire::put_u64(&mut header, pw.put_f32s(&l.scales));
+        }
+        super::write_container(path, DTYPE_INT8, &header, &pw.finish())
+    }
+
+    /// Load from disk with full payload CRC verification. Version-1
+    /// containers never carry int8 payloads, so only version 2 is
+    /// accepted; an f32 artifact is redirected to the right loader.
+    pub fn load(path: &Path) -> Result<Self> {
+        let all = std::fs::read(path).with_context(|| format!("reading BSR model {path:?}"))?;
+        if all.len() < 12 || &all[..4] != MAGIC {
+            bail!("{path:?} is not a BSRM artifact");
+        }
+        let version = u32::from_le_bytes(all[4..8].try_into().unwrap());
+        if version == super::VERSION_V1 {
+            bail!("version 1 containers store f32 blocks only — use `BsrModel::load`");
+        }
+        let c = super::open_v2_bytes(&all, true)?;
+        if c.prologue.dtype == DTYPE_F32 {
+            bail!("artifact stores f32 blocks — open it with `load_auto` or `BsrModel::load`");
+        }
+        let mut layers = Vec::new();
+        for lh in &c.header.layers {
+            let m1 = lh.m / lh.m2;
+            let row_ptr = super::take_u32s(
+                c.payload, lh.row_ptr_off, (m1 + 1) as u64,
+                &format!("{}.row_ptr", lh.name),
+            )?;
+            let col_idx = super::take_u32s(
+                c.payload, lh.col_idx_off, lh.nnz as u64,
+                &format!("{}.col_idx", lh.name),
+            )?;
+            let qblocks = super::take_i8s(
+                c.payload, lh.blocks_off, lh.block_values()?,
+                &format!("{}.qblocks", lh.name),
+            )?;
+            let scales = super::take_f32s(
+                c.payload, lh.scales_off, (lh.nnz as u64) * (lh.m2 as u64),
+                &format!("{}.scales", lh.name),
+            )?;
+            layers.push(QuantLayer {
+                name: lh.name.clone(),
+                m: lh.m,
+                n: lh.n,
+                m2: lh.m2,
+                n2: lh.n2,
+                row_ptr,
+                col_idx,
+                qblocks: qblocks.into(),
+                scales: scales.into(),
+            });
+        }
+        let model = QuantModel {
+            spec: c.header.spec.clone(),
+            method: c.header.method.clone(),
+            in_dim: c.header.in_dim,
+            out_dim: c.header.out_dim,
+            layers,
+        };
+        model.validate().with_context(|| format!("validating quantized model from {path:?}"))?;
+        Ok(model)
+    }
+
+    /// Zero-copy open — see [`super::mmap::open_quant_mmap`].
+    pub fn open_mmap(path: &Path) -> Result<(Self, super::mmap::MapStats)> {
+        super::mmap::open_quant_mmap(path)
+    }
+}
+
+// ------------------------------------------------------------ quantization
+
+/// Quantize one f32 BSR layer: per stored block row,
+/// `scale = max|row| / 127`, `q = clamp(round(w / scale), −127, 127)`.
+/// All-zero rows get scale 0 (and round-trip exactly); the symmetric
+/// range never uses −128, so negation stays lossless.
+pub fn quantize_layer(l: &BsrLayer) -> QuantLayer {
+    let (m2, n2) = (l.m2, l.n2);
+    let nnz = l.nnz_blocks();
+    let mut qblocks = vec![0i8; nnz * m2 * n2];
+    let mut scales = vec![0.0f32; nnz * m2];
+    for k in 0..nnz {
+        let blk = &l.blocks[k * m2 * n2..(k + 1) * m2 * n2];
+        for i2 in 0..m2 {
+            let row = &blk[i2 * n2..(i2 + 1) * n2];
+            let maxabs = row.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+            if maxabs == 0.0 {
+                continue; // scale 0, all-zero q row
+            }
+            let scale = maxabs / 127.0;
+            scales[k * m2 + i2] = scale;
+            let qrow = &mut qblocks[(k * m2 + i2) * n2..(k * m2 + i2 + 1) * n2];
+            for (q, &w) in qrow.iter_mut().zip(row) {
+                *q = (w / scale).round().clamp(-127.0, 127.0) as i8;
+            }
+        }
+    }
+    QuantLayer {
+        name: l.name.clone(),
+        m: l.m,
+        n: l.n,
+        m2,
+        n2,
+        row_ptr: l.row_ptr.clone(),
+        col_idx: l.col_idx.clone(),
+        qblocks: qblocks.into(),
+        scales: scales.into(),
+    }
+}
+
+/// Quantize a whole f32 stack — the `export --quant int8` entry point.
+pub fn quantize_model(m: &BsrModel) -> Result<QuantModel> {
+    m.validate()?;
+    Ok(QuantModel {
+        spec: m.spec.clone(),
+        method: m.method.clone(),
+        in_dim: m.in_dim,
+        out_dim: m.out_dim,
+        layers: m.layers.iter().map(quantize_layer).collect(),
+    })
+}
+
+/// Reconstruct the f32 layer a [`QuantLayer`] encodes: `w = scale · q`.
+/// Each value is within `scale/2` of the original (exact for all-zero
+/// rows and 1×1 blocks) — the property tests pin this bound.
+pub fn dequantize_layer(l: &QuantLayer) -> BsrLayer {
+    let (m2, n2) = (l.m2, l.n2);
+    let blocks: Vec<f32> = l
+        .qblocks
+        .iter()
+        .enumerate()
+        .map(|(i, &q)| l.scales[i / n2] * q as f32)
+        .collect();
+    BsrLayer {
+        name: l.name.clone(),
+        m: l.m,
+        n: l.n,
+        m2,
+        n2,
+        row_ptr: l.row_ptr.clone(),
+        col_idx: l.col_idx.clone(),
+        blocks: blocks.into(),
+    }
+}
+
+// ----------------------------------------------------------------- kernels
+
+/// Z(N, m) = X(N, n) · dq(W)ᵀ over the occupied blocks of `l` — the int8
+/// mirror of `bsr::forward_impl`: same validation, same `par_rows` split,
+/// but the inner dot runs over i8 block rows
+/// ([`simd::dot_q8`], f32 accumulate) with the per-row scale folded into
+/// one multiply after the dot.
+fn forward_impl_q8(
+    kind: SimdKind,
+    x: &[f32],
+    nb: usize,
+    l: &QuantLayer,
+    relu: bool,
+) -> Result<Vec<f32>> {
+    let (m, n, m2, n2) = (l.m, l.n, l.m2, l.n2);
+    l.validate()?;
+    let (m1, _) = l.grid();
+    if x.len() != nb * n {
+        bail!("layer '{}': batch wants {nb}·{n} values, got {}", l.name, x.len());
+    }
+    let nnz = l.row_ptr[m1] as usize;
+    let qblocks = l.qblocks.as_slice();
+    let scales = l.scales.as_slice();
+    let mut out = vec![0.0f32; nb * m];
+    let work = nb * nnz * m2 * n2;
+    par_rows(&mut out, nb, m, threads_for(work), |b, row| {
+        let xrow = &x[b * n..(b + 1) * n];
+        for i1 in 0..m1 {
+            let orow = &mut row[i1 * m2..(i1 + 1) * m2];
+            let (lo, hi) = (l.row_ptr[i1] as usize, l.row_ptr[i1 + 1] as usize);
+            for k in lo..hi {
+                let j1 = l.col_idx[k] as usize;
+                let xseg = &xrow[j1 * n2..(j1 + 1) * n2];
+                let blk = &qblocks[k * m2 * n2..(k + 1) * m2 * n2];
+                let srow = &scales[k * m2..(k + 1) * m2];
+                for (i2, o) in orow.iter_mut().enumerate() {
+                    *o += srow[i2] * simd::dot_q8(kind, &blk[i2 * n2..(i2 + 1) * n2], xseg);
+                }
+            }
+            if relu {
+                for o in orow.iter_mut() {
+                    if *o < 0.0 {
+                        *o = 0.0;
+                    }
+                }
+            }
+        }
+    });
+    Ok(out)
+}
+
+/// Single-layer int8 forward (no activation) under the dispatched SIMD
+/// kind — bench and test entry point.
+pub fn q8_forward(x: &[f32], nb: usize, l: &QuantLayer) -> Result<Vec<f32>> {
+    forward_impl_q8(simd::active(), x, nb, l, false)
+}
+
+/// [`q8_forward`] with an explicit SIMD kind — scalar-vs-dispatched
+/// parity tests and bench variants go through here.
+pub fn q8_forward_with(
+    kind: SimdKind,
+    x: &[f32],
+    nb: usize,
+    l: &QuantLayer,
+    relu: bool,
+) -> Result<Vec<f32>> {
+    forward_impl_q8(kind, x, nb, l, relu)
+}
+
+/// Logits of a full int8 stack on a flat batch — ReLU fused into every
+/// hidden layer, none after the logits; the int8 mirror of
+/// [`super::bsr::model_forward`] with identical error coordinates.
+pub fn model_forward_q8(model: &QuantModel, x: &[f32], nb: usize) -> Result<Vec<f32>> {
+    if model.layers.is_empty() {
+        bail!("quantized BSR model '{}' has no layers", model.spec);
+    }
+    if nb == 0 || x.len() != nb * model.in_dim {
+        bail!(
+            "model '{}' wants a flat batch of {}·{} values, got {}",
+            model.spec, nb, model.in_dim, x.len()
+        );
+    }
+    let kind = simd::active();
+    let last = model.layers.len() - 1;
+    let at = |i: usize| format!("model '{}' layer {i} ('{}')", model.spec, model.layers[i].name);
+    let mut cur =
+        forward_impl_q8(kind, x, nb, &model.layers[0], last != 0).with_context(|| at(0))?;
+    for (i, l) in model.layers.iter().enumerate().skip(1) {
+        cur = forward_impl_q8(kind, &cur, nb, l, i < last).with_context(|| at(i))?;
+    }
+    Ok(cur)
+}
+
+/// Time one int8 layer's forward — the quantized twin of
+/// [`super::bsr::time_layer`], feeding `blockopt`'s dtype-aware cost
+/// calibration. Bench name: `bsrq8.{m}x{n}_b{m2}x{n2}`.
+pub fn time_layer_q8(x: &[f32], nb: usize, layer: &QuantLayer) -> Result<crate::bench::BenchStats> {
+    let kind = simd::active();
+    forward_impl_q8(kind, x, nb, layer, false)
+        .with_context(|| format!("timing quantized layer '{}'", layer.name))?;
+    let name = format!("bsrq8.{}x{}_b{}x{}", layer.m, layer.n, layer.m2, layer.n2);
+    Ok(crate::bench::quick_bench(&name, || {
+        std::hint::black_box(
+            forward_impl_q8(kind, std::hint::black_box(x), nb, layer, false).unwrap(),
+        );
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::synth_block_sparse_weights;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn layer(seed: u64, m: usize, n: usize, m2: usize, n2: usize, density: f64) -> BsrLayer {
+        let mut rng = Rng::new(seed);
+        let (w, _) = synth_block_sparse_weights(&mut rng, m, n, m2, n2, density);
+        BsrLayer::from_dense("fc", &w, m, n, m2, n2).unwrap()
+    }
+
+    #[test]
+    fn round_trip_error_is_within_half_scale_per_row() {
+        let l = layer(3, 12, 16, 3, 4, 0.6);
+        let q = quantize_layer(&l);
+        q.validate().unwrap();
+        let back = dequantize_layer(&q);
+        let (m2, n2) = (l.m2, l.n2);
+        for k in 0..l.nnz_blocks() {
+            for i2 in 0..m2 {
+                let scale = q.scales[k * m2 + i2];
+                for j2 in 0..n2 {
+                    let w = l.blocks[(k * m2 + i2) * n2 + j2];
+                    let dq = back.blocks[(k * m2 + i2) * n2 + j2];
+                    assert!(
+                        (w - dq).abs() <= scale / 2.0 + 1e-7,
+                        "block {k} row {i2} col {j2}: |{w} - {dq}| > {scale}/2"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_rows_and_single_element_blocks_round_trip_exactly() {
+        // all-zero stored block: scale 0, q 0, dequant exactly 0
+        let mut l = layer(4, 8, 8, 2, 2, 0.5);
+        let span = l.m2 * l.n2;
+        l.blocks.to_mut()[..span].fill(0.0);
+        let q = quantize_layer(&l);
+        assert!(q.scales[..l.m2].iter().all(|&s| s == 0.0));
+        assert!(dequantize_layer(&q).blocks[..span].iter().all(|&v| v == 0.0));
+        // 1×1 blocks: every row is its own max → |q| = 127 or 0, exact
+        let l1 = layer(5, 6, 6, 1, 1, 0.7);
+        let back = dequantize_layer(&quantize_layer(&l1));
+        for (a, b) in l1.blocks.iter().zip(back.blocks.iter()) {
+            assert!((a - b).abs() <= a.abs() * 1e-6, "1x1 must be ~exact: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn q8_forward_tracks_f32_forward() {
+        let l = layer(6, 24, 32, 4, 8, 0.5);
+        let q = quantize_layer(&l);
+        let nb = 5;
+        let mut rng = Rng::new(7);
+        let x: Vec<f32> = (0..nb * l.n).map(|_| rng.normal()).collect();
+        let zf = super::super::bsr::bsr_forward(&x, nb, &l).unwrap();
+        let zq = q8_forward(&x, nb, &q).unwrap();
+        // int8 weights ⇒ relative error ~1/254 per term; loose abs bound
+        // scaled by the logit magnitude
+        let rms = (zf.iter().map(|v| (v * v) as f64).sum::<f64>() / zf.len() as f64).sqrt();
+        let mae = zf.iter().zip(&zq).map(|(a, b)| (a - b).abs() as f64).sum::<f64>()
+            / zf.len() as f64;
+        assert!(mae <= 0.02 * rms + 1e-4, "mae {mae} vs rms {rms}");
+    }
+
+    #[test]
+    fn q8_forward_validates_like_the_f32_kernel() {
+        let q = quantize_layer(&layer(8, 8, 8, 2, 2, 0.5));
+        let x = vec![0.0f32; 2 * 8];
+        assert!(q8_forward(&x, 2, &q).is_ok());
+        assert!(q8_forward(&x[..15], 2, &q).is_err());
+        let mut bad = q.clone();
+        bad.col_idx[0] = 99;
+        assert!(q8_forward(&x, 2, &bad).is_err());
+        let mut bad = q.clone();
+        let cut = bad.scales.len() - 1;
+        bad.scales.to_mut().truncate(cut);
+        assert!(q8_forward(&x, 2, &bad).is_err());
+        let mut bad = q.clone();
+        bad.scales.to_mut()[0] = f32::NAN;
+        assert!(q8_forward(&x, 2, &bad).is_err());
+    }
+
+    #[test]
+    fn save_load_round_trip_int8() {
+        let model = QuantModel {
+            spec: "q8-rt".into(),
+            method: "kpd".into(),
+            in_dim: 16,
+            out_dim: 12,
+            layers: vec![quantize_layer(&layer(9, 12, 16, 3, 4, 0.6))],
+        };
+        model.validate().unwrap();
+        let dir = std::env::temp_dir().join("bs_quant_save_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.bsm");
+        model.save(&path).unwrap();
+        let back = QuantModel::load(&path).unwrap();
+        assert_eq!(back, model);
+        // peek reports the dtype without reading the payload
+        let meta = BsrModel::peek(&path).unwrap();
+        assert_eq!(meta.dtype, "int8");
+        assert_eq!(meta.version, 2);
+        // the typed loaders refuse to cross dtypes
+        let err = BsrModel::load(&path).unwrap_err().to_string();
+        assert!(err.contains("int8"), "{err}");
+        // and load_auto routes to the right one
+        match super::super::load_auto(&path).unwrap() {
+            super::super::ServedModel::Int8(m) => assert_eq!(m, model),
+            other => panic!("load_auto picked {other:?}"),
+        }
+    }
+
+    #[test]
+    fn time_layer_q8_samples_and_validates() {
+        let q = quantize_layer(&layer(10, 8, 16, 2, 4, 0.5));
+        let x = vec![0.5f32; 4 * 16];
+        let stats = time_layer_q8(&x, 4, &q).unwrap();
+        assert!(stats.iters >= 10, "{stats:?}");
+        assert_eq!(stats.name, "bsrq8.8x16_b2x4");
+        assert!(time_layer_q8(&x[..7], 4, &q).is_err());
+    }
+}

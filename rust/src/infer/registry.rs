@@ -25,7 +25,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::{Context, Result};
 
 use super::engine::{Engine, EngineError, EngineOpts};
-use super::BsrModel;
+use super::ServedModel;
 
 /// A name → [`Engine`] map; every engine is built with the registry's
 /// [`EngineOpts`]. All methods take `&self` — the registry is shared
@@ -40,12 +40,16 @@ impl ModelRegistry {
         Self { opts, engines: Mutex::new(BTreeMap::new()) }
     }
 
-    /// Deploy `model` under `name`: first deploy creates an engine
+    /// Deploy `model` under `name` — any [`ServedModel`] (a `BsrModel` or
+    /// `QuantModel` converts implicitly): first deploy creates an engine
     /// (generation 0); a redeploy hot-swaps in place when the shapes
-    /// still fit, and otherwise replaces the engine (generation restarts
-    /// at 0). Returns the serving generation. An invalid model is
-    /// rejected before anything existing is touched.
-    pub fn deploy(&self, name: &str, model: BsrModel) -> Result<u64> {
+    /// still fit — **dtype may change**, which is how an int8 artifact
+    /// rolls out over its f32 ancestor without dropping a request — and
+    /// otherwise replaces the engine (generation restarts at 0). Returns
+    /// the serving generation. An invalid model is rejected before
+    /// anything existing is touched.
+    pub fn deploy(&self, name: &str, model: impl Into<ServedModel>) -> Result<u64> {
+        let model: ServedModel = model.into();
         // try the in-place swap first, outside any new-engine work
         {
             let engines = self.engines.lock().unwrap();
@@ -76,11 +80,13 @@ impl ModelRegistry {
         Ok(generation)
     }
 
-    /// [`ModelRegistry::deploy`] from a saved artifact. Pairs with the
-    /// atomic `BsrModel::save`: a path being re-published concurrently
-    /// always loads as one complete artifact.
+    /// [`ModelRegistry::deploy`] from a saved artifact of either dtype:
+    /// one O(header) peek routes f32 containers to `BsrModel::load` and
+    /// int8 ones to `QuantModel::load` ([`super::load_auto`]). Pairs with
+    /// the atomic write-then-rename save: a path being re-published
+    /// concurrently always loads as one complete artifact.
     pub fn deploy_from_path(&self, name: &str, path: &Path) -> Result<u64> {
-        let model = BsrModel::load(path)
+        let model = super::load_auto(path)
             .with_context(|| format!("deploying '{name}' from {path:?}"))?;
         self.deploy(name, model)
     }
@@ -204,5 +210,31 @@ mod tests {
         m.save(&path).unwrap();
         assert_eq!(reg.deploy_from_path("disk", &path).unwrap(), 1);
         assert!(reg.deploy_from_path("gone", &dir.join("missing.bsm")).is_err());
+    }
+
+    /// Quantized rollout: an int8 model hot-swaps in place over its f32
+    /// ancestor (same shapes, same engine, same queue), and an int8
+    /// artifact on disk deploys through the dtype-routing loader.
+    #[test]
+    fn quantized_artifacts_deploy_and_hot_swap_over_f32() {
+        let reg = ModelRegistry::new(opts());
+        let m = model(10, 8, 4);
+        reg.deploy("m", m.clone()).unwrap();
+        let engine = reg.get("m").unwrap();
+        assert_eq!(engine.model().dtype(), "f32");
+        let q = crate::infer::quant::quantize_model(&m).unwrap();
+        assert_eq!(reg.deploy("m", q.clone()).unwrap(), 1);
+        assert!(Arc::ptr_eq(&engine, &reg.get("m").unwrap()), "dtype swap must reuse the engine");
+        assert_eq!(engine.model().dtype(), "int8");
+        let p = engine.predict(&[0.4; 8]).unwrap();
+        let want = crate::infer::quant::model_forward_q8(&q, &[0.4; 8], 1).unwrap();
+        assert_eq!(p.logits, want);
+        // an int8 artifact from disk routes through the peek-based loader
+        let dir = std::env::temp_dir().join("bs_registry_q8_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("q.bsm");
+        q.save(&path).unwrap();
+        assert_eq!(reg.deploy_from_path("m", &path).unwrap(), 2);
+        assert_eq!(engine.model().dtype(), "int8");
     }
 }

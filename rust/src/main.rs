@@ -34,7 +34,9 @@
 //!       (native runs default to the gauge calibration λ=0.002 +0.0005/ramp;
 //!       override with --lambda / --lambda-ramp)
 //!   blocksparse export --spec t2_kpd_16x8_8x4_4x2 --steps 300 --out t2.bsm
+//!   blocksparse export --spec t2_kpd_16x8_8x4_4x2 --quant int8 --out t2_q8.bsm
 //!   blocksparse infer --model t2.bsm --batch 16 --requests 512 --clients 8
+//!   blocksparse infer --model t2_q8.bsm --mmap --async --window 64
 //!   blocksparse blockopt --m 8 --n 256
 //!   blocksparse blockopt calibrate --out cost_model.json
 //!   blocksparse blockopt sweep --spec f3a_pattern --budget-ms 0.5
@@ -78,11 +80,16 @@ fn arg_spec() -> ArgSpec {
             ("occupancy", true, "assumed live-block fraction (blockopt recommend, default 0.25)"),
             ("out", true, "output path for the BSR model artifact (export)"),
             ("ckpt", true, "restore training state from this checkpoint (export)"),
+            ("quant", true, "export payload dtype: f32 | int8 (default f32)"),
+            ("dtype", true, "kernel to calibrate: f32 | int8 (blockopt calibrate/sweep)"),
             ("model", true, "BSR model artifact to serve (infer)"),
+            ("mmap", false, "zero-copy map the model payload instead of reading it (infer)"),
             ("requests", true, "total requests to issue (infer, default 256)"),
             ("clients", true, "concurrent client threads (infer, default 4)"),
+            ("window", true, "in-flight handle window for --async (infer, default 32)"),
             ("queue-depth", true, "admission queue bound; full queue load-sheds (infer)"),
             ("overload", false, "sustained-overload load test: drive clients >> capacity (infer)"),
+            ("async", false, "drive requests through predict_async from one thread (infer)"),
             ("csv", true, "write per-step series to this CSV file"),
             ("quiet", false, "warnings and errors only"),
             ("verbose", false, "debug logging"),
@@ -276,8 +283,13 @@ fn cmd_export(args: &Args) -> Result<()> {
         outcome.state
     };
     let model = blocksparse::infer::export(be.as_ref(), &state)?;
-    model.save(&out)?;
-    println!("exported {} ({}) -> {}", model.spec, model.method, out.display());
+    let quant = args.opt_or("quant", "f32");
+    match quant {
+        "f32" => model.save(&out)?,
+        "int8" => blocksparse::infer::quant::quantize_model(&model)?.save(&out)?,
+        other => bail!("--quant wants f32 or int8, got '{other}'"),
+    }
+    println!("exported {} ({}, {quant}) -> {}", model.spec, model.method, out.display());
     for l in &model.layers {
         let (m1, n1) = l.grid();
         println!(
@@ -298,19 +310,29 @@ fn cmd_export(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Serve a BSR artifact through the batched engine with synthetic traffic
-/// and report the latency distribution + throughput. With `--overload`,
-/// drive sustained overload instead (clients >> engine capacity) and
-/// report the load-shed behaviour: shed rate, accepted-request
-/// percentiles, peak queue depth vs the admission bound.
+/// Serve a BSR artifact (either payload dtype — peek routes the loader)
+/// through the batched engine with synthetic traffic and report the
+/// latency distribution + throughput. With `--mmap`, the payload is
+/// zero-copy mapped instead of read (startup touches O(header) bytes).
+/// With `--async`, one driver thread keeps `--window` requests in flight
+/// through `predict_async` handles. With `--overload`, drive sustained
+/// overload instead (clients >> engine capacity) and report the
+/// load-shed behaviour: shed rate, accepted-request percentiles, peak
+/// queue depth vs the admission bound.
 fn cmd_infer(args: &Args) -> Result<()> {
     use blocksparse::infer::engine::{
-        drive_overload, drive_synthetic, latency_summary, Engine, EngineOpts,
+        drive_async, drive_overload, drive_synthetic, latency_summary, Engine, EngineOpts,
     };
     let path = args
         .opt("model")
         .ok_or_else(|| anyhow!("infer needs --model <file.bsm> (see `blocksparse export`)"))?;
-    let model = blocksparse::infer::BsrModel::load(std::path::Path::new(path))?;
+    let path = std::path::Path::new(path);
+    let (model, map_stats) = if args.has_flag("mmap") {
+        let (m, st) = blocksparse::infer::mmap::open_model_mmap(path)?;
+        (m, Some(st))
+    } else {
+        (blocksparse::infer::load_auto(path)?, None)
+    };
     let overload = args.has_flag("overload");
     // overload defaults keep the test small and the ratio honest; the
     // plain path keeps the old serve defaults
@@ -320,17 +342,54 @@ fn cmd_infer(args: &Args) -> Result<()> {
         args.opt_usize("queue-depth", if overload { 8 } else { defaults.queue_depth })?;
     let workers = if overload { 2 } else { defaults.workers };
     println!(
-        "model {} ({}, {} layers): {} -> {}, block sparsity {:.1}%, {} params, {} FLOPs/example",
-        model.spec,
-        model.method,
-        model.layers.len(),
-        model.in_dim,
-        model.out_dim,
+        "model {} ({}, {} layers, {} payload): {} -> {}, block sparsity {:.1}%, {} params, {} FLOPs/example",
+        model.spec(),
+        model.method(),
+        model.num_layers(),
+        model.dtype(),
+        model.in_dim(),
+        model.out_dim(),
         100.0 * model.block_sparsity(),
         human_count(model.nnz_params() as f64),
         human_count(model.infer_flops_per_example() as f64),
     );
+    if let Some(st) = map_stats {
+        println!(
+            "mmap: {} file bytes, {} resident at startup ({})",
+            st.file_bytes,
+            st.resident_bytes,
+            if st.zero_copy() { "zero-copy payload" } else { "read-path fallback" }
+        );
+    }
     let engine = Engine::new(model, EngineOpts { max_batch, workers, queue_depth })?;
+    if args.has_flag("async") {
+        let requests = args.opt_usize("requests", 256)?.max(1);
+        let window = args.opt_usize("window", 32)?.max(1);
+        let sw = blocksparse::util::Stopwatch::start();
+        let rep = drive_async(&engine, requests, window, 0xA51C)?;
+        let wall = sw.elapsed_secs();
+        let s = latency_summary(&rep.accepted_lat_ms);
+        println!(
+            "async: {} requests from one driver thread, {} handles in flight, in {wall:.2}s",
+            rep.offered, rep.window
+        );
+        println!(
+            "accepted {}  shed {} ({:.1}% shed rate), {:.1} req/s",
+            rep.accepted,
+            rep.shed,
+            100.0 * rep.shed_rate(),
+            rep.accepted as f64 / wall.max(1e-9)
+        );
+        if s.is_empty() {
+            println!("accepted latency: no samples (everything shed)");
+        } else {
+            println!(
+                "accepted latency ms: p50 {:.3}  p95 {:.3}  p99 {:.3}  mean {:.3}  max {:.3}",
+                s.p50_ms, s.p95_ms, s.p99_ms, s.mean_ms, s.max_ms
+            );
+        }
+        return Ok(());
+    }
     if overload {
         // default: 4× the engine's resident capacity, zero think time
         let clients = args.opt_usize("clients", 4 * engine.capacity())?.max(1);
@@ -352,10 +411,14 @@ fn cmd_infer(args: &Args) -> Result<()> {
             rep.shed,
             100.0 * rep.shed_rate()
         );
-        println!(
-            "accepted latency ms: p50 {:.3}  p95 {:.3}  p99 {:.3}  mean {:.3}  max {:.3}",
-            s.p50_ms, s.p95_ms, s.p99_ms, s.mean_ms, s.max_ms
-        );
+        if s.is_empty() {
+            println!("accepted latency: no samples (everything shed)");
+        } else {
+            println!(
+                "accepted latency ms: p50 {:.3}  p95 {:.3}  p99 {:.3}  mean {:.3}  max {:.3}",
+                s.p50_ms, s.p95_ms, s.p99_ms, s.mean_ms, s.max_ms
+            );
+        }
         println!(
             "peak queue depth {} (bound {queue_depth}): backlog stayed bounded",
             rep.peak_depth
@@ -481,12 +544,14 @@ fn cmd_blockopt_calibrate(args: &Args) -> Result<()> {
         None => cost::DEFAULT_SHAPES.to_vec(),
     };
     let nb = args.opt_usize("batch", 32)?;
+    let dtype = args.opt_or("dtype", "f32");
     let out = std::path::PathBuf::from(args.opt_or("out", "cost_model.json"));
-    let model = cost::calibrate(&shapes, &cost::DEFAULT_OCCUPANCIES, nb)?;
+    let model = cost::calibrate_dtype(&shapes, &cost::DEFAULT_OCCUPANCIES, nb, dtype)?;
     println!(
-        "calibrated {} block shapes on simd '{}' (batch {nb}, {}x{} block grid):",
+        "calibrated {} block shapes on simd '{}' dtype '{}' (batch {nb}, {}x{} block grid):",
         model.entries.len(),
         model.simd,
+        model.dtype,
         model.grid,
         model.grid
     );
@@ -517,7 +582,12 @@ fn cmd_blockopt_sweep(args: &Args) -> Result<()> {
                 "no --cost-model: calibrating {} candidate shapes in-process",
                 shapes.len()
             );
-            cost::calibrate(&shapes, &cost::DEFAULT_OCCUPANCIES, nb)?
+            cost::calibrate_dtype(
+                &shapes,
+                &cost::DEFAULT_OCCUPANCIES,
+                nb,
+                args.opt_or("dtype", "f32"),
+            )?
         }
     };
     let out = sweep::sweep(be.as_ref(), &cfg, &model, nb, budget_ms)?;

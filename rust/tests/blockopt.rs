@@ -51,6 +51,7 @@ fn shape(m2: usize, n2: usize, a_ns: f64) -> ShapeModel {
 fn model_of(shapes: Vec<ShapeModel>) -> CostModel {
     CostModel {
         simd: "scalar".into(),
+        dtype: "f32".into(),
         grid: CALIB_GRID,
         batch: 32,
         entries: shapes.into_iter().map(|s| (shape_key(s.m2, s.n2), s)).collect(),

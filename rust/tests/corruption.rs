@@ -1,0 +1,438 @@
+//! Hostile-input coverage for the BSRM container loaders (ISSUE-10
+//! satellite 1): deterministic byte-flip and truncation sweeps over BOTH
+//! container versions (v1 legacy frame, v2 aligned layout) and BOTH
+//! payload dtypes (f32, int8), through the read path and the mmap path.
+//!
+//! The contract under test:
+//!
+//! * the **read path** (`BsrModel::load`, `QuantModel::load`,
+//!   `load_auto`) CRC-checks every byte it returns, so *every* single-byte
+//!   flip and *every* truncation must surface as a typed error — never a
+//!   panic, never a silently-wrong model;
+//! * the **mmap path** skips only the payload-wide CRC sweep. Flips in
+//!   anything it interprets (prologue, header, padding) must still be
+//!   typed errors; flips in the stored payload CRC are invisible to it
+//!   (same logits as the clean file); flips inside the payload may load —
+//!   but then the model must validate and forward without panicking,
+//!   because the index arrays are copied + re-validated and only block
+//!   *values* stay mapped;
+//! * header fields are untrusted until their CRC passes, and even a
+//!   forged-CRC header cannot drive allocation: derived array extents are
+//!   bounds-checked against the payload before anything is allocated.
+
+use blocksparse::checkpoint::crc32;
+use blocksparse::infer::bsr::model_forward;
+use blocksparse::infer::mmap::{open_bsr_mmap, open_model_mmap, open_quant_mmap};
+use blocksparse::infer::quant::{model_forward_q8, quantize_model, QuantModel};
+use blocksparse::infer::{load_auto, BsrLayer, BsrModel};
+use std::path::{Path, PathBuf};
+
+const PROLOGUE_LEN: usize = 40;
+
+fn dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join("bs_corruption_test").join(name);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Deterministic xorshift64* — the sweep must replay bit-identically.
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    fn f32(&mut self) -> f32 {
+        (self.next() % 2000) as f32 / 1000.0 - 1.0
+    }
+}
+
+/// Dense (m×n) weights with exact-zero 2×2 blocks carved out, so the
+/// packed fixture has real holes (occupied and empty block-rows both).
+fn dense_with_holes(m: usize, n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng(seed | 1);
+    let mut w: Vec<f32> = (0..m * n).map(|_| rng.f32()).collect();
+    for i1 in 0..m / 2 {
+        for j1 in 0..n / 2 {
+            if (i1 + j1) % 3 == 0 {
+                for i2 in 0..2 {
+                    for j2 in 0..2 {
+                        w[(i1 * 2 + i2) * n + j1 * 2 + j2] = 0.0;
+                    }
+                }
+            }
+        }
+    }
+    w
+}
+
+/// The fixture: 12 → 8 → 6, 2×2 blocks, spec/method strings sized so the
+/// v2 header end is NOT 8-aligned (the padding region must exist for the
+/// sweep to exercise the pad check).
+fn fixture() -> BsrModel {
+    let w1 = dense_with_holes(8, 12, 0xC0FF);
+    let w2 = dense_with_holes(6, 8, 0xBEEF);
+    BsrModel {
+        spec: "czoo".into(),
+        method: "kpd".into(),
+        in_dim: 12,
+        out_dim: 6,
+        layers: vec![
+            BsrLayer::from_dense("fc1", &w1, 8, 12, 2, 2).unwrap(),
+            BsrLayer::from_dense("fc2", &w2, 6, 8, 2, 2).unwrap(),
+        ],
+    }
+}
+
+fn probe_input(in_dim: usize) -> Vec<f32> {
+    let mut rng = Rng(0x51EE7);
+    (0..in_dim).map(|_| rng.f32()).collect()
+}
+
+fn u32_at(bytes: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap())
+}
+
+fn u64_at(bytes: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap())
+}
+
+/// Write `bytes` with the byte at `pos` xor-flipped.
+fn write_flipped(path: &Path, bytes: &[u8], pos: usize, mask: u8) {
+    let mut b = bytes.to_vec();
+    b[pos] ^= mask;
+    std::fs::write(path, &b).unwrap();
+}
+
+/// Every error must format through the anyhow chain without panicking and
+/// carry a non-empty root cause.
+fn assert_typed(err: anyhow::Error, what: &str) {
+    let msg = format!("{err:#}");
+    assert!(!msg.trim().is_empty(), "{what}: empty error message");
+}
+
+// ------------------------------------------------------------- byte flips
+
+#[test]
+fn v2_read_path_rejects_every_single_byte_flip() {
+    let model = fixture();
+    let d = dir("v2_read");
+    let clean = d.join("clean.bsm");
+    model.save(&clean).unwrap();
+    let bytes = std::fs::read(&clean).unwrap();
+    let hurt = d.join("hurt.bsm");
+    for pos in 0..bytes.len() {
+        write_flipped(&hurt, &bytes, pos, 0xFF);
+        let err = BsrModel::load(&hurt)
+            .err()
+            .unwrap_or_else(|| panic!("flip at byte {pos} loaded cleanly on the read path"));
+        assert_typed(err, &format!("flip at {pos}"));
+        // spot-check the dtype-routing front door on a strided subset
+        if pos % 97 == 0 {
+            assert!(load_auto(&hurt).is_err(), "load_auto accepted flip at {pos}");
+        }
+    }
+}
+
+#[test]
+fn v1_read_path_rejects_every_single_byte_flip() {
+    let model = fixture();
+    let d = dir("v1_read");
+    let clean = d.join("clean.bsm");
+    model.save_v1(&clean).unwrap();
+    assert_eq!(BsrModel::load(&clean).unwrap(), model);
+    let bytes = std::fs::read(&clean).unwrap();
+    let hurt = d.join("hurt.bsm");
+    for pos in 0..bytes.len() {
+        write_flipped(&hurt, &bytes, pos, 0xFF);
+        let err = BsrModel::load(&hurt)
+            .err()
+            .unwrap_or_else(|| panic!("v1 flip at byte {pos} loaded cleanly"));
+        assert_typed(err, &format!("v1 flip at {pos}"));
+        // the mmap front door falls back to the read path for v1 — same
+        // guarantee, checked on a strided subset to bound the sweep
+        if pos % 61 == 0 {
+            assert!(open_bsr_mmap(&hurt).is_err(), "mmap fallback accepted v1 flip at {pos}");
+        }
+    }
+}
+
+#[test]
+fn int8_read_path_rejects_every_single_byte_flip() {
+    let q = quantize_model(&fixture()).unwrap();
+    let d = dir("int8_read");
+    let clean = d.join("clean.bsm");
+    q.save(&clean).unwrap();
+    let bytes = std::fs::read(&clean).unwrap();
+    let hurt = d.join("hurt.bsm");
+    for pos in 0..bytes.len() {
+        write_flipped(&hurt, &bytes, pos, 0xFF);
+        let err = QuantModel::load(&hurt)
+            .err()
+            .unwrap_or_else(|| panic!("int8 flip at byte {pos} loaded cleanly"));
+        assert_typed(err, &format!("int8 flip at {pos}"));
+        if pos % 97 == 0 {
+            assert!(load_auto(&hurt).is_err(), "load_auto accepted int8 flip at {pos}");
+        }
+    }
+}
+
+/// The mmap path skips only the payload CRC sweep. Partition the file:
+/// bytes the open *interprets* (prologue minus the stored payload CRC,
+/// header, padding) must fail typed; the stored payload CRC itself is
+/// dead weight to this path (clean logits); payload bytes may load — and
+/// must then forward without panicking. (Platform-gated like the fast
+/// path itself: elsewhere `open_bsr_mmap` is the read path, whose flip
+/// behaviour the read-path sweeps already pin.)
+#[cfg(all(unix, target_endian = "little"))]
+#[test]
+fn v2_mmap_path_flags_everything_it_interprets() {
+    let model = fixture();
+    let d = dir("v2_mmap");
+    let clean = d.join("clean.bsm");
+    model.save(&clean).unwrap();
+    let bytes = std::fs::read(&clean).unwrap();
+    let payload_off = u64_at(&bytes, 16) as usize;
+    assert!(payload_off > PROLOGUE_LEN, "fixture has no header?");
+    let x = probe_input(model.in_dim);
+    let clean_logits = {
+        let (m, stats) = open_bsr_mmap(&clean).unwrap();
+        assert!(stats.resident_bytes < stats.file_bytes, "fixture too small to map lazily");
+        model_forward(&m, &x, 1).unwrap()
+    };
+    let hurt = d.join("hurt.bsm");
+    let mut payload_accepts = 0usize;
+    for pos in 0..bytes.len() {
+        write_flipped(&hurt, &bytes, pos, 0xFF);
+        let opened = open_bsr_mmap(&hurt);
+        if (32..36).contains(&pos) {
+            // stored payload CRC: invisible to the zero-copy open
+            let (m, _) = opened.unwrap_or_else(|e| {
+                panic!("payload-CRC flip at {pos} must map cleanly: {e:#}")
+            });
+            assert_eq!(model_forward(&m, &x, 1).unwrap(), clean_logits);
+        } else if pos < payload_off {
+            let err = opened
+                .err()
+                .unwrap_or_else(|| panic!("interpreted-byte flip at {pos} mapped cleanly"));
+            assert_typed(err, &format!("mmap flip at {pos}"));
+        } else {
+            // payload byte: an index-array flip is usually caught by
+            // validate; a block-value flip loads and must forward — wrong
+            // logits are acceptable, UB/panic is not
+            match opened {
+                Ok((m, _)) => {
+                    payload_accepts += 1;
+                    let z = model_forward(&m, &x, 1).unwrap();
+                    assert_eq!(z.len(), model.out_dim);
+                }
+                Err(e) => assert_typed(e, &format!("payload flip at {pos}")),
+            }
+        }
+    }
+    // block values dominate the payload, so most payload flips must have
+    // exercised the accept-and-forward arm
+    assert!(payload_accepts > 0, "no payload flip reached the forward kernel");
+}
+
+#[cfg(all(unix, target_endian = "little"))]
+#[test]
+fn int8_mmap_path_flags_everything_it_interprets() {
+    let q = quantize_model(&fixture()).unwrap();
+    let d = dir("int8_mmap");
+    let clean = d.join("clean.bsm");
+    q.save(&clean).unwrap();
+    let bytes = std::fs::read(&clean).unwrap();
+    let payload_off = u64_at(&bytes, 16) as usize;
+    let x = probe_input(q.in_dim);
+    let clean_logits = {
+        let (m, _) = open_quant_mmap(&clean).unwrap();
+        model_forward_q8(&m, &x, 1).unwrap()
+    };
+    let hurt = d.join("hurt.bsm");
+    for pos in 0..bytes.len() {
+        write_flipped(&hurt, &bytes, pos, 0xFF);
+        let opened = open_quant_mmap(&hurt);
+        if (32..36).contains(&pos) {
+            let (m, _) = opened.unwrap_or_else(|e| {
+                panic!("payload-CRC flip at {pos} must map cleanly: {e:#}")
+            });
+            assert_eq!(model_forward_q8(&m, &x, 1).unwrap(), clean_logits);
+        } else if pos < payload_off {
+            let err = opened
+                .err()
+                .unwrap_or_else(|| panic!("int8 interpreted-byte flip at {pos} mapped cleanly"));
+            assert_typed(err, &format!("int8 mmap flip at {pos}"));
+        } else {
+            match opened {
+                Ok((m, _)) => {
+                    let z = model_forward_q8(&m, &x, 1).unwrap();
+                    assert_eq!(z.len(), q.out_dim);
+                }
+                Err(e) => assert_typed(e, &format!("int8 payload flip at {pos}")),
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- truncation
+
+/// Every truncation — pinned boundary lengths plus a seeded sample of the
+/// interior — must fail typed on every loader front door, both versions,
+/// both dtypes. A prefix of a valid artifact is never a valid artifact.
+#[test]
+fn truncation_always_fails_loudly_on_every_path() {
+    let model = fixture();
+    let q = quantize_model(&model).unwrap();
+    let d = dir("trunc");
+    let f32_path = d.join("f32.bsm");
+    let v1_path = d.join("v1.bsm");
+    let q_path = d.join("q8.bsm");
+    model.save(&f32_path).unwrap();
+    model.save_v1(&v1_path).unwrap();
+    q.save(&q_path).unwrap();
+
+    let cut = d.join("cut.bsm");
+    let check = |src: &Path, label: &str| {
+        let bytes = std::fs::read(src).unwrap();
+        let mut lens: Vec<usize> = vec![
+            0, 1, 3, 4, 7, 8, 11, 12, 16, 24, 32, 36, 39, PROLOGUE_LEN,
+            bytes.len() / 2,
+            bytes.len() - 8,
+            bytes.len() - 1,
+        ];
+        let mut rng = Rng(0xDEAD_0010);
+        lens.extend((0..24).map(|_| (rng.next() as usize) % bytes.len()));
+        lens.retain(|&l| l < bytes.len());
+        for len in lens {
+            std::fs::write(&cut, &bytes[..len]).unwrap();
+            assert!(BsrModel::load(&cut).is_err(), "{label}: read path took {len}-byte prefix");
+            assert!(QuantModel::load(&cut).is_err(), "{label}: quant read took {len} bytes");
+            assert!(load_auto(&cut).is_err(), "{label}: load_auto took {len} bytes");
+            assert!(open_bsr_mmap(&cut).is_err(), "{label}: mmap took {len} bytes");
+            assert!(open_model_mmap(&cut).is_err(), "{label}: model mmap took {len} bytes");
+        }
+    };
+    check(&f32_path, "v2/f32");
+    check(&v1_path, "v1");
+    check(&q_path, "v2/int8");
+
+    // degenerate non-artifacts get the same typed refusal
+    std::fs::write(&cut, b"").unwrap();
+    assert!(load_auto(&cut).is_err());
+    std::fs::write(&cut, b"BSRMjunk").unwrap();
+    assert!(load_auto(&cut).is_err());
+    std::fs::write(&cut, b"totally not a model file").unwrap();
+    assert!(load_auto(&cut).is_err());
+}
+
+// ----------------------------------------------------- root-cause triage
+
+/// The folded CRC triage test (formerly three positions in the unit
+/// suite): representative corruption sites must name their root cause, so
+/// an operator staring at a failed deploy knows *which* guard fired.
+#[test]
+fn corrupt_fields_report_their_root_cause() {
+    let model = fixture();
+    let d = dir("triage");
+    let clean = d.join("clean.bsm");
+    model.save(&clean).unwrap();
+    let bytes = std::fs::read(&clean).unwrap();
+    let header_len = u32_at(&bytes, 8) as usize;
+    let header_end = PROLOGUE_LEN + header_len;
+    let payload_off = u64_at(&bytes, 16) as usize;
+    assert!(payload_off > header_end, "fixture must leave alignment padding to corrupt");
+
+    let hurt = d.join("hurt.bsm");
+    let expect = |pos: usize, mask: u8, needle: &str| {
+        write_flipped(&hurt, &bytes, pos, mask);
+        let msg = format!("{:#}", BsrModel::load(&hurt).unwrap_err());
+        assert!(msg.contains(needle), "flip at {pos}: got {msg:?}, wanted {needle:?}");
+    };
+    expect(0, 0xFF, "not a BSRM");
+    expect(4, 0xFF, "unsupported BSR model version");
+    expect(12, 0xFF, "header CRC mismatch"); // stored header CRC
+    expect(PROLOGUE_LEN + 2, 0xFF, "header CRC mismatch"); // header body
+    expect(header_end, 0x55, "padding corrupt");
+    expect(32, 0xFF, "payload CRC mismatch"); // stored payload CRC
+    expect(payload_off + 1, 0xFF, "payload CRC mismatch"); // payload body
+    expect(36, 0xFF, "dtype"); // dtype code out of range
+
+    // v1's single whole-body CRC names its own root cause
+    let v1 = d.join("v1.bsm");
+    model.save_v1(&v1).unwrap();
+    let v1_bytes = std::fs::read(&v1).unwrap();
+    write_flipped(&hurt, &v1_bytes, v1_bytes.len() / 2, 0xFF);
+    let msg = format!("{:#}", BsrModel::load(&hurt).unwrap_err());
+    assert!(msg.contains("CRC mismatch"), "{msg:?}");
+}
+
+// --------------------------------------------- forged-header allocation
+
+/// A header with a *valid* CRC but hostile derived counts must still die
+/// typed — bounds checks run before any allocation, so a forged nnz of
+/// u32::MAX (≈68 GB of implied block values) returns instantly instead of
+/// OOM-ing the server. This pins the "never over-allocation" half of the
+/// loader contract that the CRC sweeps cannot reach.
+#[test]
+fn forged_header_fields_cannot_drive_allocation() {
+    let model = fixture();
+    let d = dir("forged");
+    let clean = d.join("clean.bsm");
+    model.save(&clean).unwrap();
+    let bytes = std::fs::read(&clean).unwrap();
+    let header_len = u32_at(&bytes, 8) as usize;
+    let header = &bytes[PROLOGUE_LEN..PROLOGUE_LEN + header_len];
+
+    // walk the wire header to layer 0's nnz field:
+    // spec str | method str | in_dim | out_dim | num_layers |
+    //   name str | m | n | m2 | n2 | nnz | ...
+    let mut off = 0usize;
+    let skip_str = |o: &mut usize| {
+        let len = u32_at(header, *o) as usize;
+        *o += 4 + len;
+    };
+    skip_str(&mut off); // spec
+    skip_str(&mut off); // method
+    off += 8; // in_dim, out_dim
+    let num_layers_at = PROLOGUE_LEN + off;
+    off += 4; // num_layers
+    skip_str(&mut off); // layer 0 name
+    off += 16; // m, n, m2, n2
+    let nnz_at = PROLOGUE_LEN + off;
+
+    let forge = |field_at: usize, value: u32| {
+        let mut b = bytes.clone();
+        b[field_at..field_at + 4].copy_from_slice(&value.to_le_bytes());
+        let h = crc32(&b[PROLOGUE_LEN..PROLOGUE_LEN + header_len]);
+        b[12..16].copy_from_slice(&h.to_le_bytes());
+        b
+    };
+
+    let hurt = d.join("hurt.bsm");
+
+    // sanity: re-signing the untouched header still loads — the forge
+    // helper itself is not what trips the guards below
+    std::fs::write(&hurt, forge(nnz_at, u32_at(&bytes, nnz_at))).unwrap();
+    assert_eq!(BsrModel::load(&hurt).unwrap(), model);
+
+    // nnz = u32::MAX: the derived col_idx/blocks extents blow past the
+    // payload bounds check on both paths, long before any Vec grows
+    std::fs::write(&hurt, forge(nnz_at, u32::MAX)).unwrap();
+    let msg = format!("{:#}", BsrModel::load(&hurt).unwrap_err());
+    assert!(msg.contains("fc1"), "read path must name the offending array: {msg:?}");
+    let msg = format!("{:#}", open_bsr_mmap(&hurt).unwrap_err());
+    assert!(msg.contains("fc1"), "mmap path must name the offending array: {msg:?}");
+
+    // num_layers = u32::MAX: the record loop parses until the header runs
+    // out — typed error, no with_capacity(4B) reservation
+    std::fs::write(&hurt, forge(num_layers_at, u32::MAX)).unwrap();
+    assert!(BsrModel::load(&hurt).is_err());
+    assert!(open_bsr_mmap(&hurt).is_err());
+}

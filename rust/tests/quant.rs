@@ -1,0 +1,219 @@
+//! Int8 quantization property tests (ISSUE-10 satellite 3): the
+//! per-block-row symmetric scheme's round-trip bound, its degenerate
+//! shapes (all-zero blocks, 1×1 blocks), and the end-to-end fidelity gate
+//! on a really-trained Table-2 artifact — f32 logits vs int8 logits must
+//! stay within the same MAE bound `BENCH_infer.json` enforces.
+
+use blocksparse::backend::native::NativeBackend;
+use blocksparse::backend::Backend;
+use blocksparse::coordinator::dataset_for;
+use blocksparse::data::{assemble_batch, Batcher};
+use blocksparse::infer::bsr::{bsr_forward, model_forward};
+use blocksparse::infer::mmap::open_quant_mmap;
+use blocksparse::infer::quant::{
+    dequantize_layer, model_forward_q8, q8_forward, quantize_layer, quantize_model, QuantModel,
+};
+use blocksparse::infer::{self, load_auto, BsrLayer, BsrModel};
+use blocksparse::util::rng::Rng;
+
+fn dense(m: usize, n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..m * n)
+        .map(|i| if (i / 3) % 4 == 0 { 0.0 } else { rng.normal() })
+        .collect()
+}
+
+/// `q = clamp(round(w/scale), ±127)` with `scale = max|row|/127` keeps
+/// every weight within half a quantization step of its reconstruction:
+/// |w − scale·q| ≤ scale/2. Checked element-wise over every stored block
+/// row of a spread of block shapes.
+#[test]
+fn round_trip_error_is_bounded_by_half_a_scale() {
+    for (m, n, m2, n2, seed) in [
+        (12, 20, 2, 2, 1u64),
+        (16, 24, 4, 8, 2),
+        (8, 16, 8, 4, 3),
+        (10, 14, 2, 7, 4),
+    ] {
+        let l = BsrLayer::from_dense("rt", &dense(m, n, seed), m, n, m2, n2).unwrap();
+        let q = quantize_layer(&l);
+        q.validate().unwrap();
+        let dq = dequantize_layer(&q);
+        dq.validate().unwrap();
+        let (orig, back) = (l.blocks.as_slice(), dq.blocks.as_slice());
+        let (qs, scales) = (q.qblocks.as_slice(), q.scales.as_slice());
+        let bs = m2 * n2;
+        let mut saw_scale = false;
+        for k in 0..l.nnz_blocks() {
+            for i2 in 0..m2 {
+                let s = scales[k * m2 + i2];
+                assert!(s.is_finite() && s >= 0.0, "scale {s}");
+                saw_scale |= s > 0.0;
+                for j2 in 0..n2 {
+                    let idx = k * bs + i2 * n2 + j2;
+                    // the symmetric range never uses −128
+                    assert!(qs[idx] >= -127, "q={} at {idx}", qs[idx]);
+                    let err = (orig[idx] - back[idx]).abs();
+                    assert!(
+                        err <= s * 0.5 + 1e-7,
+                        "({m}x{n})/({m2}x{n2}) block {k} row {i2} col {j2}: \
+                         |{} - {}| = {err} > scale/2 = {}",
+                        orig[idx],
+                        back[idx],
+                        s * 0.5
+                    );
+                }
+                // a zero scale must mean a genuinely all-zero row
+                if s == 0.0 {
+                    let row = &orig[k * bs + i2 * n2..k * bs + (i2 + 1) * n2];
+                    assert!(row.iter().all(|&v| v == 0.0), "zero scale over {row:?}");
+                }
+            }
+        }
+        assert!(saw_scale, "fixture must contain non-zero rows");
+    }
+}
+
+/// The degenerate shapes: an explicitly stored all-zero block must
+/// quantize to scale 0 / q 0 and round-trip exactly; 1×1 blocks put each
+/// weight at full scale (q = ±127), so reconstruction is exact up to one
+/// f32 rounding of `(w/127)·127`.
+#[test]
+fn zero_blocks_and_single_element_blocks_round_trip() {
+    // hand-built layer: block (0,0) is stored but all-zero, block (1,1)
+    // carries values — from_dense would have dropped the zero block, and
+    // a corrupt-tolerant loader may hand the kernels exactly this shape
+    let l = BsrLayer {
+        name: "edge".into(),
+        m: 4,
+        n: 4,
+        m2: 2,
+        n2: 2,
+        row_ptr: vec![0, 1, 2],
+        col_idx: vec![0, 1],
+        blocks: vec![0.0, 0.0, 0.0, 0.0, 1.5, -2.0, 0.25, 3.0].into(),
+    };
+    l.validate().unwrap();
+    let q = quantize_layer(&l);
+    q.validate().unwrap();
+    assert_eq!(&q.scales.as_slice()[..2], &[0.0, 0.0], "all-zero rows must get scale 0");
+    assert_eq!(&q.qblocks.as_slice()[..4], &[0i8; 4]);
+    let dq = dequantize_layer(&q);
+    assert_eq!(&dq.blocks.as_slice()[..4], &[0.0f32; 4], "zero block round-trips exactly");
+
+    // the zero block contributes exactly zero through the int8 kernel too
+    let x = vec![1.0f32; 4];
+    let zq = q8_forward(&x, 1, &q).unwrap();
+    let zf = bsr_forward(&x, 1, &dq).unwrap();
+    assert_eq!(zq[0], 0.0, "output row fed only by the zero block");
+    assert_eq!(zq[1], 0.0);
+    for (a, b) in zq.iter().zip(&zf) {
+        assert!((a - b).abs() <= 1e-5, "int8 vs dequantized forward: {a} vs {b}");
+    }
+
+    // 1×1 blocks: every stored weight is its own block row at full scale
+    let l1 = BsrLayer::from_dense("one", &dense(6, 10, 9), 6, 10, 1, 1).unwrap();
+    let q1 = quantize_layer(&l1);
+    let dq1 = dequantize_layer(&q1);
+    for (w, b) in l1.blocks.as_slice().iter().zip(dq1.blocks.as_slice()) {
+        assert!(
+            (w - b).abs() <= w.abs() * 1e-5,
+            "1x1 quantization must be (near-)exact: {w} vs {b}"
+        );
+    }
+    assert!(q1.qblocks.as_slice().iter().all(|&v| v == 0 || v.abs() == 127));
+}
+
+/// The fidelity gate on real weights: train `t2_kpd_16x8_8x4_4x2` the
+/// same way the export round-trip test does, quantize the export, and
+/// hold int8 logits to the bench's bound — MAE ≤ 5% of the f32 logit RMS
+/// (+1e-3 for near-zero logit scales).
+#[test]
+fn trained_t2_export_quantizes_within_the_mae_gate() {
+    let be = NativeBackend::with_default_specs();
+    let spec_key = "t2_kpd_16x8_8x4_4x2";
+    let spec = be.spec(spec_key).unwrap().clone();
+    let (train, test) = dataset_for(&spec, 7, 512, 128).unwrap();
+    let mut state = be.init_state(spec_key, 0).unwrap();
+    let mut batcher = Batcher::new(&train, spec.batch, 1, true);
+    for _ in 0..60 {
+        let b = batcher.next_batch().unwrap();
+        be.train_step(&mut state, &b.x, &b.y, &[0.2, 0.1]).unwrap();
+    }
+    let model = infer::export(&be, &state).unwrap();
+    let q = quantize_model(&model).unwrap();
+    assert_eq!((q.in_dim, q.out_dim), (784, 10));
+    assert_eq!(q.block_sparsity(), model.block_sparsity(), "quantization keeps the structure");
+    assert_eq!(q.nnz_params(), model.nnz_params());
+
+    let nb = 64usize;
+    let idx: Vec<usize> = (0..nb).collect();
+    let batch = assemble_batch(&test, &idx).unwrap();
+    let xs = batch.x.as_f32().unwrap().data().to_vec();
+    let zf = model_forward(&model, &xs, nb).unwrap();
+    let zq = model_forward_q8(&q, &xs, nb).unwrap();
+    assert_eq!(zf.len(), zq.len());
+    let mae = zf
+        .iter()
+        .zip(&zq)
+        .map(|(a, b)| (a - b).abs() as f64)
+        .sum::<f64>()
+        / zf.len() as f64;
+    let rms = (zf.iter().map(|v| (v * v) as f64).sum::<f64>() / zf.len() as f64).sqrt();
+    let bound = 0.05 * rms + 1e-3;
+    assert!(
+        mae <= bound,
+        "int8 logits drifted: MAE {mae:.6} > bound {bound:.6} (f32 RMS {rms:.4})"
+    );
+    // int8 must also preserve most decisions on this batch
+    let agree = (0..nb)
+        .filter(|&i| {
+            let row = |z: &[f32]| {
+                z[i * 10..(i + 1) * 10]
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(c, _)| c)
+            };
+            row(&zf) == row(&zq)
+        })
+        .count();
+    assert!(agree * 10 >= nb * 9, "argmax agreement {agree}/{nb} below 90%");
+}
+
+/// An int8 artifact is one artifact: save → load round-trips the exact
+/// values, the mmap open serves bit-identical logits to the read open,
+/// and `load_auto` routes it to the int8 engine path by dtype.
+#[test]
+fn int8_artifact_round_trips_and_serves_identically_mapped_or_read() {
+    let model = BsrModel {
+        spec: "q8rt".into(),
+        method: "kpd".into(),
+        in_dim: 16,
+        out_dim: 6,
+        layers: vec![
+            BsrLayer::from_dense("fc1", &dense(12, 16, 21), 12, 16, 2, 2).unwrap(),
+            BsrLayer::from_dense("fc2", &dense(6, 12, 22), 6, 12, 2, 2).unwrap(),
+        ],
+    };
+    let q = quantize_model(&model).unwrap();
+    let dir = std::env::temp_dir().join("bs_quant_itest");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("q.bsm");
+    q.save(&path).unwrap();
+
+    let read = QuantModel::load(&path).unwrap();
+    assert_eq!(read, q);
+    let (mapped, stats) = open_quant_mmap(&path).unwrap();
+    assert_eq!(stats.file_bytes, std::fs::metadata(&path).unwrap().len());
+
+    let mut rng = Rng::new(0xF1DE);
+    let x: Vec<f32> = (0..4 * 16).map(|_| rng.normal()).collect();
+    let z_read = model_forward_q8(&read, &x, 4).unwrap();
+    let z_mapped = model_forward_q8(&mapped, &x, 4).unwrap();
+    assert_eq!(z_read, z_mapped, "mapped and read opens must serve identical logits");
+
+    let served = load_auto(&path).unwrap();
+    assert_eq!(served.dtype(), "int8");
+    assert_eq!(served.forward(&x, 4).unwrap(), z_read);
+}

@@ -1,0 +1,309 @@
+//! Engine concurrency stress layer (ISSUE-10 satellite 2): mixed
+//! blocking + async clients racing hot swaps and shutdown.
+//!
+//! The three invariants these tests hammer:
+//!
+//! * **accounting** — after everything drains, `accepted == completed +
+//!   failed` and nothing is double-counted or lost, no matter how the
+//!   shutdown interleaves with in-flight work;
+//! * **generation purity** — every response's `generation` maps to a
+//!   model that was actually deployed at that generation, and its logits
+//!   are bit-identical to that model's own forward (a batch never mixes
+//!   weights across a swap, including f32 → int8 swaps);
+//! * **bounded threads** — an N-deep async window costs N queue slots,
+//!   not N parked OS threads (`/proc` accounting, linux only).
+//!
+//! The tests in this binary serialize on a process-wide gate: the thread
+//! accounting below counts every thread in the process, so the mixed-
+//! client test (which spawns a dozen scoped clients) must not overlap it.
+
+use blocksparse::infer::engine::{
+    drive_async, Engine, EngineError, EngineOpts, Prediction, PredictionHandle,
+};
+use blocksparse::infer::quant::quantize_model;
+use blocksparse::infer::{BsrLayer, BsrModel, ServedModel};
+use blocksparse::util::rng::Rng;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Tests in this file must not overlap (see module doc).
+static GATE: Mutex<()> = Mutex::new(());
+
+fn serialized() -> std::sync::MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A dense-ish 16 → 12 → 6 two-layer stack with 2×2 blocks; different
+/// seeds give different weights over the identical shape, so every
+/// variant is hot-swappable over every other.
+fn model(seed: u64) -> BsrModel {
+    let mut rng = Rng::new(seed);
+    let mut dense = |m: usize, n: usize| -> Vec<f32> {
+        (0..m * n)
+            .map(|i| if (i / 4) % 5 == 0 { 0.0 } else { rng.normal() })
+            .collect()
+    };
+    let w1 = dense(12, 16);
+    let w2 = dense(6, 12);
+    BsrModel {
+        spec: "stress".into(),
+        method: "kpd".into(),
+        in_dim: 16,
+        out_dim: 6,
+        layers: vec![
+            BsrLayer::from_dense("fc1", &w1, 12, 16, 2, 2).unwrap(),
+            BsrLayer::from_dense("fc2", &w2, 6, 12, 2, 2).unwrap(),
+        ],
+    }
+}
+
+fn opts(max_batch: usize, workers: usize, queue_depth: usize) -> EngineOpts {
+    EngineOpts { max_batch, workers, queue_depth }
+}
+
+/// Wait out a client's outstanding async handles. Admitted work always
+/// resolves — even when the shutdown lands before its batch runs.
+fn drain_pending(
+    served: &AtomicUsize,
+    pending: &mut Vec<(Vec<f32>, PredictionHandle)>,
+    mine: &mut Vec<(Vec<f32>, Prediction)>,
+) {
+    for (x, h) in pending.drain(..) {
+        let p = h.wait().expect("admitted async request lost");
+        served.fetch_add(1, Ordering::Relaxed);
+        mine.push((x, p));
+    }
+}
+
+#[cfg(target_os = "linux")]
+fn proc_thread_count() -> usize {
+    let status = std::fs::read_to_string("/proc/self/status").expect("/proc/self/status");
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .and_then(|v| v.trim().parse().ok())
+        .expect("Threads: line in /proc/self/status")
+}
+
+/// 16 clients — even ones blocking `predict`, odd ones windowed
+/// `predict_async` — race a swap storm (f32 and int8 variants) and a
+/// shutdown that fires mid-traffic. Every response must be provably from
+/// one deployed model, and the engine's books must balance after the
+/// drain.
+#[test]
+fn mixed_clients_race_swaps_and_shutdown_without_losing_anything() {
+    let _gate = serialized();
+    const CLIENTS: usize = 16;
+    const BUDGET: usize = 60;
+    const SWAPS: usize = 24;
+
+    // variant 3 is variant 0 quantized: the swap storm crosses dtypes
+    let variants: Vec<ServedModel> = vec![
+        model(0xA).into(),
+        model(0xB).into(),
+        model(0xC).into(),
+        quantize_model(&model(0xA)).unwrap().into(),
+    ];
+    let engine = Engine::new(variants[0].clone(), opts(4, 2, 64)).unwrap();
+    let gen_of: Mutex<HashMap<u64, usize>> = Mutex::new(HashMap::from([(0u64, 0usize)]));
+    let served = AtomicUsize::new(0); // completed requests, all clients
+    let shed = AtomicUsize::new(0);
+    let clients_done = AtomicUsize::new(0);
+
+    let got: Vec<(Vec<f32>, Prediction)> = std::thread::scope(|s| {
+        // the swap storm: cycle the variants, pacing on served traffic so
+        // swaps land between (and inside) client bursts; the clients_done
+        // exit keeps the pacing loop finite no matter how traffic lands
+        s.spawn(|| {
+            for i in 1..=SWAPS {
+                let v = i % variants.len();
+                let g = engine
+                    .swap_model(variants[v].clone())
+                    .unwrap_or_else(|e| panic!("swap {i} rejected: {e}"));
+                gen_of.lock().unwrap().insert(g, v);
+                while served.load(Ordering::Relaxed) < i * 8
+                    && clients_done.load(Ordering::Relaxed) < CLIENTS
+                {
+                    std::thread::yield_now();
+                }
+            }
+        });
+
+        // the shutdown racer: pull the plug while clients are mid-flight
+        s.spawn(|| {
+            while served.load(Ordering::Relaxed) < CLIENTS * BUDGET / 2
+                && clients_done.load(Ordering::Relaxed) < CLIENTS
+            {
+                std::thread::yield_now();
+            }
+            engine.shutdown();
+        });
+
+        let clients: Vec<_> = (0..CLIENTS)
+            .map(|c| {
+                let served = &served;
+                let shed = &shed;
+                let clients_done = &clients_done;
+                let engine = &engine;
+                s.spawn(move || {
+                    let mut rng = Rng::new(0x57E55 ^ ((c as u64) << 8));
+                    let mut mine: Vec<(Vec<f32>, Prediction)> = Vec::new();
+                    let mut pending: Vec<(Vec<f32>, PredictionHandle)> = Vec::new();
+                    for _ in 0..BUDGET {
+                        let x: Vec<f32> = (0..16).map(|_| rng.normal()).collect();
+                        if c % 2 == 0 {
+                            match engine.predict(&x) {
+                                Ok(p) => {
+                                    served.fetch_add(1, Ordering::Relaxed);
+                                    mine.push((x, p));
+                                }
+                                Err(EngineError::Overloaded { .. }) => {
+                                    shed.fetch_add(1, Ordering::Relaxed);
+                                }
+                                Err(EngineError::ShutDown) => break,
+                                Err(e) => panic!("client {c}: {e}"),
+                            }
+                        } else {
+                            match engine.predict_async(&x) {
+                                Ok(h) => {
+                                    pending.push((x, h));
+                                    if pending.len() >= 4 {
+                                        drain_pending(served, &mut pending, &mut mine);
+                                    }
+                                }
+                                Err(EngineError::Overloaded { .. }) => {
+                                    shed.fetch_add(1, Ordering::Relaxed);
+                                }
+                                Err(EngineError::ShutDown) => break,
+                                Err(e) => panic!("client {c}: {e}"),
+                            }
+                        }
+                    }
+                    drain_pending(served, &mut pending, &mut mine);
+                    clients_done.fetch_add(1, Ordering::Relaxed);
+                    mine
+                })
+            })
+            .collect();
+        clients
+            .into_iter()
+            .flat_map(|h| h.join().expect("client panicked"))
+            .collect()
+    });
+
+    // the books balance: nothing admitted went missing, nothing failed
+    let stats = engine.stats();
+    assert_eq!(stats.failed, 0, "no batch may fail in this storm");
+    assert_eq!(stats.accepted, stats.completed + stats.failed);
+    assert_eq!(stats.completed as usize, got.len(), "every completion reached a client");
+    assert_eq!(stats.shed as usize, shed.load(Ordering::Relaxed));
+    assert!(!got.is_empty(), "the storm must serve real traffic");
+
+    // generation purity: each response is bit-identical to the forward of
+    // the model deployed at its generation — across dtype swaps too
+    let gen_of = gen_of.into_inner().unwrap();
+    for (x, p) in &got {
+        let v = *gen_of
+            .get(&p.generation)
+            .unwrap_or_else(|| panic!("generation {} was never deployed", p.generation));
+        let expect = variants[v].forward(x, 1).unwrap();
+        assert_eq!(p.logits, expect, "generation {} (variant {v}) logits drifted", p.generation);
+    }
+    // the storm must actually have crossed generations
+    let gens: std::collections::HashSet<u64> = got.iter().map(|(_, p)| p.generation).collect();
+    assert!(gens.len() > 1, "swap storm never landed mid-traffic: {gens:?}");
+}
+
+/// The tentpole thread claim, measured: a 4×-capacity async window (and a
+/// 16×-capacity offered load) may grow the process by dispatcher + worker
+/// threads — never by anything proportional to the window. The blocking
+/// driver needs a thread per in-flight request to create this load shape;
+/// `drive_async` holds the whole window on one thread.
+#[cfg(target_os = "linux")]
+#[test]
+fn async_overload_window_never_costs_a_thread_per_request() {
+    let _gate = serialized();
+    let before = proc_thread_count();
+
+    let workers = 2usize;
+    let engine = Engine::new(model(0xD), opts(4, workers, 8)).unwrap();
+    let window = 4 * engine.capacity();
+    let requests = 16 * engine.capacity();
+    assert!(window >= 64, "window {window} too small to prove anything");
+
+    // sample the peak thread count while the drive is in flight
+    let (report, peak) = std::thread::scope(|s| {
+        let done = std::sync::atomic::AtomicBool::new(false);
+        let done_ref = &done;
+        let sampler = s.spawn(move || {
+            let mut peak = 0usize;
+            while !done_ref.load(Ordering::Acquire) {
+                peak = peak.max(proc_thread_count());
+                std::thread::yield_now();
+            }
+            peak
+        });
+        let report = drive_async(&engine, requests, window, 0x5712E55).unwrap();
+        done.store(true, Ordering::Release);
+        (report, sampler.join().unwrap())
+    });
+
+    // every request is accounted for, and the engine books agree
+    assert_eq!(report.offered, requests);
+    assert_eq!(report.accepted + report.shed, report.offered);
+    let stats = engine.stats();
+    assert_eq!(stats.accepted, report.accepted as u64);
+    assert_eq!(stats.shed, report.shed as u64);
+    assert_eq!(stats.accepted, stats.completed + stats.failed);
+    assert_eq!(stats.failed, 0);
+
+    // the bound: workers + dispatcher + the sampler itself + harness
+    // slack — a constant, nowhere near the 64+ handle window
+    let bound = before + workers + 6;
+    assert!(
+        peak <= bound,
+        "async drive grew the process to {peak} threads (started at {before}, \
+         window {window}) — the window must not cost threads"
+    );
+    assert!(peak < before + window / 2, "thread growth scales with the window");
+}
+
+/// Lost-waiter focus: handles admitted immediately before (and during)
+/// `shutdown` must all resolve — a waiter parked on a slot the dispatcher
+/// never completes would hang this test forever.
+#[test]
+fn shutdown_never_strands_an_admitted_handle() {
+    let _gate = serialized();
+    for round in 0..20u64 {
+        let engine = Engine::new(model(round), opts(4, 1, 32)).unwrap();
+        let mut rng = Rng::new(round ^ 0xF1A6);
+        let handles: Vec<_> = std::thread::scope(|s| {
+            let engine_ref = &engine;
+            // shutdown fires from a sibling thread with no coordination:
+            // some admissions land before it, some after
+            s.spawn(move || {
+                std::thread::yield_now();
+                engine_ref.shutdown();
+            });
+            let mut hs = Vec::new();
+            for _ in 0..24 {
+                let x: Vec<f32> = (0..16).map(|_| rng.normal()).collect();
+                match engine.predict_async(&x) {
+                    Ok(h) => hs.push(h),
+                    Err(EngineError::ShutDown) | Err(EngineError::Overloaded { .. }) => {}
+                    Err(e) => panic!("round {round}: {e}"),
+                }
+            }
+            hs
+        });
+        let admitted = handles.len();
+        for h in handles {
+            let p = h.wait().unwrap_or_else(|e| panic!("round {round}: admitted handle lost: {e}"));
+            assert_eq!(p.logits.len(), 6);
+        }
+        let stats = engine.stats();
+        assert_eq!(stats.accepted, admitted as u64);
+        assert_eq!(stats.completed, admitted as u64);
+    }
+}
